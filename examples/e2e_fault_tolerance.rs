@@ -1,0 +1,134 @@
+//! END-TO-END DRIVER — the full system on a real small workload.
+//!
+//! Exercises every layer at once: a WebBase-shaped graph is generated
+//! and partitioned across a simulated 15×8-worker cluster; PageRank's
+//! per-partition numeric update runs through the **AOT-compiled
+//! JAX/Pallas artifact via PJRT** (Layer 1/2 → Rust Layer 3); each of
+//! the paper's four fault-tolerance algorithms runs the same job with a
+//! worker killed at superstep 17 and must converge to the *identical*
+//! result; the paper's headline metrics are reported, along with the
+//! convergence (delta) curve — the training-loss analogue for this
+//! system.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_fault_tolerance
+//! ```
+//!
+//! The run recorded in EXPERIMENTS.md §E2E comes from this binary.
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::metrics::report;
+use lwcp::util::fmtutil::{bytes, secs};
+
+fn main() -> anyhow::Result<()> {
+    let exec = bs::try_registry();
+    if exec.is_some() {
+        println!("XLA hot path: ON (artifacts loaded via PJRT)");
+    } else {
+        println!("XLA hot path: OFF (run `make artifacts`) — scalar fallback");
+    }
+
+    let ds = bs::webbase();
+    let (adj, scale) = ds.build(7);
+    let edges: u64 = adj.iter().map(|l| l.len() as u64).sum();
+    println!(
+        "workload: {} — {} vertices, {} edges (standing in for {} paper edges, scale {:.0}×)",
+        ds.name(),
+        adj.len(),
+        edges,
+        bs::WEBBASE_EDGES,
+        scale
+    );
+    println!("cluster: 15 machines × 8 workers; δ=10; kill worker 1 at superstep 17\n");
+
+    let mut table = report::superstep_table();
+    let mut io = report::io_table();
+    let mut digests = Vec::new();
+    let mut lwcp_metrics = None;
+    let mut hwcp_metrics = None;
+    for ft in FtKind::all() {
+        let mut spec = bs::pagerank_spec(&ds, scale, &format!("e2e-{}", ft.name()));
+        spec.ft = ft;
+        spec.seed = 7;
+        let m = run_job_on(&spec, &adj, exec.clone())?;
+        table.row(report::superstep_row(ft.name(), &m));
+        io.row(report::io_row(ft.name(), &m));
+        digests.push((ft.name(), m.result_digest));
+        if ft == FtKind::LwCp {
+            lwcp_metrics = Some(m.clone());
+        }
+        if ft == FtKind::HwCp {
+            hwcp_metrics = Some(m.clone());
+        }
+    }
+
+    println!("--- superstep metrics (simulated cluster seconds) ---");
+    table.print();
+    println!("--- checkpoint / log I/O ---");
+    io.print();
+
+    let first = digests[0].1;
+    let all_equal = digests.iter().all(|&(_, d)| d == first);
+    println!(
+        "\nresult digests: {} — {}",
+        digests
+            .iter()
+            .map(|(n, d)| format!("{n}:{d:016x}"))
+            .collect::<Vec<_>>()
+            .join(" "),
+        if all_equal {
+            "ALL ALGORITHMS RECOVERED TO THE IDENTICAL RESULT ✓"
+        } else {
+            "MISMATCH ✗"
+        }
+    );
+    anyhow::ensure!(all_equal, "recovered results diverged");
+
+    let (hw, lw) = (hwcp_metrics.unwrap(), lwcp_metrics.unwrap());
+    println!(
+        "\nheadline (paper §1): heavyweight checkpoint {} vs lightweight {} — {:.0}× cheaper",
+        secs(hw.t_cp()),
+        secs(lw.t_cp()),
+        hw.t_cp() / lw.t_cp()
+    );
+    println!(
+        "checkpoint volume: HWCP {} vs LWCP {}",
+        bytes(hw.bytes.checkpoint_bytes),
+        bytes(lw.bytes.checkpoint_bytes)
+    );
+
+    // Convergence curve (the "loss curve" of this workload): global L1
+    // delta of the rank vector per superstep, from the LWCP run.
+    println!("\nPageRank convergence (global L1 delta per superstep):");
+    let mut spec = bs::pagerank_spec(&ds, scale, "e2e-curve");
+    spec.ft = FtKind::None;
+    spec.plan = lwcp::pregel::FailurePlan::none();
+    spec.seed = 7;
+    let adj2 = adj.clone();
+    let app = lwcp::apps::PageRank { damping: 0.85, supersteps: 30, combiner_enabled: true };
+    let cfg = lwcp::pregel::EngineConfig {
+        topo: bs::paper_topology(),
+        cost: Default::default(),
+        ft: FtKind::None,
+        cp_every: 0,
+        cp_every_secs: None,
+        backing: lwcp::storage::Backing::Memory,
+        tag: "e2e-curve".into(),
+        max_supersteps: 100_000,
+    };
+    let mut eng = lwcp::pregel::Engine::new(app, cfg, &adj2)?;
+    if let Some(e) = exec {
+        eng = eng.with_exec(e);
+    }
+    eng.run()?;
+    for step in 2..=30u64 {
+        if let Some(g) = eng.global_agg(step) {
+            let delta = g.slots[0];
+            let bar = "#".repeat(((delta.log10() + 6.0).max(0.0) * 6.0) as usize);
+            println!("  step {step:>2}: {delta:>12.4}  {bar}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! k-core decomposition with topology mutation: every edge deletion goes
+//! through the incremental checkpointing path (local mutation buffer →
+//! E_W on HDFS at checkpoint time), so lightweight checkpoints never
+//! rewrite the surviving edges — the paper's §4 "Incremental
+//! Checkpointing of Edges".
+//!
+//! ```text
+//! cargo run --release --example kcore_mutation
+//! ```
+
+use lwcp::apps::KCore;
+use lwcp::ft::FtKind;
+use lwcp::graph::generate;
+use lwcp::pregel::{Engine, EngineConfig, FailurePlan};
+use lwcp::sim::Topology;
+use lwcp::storage::Backing;
+use lwcp::util::fmtutil::{bytes, secs};
+
+fn main() -> anyhow::Result<()> {
+    let adj = generate::erdos_renyi(30_000, 110_000, false, 11);
+    println!(
+        "graph: {} vertices, {} adjacency entries; peeling to the 4-core",
+        adj.len(),
+        generate::edge_count(&adj)
+    );
+
+    let run = |ft: FtKind, kill: bool| -> anyhow::Result<(u64, u64, f64, u64)> {
+        let cfg = EngineConfig {
+            topo: Topology::new(5, 4),
+            cost: Default::default(),
+            ft,
+            cp_every: 3,
+            cp_every_secs: None,
+            backing: Backing::Memory,
+            tag: format!("kcore-{}-{kill}", ft.name()),
+            max_supersteps: 100_000,
+        };
+        let mut eng = Engine::new(KCore { k: 4 }, cfg, &adj)?;
+        if kill {
+            eng = eng.with_failures(FailurePlan::kill_n_at(1, 5));
+        }
+        let m = eng.run()?;
+        let survivors = (0..adj.len() as u32).filter(|&v| !eng.value_of(v).0).count() as u64;
+        Ok((survivors, m.supersteps_run, m.t_cp(), m.bytes.checkpoint_bytes))
+    };
+
+    let (s_hw, _, tcp_hw, b_hw) = run(FtKind::HwCp, false)?;
+    let (s_lw, _, tcp_lw, b_lw) = run(FtKind::LwCp, false)?;
+    anyhow::ensure!(s_hw == s_lw);
+    println!("\n4-core size: {s_hw} vertices");
+    println!(
+        "checkpoint cost:  HWCP (full adjacency each time) t_cp={} total={}",
+        secs(tcp_hw),
+        bytes(b_hw)
+    );
+    println!(
+        "                  LWCP (states + E_W increments)  t_cp={} total={}",
+        secs(tcp_lw),
+        bytes(b_lw)
+    );
+    println!(
+        "                  ⇒ {:.0}× less checkpoint data via incremental edges",
+        b_hw as f64 / b_lw as f64
+    );
+
+    let (s_rec, steps, _, _) = run(FtKind::LwCp, true)?;
+    anyhow::ensure!(s_rec == s_hw, "recovered k-core differs!");
+    println!(
+        "\nwith a worker killed at superstep 5: recovered to the same 4-core \
+         ({steps} supersteps incl. replaying E_W + re-peeling) ✓"
+    );
+    Ok(())
+}

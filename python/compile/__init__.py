@@ -1,0 +1,7 @@
+"""Build-time compile package for the lwcp engine (never imported at runtime).
+
+Layout:
+  kernels/   Layer-1 Pallas kernels + pure-jnp oracles (ref.py)
+  model.py   Layer-2 JAX per-partition compute graphs (call kernels.*)
+  aot.py     jax.jit(...).lower() -> HLO text -> artifacts/*.hlo.txt
+"""

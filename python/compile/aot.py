@@ -1,0 +1,87 @@
+"""AOT lowering: Layer-2 JAX functions -> HLO *text* -> artifacts/.
+
+HLO text (not ``XlaComputation.serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+Outputs (for every bucket N in model.BUCKETS):
+  artifacts/pagerank_step_<N>.hlo.txt   (f32[N], f32[N], f32[N]) ->
+                                        tuple(f32[N], f32[N], f32[])
+  artifacts/min_step_<N>.hlo.txt        (f32[N], f32[N]) ->
+                                        tuple(f32[N], f32[N], f32[])
+  artifacts/manifest.txt                one line per artifact:
+                                        <fn> <bucket> <n_inputs> <file>
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, arg_shapes):
+    """jit + lower a function for the given argument shapes."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in arg_shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+#: (name, fn, n_inputs). Input shapes are all f32[bucket].
+FUNCTIONS = (
+    ("pagerank_step", model.pagerank_step, 3),
+    ("min_step", model.min_step, 2),
+)
+
+
+def build(out_dir: str, buckets=model.BUCKETS) -> list:
+    """Lower every (function, bucket) pair and write artifacts + manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, n_inputs in FUNCTIONS:
+        for n in buckets:
+            lowered = lower_fn(fn, [(n,)] * n_inputs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_{n}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest.append((name, n, n_inputs, fname))
+            print(f"  lowered {name} bucket={n}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, n, n_inputs, fname in manifest:
+            f.write(f"{name} {n} {n_inputs} {fname}\n")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    p.add_argument(
+        "--buckets",
+        default=None,
+        help="comma-separated bucket sizes (default: model.BUCKETS)",
+    )
+    args = p.parse_args()
+    buckets = (
+        tuple(int(b) for b in args.buckets.split(",")) if args.buckets else model.BUCKETS
+    )
+    manifest = build(args.out_dir, buckets)
+    print(f"wrote {len(manifest)} artifacts + manifest.txt to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels for the lwcp engine's per-partition vertex update.
+
+Each kernel has a pure-jnp oracle in :mod:`compile.kernels.ref`; pytest
+(``python/tests/``) asserts allclose between the two across shapes and
+value distributions (hypothesis sweeps).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin used by
+the Rust runtime cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO ops that run on any backend. The BlockSpec structure
+(tiling for VMEM) is still authored the way a real TPU kernel would be —
+see DESIGN.md §8 for the footprint/roofline estimate.
+"""
+
+from compile.kernels.pagerank import pagerank_update
+from compile.kernels.minstep import min_update
+
+__all__ = ["pagerank_update", "min_update"]

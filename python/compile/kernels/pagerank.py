@@ -1,0 +1,76 @@
+"""Pallas kernel: Pregel-style PageRank vertex update.
+
+For every vertex slot ``i`` of a worker partition (padded to a size
+bucket):
+
+    new_rank[i] = (1 - d) + d * msg_sum[i]          (Pregel's unnormalized
+                                                     damped update)
+    contrib[i]  = new_rank[i] / deg[i]  if deg[i] > 0 else 0
+                                                    (the per-out-edge
+                                                     message value)
+    delta[i]    = |new_rank[i] - old_rank[i]|       (for the convergence
+                                                     aggregator)
+
+Padded slots are handled by the caller passing ``deg = 0`` and
+``msg_sum = 0`` for them; their contrib is 0 and their delta is 0 as long
+as old_rank is also the padding value (the Rust runtime pads with the
+damping floor ``1 - d`` so delta stays exactly 0 — see
+rust/src/runtime/registry.rs).
+
+VMEM tiling: 1-D grid over blocks of ``BLOCK`` vertices; three f32 input
+vectors + three f32 output vectors per block = 6 * BLOCK * 4 bytes
+(12 KiB at BLOCK=512), far under the ~16 MiB VMEM budget; the kernel is
+element-wise (VPU work, no MXU), so on real hardware it is HBM-bandwidth
+bound.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _pagerank_kernel(old_ref, msg_ref, deg_ref, new_ref, contrib_ref, delta_ref, *, damping):
+    old = old_ref[...]
+    msg = msg_ref[...]
+    deg = deg_ref[...]
+    new = (1.0 - damping) + damping * msg
+    new_ref[...] = new
+    # Guard the divide: padded / sink slots have deg == 0.
+    safe_deg = jnp.where(deg > 0, deg, 1.0)
+    contrib_ref[...] = jnp.where(deg > 0, new / safe_deg, 0.0)
+    delta_ref[...] = jnp.abs(new - old)
+
+
+@functools.partial(jax.jit, static_argnames=("damping", "block"))
+def pagerank_update(old_rank, msg_sum, deg, *, damping=0.85, block=BLOCK):
+    """Run the PageRank update kernel over a padded partition.
+
+    Args:
+      old_rank: f32[N] previous rank per vertex slot.
+      msg_sum: f32[N] combined incoming message sum per vertex slot.
+      deg: f32[N] out-degree per slot (0 for sinks and padding).
+      damping: damping factor d.
+      block: VMEM tile size; N must be a multiple of it.
+
+    Returns:
+      (new_rank f32[N], contrib f32[N], delta f32[N]).
+    """
+    n = old_rank.shape[0]
+    assert n % block == 0, f"partition size {n} not a multiple of block {block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 3
+    return tuple(
+        pl.pallas_call(
+            functools.partial(_pagerank_kernel, damping=damping),
+            grid=grid,
+            in_specs=[spec, spec, spec],
+            out_specs=[spec, spec, spec],
+            out_shape=out_shape,
+            interpret=True,
+        )(old_rank, msg_sum, deg)
+    )

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+These are deliberately written as straight-line jnp with no tiling or
+pallas machinery, so a bug in the kernels' BlockSpec plumbing cannot hide
+in the oracle too.
+"""
+
+import jax.numpy as jnp
+
+
+def pagerank_update_ref(old_rank, msg_sum, deg, *, damping=0.85):
+    """Oracle for :func:`compile.kernels.pagerank.pagerank_update`."""
+    new = (1.0 - damping) + damping * msg_sum
+    contrib = jnp.where(deg > 0, new / jnp.where(deg > 0, deg, 1.0), 0.0)
+    delta = jnp.abs(new - old_rank)
+    return new, contrib, delta
+
+
+def min_update_ref(cur, incoming):
+    """Oracle for :func:`compile.kernels.minstep.min_update`."""
+    new = jnp.minimum(cur, incoming)
+    changed = jnp.where(new < cur, 1.0, 0.0)
+    return new, changed
+
+
+def pagerank_step_ref(old_rank, msg_sum, deg, *, damping=0.85):
+    """Oracle for the Layer-2 model fn (kernel outputs + delta reduction)."""
+    new, contrib, delta = pagerank_update_ref(old_rank, msg_sum, deg, damping=damping)
+    return new, contrib, jnp.sum(delta)
+
+
+def min_step_ref(cur, incoming):
+    """Oracle for the Layer-2 min step (kernel outputs + changed count)."""
+    new, changed = min_update_ref(cur, incoming)
+    return new, changed, jnp.sum(changed)

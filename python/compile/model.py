@@ -1,0 +1,44 @@
+"""Layer-2 JAX compute graphs for the lwcp engine.
+
+Each function here is the *whole* per-superstep numeric update for one
+worker partition, padded to a size bucket. It calls the Layer-1 Pallas
+kernels and adds the partition-level reductions (the per-worker partial
+aggregator values), so that a single AOT-compiled executable per
+(function, bucket) covers the full hot-path numeric work of a superstep.
+
+Lowered once by :mod:`compile.aot`; executed from Rust via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.pagerank import pagerank_update
+from compile.kernels.minstep import min_update
+
+#: Size buckets for worker partitions. A worker pads |V_W| up to the
+#: smallest bucket; the Rust runtime compiles one executable per bucket
+#: lazily. All buckets are multiples of the kernels' BLOCK (512).
+BUCKETS = (512, 1024, 4096, 16384, 65536, 262144)
+
+DAMPING = 0.85
+
+
+def pagerank_step(old_rank, msg_sum, deg):
+    """PageRank superstep update for one padded partition.
+
+    Returns ``(new_rank[N], contrib[N], delta_sum[] )`` where delta_sum is
+    the partition's partial L1-delta aggregator (summed across workers by
+    the Rust coordinator to drive the convergence check).
+    """
+    new, contrib, delta = pagerank_update(old_rank, msg_sum, deg, damping=DAMPING)
+    return new, contrib, jnp.sum(delta)
+
+
+def min_step(cur, incoming):
+    """Min-fold superstep update (Hash-Min CC / SSSP) for one partition.
+
+    Returns ``(new[N], changed[N], changed_count[])``; changed_count is the
+    partition's partial "number of updated vertices" aggregator (the job
+    halts when the global count is 0).
+    """
+    new, changed = min_update(cur, incoming)
+    return new, changed, jnp.sum(changed)

@@ -1,0 +1,181 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the stack.
+
+Every Pallas kernel must match its pure-jnp oracle bit-for-close across
+shapes (all buckets), value distributions, and edge cases (zero degrees,
+infinities, already-converged states). Hypothesis drives the sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pagerank_update, min_update
+from compile.kernels import ref
+from compile import model
+
+SIZES = [512, 1024, 2048, 4096]
+
+
+def rand(rng, n, lo=0.0, hi=10.0):
+    return jnp.asarray(rng.uniform(lo, hi, size=n).astype(np.float32))
+
+
+# ---------------------------------------------------------------- pagerank
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_pagerank_matches_ref(n):
+    rng = np.random.default_rng(n)
+    old, msg = rand(rng, n), rand(rng, n)
+    deg = jnp.asarray(rng.integers(0, 50, size=n).astype(np.float32))
+    got = pagerank_update(old, msg, deg)
+    want = ref.pagerank_update_ref(old, msg, deg)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def test_pagerank_zero_degree_contrib_is_zero():
+    n = 512
+    old = jnp.ones(n)
+    msg = jnp.ones(n)
+    deg = jnp.zeros(n)
+    _, contrib, _ = pagerank_update(old, msg, deg)
+    np.testing.assert_array_equal(np.asarray(contrib), np.zeros(n))
+
+
+def test_pagerank_padding_slots_have_zero_delta():
+    # Rust pads with old_rank = 1-d and msg_sum = 0 => new == old => delta 0.
+    n = 512
+    old = jnp.full(n, 0.15)
+    msg = jnp.zeros(n)
+    deg = jnp.zeros(n)
+    new, contrib, delta = pagerank_update(old, msg, deg)
+    np.testing.assert_allclose(np.asarray(new), np.full(n, 0.15), rtol=1e-7)
+    np.testing.assert_array_equal(np.asarray(delta), np.zeros(n))
+    np.testing.assert_array_equal(np.asarray(contrib), np.zeros(n))
+
+
+def test_pagerank_damping_fixpoint():
+    # msg_sum == rank at the uniform fixpoint: rank 1.0, deg uniform.
+    n = 512
+    old = jnp.ones(n)
+    msg = jnp.ones(n)
+    deg = jnp.full(n, 4.0)
+    new, contrib, delta = pagerank_update(old, msg, deg)
+    np.testing.assert_allclose(np.asarray(new), np.ones(n), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(contrib), np.full(n, 0.25), rtol=1e-6)
+    assert float(jnp.max(delta)) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    damping=st.sampled_from([0.5, 0.85, 0.99]),
+)
+def test_pagerank_hypothesis_sweep(n_blocks, seed, damping):
+    n = 512 * n_blocks
+    rng = np.random.default_rng(seed)
+    old = rand(rng, n, 0.0, 100.0)
+    msg = rand(rng, n, 0.0, 100.0)
+    deg = jnp.asarray(rng.integers(0, 1000, size=n).astype(np.float32))
+    got = pagerank_update(old, msg, deg, damping=damping)
+    want = ref.pagerank_update_ref(old, msg, deg, damping=damping)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------- minstep
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_min_matches_ref(n):
+    rng = np.random.default_rng(n + 7)
+    cur = rand(rng, n, 0.0, 1e6)
+    inc = rand(rng, n, 0.0, 1e6)
+    got = min_update(cur, inc)
+    want = ref.min_update_ref(cur, inc)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_min_no_message_is_inf_and_unchanged():
+    n = 512
+    cur = jnp.arange(n, dtype=jnp.float32)
+    inc = jnp.full(n, jnp.inf)
+    new, changed = min_update(cur, inc)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(cur))
+    np.testing.assert_array_equal(np.asarray(changed), np.zeros(n))
+
+
+def test_min_strict_improvement_only():
+    n = 512
+    cur = jnp.full(n, 5.0)
+    inc = jnp.full(n, 5.0)  # equal is NOT a change (paper: traversal style)
+    new, changed = min_update(cur, inc)
+    np.testing.assert_array_equal(np.asarray(changed), np.zeros(n))
+    inc2 = jnp.full(n, 4.0)
+    _, changed2 = min_update(cur, inc2)
+    np.testing.assert_array_equal(np.asarray(changed2), np.ones(n))
+
+
+def test_min_padding_slots_inert():
+    # Padding: cur = +inf, incoming = +inf -> new inf, changed 0.
+    n = 512
+    cur = jnp.full(n, jnp.inf)
+    inc = jnp.full(n, jnp.inf)
+    new, changed = min_update(cur, inc)
+    assert bool(jnp.all(jnp.isinf(new)))
+    np.testing.assert_array_equal(np.asarray(changed), np.zeros(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+    inf_frac=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_min_hypothesis_sweep(n_blocks, seed, inf_frac):
+    n = 512 * n_blocks
+    rng = np.random.default_rng(seed)
+    cur = rand(rng, n, 0.0, 1e9)
+    inc = np.asarray(rand(rng, n, 0.0, 1e9)).copy()
+    inc[rng.uniform(size=n) < inf_frac] = np.inf
+    inc = jnp.asarray(inc)
+    got = min_update(cur, inc)
+    want = ref.min_update_ref(cur, inc)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------- model (L2)
+
+
+@pytest.mark.parametrize("n", [512, 1024])
+def test_model_pagerank_step(n):
+    rng = np.random.default_rng(n + 13)
+    old, msg = rand(rng, n), rand(rng, n)
+    deg = jnp.asarray(rng.integers(0, 20, size=n).astype(np.float32))
+    new, contrib, dsum = model.pagerank_step(old, msg, deg)
+    wnew, wcontrib, wdsum = ref.pagerank_step_ref(old, msg, deg)
+    np.testing.assert_allclose(new, wnew, rtol=1e-6)
+    np.testing.assert_allclose(contrib, wcontrib, rtol=1e-6)
+    np.testing.assert_allclose(float(dsum), float(wdsum), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", [512, 1024])
+def test_model_min_step(n):
+    rng = np.random.default_rng(n + 17)
+    cur, inc = rand(rng, n, 0, 100), rand(rng, n, 0, 100)
+    new, changed, count = model.min_step(cur, inc)
+    wnew, wchanged, wcount = ref.min_step_ref(cur, inc)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(wnew))
+    np.testing.assert_array_equal(np.asarray(changed), np.asarray(wchanged))
+    assert float(count) == float(wcount)
+
+
+def test_buckets_are_block_multiples():
+    for b in model.BUCKETS:
+        assert b % 512 == 0
+    assert tuple(sorted(model.BUCKETS)) == model.BUCKETS

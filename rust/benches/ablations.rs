@@ -1,0 +1,141 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! A. Checkpoint interval δ: LWCP makes *frequent* checkpointing
+//!    affordable — the paper's §1 motivation. We sweep δ and report the
+//!    total failure-free checkpoint overhead per algorithm.
+//! B. Workers per machine (c): the worker-reassignment design (§3) runs
+//!    c workers per machine so a failure redistributes 1/c of a machine;
+//!    we sweep c at fixed |W| to expose the NIC-sharing cost.
+//! C. Message combiner on/off: sender-side combining is what makes
+//!    heavyweight checkpoints "only" O(|E|)-ish; without it message
+//!    volume and T_norm inflate.
+//! D. LWCP masking: pointer jumping masks its respond phases; LWCP must
+//!    defer due checkpoints to the next applicable superstep.
+
+use lwcp::apps::{PageRank, PointerJump};
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::pregel::{Engine, EngineConfig, FailurePlan};
+use lwcp::sim::Topology;
+use lwcp::util::fmtutil::{secs, Table};
+
+fn main() {
+    let exec = bs::try_registry();
+    let ds = bs::webbase();
+    let (adj, scale) = ds.build(1);
+
+    // ---------------------------------------------------- A: δ sweep
+    println!("\n=== Ablation A — checkpoint interval δ (PageRank, {}) ===", ds.name());
+    let mut t = Table::new(vec!["δ", "HWCP total cp overhead", "LWCP total cp overhead", "ratio"]);
+    let mut ratios = Vec::new();
+    for delta in [2u64, 5, 10, 20] {
+        let mut overheads = Vec::new();
+        for ft in [FtKind::HwCp, FtKind::LwCp] {
+            let mut spec = bs::pagerank_spec(&ds, scale, &format!("abl-a-{delta}-{}", ft.name()));
+            spec.ft = ft;
+            spec.cp_every = delta;
+            spec.plan = FailurePlan::none();
+            let m = run_job_on(&spec, &adj, exec.clone()).expect("run");
+            overheads.push(m.cp_writes.iter().map(|&(_, d)| d).sum::<f64>());
+        }
+        let ratio = overheads[0] / overheads[1];
+        ratios.push(ratio);
+        t.row(vec![
+            delta.to_string(),
+            secs(overheads[0]),
+            secs(overheads[1]),
+            format!("{ratio:.0}×"),
+        ]);
+    }
+    t.print();
+    bs::shape_check(
+        "LWCP keeps frequent checkpointing affordable (≥10× cheaper at every δ)",
+        ratios.iter().all(|r| *r > 10.0),
+        format!("ratios {:?}", ratios.iter().map(|r| r.round()).collect::<Vec<_>>()),
+    );
+
+    // ------------------------------------------- B: workers per machine
+    println!("\n=== Ablation B — workers per machine at |W| = 120 ===");
+    let mut t = Table::new(vec!["machines × c", "T_norm", "T_cp (LWCP)"]);
+    let mut norms = Vec::new();
+    for (machines, c) in [(120usize, 1usize), (60, 2), (30, 4), (15, 8)] {
+        let mut spec = bs::pagerank_spec(&ds, scale, &format!("abl-b-{c}"));
+        spec.topo = Topology::new(machines, c);
+        spec.ft = FtKind::LwCp;
+        spec.plan = FailurePlan::none();
+        let m = run_job_on(&spec, &adj, exec.clone()).expect("run");
+        t.row(vec![format!("{machines} × {c}"), secs(m.t_norm()), secs(m.t_cp())]);
+        norms.push(m.t_norm());
+    }
+    t.print();
+    bs::shape_check(
+        "more machines (less NIC sharing) ⇒ faster supersteps",
+        norms.windows(2).all(|w| w[0] <= w[1] * 1.05),
+        format!("{} → {}", secs(norms[0]), secs(*norms.last().unwrap())),
+    );
+
+    // ---------------------------------------------- C: combiner on/off
+    println!("\n=== Ablation C — message combiner (PageRank, {}) ===", ds.name());
+    let mut t = Table::new(vec!["combiner", "messages (pre-combine)", "shuffled bytes", "T_norm"]);
+    let mut stats = Vec::new();
+    for on in [true, false] {
+        let app = PageRank { damping: 0.85, supersteps: 10, combiner_enabled: on };
+        let mut cfg = EngineConfig::small_test(FtKind::None);
+        cfg.topo = bs::paper_topology();
+        cfg.cost.data_scale = scale;
+        cfg.tag = format!("abl-c-{on}");
+        let mut eng = Engine::new(app, cfg, &adj).expect("engine");
+        let m = eng.run().expect("run");
+        t.row(vec![
+            if on { "on" } else { "off" }.to_string(),
+            m.bytes.messages_sent.to_string(),
+            lwcp::util::fmtutil::bytes(m.bytes.shuffle_bytes),
+            secs(m.t_norm()),
+        ]);
+        stats.push(m);
+    }
+    t.print();
+    bs::shape_check(
+        "combiner shrinks shuffled bytes",
+        stats[0].bytes.shuffle_bytes < stats[1].bytes.shuffle_bytes,
+        format!(
+            "{} vs {}",
+            lwcp::util::fmtutil::bytes(stats[0].bytes.shuffle_bytes),
+            lwcp::util::fmtutil::bytes(stats[1].bytes.shuffle_bytes)
+        ),
+    );
+
+    // --------------------------------------------------- D: masking
+    println!("\n=== Ablation D — LWCP checkpoint deferral on masked supersteps ===");
+    let pj_adj = lwcp::graph::generate::erdos_renyi(5_000, 7_500, false, 3);
+    let mut t = Table::new(vec!["ft", "δ", "checkpoints at", "deferrals"]);
+    for ft in [FtKind::HwCp, FtKind::LwCp] {
+        let mut cfg = EngineConfig::small_test(ft);
+        cfg.cp_every = 2;
+        cfg.topo = Topology::new(4, 2);
+        cfg.tag = format!("abl-d-{}", ft.name());
+        let mut eng = Engine::new(PointerJump, cfg, &pj_adj).expect("engine");
+        let m = eng.run().expect("run");
+        let at: Vec<u64> = m.cp_writes.iter().map(|&(s, _)| s).collect();
+        // A deferral = a checkpoint that did NOT land on a multiple of δ.
+        let deferrals = at.iter().filter(|s| *s % 2 != 0).count();
+        t.row(vec![
+            ft.name().to_string(),
+            "2".to_string(),
+            format!("{at:?}"),
+            deferrals.to_string(),
+        ]);
+        if ft == FtKind::LwCp {
+            // Respond phases are supersteps 2, 5, 8, … (phase(step)==1);
+            // LWCP must never checkpoint there.
+            let masked_hit = at.iter().any(|s| (*s - 1) % 3 == 1);
+            bs::shape_check(
+                "LWCP never checkpoints a masked (respond) superstep",
+                !masked_hit && deferrals > 0,
+                format!("checkpoints at {at:?}"),
+            );
+        }
+    }
+    t.print();
+}

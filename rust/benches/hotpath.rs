@@ -1,0 +1,120 @@
+//! Real wall-clock microbenchmarks of the hot path (the §Perf
+//! instrument; virtual time plays no role here).
+//!
+//! 1. XLA executable throughput: `pagerank_step` per-call latency and
+//!    effective element throughput per bucket (AOT artifact through
+//!    PJRT, includes pad/copy overhead — the number Rust actually pays).
+//! 2. Whole-engine superstep wall time, scalar vs XLA hot path.
+//! 3. Shuffle+combine throughput (messages/second through the Outbox/
+//!    Inbox plumbing, serialization included).
+
+use lwcp::apps::PageRank;
+use lwcp::bench_support as bs;
+use lwcp::ft::FtKind;
+use lwcp::graph::{PresetGraph, Partitioner};
+use lwcp::pregel::app::{BatchExec, CombineFn};
+use lwcp::pregel::{Engine, EngineConfig, Inbox, Outbox};
+use lwcp::sim::Topology;
+use lwcp::util::fmtutil::Table;
+use std::time::Instant;
+
+fn main() {
+    // ------------------------------------------------ 1: XLA throughput
+    if let Some(reg) = bs::try_registry() {
+        println!("\n=== Hot path 1 — pagerank_step artifact throughput (PJRT CPU) ===");
+        let mut t = Table::new(vec!["bucket", "calls", "µs/call", "Melem/s"]);
+        for &bucket in reg.buckets("pagerank_step").iter() {
+            if bucket > 65536 {
+                continue;
+            }
+            let old = vec![1.0f32; bucket];
+            let msg = vec![0.5f32; bucket];
+            let deg = vec![4.0f32; bucket];
+            // Warm up (compile).
+            reg.run("pagerank_step", &[&old, &msg, &deg]).unwrap();
+            let calls = (2_000_000 / bucket).clamp(20, 2000);
+            let t0 = Instant::now();
+            for _ in 0..calls {
+                reg.run("pagerank_step", &[&old, &msg, &deg]).unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            t.row(vec![
+                bucket.to_string(),
+                calls.to_string(),
+                format!("{:.1}", dt / calls as f64 * 1e6),
+                format!("{:.1}", bucket as f64 * calls as f64 / dt / 1e6),
+            ]);
+        }
+        t.print();
+    }
+
+    // ----------------------------------- 2: engine superstep wall time
+    println!("\n=== Hot path 2 — engine wall ms/superstep, scalar vs XLA ===");
+    let mut t = Table::new(vec!["n vertices", "edges", "scalar ms/step", "xla ms/step"]);
+    for n in [20_000usize, 60_000, 120_000] {
+        let adj = PresetGraph::WebBase.spec(n, 7).generate();
+        let edges: u64 = adj.iter().map(|l| l.len() as u64).sum();
+        let mut row = vec![n.to_string(), edges.to_string()];
+        for use_xla in [false, true] {
+            let app = PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(4, 2),
+                cost: Default::default(),
+                ft: FtKind::None,
+                cp_every: 0,
+                cp_every_secs: None,
+                backing: lwcp::storage::Backing::Memory,
+                tag: format!("hp-{n}-{use_xla}"),
+                max_supersteps: 10_000,
+            };
+            let mut eng = Engine::new(app, cfg, &adj).expect("engine");
+            if use_xla {
+                match bs::try_registry() {
+                    Some(reg) => eng = eng.with_exec(reg),
+                    None => {
+                        row.push("n/a".into());
+                        continue;
+                    }
+                }
+            }
+            let m = eng.run().expect("run");
+            row.push(format!("{:.1}", m.wall_ms / m.supersteps_run as f64));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // ------------------------------------ 3: shuffle/combine throughput
+    println!("\n=== Hot path 3 — Outbox/Inbox combine+serialize throughput ===");
+    let part = Partitioner::new(8, 1 << 16);
+    let combine: CombineFn<f32> = |a, b| *a += *b;
+    let n_msgs = 4_000_000u64;
+    let t0 = Instant::now();
+    let mut ob = Outbox::new(part, Some(combine));
+    let mut x = 0u32;
+    for _ in 0..n_msgs {
+        // LCG-ish target spread, measured work only.
+        x = x.wrapping_mul(1664525).wrapping_add(1013904223);
+        ob.send(x % (1 << 16), 0.25);
+    }
+    let gen_dt = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let batches = ob.all_batches();
+    let bytes: usize = batches.iter().map(|(_, b)| b.len()).sum();
+    let ser_dt = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let mut inbox = Inbox::new(part.slots_of(0), Some(combine));
+    for (r, b) in &batches {
+        if *r == 0 {
+            inbox.ingest(b).unwrap();
+        }
+    }
+    let ing_dt = t2.elapsed().as_secs_f64();
+    println!(
+        "send+combine: {:.1} M msg/s | serialize: {:.1} MiB in {:.1} ms | ingest(rank0): {:.2} ms",
+        n_msgs as f64 / gen_dt / 1e6,
+        bytes as f64 / (1 << 20) as f64,
+        ser_dt * 1e3,
+        ing_dt * 1e3,
+    );
+}

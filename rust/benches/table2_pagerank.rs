@@ -1,0 +1,106 @@
+//! Table 2 — "Time Metrics for Supersteps": PageRank on WebUK / WebBase
+//! under all four fault-tolerance algorithms, δ=10, one worker killed at
+//! superstep 17.
+//!
+//! Reproduction target is the *shape*: HWCP/LWCP recover at normal-
+//! execution speed (T_recov ≈ T_norm) while HWLog/LWLog recover several
+//! times faster; LWCP/LWLog pay a T_cpstep around (or above) one normal
+//! superstep because messages must be regenerated and re-shuffled;
+//! T_last ≈ T_norm everywhere.
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::metrics::report;
+use lwcp::util::fmtutil::{secs, Table};
+
+fn paper_table(rows: &[[&str; 5]]) -> Table {
+    let mut t = report::superstep_table();
+    for r in rows {
+        t.row(r.to_vec());
+    }
+    t
+}
+
+fn main() {
+    let exec = bs::try_registry();
+    let cases = [
+        (
+            bs::webuk(),
+            paper_table(&[
+                ["HWCP", "31.45 s", "15.43 s", "31.36 s", "31.51 s"],
+                ["LWCP", "31.42 s", "40.84 s", "31.59 s", "30.34 s"],
+                ["HWLog", "32.36 s", "16.83 s", "8.84 s", "29.61 s"],
+                ["LWLog", "32.21 s", "18.00 s", "8.76 s", "30.62 s"],
+            ]),
+        ),
+        (
+            bs::webbase(),
+            paper_table(&[
+                ["HWCP", "17.11 s", "6.58 s", "16.53 s", "17.74 s"],
+                ["LWCP", "17.16 s", "21.64 s", "17.17 s", "17.01 s"],
+                ["HWLog", "17.31 s", "4.79 s", "2.27 s", "15.99 s"],
+                ["LWLog", "17.49 s", "7.59 s", "2.35 s", "16.33 s"],
+            ]),
+        ),
+    ];
+
+    for (ds, paper) in cases {
+        let (adj, scale) = ds.build(1);
+        let mut measured = report::superstep_table();
+        let mut results = Vec::new();
+        for ft in FtKind::all() {
+            let mut spec = bs::pagerank_spec(&ds, scale, &format!("t2-{}", ft.name()));
+            spec.ft = ft;
+            let m = run_job_on(&spec, &adj, exec.clone()).expect("bench run");
+            measured.row(report::superstep_row(ft.name(), &m));
+            results.push((ft, m));
+        }
+        bs::print_block(&format!("Table 2 — PageRank on {}", ds.name()), &paper, &measured);
+
+        // Shape assertions from the paper's analysis.
+        let get = |ft: FtKind| results.iter().find(|(f, _)| *f == ft).map(|(_, m)| m).unwrap();
+        let (hwcp, lwcp) = (get(FtKind::HwCp), get(FtKind::LwCp));
+        let (hwlog, lwlog) = (get(FtKind::HwLog), get(FtKind::LwLog));
+        bs::shape_check(
+            "log-based T_recov ≪ T_norm",
+            hwlog.t_recov() < 0.5 * hwlog.t_norm() && lwlog.t_recov() < 0.5 * lwlog.t_norm(),
+            format!(
+                "HWLog {} vs {}, LWLog {} vs {}",
+                secs(hwlog.t_recov()),
+                secs(hwlog.t_norm()),
+                secs(lwlog.t_recov()),
+                secs(lwlog.t_norm())
+            ),
+        );
+        bs::shape_check(
+            "checkpoint-based T_recov ≈ T_norm",
+            (hwcp.t_recov() / hwcp.t_norm() - 1.0).abs() < 0.35
+                && (lwcp.t_recov() / lwcp.t_norm() - 1.0).abs() < 0.35,
+            format!(
+                "HWCP {:.2}·T_norm, LWCP {:.2}·T_norm",
+                hwcp.t_recov() / hwcp.t_norm(),
+                lwcp.t_recov() / lwcp.t_norm()
+            ),
+        );
+        bs::shape_check(
+            "LWCP T_cpstep > HWCP T_cpstep (message regeneration)",
+            lwcp.t_cpstep() > hwcp.t_cpstep(),
+            format!("{} vs {}", secs(lwcp.t_cpstep()), secs(hwcp.t_cpstep())),
+        );
+        bs::shape_check(
+            "T_last ≈ T_norm",
+            results.iter().all(|(_, m)| (m.t_last() / m.t_norm() - 1.0).abs() < 0.5),
+            results
+                .iter()
+                .map(|(f, m)| format!("{} {}", f.name(), secs(m.t_last())))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        bs::shape_check(
+            "§1 headline: LWCP checkpoint ≥ 10× cheaper than HWCP",
+            hwcp.t_cp() > 10.0 * lwcp.t_cp(),
+            format!("HWCP T_cp {} vs LWCP {}", secs(hwcp.t_cp()), secs(lwcp.t_cp())),
+        );
+    }
+}

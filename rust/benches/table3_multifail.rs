@@ -1,0 +1,64 @@
+//! Table 3 — "Effect of Number of Failed Workers" (WebUK, PageRank):
+//! T_recov for HWLog / LWLog as 1–5 (and 12, 20) of the 120 workers are
+//! killed at superstep 17.
+//!
+//! Shape target: T_recov grows slowly with the number of killed workers
+//! (message volume to recovering workers scales with the kill count,
+//! but the recomputation parallelism grows too).
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::pregel::FailurePlan;
+use lwcp::util::fmtutil::{secs, Table};
+
+fn main() {
+    let exec = bs::try_registry();
+    let ds = bs::webuk();
+    let (adj, scale) = ds.build(1);
+    let kills = [1usize, 2, 3, 4, 5, 12, 20];
+
+    let mut paper = Table::new(vec![
+        "T_recov", "1", "2", "3", "4", "5", "12", "20",
+    ]);
+    paper.row(vec!["HWLog", "8.84 s", "9.05 s", "11.50 s", "12.58 s", "14.78 s", "~18 s", "~21 s"]);
+    paper.row(vec!["LWLog", "8.76 s", "10.49 s", "10.98 s", "13.62 s", "15.12 s", "~18 s", "~21 s"]);
+
+    let mut measured = Table::new(vec![
+        "T_recov", "1", "2", "3", "4", "5", "12", "20",
+    ]);
+    let mut series: Vec<(FtKind, Vec<f64>)> = Vec::new();
+    for ft in [FtKind::HwLog, FtKind::LwLog] {
+        let mut row = vec![ft.name().to_string()];
+        let mut vals = Vec::new();
+        for &n_kill in &kills {
+            let mut spec = bs::pagerank_spec(&ds, scale, &format!("t3-{}-{n_kill}", ft.name()));
+            spec.ft = ft;
+            spec.plan = FailurePlan::kill_n_at(n_kill, 17);
+            let m = run_job_on(&spec, &adj, exec.clone()).expect("bench run");
+            row.push(secs(m.t_recov()));
+            vals.push(m.t_recov());
+        }
+        measured.row(row);
+        series.push((ft, vals));
+    }
+    bs::print_block("Table 3 — T_recov vs #workers killed (WebUK, PageRank)", &paper, &measured);
+
+    for (ft, vals) in &series {
+        let monotone_ish = vals.windows(2).filter(|w| w[1] >= w[0] * 0.95).count();
+        bs::shape_check(
+            &format!("{} T_recov grows with kill count", ft.name()),
+            monotone_ish >= vals.len() - 2 && vals.last().unwrap() > &(vals[0] * 1.5),
+            format!(
+                "1 kill {} → 20 kills {}",
+                secs(vals[0]),
+                secs(*vals.last().unwrap())
+            ),
+        );
+        bs::shape_check(
+            &format!("{} growth is sub-linear (kills ×20 → time ≪ ×20)", ft.name()),
+            vals.last().unwrap() < &(vals[0] * 10.0),
+            format!("ratio {:.1}×", vals.last().unwrap() / vals[0]),
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! Table 4 — "Time of Checkpointing and Logging" (PageRank on WebUK /
+//! WebBase): T_cp0, T_cp, T_cpload, T_log, T_logload for all four
+//! algorithms; the same experiment as Table 2, reported on the I/O axis.
+//!
+//! Shape targets (the paper's core argument):
+//!  * T_cp0 is algorithm-insensitive (same content everywhere);
+//!  * LWCP/LWLog T_cp is tens of times smaller than HWCP/HWLog;
+//!  * HWLog's T_cp exceeds even HWCP's — message-log GC is that
+//!    expensive — while LWLog's GC is ~free;
+//!  * log writes/loads themselves are cheap (OS page cache).
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::metrics::report;
+use lwcp::util::fmtutil::{secs, Table};
+
+fn paper_table(rows: &[[&str; 6]]) -> Table {
+    let mut t = report::io_table();
+    for r in rows {
+        t.row(r.to_vec());
+    }
+    t
+}
+
+fn main() {
+    let exec = bs::try_registry();
+    let cases = [
+        (
+            bs::webuk(),
+            paper_table(&[
+                ["HWCP", "46.29 s", "65.18 s", "5.95 s", "-", "-"],
+                ["LWCP", "46.62 s", "2.41 s", "3.28 s", "-", "-"],
+                ["HWLog", "46.87 s", "107.68 s", "3.69 s", "1.31 s", "0.84 s"],
+                ["LWLog", "46.59 s", "2.42 s", "3.14 s", "0.19 s", "0.11 s"],
+            ]),
+        ),
+        (
+            bs::webbase(),
+            paper_table(&[
+                ["HWCP", "18.06 s", "27.45 s", "2.83 s", "-", "-"],
+                ["LWCP", "18.60 s", "2.16 s", "1.96 s", "-", "-"],
+                ["HWLog", "18.55 s", "48.77 s", "2.23 s", "0.81 s", "0.56 s"],
+                ["LWLog", "18.70 s", "2.24 s", "2.10 s", "0.08 s", "0.02 s"],
+            ]),
+        ),
+    ];
+
+    for (ds, paper) in cases {
+        let (adj, scale) = ds.build(1);
+        let mut measured = report::io_table();
+        let mut results = Vec::new();
+        for ft in FtKind::all() {
+            let mut spec = bs::pagerank_spec(&ds, scale, &format!("t4-{}", ft.name()));
+            spec.ft = ft;
+            let m = run_job_on(&spec, &adj, exec.clone()).expect("bench run");
+            measured.row(report::io_row(ft.name(), &m));
+            results.push((ft, m));
+        }
+        bs::print_block(
+            &format!("Table 4 — checkpoint/log I/O on {}", ds.name()),
+            &paper,
+            &measured,
+        );
+
+        let get = |ft: FtKind| results.iter().find(|(f, _)| *f == ft).map(|(_, m)| m).unwrap();
+        let (hwcp, lwcp) = (get(FtKind::HwCp), get(FtKind::LwCp));
+        let (hwlog, lwlog) = (get(FtKind::HwLog), get(FtKind::LwLog));
+
+        let cp0s: Vec<f64> = results.iter().map(|(_, m)| m.t_cp0).collect();
+        let cp0_spread = cp0s.iter().cloned().fold(0.0, f64::max)
+            / cp0s.iter().cloned().fold(f64::MAX, f64::min);
+        bs::shape_check(
+            "T_cp0 insensitive to algorithm",
+            cp0_spread < 1.1,
+            format!("spread {:.2}× around {}", cp0_spread, secs(cp0s[0])),
+        );
+        bs::shape_check(
+            "lightweight T_cp tens of times smaller",
+            hwcp.t_cp() > 10.0 * lwcp.t_cp() && hwlog.t_cp() > 10.0 * lwlog.t_cp(),
+            format!(
+                "HWCP/LWCP = {:.0}×, HWLog/LWLog = {:.0}×",
+                hwcp.t_cp() / lwcp.t_cp(),
+                hwlog.t_cp() / lwlog.t_cp()
+            ),
+        );
+        bs::shape_check(
+            "HWLog T_cp > HWCP T_cp (message-log GC)",
+            hwlog.t_cp() > hwcp.t_cp(),
+            format!("{} vs {}", secs(hwlog.t_cp()), secs(hwcp.t_cp())),
+        );
+        bs::shape_check(
+            "LWLog GC ≈ free (T_cp ≈ LWCP's)",
+            lwlog.t_cp() < lwcp.t_cp() * 1.5,
+            format!("{} vs {}", secs(lwlog.t_cp()), secs(lwcp.t_cp())),
+        );
+        bs::shape_check(
+            "LWLog T_log ≪ HWLog T_log (vertex states vs messages)",
+            lwlog.t_log() < 0.5 * hwlog.t_log(),
+            format!("{} vs {}", secs(lwlog.t_log()), secs(hwlog.t_log())),
+        );
+        bs::shape_check(
+            "T_log ≪ T_norm (logging hides behind transmission)",
+            hwlog.t_log() < 0.2 * hwlog.t_norm(),
+            format!("{} vs {}", secs(hwlog.t_log()), secs(hwlog.t_norm())),
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Table 5 — "Comparison with Other Systems (HWCP only)": PageRank
+//! T_norm and T_cp for Pregel+ (this engine) vs. Giraph 1.0.0,
+//! GraphLab 2.2 and GraphX (Spark 1.1.0).
+//!
+//! We cannot run JVM/Spark stacks in this environment; the comparison
+//! systems are *emulation profiles* (per-system compute-efficiency and
+//! checkpoint-volume multipliers calibrated from the paper's own
+//! reported ratios — see `sim::SystemProfile` and DESIGN.md §2). The
+//! point this table defends in the paper — the HWCP baseline we compare
+//! LWCP against is already the fastest implementation — is a *shape*
+//! claim, preserved by the profiles.
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::pregel::FailurePlan;
+use lwcp::sim::SystemProfile;
+use lwcp::util::fmtutil::{secs, Table};
+
+fn main() {
+    let exec = bs::try_registry();
+    let systems = [
+        ("Pregel+", SystemProfile::PregelPlus),
+        ("Giraph", SystemProfile::GiraphLike),
+        ("GraphLab", SystemProfile::GraphLabLike),
+        ("GraphX", SystemProfile::GraphXLike),
+    ];
+    let cases = [
+        (bs::webuk(), [["31.45 s", "65.18 s"], ["164.99 s", "74.52 s"], ["245.62 s", "1692 s"], ["362.1 s", "493.5 s"]]),
+        (bs::webbase(), [["17.11 s", "27.45 s"], ["61.41 s", "24.45 s"], ["79.91 s", "454 s"], ["283.5 s", "189.5 s"]]),
+    ];
+
+    for (ds, paper_rows) in cases {
+        let (adj, scale) = ds.build(1);
+        let mut paper = Table::new(vec!["system", "T_norm", "T_cp"]);
+        for (i, (name, _)) in systems.iter().enumerate() {
+            paper.row(vec![name.to_string(), paper_rows[i][0].into(), paper_rows[i][1].into()]);
+        }
+        let mut measured = Table::new(vec!["system", "T_norm", "T_cp"]);
+        let mut norms = Vec::new();
+        for (name, profile) in systems {
+            let mut spec = bs::pagerank_spec(&ds, scale, &format!("t5-{name}"));
+            spec.ft = FtKind::HwCp;
+            spec.profile = profile;
+            spec.plan = FailurePlan::none(); // failure-free comparison
+            // Only the native profile exercises the XLA hot path.
+            let e = if profile == SystemProfile::PregelPlus { exec.clone() } else { None };
+            let m = run_job_on(&spec, &adj, e).expect("bench run");
+            measured.row(vec![name.to_string(), secs(m.t_norm()), secs(m.t_cp())]);
+            norms.push((name, m.t_norm(), m.t_cp()));
+        }
+        bs::print_block(
+            &format!("Table 5 — system comparison on {} (HWCP)", ds.name()),
+            &paper,
+            &measured,
+        );
+        bs::shape_check(
+            "Pregel+ (ours) has the smallest T_norm",
+            norms.iter().all(|&(_, t, _)| t >= norms[0].1),
+            norms.iter().map(|(n, t, _)| format!("{n} {}", secs(*t))).collect::<Vec<_>>().join(", "),
+        );
+        bs::shape_check(
+            "GraphLab's snapshot T_cp is by far the largest",
+            norms.iter().all(|&(n, _, c)| n == "GraphLab" || c <= norms[2].2),
+            format!("GraphLab T_cp {}", secs(norms[2].2)),
+        );
+    }
+}

@@ -1,0 +1,89 @@
+//! Table 6 — "Performance of HWLog Implementation of [7]" (Shen et al.,
+//! PVLDB'15): their Giraph-based message-logging system vs. our HWLog.
+//!
+//! Their build could not run Giraph multithreaded, so it used **one
+//! worker per machine** (15 instead of 120), plus Giraph-like per-object
+//! overheads and a zookeeper round for their cost-sensitive vertex
+//! reassignment (which also breaks the simple hash(.) partitioning).
+//! The `ShenGiraph` profile + a 15×1 topology reproduce why their
+//! numbers are ~8× worse than our HWLog on the same workload.
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::sim::{SystemProfile, Topology};
+use lwcp::util::fmtutil::{secs, Table};
+
+fn main() {
+    let exec = bs::try_registry();
+    let cases = [
+        (
+            bs::webuk(),
+            // Paper Table 6(a) (legible cells): HWCP row partially
+            // garbled in the source; HWLog: 249.6 / 71.5 / 104.3 / 177.0 / 26.0.
+            vec![
+                vec!["ours HWLog".to_string(), "32.36 s".into(), "16.83 s".into(), "8.84 s".into(), "107.68 s".into(), "1.31 s".into()],
+                vec!["[7] HWLog".to_string(), "249.6 s".into(), "71.5 s".into(), "104.3 s".into(), "177.0 s".into(), "26.0 s".into()],
+            ],
+        ),
+        (
+            bs::webbase(),
+            vec![
+                vec!["ours HWLog".to_string(), "17.31 s".into(), "4.79 s".into(), "2.27 s".into(), "48.77 s".into(), "0.81 s".into()],
+                vec!["[7] HWLog".to_string(), "72 s".into(), "28.0 s".into(), "38.0 s".into(), "88.2 s".into(), "8.1 s".into()],
+            ],
+        ),
+    ];
+
+    for (ds, paper_rows) in cases {
+        let (adj, scale) = ds.build(1);
+        let mut paper = Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_cp", "T_log"]);
+        for r in &paper_rows {
+            paper.row(r.clone());
+        }
+
+        let mut measured = Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_cp", "T_log"]);
+        // Ours: 15 machines × 8 workers, native profile.
+        let mut ours_spec = bs::pagerank_spec(&ds, scale, "t6-ours");
+        ours_spec.ft = FtKind::HwLog;
+        let ours = run_job_on(&ours_spec, &adj, exec.clone()).expect("ours");
+        measured.row(vec![
+            "ours HWLog".to_string(),
+            secs(ours.t_norm()),
+            secs(ours.t_cpstep()),
+            secs(ours.t_recov()),
+            secs(ours.t_cp()),
+            secs(ours.t_log()),
+        ]);
+        // Theirs: 15 machines × 1 worker, Shen/Giraph profile.
+        let mut shen_spec = bs::pagerank_spec(&ds, scale, "t6-shen");
+        shen_spec.ft = FtKind::HwLog;
+        shen_spec.topo = Topology::new(15, 1);
+        shen_spec.profile = SystemProfile::ShenGiraph;
+        let shen = run_job_on(&shen_spec, &adj, None).expect("shen");
+        measured.row(vec![
+            "[7] HWLog".to_string(),
+            secs(shen.t_norm()),
+            secs(shen.t_cpstep()),
+            secs(shen.t_recov()),
+            secs(shen.t_cp()),
+            secs(shen.t_log()),
+        ]);
+
+        bs::print_block(
+            &format!("Table 6 — [7]'s HWLog vs ours on {}", ds.name()),
+            &paper,
+            &measured,
+        );
+        bs::shape_check(
+            "[7]'s T_norm several times ours (1 worker/machine + JVM)",
+            shen.t_norm() > 3.0 * ours.t_norm(),
+            format!("{} vs {}", secs(shen.t_norm()), secs(ours.t_norm())),
+        );
+        bs::shape_check(
+            "[7]'s recovery far slower (reassignment + lost parallelism)",
+            shen.t_recov() > 3.0 * ours.t_recov(),
+            format!("{} vs {}", secs(shen.t_recov()), secs(ours.t_recov())),
+        );
+    }
+}

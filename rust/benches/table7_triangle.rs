@@ -1,0 +1,130 @@
+//! Table 7 — "Triangle Counting Performance on Friendster": the
+//! appendix's multi-round bounded-probe algorithm (C = 1), δ=10, one
+//! worker killed at superstep 20.
+//!
+//! 7(a): T_norm = total time of supersteps 11–19 pre-failure, T_recov =
+//! total time recovering supersteps 11–19, T_cp = checkpoint time, for
+//! all four algorithms. 7(b): T_recov as 1–5 workers are killed.
+//!
+//! Shape: log-based T_recov ≈ 10× under checkpoint-based (which must
+//! recompute the expensive early probe rounds); LWCP/LWLog T_cp ≈ 10–20×
+//! under HWCP/HWLog (probe messages are the bulk of a heavyweight
+//! checkpoint here — Ω(|E|^1.5) in the one-shot algorithm, C·|V| per
+//! round in this one).
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::coordinator::{AppSpec, GraphSource, JobSpec};
+use lwcp::ft::FtKind;
+use lwcp::metrics::StepKind;
+use lwcp::pregel::FailurePlan;
+use lwcp::storage::Backing;
+use lwcp::util::fmtutil::{secs, Table};
+
+fn triangle_spec(ds: &bs::Dataset, adj_n: usize, scale: f64, tag: &str) -> JobSpec {
+    JobSpec {
+        app: AppSpec::Triangle { c: 1 },
+        graph: GraphSource::Preset(ds.preset, adj_n),
+        seed: 1,
+        topo: bs::paper_topology(),
+        ft: FtKind::LwCp,
+        cp_every: 10,
+        cp_every_secs: None,
+        plan: FailurePlan::kill_n_at(1, 20),
+        backing: Backing::Memory,
+        profile: lwcp::sim::SystemProfile::PregelPlus,
+        data_scale: scale,
+        tag: tag.into(),
+        // The timing window of the experiment is supersteps 1–30; the
+        // full triangle count would run the long tail of hub rounds.
+        max_supersteps: 40,
+    }
+}
+
+fn main() {
+    let ds = bs::friendster();
+    let (adj, scale) = ds.build(1);
+    let n = adj.len();
+
+    // --- 7(a): algorithm comparison ---
+    let mut paper = Table::new(vec!["", "T_norm", "T_recov", "T_cp"]);
+    paper.row(vec!["HWCP", "232.9 s", "226.7 s", "32.24 s"]);
+    paper.row(vec!["LWCP", "241.4 s", "237.0 s", "3.25 s"]);
+    paper.row(vec!["HWLog", "230.8 s", "24.69 s", "63.88 s"]);
+    paper.row(vec!["LWLog", "242.6 s", "25.05 s", "3.93 s"]);
+
+    let mut measured = Table::new(vec!["", "T_norm", "T_recov", "T_cp"]);
+    let mut results = Vec::new();
+    for ft in FtKind::all() {
+        let mut spec = triangle_spec(&ds, n, scale, &format!("t7-{}", ft.name()));
+        spec.ft = ft;
+        let m = run_job_on(&spec, &adj, None).expect("bench run");
+        let t_norm = m.window_total(11, 19, &[StepKind::Normal]);
+        let t_recov = m.window_total(11, 19, &[StepKind::Recovery]);
+        measured.row(vec![
+            ft.name().to_string(),
+            secs(t_norm),
+            secs(t_recov),
+            secs(m.t_cp()),
+        ]);
+        results.push((ft, t_norm, t_recov, m.t_cp()));
+    }
+    bs::print_block(
+        &format!("Table 7(a) — triangle counting on {} (C=1, δ=10, kill @20)", ds.name()),
+        &paper,
+        &measured,
+    );
+    let get = |ft: FtKind| results.iter().find(|(f, ..)| *f == ft).unwrap();
+    let (hwcp, lwcp) = (get(FtKind::HwCp), get(FtKind::LwCp));
+    let (hwlog, lwlog) = (get(FtKind::HwLog), get(FtKind::LwLog));
+    bs::shape_check(
+        "log-based T_recov ≪ checkpoint-based",
+        hwlog.2 < 0.4 * hwcp.2 && lwlog.2 < 0.4 * lwcp.2,
+        format!("HWLog {} vs HWCP {}", secs(hwlog.2), secs(hwcp.2)),
+    );
+    bs::shape_check(
+        "lightweight T_cp ≈ 10–20× smaller",
+        hwcp.3 > 5.0 * lwcp.3 && hwlog.3 > 5.0 * lwlog.3,
+        format!(
+            "HWCP/LWCP {:.0}×, HWLog/LWLog {:.0}×",
+            hwcp.3 / lwcp.3,
+            hwlog.3 / lwlog.3
+        ),
+    );
+    bs::shape_check(
+        "HWLog T_cp > HWCP T_cp (probe-log GC)",
+        hwlog.3 > hwcp.3,
+        format!("{} vs {}", secs(hwlog.3), secs(hwcp.3)),
+    );
+
+    // --- 7(b): T_recov vs #killed ---
+    let kills = [1usize, 2, 3, 4, 5];
+    let mut paper_b = Table::new(vec!["# killed", "1", "2", "3", "4", "5"]);
+    paper_b.row(vec!["HWLog", "24.69 s", "36.03 s", "49.76 s", "68.69 s", "76.44 s"]);
+    paper_b.row(vec!["LWLog", "25.05 s", "37.13 s", "49.80 s", "60.00 s", "71.66 s"]);
+    let mut measured_b = Table::new(vec!["# killed", "1", "2", "3", "4", "5"]);
+    for ft in [FtKind::HwLog, FtKind::LwLog] {
+        let mut row = vec![ft.name().to_string()];
+        let mut vals = Vec::new();
+        for &k in &kills {
+            let mut spec = triangle_spec(&ds, n, scale, &format!("t7b-{}-{k}", ft.name()));
+            spec.ft = ft;
+            spec.plan = FailurePlan::kill_n_at(k, 20);
+            let m = run_job_on(&spec, &adj, None).expect("bench run");
+            let t = m.window_total(11, 19, &[StepKind::Recovery]);
+            row.push(secs(t));
+            vals.push(t);
+        }
+        measured_b.row(row);
+        // Growth is present but weaker than the paper's ~3×: replacement
+        // workers land on distinct machines, so our full-duplex NIC model
+        // parallelizes their inflow (see EXPERIMENTS.md §Table 7).
+        bs::shape_check(
+            &format!("{} T_recov increases with #killed", ft.name()),
+            vals.windows(2).all(|w| w[1] >= w[0] * 0.99)
+                && vals.last().unwrap() > &(vals[0] * 1.05),
+            format!("1→5 kills: {} → {}", secs(vals[0]), secs(*vals.last().unwrap())),
+        );
+    }
+    bs::print_block("Table 7(b) — T_recov vs #killed (triangle)", &paper_b, &measured_b);
+}

@@ -1,0 +1,203 @@
+//! Maximal bipartite matching (the 4-phase algorithm of the Pregel
+//! paper) — the paper's *request–respond type 1* example (§4): a
+//! responding vertex selects **one** requester, so LWCP only needs the
+//! vertex value expanded with the selected vertex id. With that field,
+//! every phase generates its messages from state alone — no masking.
+//!
+//! Vertices with even ids form the left side, odd ids the right side
+//! (edges between same-parity vertices are ignored). Round structure
+//! (superstep mod 4): 1 = request, 2 = grant, 3 = accept, 0 = confirm.
+
+use crate::graph::VertexId;
+use crate::pregel::app::{App, Ctx};
+
+/// Value = (matched partner id or NONE, selected candidate id or NONE).
+pub type BmValue = (u32, u32);
+
+/// Sentinel for "no vertex".
+pub const NONE: u32 = u32::MAX;
+
+#[derive(Default)]
+pub struct BipartiteMatching;
+
+fn is_left(id: VertexId) -> bool {
+    id % 2 == 0
+}
+
+fn phase(step: u64) -> u64 {
+    (step - 1) % 4
+}
+
+impl App for BipartiteMatching {
+    type V = BmValue;
+    type M = u32; // sender id (meaning depends on phase)
+
+    fn agg_slots(&self) -> usize {
+        2 // [0]: new matches this round; [1]: confirm-phase marker
+    }
+
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> BmValue {
+        (NONE, NONE)
+    }
+
+    fn halt_on(&self, agg: &crate::pregel::AggState) -> bool {
+        agg.slots.len() >= 2 && agg.slots[1] > 0.0 && agg.slots[0] == 0.0
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, BmValue, u32>, msgs: &[u32]) {
+        let id = ctx.id();
+        let left = is_left(id);
+        match phase(ctx.superstep()) {
+            0 => {
+                // Request: unmatched left vertices ask every (right)
+                // neighbor. State-only.
+                let (matched, _) = *ctx.value();
+                if left && matched == NONE {
+                    for i in 0..ctx.degree() {
+                        let to = ctx.neighbors()[i];
+                        if !is_left(to) {
+                            ctx.send(to, id);
+                        }
+                    }
+                }
+            }
+            1 => {
+                // Grant: an unmatched right vertex selects ONE requester
+                // (Equation 2: store it in the value) and answers it
+                // (Equation 3: from the stored field).
+                let (matched, _) = *ctx.value();
+                let selected = if !left && matched == NONE {
+                    msgs.iter().copied().min().unwrap_or(NONE)
+                } else {
+                    NONE
+                };
+                ctx.set_value((matched, selected));
+                let (_, sel) = *ctx.value();
+                if sel != NONE {
+                    ctx.send(sel, id);
+                }
+            }
+            2 => {
+                // Accept: an unmatched left vertex picks one grant,
+                // records the match, and accepts it. Right vertices do
+                // nothing here — their pending `selected` (who they
+                // granted) must survive until the confirm phase.
+                if left {
+                    let (matched, _) = *ctx.value();
+                    if matched == NONE {
+                        let choice = msgs.iter().copied().min().unwrap_or(NONE);
+                        if choice != NONE {
+                            ctx.set_value((choice, choice));
+                        } else {
+                            ctx.set_value((matched, NONE));
+                        }
+                    } else {
+                        ctx.set_value((matched, NONE));
+                    }
+                    let (_, sel) = *ctx.value();
+                    if sel != NONE {
+                        ctx.send(sel, id);
+                    }
+                }
+            }
+            _ => {
+                // Confirm: the right vertex whose grant was accepted
+                // finalizes the match.
+                let (matched, selected) = *ctx.value();
+                if !left && matched == NONE {
+                    if let Some(&acceptor) = msgs.first() {
+                        debug_assert_eq!(acceptor, selected);
+                        ctx.set_value((acceptor, NONE));
+                        ctx.aggregate(0, 1.0);
+                    } else {
+                        ctx.set_value((matched, NONE));
+                    }
+                } else {
+                    ctx.set_value((matched, NONE));
+                }
+                ctx.aggregate(1, 1.0);
+            }
+        }
+        // All vertices stay awake until the round-level halt condition.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::FtKind;
+    use crate::graph::generate;
+    use crate::pregel::engine::{Engine, EngineConfig};
+
+    fn run_matching(adj: &[Vec<VertexId>]) -> Vec<(u32, u32)> {
+        let mut eng =
+            Engine::new(BipartiteMatching, EngineConfig::small_test(FtKind::None), adj)
+                .unwrap();
+        eng.run().unwrap();
+        (0..adj.len() as u32).map(|v| *eng.value_of(v)).collect()
+    }
+
+    /// Matching validity: symmetric, cross-side, along real edges.
+    fn check_valid(adj: &[Vec<VertexId>], matches: &[(u32, u32)]) -> usize {
+        let mut n_matched = 0;
+        for (v, &(m, _)) in matches.iter().enumerate() {
+            if m == NONE {
+                continue;
+            }
+            n_matched += 1;
+            assert_ne!(is_left(v as u32), is_left(m), "same-side match {v}-{m}");
+            assert!(adj[v].contains(&m), "match {v}-{m} not an edge");
+            assert_eq!(matches[m as usize].0, v as u32, "asymmetric match {v}-{m}");
+        }
+        n_matched / 2
+    }
+
+    #[test]
+    fn produces_valid_matching() {
+        let adj = generate::erdos_renyi(80, 300, false, 77);
+        let matches = run_matching(&adj);
+        let size = check_valid(&adj, &matches);
+        assert!(size > 0, "dense-ish graph should match someone");
+    }
+
+    #[test]
+    fn matching_is_maximal() {
+        // Maximal: no edge (u,v) with both endpoints unmatched and
+        // opposite sides.
+        let adj = generate::erdos_renyi(60, 200, false, 13);
+        let matches = run_matching(&adj);
+        for (u, l) in adj.iter().enumerate() {
+            if matches[u].0 != NONE {
+                continue;
+            }
+            for &v in l {
+                if is_left(u as u32) != is_left(v) {
+                    assert_ne!(
+                        matches[v as usize].0,
+                        NONE,
+                        "edge {u}-{v} has both endpoints unmatched"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_edge_matches() {
+        // 0 (left) — 1 (right).
+        let adj = vec![vec![1u32], vec![0u32]];
+        let matches = run_matching(&adj);
+        assert_eq!(matches[0].0, 1);
+        assert_eq!(matches[1].0, 0);
+    }
+
+    #[test]
+    fn all_phases_lwcp_applicable() {
+        // Type-1 request-respond: the selected-vertex field makes every
+        // phase state-derivable (paper §4).
+        let app = BipartiteMatching;
+        for s in 1..=8 {
+            assert!(app.lwcp_applicable(s));
+        }
+    }
+}

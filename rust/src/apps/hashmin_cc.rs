@@ -1,0 +1,130 @@
+//! Hash-Min connected components — the paper's canonical *traversal
+//! style* algorithm (§4): a vertex only sends messages when its value
+//! was updated, so LWCP requires the "updated" boolean to live inside
+//! the vertex value.
+
+use crate::graph::VertexId;
+use crate::pregel::app::{App, CombineFn, Ctx};
+
+/// Value = (component min-label, changed-this-superstep flag).
+pub type CcValue = (u32, bool);
+
+/// Hash-Min CC on an undirected graph: labels converge to the minimum
+/// vertex id of each component.
+#[derive(Default)]
+pub struct HashMinCc;
+
+fn combine_min(acc: &mut u32, m: &u32) {
+    if *m < *acc {
+        *acc = *m;
+    }
+}
+
+impl App for HashMinCc {
+    type V = CcValue;
+    type M = u32;
+
+    fn init(&self, id: VertexId, _adj: &[VertexId], _n: usize) -> CcValue {
+        (id, true) // initially "changed": superstep 1 broadcasts the id
+    }
+
+    fn combiner(&self) -> Option<CombineFn<u32>> {
+        Some(combine_min)
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, CcValue, u32>, msgs: &[u32]) {
+        // Equation (2): fold the min of incoming labels into the state.
+        if ctx.superstep() > 1 {
+            let (cur, _) = *ctx.value();
+            let incoming = msgs.iter().copied().min().unwrap_or(u32::MAX);
+            if incoming < cur {
+                ctx.set_value((incoming, true));
+            } else {
+                ctx.set_value((cur, false));
+            }
+        }
+        // Equation (3): traversal style — send only if the state says the
+        // value changed (replay reads the checkpointed flag).
+        let (label, changed) = *ctx.value();
+        if changed {
+            ctx.send_all(label);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::FtKind;
+    use crate::graph::generate;
+    use crate::pregel::engine::{Engine, EngineConfig};
+
+    /// Union-find oracle.
+    pub(crate) fn cc_oracle(adj: &[Vec<VertexId>]) -> Vec<u32> {
+        let n = adj.len();
+        let mut parent: Vec<usize> = (0..n).collect();
+        fn find(p: &mut Vec<usize>, x: usize) -> usize {
+            let mut r = x;
+            while p[r] != r {
+                r = p[r];
+            }
+            let mut c = x;
+            while p[c] != r {
+                let next = p[c];
+                p[c] = r;
+                c = next;
+            }
+            r
+        }
+        for (u, l) in adj.iter().enumerate() {
+            for &v in l {
+                let (ru, rv) = (find(&mut parent, u), find(&mut parent, v as usize));
+                if ru != rv {
+                    parent[ru.max(rv)] = ru.min(rv);
+                }
+            }
+        }
+        // Label every vertex with the min id of its component.
+        let mut min_of_root = vec![u32::MAX; n];
+        for v in 0..n {
+            let r = find(&mut parent, v);
+            min_of_root[r] = min_of_root[r].min(v as u32);
+        }
+        (0..n).map(|v| min_of_root[find(&mut parent, v)]).collect()
+    }
+
+    #[test]
+    fn labels_match_union_find() {
+        let adj = generate::erdos_renyi(120, 150, false, 11); // sparse: many components
+        let mut eng =
+            Engine::new(HashMinCc, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        let oracle = cc_oracle(&adj);
+        for v in 0..120u32 {
+            assert_eq!(eng.value_of(v).0, oracle[v as usize], "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn halts_when_converged() {
+        let adj = generate::erdos_renyi(60, 120, false, 3);
+        let mut eng =
+            Engine::new(HashMinCc, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        let m = eng.run().unwrap();
+        // Terminates well before the engine cap.
+        assert!(m.supersteps_run < 60, "ran {}", m.supersteps_run);
+        let last = *m.steps.last().unwrap();
+        let g = eng.global_agg(last.step).unwrap();
+        assert!(g.job_done());
+    }
+
+    #[test]
+    fn isolated_vertices_keep_own_label() {
+        let adj = vec![vec![], vec![], vec![0u32]]; // 2 isolated-ish, edge 2->0 (directed treated as is)
+        let mut eng =
+            Engine::new(HashMinCc, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        assert_eq!(eng.value_of(1).0, 1);
+    }
+}

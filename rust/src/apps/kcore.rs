@@ -1,0 +1,146 @@
+//! k-core decomposition — the paper's topology-mutation example (§4):
+//! iteratively remove vertices of degree < k (with their edges), until
+//! the remaining subgraph is the k-core. Every removal is an edge
+//! deletion logged through the incremental checkpointing path (E_W).
+//!
+//! LWCP contract: Equation (2) first applies incoming removal notices
+//! (deleting the edges to removed neighbors) and updates the
+//! (`removed`, `just_removed`) flags; Equation (3) sends a removal
+//! notice to the *remaining* neighbors iff `just_removed` — state-only,
+//! so replay regenerates the notices against the recovered Γ(v) (CP[0]
+//! + E_W replay reproduces exactly the superstep-i adjacency).
+//!
+//! Note the removed vertex keeps its own adjacency list (only the
+//! *neighbors* drop their edges to it): deleting its own edges in the
+//! same superstep would break replay, since Equation (3) reads Γ(v)
+//! after Equation (2)'s mutations.
+
+use crate::graph::VertexId;
+use crate::pregel::app::{App, Ctx};
+
+/// Value = (removed, just_removed_this_superstep).
+pub type KcoreValue = (bool, bool);
+
+pub struct KCore {
+    pub k: usize,
+}
+
+impl App for KCore {
+    type V = KcoreValue;
+    type M = u32; // id of a removed neighbor
+
+    fn agg_slots(&self) -> usize {
+        1 // vertices removed this superstep
+    }
+
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> KcoreValue {
+        (false, false)
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, KcoreValue, u32>, msgs: &[u32]) {
+        // Equation (2): apply removal notices, then re-check the degree.
+        let (removed, _) = *ctx.value();
+        for &gone in msgs {
+            ctx.del_edge(gone);
+        }
+        if !removed && ctx.degree() < self.k {
+            ctx.set_value((true, true));
+            ctx.aggregate(0, 1.0);
+        } else {
+            ctx.set_value((removed, false));
+        }
+        // Equation (3): notify remaining neighbors from state.
+        let (_, just) = *ctx.value();
+        if just {
+            let id = ctx.id();
+            ctx.send_all(id);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::FtKind;
+    use crate::graph::generate;
+    use crate::pregel::engine::{Engine, EngineConfig};
+
+    /// Sequential peeling oracle: which vertices survive in the k-core.
+    pub(crate) fn kcore_oracle(adj: &[Vec<VertexId>], k: usize) -> Vec<bool> {
+        let n = adj.len();
+        let mut deg: Vec<usize> = adj.iter().map(Vec::len).collect();
+        let mut alive = vec![true; n];
+        loop {
+            let mut changed = false;
+            for v in 0..n {
+                if alive[v] && deg[v] < k {
+                    alive[v] = false;
+                    changed = true;
+                    for &u in &adj[v] {
+                        if alive[u as usize] {
+                            deg[u as usize] -= 1;
+                        }
+                    }
+                }
+            }
+            if !changed {
+                return alive;
+            }
+        }
+    }
+
+    #[test]
+    fn survivors_match_peeling() {
+        let adj = generate::erdos_renyi(80, 400, false, 17);
+        let k = 5;
+        let mut eng =
+            Engine::new(KCore { k }, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        let oracle = kcore_oracle(&adj, k);
+        for v in 0..80u32 {
+            let (removed, _) = *eng.value_of(v);
+            assert_eq!(!removed, oracle[v as usize], "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn k1_keeps_everything_with_edges() {
+        let adj = generate::erdos_renyi(40, 100, false, 5);
+        let mut eng =
+            Engine::new(KCore { k: 1 }, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        for v in 0..40u32 {
+            let (removed, _) = *eng.value_of(v);
+            assert_eq!(removed, adj[v as usize].is_empty(), "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn huge_k_removes_everything() {
+        let adj = generate::erdos_renyi(40, 100, false, 6);
+        let mut eng = Engine::new(
+            KCore { k: 1000 },
+            EngineConfig::small_test(FtKind::None),
+            &adj,
+        )
+        .unwrap();
+        eng.run().unwrap();
+        for v in 0..40u32 {
+            assert!(eng.value_of(v).0, "vertex {v} should be removed");
+        }
+    }
+
+    #[test]
+    fn cascade_peels_a_path() {
+        // Path 0-1-2-3: 2-core is empty; removal cascades from the ends.
+        let adj = vec![vec![1u32], vec![0, 2], vec![1, 3], vec![2]];
+        let mut eng =
+            Engine::new(KCore { k: 2 }, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        let m = eng.run().unwrap();
+        for v in 0..4u32 {
+            assert!(eng.value_of(v).0);
+        }
+        assert!(m.supersteps_run >= 3, "cascade takes multiple supersteps");
+    }
+}

@@ -1,0 +1,28 @@
+//! Vertex programs (the paper's evaluated algorithms + coverage of all
+//! three algorithm classes of §4).
+//!
+//! | app | class (§4) | LWCP handling |
+//! |-----|-----------|----------------|
+//! | [`pagerank::PageRank`] | always-active | unmodified compute() |
+//! | [`hashmin_cc::HashMinCc`] | traversal | `changed` flag in the value |
+//! | [`sssp::Sssp`] | traversal | `changed` flag in the value |
+//! | [`triangle::TriangleCount`] | request–respond (no response msgs) | iterator pair (prev, cur) in the value; appendix algorithm |
+//! | [`kcore::KCore`] | traversal + topology mutation | `just_removed` flag; incremental edge log |
+//! | [`pointer_jump::PointerJump`] | request–respond type 2 | responding supersteps masked |
+//! | [`bipartite::BipartiteMatching`] | request–respond type 1 | 3 of 4 phases masked |
+
+pub mod bipartite;
+pub mod hashmin_cc;
+pub mod kcore;
+pub mod pagerank;
+pub mod pointer_jump;
+pub mod sssp;
+pub mod triangle;
+
+pub use bipartite::BipartiteMatching;
+pub use hashmin_cc::HashMinCc;
+pub use kcore::KCore;
+pub use pagerank::PageRank;
+pub use pointer_jump::PointerJump;
+pub use sssp::Sssp;
+pub use triangle::TriangleCount;

@@ -1,0 +1,216 @@
+//! PageRank — the paper's always-active workhorse (§1, §6.1).
+//!
+//! Pregel-style unnormalized PageRank: in superstep 1 every vertex
+//! distributes its initial rank; in superstep i > 1 it folds the summed
+//! incoming contributions with the damping factor and redistributes.
+//! `compute()` is *identical* for HWCP and LWCP (the paper's point):
+//! message generation already reads only the vertex state.
+//!
+//! The numeric update is also available as an XLA batch path
+//! ([`App::xla_superstep`]): the whole partition's fold runs through the
+//! AOT-compiled `pagerank_step` artifact (JAX/Pallas, Layer 1/2), with
+//! message values computed from the kernel's `contrib` output.
+
+use crate::pregel::app::{App, BatchExec, CombineFn, Ctx};
+use crate::pregel::message::{Inbox, Outbox};
+use crate::pregel::partition::Partition;
+use crate::graph::VertexId;
+use anyhow::Result;
+
+/// PageRank vertex program. Value = rank (f32), message = contribution.
+pub struct PageRank {
+    pub damping: f32,
+    /// Fixed superstep budget (PageRank is run for a fixed number of
+    /// iterations, as in the paper's experiments).
+    pub supersteps: u64,
+    /// Sender-side sum combining (on by default; the ablation bench
+    /// disables it to measure the combiner's effect on message volume).
+    pub combiner_enabled: bool,
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        PageRank { damping: 0.85, supersteps: 30, combiner_enabled: true }
+    }
+}
+
+fn combine_sum(acc: &mut f32, m: &f32) {
+    *acc += *m;
+}
+
+impl App for PageRank {
+    type V = f32;
+    type M = f32;
+
+    fn agg_slots(&self) -> usize {
+        1 // L1 delta (convergence monitoring)
+    }
+
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> f32 {
+        1.0
+    }
+
+    fn combiner(&self) -> Option<CombineFn<f32>> {
+        self.combiner_enabled.then_some(combine_sum as CombineFn<f32>)
+    }
+
+    fn max_supersteps(&self) -> u64 {
+        self.supersteps
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, f32, f32>, msgs: &[f32]) {
+        // Equation (2): fold messages into the state.
+        if ctx.superstep() > 1 {
+            // With the combiner there is at most one (pre-summed)
+            // message; without it this folds the full list.
+            let sum: f32 = msgs.iter().sum();
+            let old = *ctx.value();
+            let new = (1.0 - self.damping) + self.damping * sum;
+            ctx.set_value(new);
+            ctx.aggregate(0, (new - old).abs() as f64);
+        }
+        // Equation (3): generate messages from the state (read back via
+        // value() so replay sees the checkpointed rank).
+        let deg = ctx.degree();
+        if deg > 0 {
+            let share = *ctx.value() / deg as f32;
+            ctx.send_all(share);
+        }
+        // Always-active: never votes to halt; the job ends at the
+        // superstep budget.
+    }
+
+    fn supports_xla(&self) -> bool {
+        // The artifact bakes d = 0.85 and the batch path reads the
+        // combined per-slot message sum.
+        self.combiner_enabled && self.damping == 0.85
+    }
+
+    fn xla_superstep(
+        &self,
+        exec: &dyn BatchExec,
+        superstep: u64,
+        part: &mut Partition<f32>,
+        inbox: &Inbox<f32>,
+        out: &mut Outbox<f32>,
+        agg: &mut [f64],
+    ) -> Result<()> {
+        let n = part.n_slots();
+        if superstep > 1 {
+            let mut old = vec![0f32; n];
+            let mut msg = vec![0f32; n];
+            let mut deg = vec![0f32; n];
+            for slot in 0..n {
+                old[slot] = part.values[slot];
+                msg[slot] = inbox.msgs(slot).first().copied().unwrap_or(0.0);
+                deg[slot] = part.adj.degree(slot) as f32;
+            }
+            let outs = exec.run("pagerank_step", &[&old, &msg, &deg])?;
+            let (new, delta_sum) = (&outs[0], outs[2][0]);
+            part.values.copy_from_slice(&new[..n]);
+            agg[0] += delta_sum as f64;
+        }
+        // Message generation stays scalar (graph-topology work): send
+        // value/deg — computed exactly like the scalar path and the
+        // LWCP replay path, so all three produce bit-identical messages.
+        for slot in 0..n {
+            part.comp[slot] = true;
+            part.active[slot] = true;
+            let neighbors = part.adj.neighbors(slot);
+            if !neighbors.is_empty() {
+                let share = part.values[slot] / neighbors.len() as f32;
+                for &to in neighbors {
+                    out.send(to, share);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::FtKind;
+    use crate::graph::generate;
+    use crate::pregel::engine::{Engine, EngineConfig};
+
+    /// Sequential oracle: dense PageRank iteration matching the Pregel
+    /// schedule (superstep 1 only distributes).
+    pub(crate) fn pagerank_oracle(adj: &[Vec<VertexId>], damping: f32, steps: u64) -> Vec<f32> {
+        let n = adj.len();
+        let mut rank = vec![1.0f32; n];
+        for _ in 2..=steps {
+            let mut incoming = vec![0.0f32; n];
+            // Accumulate in a receiver-deterministic order: by sender id.
+            for (u, l) in adj.iter().enumerate() {
+                let d = l.len();
+                if d > 0 {
+                    let share = rank[u] / d as f32;
+                    for &v in l {
+                        incoming[v as usize] += share;
+                    }
+                }
+            }
+            for v in 0..n {
+                rank[v] = (1.0 - damping) + damping * incoming[v];
+            }
+        }
+        rank
+    }
+
+    #[test]
+    fn matches_oracle_approximately() {
+        let adj = generate::erdos_renyi(60, 300, true, 9);
+        let app = PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
+        let mut eng =
+            Engine::new(app, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        let oracle = pagerank_oracle(&adj, 0.85, 12);
+        for v in 0..60u32 {
+            let got = *eng.value_of(v);
+            let want = oracle[v as usize];
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "v={v}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_pagerank_is_uniform() {
+        let adj = generate::ring(20);
+        let app = PageRank { damping: 0.85, supersteps: 25, combiner_enabled: true };
+        let mut eng =
+            Engine::new(app, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        for v in 0..20u32 {
+            assert!((eng.value_of(v) - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let adj = generate::erdos_renyi(50, 250, true, 4);
+        let digest = |()| {
+            let app = PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+            let mut eng =
+                Engine::new(app, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+            eng.run().unwrap();
+            eng.digest()
+        };
+        assert_eq!(digest(()), digest(()));
+    }
+
+    #[test]
+    fn delta_aggregator_decreases() {
+        let adj = generate::erdos_renyi(80, 500, true, 2);
+        let app = PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true };
+        let mut eng =
+            Engine::new(app, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        let d3 = eng.global_agg(3).unwrap().slots[0];
+        let d15 = eng.global_agg(15).unwrap().slots[0];
+        assert!(d15 < d3, "delta should shrink: {d3} -> {d15}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Pointer jumping (path doubling) — the paper's *request–respond type 2*
+//! example (§4): a vertex must answer every requester, and requesters
+//! are not neighbors, so their ids cannot live in a(v). The responding
+//! supersteps are therefore LWCP-**masked** (outgoing messages depend on
+//! the incoming requests); LWCP defers due checkpoints past them and
+//! LWLog temporarily switches to message logging — exactly the paper's
+//! S-V / minimum-spanning-forest scenario.
+//!
+//! The computation: over the forest `parent(v) = min(v, min Γ(v))`, find
+//! each vertex's root by repeated doubling. Three-superstep rounds:
+//!   1. request: v asks its current parent for the parent's parent;
+//!   2. respond (masked): p sends parent(p) to each requester;
+//!   3. apply: v adopts the grandparent; converged when nothing changed.
+
+use crate::graph::VertexId;
+use crate::pregel::app::{App, Ctx};
+
+/// Value = (current parent pointer, changed-in-last-round flag).
+pub type PjValue = (u32, bool);
+
+#[derive(Default)]
+pub struct PointerJump;
+
+/// Which phase a superstep is (1-based supersteps).
+fn phase(step: u64) -> u64 {
+    (step - 1) % 3
+}
+
+impl App for PointerJump {
+    type V = PjValue;
+    type M = u32; // request: requester id; response: grandparent id
+
+    fn agg_slots(&self) -> usize {
+        2 // [0]: pointers changed this round; [1]: 1.0 marker on apply-phases
+    }
+
+    fn init(&self, id: VertexId, adj: &[VertexId], _n: usize) -> PjValue {
+        let p = adj.iter().copied().min().map_or(id, |m| m.min(id));
+        (p, true)
+    }
+
+    /// Responding supersteps (phase 2 of each round) are masked.
+    fn lwcp_applicable(&self, superstep: u64) -> bool {
+        phase(superstep) != 1
+    }
+
+    fn halt_on(&self, agg: &crate::pregel::AggState) -> bool {
+        // Converged: an apply-phase superstep saw zero pointer changes.
+        agg.slots.len() >= 2 && agg.slots[1] > 0.0 && agg.slots[0] == 0.0
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, PjValue, u32>, msgs: &[u32]) {
+        match phase(ctx.superstep()) {
+            0 => {
+                // Request phase: ask parent for its parent. Roots
+                // (parent == self) have converged locally but keep
+                // participating until the global change count is 0.
+                let (p, _) = *ctx.value();
+                if p != ctx.id() {
+                    ctx.send(p, ctx.id());
+                }
+            }
+            1 => {
+                // Respond phase (masked): answer every requester with our
+                // parent pointer. Message content depends on incoming
+                // requests — not derivable from state.
+                let (p, _) = *ctx.value();
+                for &requester in msgs {
+                    ctx.send(requester, p);
+                }
+            }
+            _ => {
+                // Apply phase: adopt the grandparent.
+                let (p, _) = *ctx.value();
+                if let Some(&gp) = msgs.first() {
+                    let changed = gp != p;
+                    ctx.set_value((gp, changed));
+                    if changed {
+                        ctx.aggregate(0, 1.0);
+                    }
+                } else {
+                    ctx.set_value((p, false));
+                }
+                ctx.aggregate(1, 1.0);
+            }
+        }
+        // Every phase keeps vertices active until the engine halts the
+        // job via halt_on (request-respond needs all vertices awake).
+    }
+}
+
+/// Oracle: the root of each vertex under `parent(v) = min(v, min Γ(v))`.
+pub fn pointer_jump_oracle(adj: &[Vec<VertexId>]) -> Vec<u32> {
+    let n = adj.len();
+    let parent: Vec<u32> = (0..n)
+        .map(|v| {
+            adj[v]
+                .iter()
+                .copied()
+                .min()
+                .map_or(v as u32, |m| m.min(v as u32))
+        })
+        .collect();
+    (0..n)
+        .map(|v| {
+            let mut cur = v as u32;
+            loop {
+                let p = parent[cur as usize];
+                if p == cur {
+                    return cur;
+                }
+                cur = p;
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::FtKind;
+    use crate::graph::generate;
+    use crate::pregel::engine::{Engine, EngineConfig};
+
+    #[test]
+    fn converges_to_forest_roots() {
+        let adj = generate::erdos_renyi(60, 90, false, 12);
+        let mut eng =
+            Engine::new(PointerJump, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        let oracle = pointer_jump_oracle(&adj);
+        for v in 0..60u32 {
+            assert_eq!(eng.value_of(v).0, oracle[v as usize], "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn doubling_beats_chain_length() {
+        // A long path: 0-1-2-...-59; doubling should finish in
+        // O(log n) rounds (3 supersteps each), far under 59 rounds.
+        let n = 60usize;
+        let adj: Vec<Vec<u32>> = (0..n)
+            .map(|v| {
+                let mut l = Vec::new();
+                if v > 0 {
+                    l.push(v as u32 - 1);
+                }
+                if v + 1 < n {
+                    l.push(v as u32 + 1);
+                }
+                l
+            })
+            .collect();
+        let mut eng =
+            Engine::new(PointerJump, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        let m = eng.run().unwrap();
+        for v in 0..n as u32 {
+            assert_eq!(eng.value_of(v).0, 0);
+        }
+        assert!(m.supersteps_run < 3 * 15, "ran {} supersteps", m.supersteps_run);
+    }
+
+    #[test]
+    fn respond_phases_are_masked() {
+        let app = PointerJump;
+        assert!(app.lwcp_applicable(1)); // request
+        assert!(!app.lwcp_applicable(2)); // respond
+        assert!(app.lwcp_applicable(3)); // apply
+        assert!(!app.lwcp_applicable(5));
+    }
+}

@@ -1,0 +1,152 @@
+//! Single-source shortest paths — the second traversal-style example of
+//! the paper (§4). Edge weights are derived deterministically from the
+//! endpoint ids (the datasets are unweighted), so replay regenerates
+//! identical messages from state alone.
+
+use crate::graph::VertexId;
+use crate::pregel::app::{App, CombineFn, Ctx};
+
+/// Value = (distance, changed flag).
+pub type SsspValue = (f32, bool);
+
+pub struct Sssp {
+    pub source: VertexId,
+}
+
+/// Deterministic pseudo-weight in [1, 8] from the edge endpoints.
+pub fn edge_weight(u: VertexId, v: VertexId) -> f32 {
+    let mut h = (u as u64) << 32 | v as u64;
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    (1 + (h % 8)) as f32
+}
+
+fn combine_min(acc: &mut f32, m: &f32) {
+    if *m < *acc {
+        *acc = *m;
+    }
+}
+
+impl App for Sssp {
+    type V = SsspValue;
+    type M = f32;
+
+    fn init(&self, id: VertexId, _adj: &[VertexId], _n: usize) -> SsspValue {
+        if id == self.source {
+            (0.0, true)
+        } else {
+            (f32::INFINITY, false)
+        }
+    }
+
+    fn initially_active(&self, id: VertexId) -> bool {
+        id == self.source
+    }
+
+    fn combiner(&self) -> Option<CombineFn<f32>> {
+        Some(combine_min)
+    }
+
+    fn compute(&self, ctx: &mut Ctx<'_, SsspValue, f32>, msgs: &[f32]) {
+        // Equation (2): relax.
+        if ctx.superstep() > 1 {
+            let (cur, _) = *ctx.value();
+            let best = msgs.iter().copied().fold(f32::INFINITY, f32::min);
+            if best < cur {
+                ctx.set_value((best, true));
+            } else {
+                ctx.set_value((cur, false));
+            }
+        }
+        // Equation (3): propagate from state.
+        let (dist, changed) = *ctx.value();
+        if changed && dist.is_finite() {
+            let id = ctx.id();
+            for i in 0..ctx.degree() {
+                let to = ctx.neighbors()[i];
+                ctx.send(to, dist + edge_weight(id, to));
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ft::FtKind;
+    use crate::graph::generate;
+    use crate::pregel::engine::{Engine, EngineConfig};
+
+    /// Dijkstra oracle with the same derived weights.
+    pub(crate) fn sssp_oracle(adj: &[Vec<VertexId>], source: VertexId) -> Vec<f32> {
+        let n = adj.len();
+        let mut dist = vec![f32::INFINITY; n];
+        dist[source as usize] = 0.0;
+        let mut visited = vec![false; n];
+        for _ in 0..n {
+            let mut u = usize::MAX;
+            let mut best = f32::INFINITY;
+            for v in 0..n {
+                if !visited[v] && dist[v] < best {
+                    best = dist[v];
+                    u = v;
+                }
+            }
+            if u == usize::MAX {
+                break;
+            }
+            visited[u] = true;
+            for &v in &adj[u] {
+                let w = edge_weight(u as VertexId, v);
+                if dist[u] + w < dist[v as usize] {
+                    dist[v as usize] = dist[u] + w;
+                }
+            }
+        }
+        dist
+    }
+
+    #[test]
+    fn distances_match_dijkstra() {
+        let adj = generate::erdos_renyi(90, 400, false, 21);
+        let app = Sssp { source: 0 };
+        let mut eng =
+            Engine::new(app, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        let oracle = sssp_oracle(&adj, 0);
+        for v in 0..90u32 {
+            let got = eng.value_of(v).0;
+            let want = oracle[v as usize];
+            if want.is_finite() {
+                assert!((got - want).abs() < 1e-3, "v={v}: {got} vs {want}");
+            } else {
+                assert!(got.is_infinite(), "v={v} should be unreachable");
+            }
+        }
+    }
+
+    #[test]
+    fn weights_are_deterministic_and_positive() {
+        for (u, v) in [(0u32, 1u32), (5, 9), (1000, 3)] {
+            let w = edge_weight(u, v);
+            assert_eq!(w, edge_weight(u, v));
+            assert!((1.0..=8.0).contains(&w));
+        }
+    }
+
+    #[test]
+    fn only_source_component_reached() {
+        // Two disjoint edges: 0-2, 1-3 (ids chosen to split across workers).
+        let adj = vec![vec![2u32], vec![3], vec![0], vec![1]];
+        let app = Sssp { source: 0 };
+        let mut eng =
+            Engine::new(app, EngineConfig::small_test(FtKind::None), &adj).unwrap();
+        eng.run().unwrap();
+        assert_eq!(eng.value_of(0).0, 0.0);
+        assert!(eng.value_of(2).0.is_finite());
+        assert!(eng.value_of(1).0.is_infinite());
+        assert!(eng.value_of(3).0.is_infinite());
+    }
+}

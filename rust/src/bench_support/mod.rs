@@ -1,0 +1,119 @@
+//! Shared support for the table-reproduction benches (`rust/benches/`).
+//!
+//! Each bench regenerates one table of the paper's §6 on the simulated
+//! cluster: same topology (15 machines × 8 workers), same δ=10
+//! checkpoint interval, same kill-at-superstep-17 failure, with the
+//! dataset-shaped presets standing in for the four graphs (Table 1) via
+//! the documented `data_scale` calibration (DESIGN.md §2/§7).
+
+use crate::coordinator::{AppSpec, GraphSource, JobSpec};
+use crate::graph::{generate, PresetGraph, VertexId};
+use crate::pregel::FailurePlan;
+use crate::runtime::XlaRegistry;
+use crate::sim::Topology;
+use crate::storage::Backing;
+use crate::util::fmtutil::Table;
+use std::sync::Arc;
+
+/// Paper edge counts (Table 1) for data_scale calibration.
+pub const WEBUK_EDGES: u64 = 5_507_679_822;
+pub const WEBBASE_EDGES: u64 = 1_019_903_190;
+pub const FRIENDSTER_EDGES: u64 = 3_612_134_270;
+pub const BTC_EDGES: u64 = 772_822_094;
+
+/// A bench dataset: the preset, its sampled size, and the paper-scale
+/// edge count it stands in for.
+#[derive(Clone, Copy)]
+pub struct Dataset {
+    pub preset: PresetGraph,
+    pub n: usize,
+    pub paper_edges: u64,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        self.preset.name()
+    }
+
+    /// Build the graph and compute the calibrated data scale.
+    pub fn build(&self, seed: u64) -> (Vec<Vec<VertexId>>, f64) {
+        let adj = self.preset.spec(self.scaled_n(), seed).generate();
+        let e = generate::edge_count(&adj).max(1);
+        (adj, self.paper_edges as f64 / e as f64)
+    }
+
+    fn scaled_n(&self) -> usize {
+        // LWCP_BENCH_SCALE shrinks bench graphs for smoke runs
+        // (e.g. LWCP_BENCH_SCALE=0.1 → 10% of the default size).
+        let s: f64 = std::env::var("LWCP_BENCH_SCALE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        ((self.n as f64 * s) as usize).max(2_000)
+    }
+}
+
+/// The four bench datasets (sampled sizes tuned for minute-scale bench
+/// wall time; `data_scale` restores paper volumes).
+pub fn webuk() -> Dataset {
+    Dataset { preset: PresetGraph::WebUk, n: 100_000, paper_edges: WEBUK_EDGES }
+}
+pub fn webbase() -> Dataset {
+    Dataset { preset: PresetGraph::WebBase, n: 100_000, paper_edges: WEBBASE_EDGES }
+}
+pub fn friendster() -> Dataset {
+    Dataset { preset: PresetGraph::Friendster, n: 24_000, paper_edges: FRIENDSTER_EDGES }
+}
+pub fn btc() -> Dataset {
+    Dataset { preset: PresetGraph::Btc, n: 60_000, paper_edges: BTC_EDGES }
+}
+
+/// The paper's cluster: 15 machines × 8 workers = 120.
+pub fn paper_topology() -> Topology {
+    Topology::new(15, 8)
+}
+
+/// The paper's PageRank experiment spec: δ=10, kill 1 worker at
+/// superstep 17, 30 supersteps.
+pub fn pagerank_spec(ds: &Dataset, data_scale: f64, tag: &str) -> JobSpec {
+    JobSpec {
+        app: AppSpec::PageRank { damping: 0.85, supersteps: 30 },
+        graph: GraphSource::Preset(ds.preset, ds.scaled_n()),
+        seed: 1,
+        topo: paper_topology(),
+        ft: crate::ft::FtKind::LwCp,
+        cp_every: 10,
+        cp_every_secs: None,
+        plan: FailurePlan::kill_n_at(1, 17),
+        backing: Backing::Memory,
+        profile: crate::sim::SystemProfile::PregelPlus,
+        data_scale,
+        tag: tag.into(),
+        max_supersteps: 100_000,
+    }
+}
+
+/// Try to load the XLA registry; benches fall back to the scalar path.
+pub fn try_registry() -> Option<Arc<XlaRegistry>> {
+    match XlaRegistry::load_default() {
+        Ok(r) => Some(Arc::new(r)),
+        Err(e) => {
+            eprintln!("note: XLA artifacts unavailable ({e}); scalar hot path");
+            None
+        }
+    }
+}
+
+/// Print a paper-vs-measured table pair with a title.
+pub fn print_block(title: &str, paper: &Table, measured: &Table) {
+    println!("\n=== {title} ===");
+    println!("--- paper (reported) ---");
+    paper.print();
+    println!("--- this reproduction (simulated cluster) ---");
+    measured.print();
+}
+
+/// Ratio sanity line: prints PASS/CHECK for a shape assertion.
+pub fn shape_check(label: &str, ok: bool, detail: String) {
+    println!("  [{}] {label}: {detail}", if ok { "PASS" } else { "CHECK" });
+}

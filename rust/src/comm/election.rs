@@ -1,0 +1,40 @@
+//! Master election: the paper avoids a single point of failure by
+//! electing as master the worker with the largest state s(W) — the
+//! longest-living worker, which is guaranteed to have logged every
+//! globally-synchronized aggregator value and control decision up to its
+//! superstep — with ties broken by the smallest rank.
+
+/// Pick the master among `alive` ranks given each worker's state s(W).
+/// Panics if `alive` is empty (an all-workers failure aborts the job).
+pub fn elect_master(s_w: &[u64], alive: &[usize]) -> usize {
+    assert!(!alive.is_empty(), "no survivors: job lost");
+    *alive
+        .iter()
+        .max_by(|&&a, &&b| s_w[a].cmp(&s_w[b]).then(b.cmp(&a)))
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longest_living_wins() {
+        let s = vec![17, 15, 17, 10];
+        assert_eq!(elect_master(&s, &[1, 3]), 1);
+        assert_eq!(elect_master(&s, &[1, 2, 3]), 2);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_rank() {
+        let s = vec![17, 17, 17];
+        assert_eq!(elect_master(&s, &[0, 1, 2]), 0);
+        assert_eq!(elect_master(&s, &[2, 1]), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no survivors")]
+    fn empty_survivor_set_panics() {
+        elect_master(&[1], &[]);
+    }
+}

@@ -1,0 +1,15 @@
+//! ULFM-style failure mitigation (paper §3).
+//!
+//! Reimplements the control-plane surface the paper builds on MPI's
+//! User-Level Failure Mitigation extension: failure *revocation*
+//! (`MPIX_Comm_revoke`), survivor *agreement* (`MPIX_Comm_shrink`),
+//! replacement *spawn* (`MPI_Comm_spawn`) and *merge*
+//! (`MPI_Intercomm_merge`) — plus master election (the longest-living
+//! worker, ties by rank). The engine drives this state machine from its
+//! error-handling path; costs are charged via the cost model.
+
+pub mod election;
+pub mod ulfm;
+
+pub use election::elect_master;
+pub use ulfm::{RecoveryOutcome, WorkerSet};

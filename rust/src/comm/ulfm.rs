@@ -1,0 +1,217 @@
+//! The worker-set state machine: who is alive, where each rank runs,
+//! and the revoke → shrink → elect → spawn → merge recovery round.
+//!
+//! Ranks are *stable across failures*: a replacement worker inherits the
+//! dead worker's rank so the paper's `hash(v) = v mod |W|` partitioning
+//! function never changes (§3 "Worker Reassignment"). What changes is
+//! the rank→machine placement: replacements are spawned round-robin on
+//! the least-loaded healthy machines.
+
+use super::elect_master;
+use crate::sim::{CostModel, Topology};
+
+/// Result of one recovery round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryOutcome {
+    /// Ranks that survived the failure (W_alive).
+    pub survivors: Vec<usize>,
+    /// Ranks that were respawned (W_new), with their new machine.
+    pub respawned: Vec<(usize, usize)>,
+    /// The elected master rank.
+    pub master: usize,
+    /// Simulated seconds consumed by the control-plane round
+    /// (revoke + shrink + spawn + merge + re-registration).
+    pub control_time: f64,
+}
+
+/// Live view of W_all.
+#[derive(Debug, Clone)]
+pub struct WorkerSet {
+    topo: Topology,
+    /// Bumped on every shrink+merge (stale communication from a previous
+    /// epoch would be rejected — the role of revoked communicators).
+    epoch: u64,
+    alive: Vec<bool>,
+    machine_of: Vec<usize>,
+    machine_alive: Vec<bool>,
+}
+
+impl WorkerSet {
+    pub fn new(topo: Topology) -> Self {
+        let n = topo.n_workers();
+        WorkerSet {
+            topo,
+            epoch: 0,
+            alive: vec![true; n],
+            machine_of: (0..n).map(|r| topo.machine_of(r)).collect(),
+            machine_alive: vec![true; topo.machines],
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.alive.len()
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.alive[rank]
+    }
+
+    pub fn machine_of(&self, rank: usize) -> usize {
+        self.machine_of[rank]
+    }
+
+    /// Ranks currently alive, ascending.
+    pub fn alive_ranks(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&r| self.alive[r]).collect()
+    }
+
+    /// Number of live workers hosted on `machine` (NIC sharing).
+    pub fn workers_on_machine(&self, machine: usize) -> usize {
+        (0..self.alive.len())
+            .filter(|&r| self.alive[r] && self.machine_of[r] == machine)
+            .count()
+    }
+
+    /// Mark `ranks` as failed (the failure itself, before detection).
+    /// `machine_fails` additionally retires the hosting machines so
+    /// replacements avoid them (the paper's machine-crash scenario).
+    pub fn kill(&mut self, ranks: &[usize], machine_fails: bool) {
+        for &r in ranks {
+            assert!(self.alive[r], "rank {r} already dead");
+            self.alive[r] = false;
+            if machine_fails {
+                self.machine_alive[self.machine_of[r]] = false;
+            }
+        }
+    }
+
+    /// Run one revoke → shrink → elect(master) → spawn → merge round.
+    ///
+    /// `s_w[r]` is each worker's partially-committed superstep (only
+    /// meaningful for survivors); the master is the longest-living
+    /// survivor. Dead ranks are respawned onto the least-loaded healthy
+    /// machines (deterministic: lowest machine id breaks ties).
+    pub fn recover(&mut self, s_w: &[u64], cost: &CostModel) -> RecoveryOutcome {
+        let survivors = self.alive_ranks();
+        let dead: Vec<usize> = (0..self.alive.len()).filter(|&r| !self.alive[r]).collect();
+        assert!(!survivors.is_empty(), "all workers failed: job lost");
+
+        let master = elect_master(s_w, &survivors);
+
+        // Spawn replacements on healthy machines, balancing load.
+        let mut load: Vec<usize> = (0..self.topo.machines)
+            .map(|m| self.workers_on_machine(m))
+            .collect();
+        let mut respawned = Vec::with_capacity(dead.len());
+        for &r in &dead {
+            let m = (0..self.topo.machines)
+                .filter(|&m| self.machine_alive[m])
+                .min_by_key(|&m| (load[m], m))
+                .expect("no healthy machine left");
+            load[m] += 1;
+            self.machine_of[r] = m;
+            self.alive[r] = true;
+            respawned.push((r, m));
+        }
+        self.epoch += 1;
+
+        // Control-plane cost: revoke notification + shrink agreement +
+        // parallel spawn of the replacements + merge + handler re-reg.
+        let control_time = cost.net_latency                      // revoke
+            + cost.shrink_cost                                   // shrink
+            + if respawned.is_empty() { 0.0 } else { cost.spawn_cost }
+            + 2.0 * cost.net_latency                             // merge
+            + cost.profile.reassignment_overhead();
+
+        RecoveryOutcome { survivors, respawned, master, control_time }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new(3, 2) // 6 workers, machine(r) = r % 3
+    }
+
+    #[test]
+    fn initial_placement_is_round_robin() {
+        let ws = WorkerSet::new(topo());
+        assert_eq!(ws.machine_of(0), 0);
+        assert_eq!(ws.machine_of(4), 1);
+        assert_eq!(ws.workers_on_machine(2), 2);
+        assert_eq!(ws.alive_ranks(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn kill_and_recover_keeps_rank_changes_machine() {
+        let mut ws = WorkerSet::new(topo());
+        ws.kill(&[1], false);
+        assert!(!ws.is_alive(1));
+        let s_w = vec![17, 0, 17, 17, 17, 17];
+        let out = ws.recover(&s_w, &CostModel::default());
+        assert_eq!(out.survivors, vec![0, 2, 3, 4, 5]);
+        assert_eq!(out.respawned.len(), 1);
+        assert_eq!(out.respawned[0].0, 1); // same rank
+        assert!(ws.is_alive(1));
+        assert_eq!(out.master, 0); // all survivors tied at 17 -> lowest rank
+        assert_eq!(ws.epoch(), 1);
+        assert!(out.control_time > 0.0);
+    }
+
+    #[test]
+    fn respawn_balances_load_on_least_loaded_machine() {
+        let mut ws = WorkerSet::new(topo());
+        // Kill both workers of machine 1 (ranks 1 and 4), machine dies.
+        ws.kill(&[1, 4], true);
+        let out = ws.recover(&[10; 6], &CostModel::default());
+        // Machines 0 and 2 each had 2 workers; replacements spread 1+1.
+        let m1 = ws.machine_of(1);
+        let m4 = ws.machine_of(4);
+        assert_ne!(m1, 1);
+        assert_ne!(m4, 1);
+        assert_ne!(m1, m4, "both on the same machine would unbalance");
+        assert_eq!(out.respawned.len(), 2);
+    }
+
+    #[test]
+    fn cascading_failures_bump_epoch_each_round() {
+        let mut ws = WorkerSet::new(topo());
+        ws.kill(&[0], false);
+        ws.recover(&[5; 6], &CostModel::default());
+        ws.kill(&[3], false);
+        let out = ws.recover(&[5, 5, 5, 2, 5, 5], &CostModel::default());
+        assert_eq!(ws.epoch(), 2);
+        // Longest-living survivor, ties to lowest rank (rank 3 is dead
+        // at election time and excluded).
+        assert_eq!(out.master, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "all workers failed")]
+    fn total_loss_panics() {
+        let mut ws = WorkerSet::new(Topology::new(1, 2));
+        ws.kill(&[0, 1], false);
+        ws.recover(&[0, 0], &CostModel::default());
+    }
+
+    #[test]
+    fn shen_profile_charges_reassignment() {
+        let mut ws = WorkerSet::new(topo());
+        ws.kill(&[2], false);
+        let base = ws.clone().recover(&[9; 6], &CostModel::default()).control_time;
+        let shen = ws
+            .recover(&[9; 6], &CostModel::with_profile(crate::sim::SystemProfile::ShenGiraph))
+            .control_time;
+        assert!(shen > base + 3.0);
+    }
+}

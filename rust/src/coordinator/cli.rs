@@ -1,0 +1,294 @@
+//! Hand-rolled CLI (no external dependencies — the vendored crate set
+//! is minimal, and a Pregel launcher needs ~15 flags, not a framework).
+//!
+//! ```text
+//! lwcp run [--app pagerank|cc|sssp|triangle|kcore|pointerjump|bipartite]
+//!          [--graph webuk|webbase|friendster|btc|er] [--n 120000] [--m 0]
+//!          [--graph-file PATH]
+//!          [--machines 15] [--workers-per-machine 8]
+//!          [--ft none|hwcp|lwcp|hwlog|lwlog] [--cp-every 10]
+//!          [--cp-every-secs 60] [--data-scale 1.0]
+//!          [--kill STEP:N]... [--seed 1] [--supersteps 30]
+//!          [--xla] [--disk] [--profile pregel+|giraph|graphlab|graphx|shen]
+//! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
+//! lwcp info
+//! ```
+
+use super::driver::{run_job, AppSpec, GraphSource, JobSpec};
+use crate::ft::FtKind;
+use crate::graph::{generate, loader, PresetGraph};
+use crate::metrics::report;
+use crate::pregel::{FailurePlan, Kill};
+use crate::runtime::XlaRegistry;
+use crate::sim::{SystemProfile, Topology};
+use crate::storage::Backing;
+use crate::util::fmtutil::secs;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Parsed flag map: `--key value` pairs (+ bare flags as "true").
+pub struct Flags {
+    map: HashMap<String, Vec<String>>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let mut map: HashMap<String, Vec<String>> = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected argument {a} (flags start with --)");
+            };
+            let is_flag_like =
+                i + 1 >= args.len() || args[i + 1].starts_with("--");
+            if is_flag_like {
+                map.entry(key.to_string()).or_default().push("true".into());
+                i += 1;
+            } else {
+                map.entry(key.to_string()).or_default().push(args[i + 1].clone());
+                i += 2;
+            }
+        }
+        Ok(Flags { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    pub fn get_all(&self, key: &str) -> &[String] {
+        self.map.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key} {s}: {e}")),
+        }
+    }
+}
+
+fn parse_ft(s: &str) -> Result<FtKind> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "none" => FtKind::None,
+        "hwcp" => FtKind::HwCp,
+        "lwcp" => FtKind::LwCp,
+        "hwlog" => FtKind::HwLog,
+        "lwlog" => FtKind::LwLog,
+        other => bail!("unknown --ft {other}"),
+    })
+}
+
+fn parse_profile(s: &str) -> Result<SystemProfile> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "pregel+" | "pregelplus" => SystemProfile::PregelPlus,
+        "giraph" => SystemProfile::GiraphLike,
+        "graphlab" => SystemProfile::GraphLabLike,
+        "graphx" => SystemProfile::GraphXLike,
+        "shen" => SystemProfile::ShenGiraph,
+        other => bail!("unknown --profile {other}"),
+    })
+}
+
+fn parse_preset(s: &str) -> Result<PresetGraph> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "webuk" | "webuk-s" => PresetGraph::WebUk,
+        "webbase" | "webbase-s" => PresetGraph::WebBase,
+        "friendster" | "friendster-s" => PresetGraph::Friendster,
+        "btc" | "btc-s" => PresetGraph::Btc,
+        other => bail!("unknown --graph {other}"),
+    })
+}
+
+/// Build a JobSpec from flags.
+pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
+    let n: usize = f.parse_or("n", 120_000)?;
+    let graph = if let Some(path) = f.get("graph-file") {
+        GraphSource::File(path.into())
+    } else {
+        match f.get("graph").unwrap_or("webbase") {
+            "er" => GraphSource::Er {
+                n,
+                m: f.parse_or("m", n * 8)?,
+                directed: f.has("directed"),
+            },
+            other => GraphSource::Preset(parse_preset(other)?, n),
+        }
+    };
+    let supersteps: u64 = f.parse_or("supersteps", 30)?;
+    let app = match f.get("app").unwrap_or("pagerank") {
+        "pagerank" => AppSpec::PageRank {
+            damping: f.parse_or("damping", 0.85)?,
+            supersteps,
+        },
+        "cc" => AppSpec::HashMinCc,
+        "sssp" => AppSpec::Sssp { source: f.parse_or("source", 0)? },
+        "triangle" => AppSpec::Triangle { c: f.parse_or("c", 1)? },
+        "kcore" => AppSpec::KCore { k: f.parse_or("k", 4)? },
+        "pointerjump" => AppSpec::PointerJump,
+        "bipartite" => AppSpec::Bipartite,
+        other => bail!("unknown --app {other}"),
+    };
+    let mut kills = Vec::new();
+    for k in f.get_all("kill") {
+        let (step, count) = k
+            .split_once(':')
+            .with_context(|| format!("--kill {k}: expected STEP:N"))?;
+        kills.push(Kill {
+            at_step: step.parse()?,
+            ranks: (1..=count.parse::<usize>()?).collect(),
+            machine_fails: f.has("machine-fails"),
+        });
+    }
+    Ok(JobSpec {
+        app,
+        graph,
+        seed: f.parse_or("seed", 1)?,
+        topo: Topology::new(
+            f.parse_or("machines", 15)?,
+            f.parse_or("workers-per-machine", 8)?,
+        ),
+        ft: parse_ft(f.get("ft").unwrap_or("lwcp"))?,
+        cp_every: f.parse_or("cp-every", 10)?,
+        cp_every_secs: f.get("cp-every-secs").map(|s| s.parse()).transpose().map_err(|e: std::num::ParseFloatError| anyhow::anyhow!("--cp-every-secs: {e}"))?,
+        plan: FailurePlan { kills },
+        backing: if f.has("disk") { Backing::Disk } else { Backing::Memory },
+        profile: parse_profile(f.get("profile").unwrap_or("pregel+"))?,
+        data_scale: f.parse_or("data-scale", 1.0)?,
+        tag: f.get("tag").unwrap_or("cli").to_string(),
+        max_supersteps: f.parse_or("max-supersteps", 100_000)?,
+    })
+}
+
+fn cmd_run(f: &Flags) -> Result<()> {
+    let spec = spec_from_flags(f)?;
+    let exec = if f.has("xla") {
+        Some(Arc::new(XlaRegistry::load_default()?))
+    } else {
+        None
+    };
+    eprintln!(
+        "lwcp: app={} ft={} workers={} graph={:?}",
+        spec.app.name(),
+        spec.ft.name(),
+        spec.topo.n_workers(),
+        spec.graph
+    );
+    let m = run_job(&spec, exec)?;
+    let mut t = report::superstep_table();
+    t.row(report::superstep_row(spec.ft.name(), &m));
+    t.print();
+    let mut io = report::io_table();
+    io.row(report::io_row(spec.ft.name(), &m));
+    io.print();
+    println!(
+        "supersteps={} virtual_time={} wall={:.0} ms shuffled={} cp_bytes={}",
+        m.supersteps_run,
+        secs(m.final_time),
+        m.wall_ms,
+        crate::util::fmtutil::bytes(m.bytes.shuffle_bytes),
+        crate::util::fmtutil::bytes(m.bytes.checkpoint_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_gen(f: &Flags) -> Result<()> {
+    let out = f.get("out").context("--out PATH required")?;
+    let preset = parse_preset(f.get("graph").unwrap_or("webbase"))?;
+    let n: usize = f.parse_or("n", 10_000)?;
+    let adj = preset.spec(n, f.parse_or("seed", 1)?).generate();
+    loader::write_edge_list_text(std::path::Path::new(out), &adj)?;
+    println!(
+        "wrote {} ({} vertices, {} edges)",
+        out,
+        n,
+        generate::edge_count(&adj)
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("lwcp — Lightweight Fault Tolerance for Distributed Graph Processing");
+    println!("algorithms: HWCP, LWCP, HWLog, LWLog (paper: Yan/Cheng/Yang 2016)");
+    println!("apps: pagerank cc sssp triangle kcore pointerjump bipartite");
+    match XlaRegistry::load_default() {
+        Ok(r) => println!("artifacts: {:?} (buckets {:?})", r.functions(), r.buckets("pagerank_step")),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+/// CLI entrypoint (called from main).
+pub fn main_with_args(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        cmd_info()?;
+        println!("\nusage: lwcp <run|gen|info> [flags]  (see coordinator/cli.rs)");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "gen" => cmd_gen(&flags),
+        "info" => cmd_info(),
+        other => bail!("unknown command {other} (run|gen|info)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(s: &str) -> Flags {
+        let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Flags::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn flag_parsing_values_and_bools() {
+        let f = flags("--n 500 --xla --kill 17:1 --kill 20:2");
+        assert_eq!(f.get("n"), Some("500"));
+        assert!(f.has("xla"));
+        assert_eq!(f.get_all("kill"), &["17:1".to_string(), "20:2".to_string()]);
+        assert_eq!(f.parse_or("n", 0usize).unwrap(), 500);
+        assert_eq!(f.parse_or("missing", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn spec_from_flags_defaults_are_paper_shaped() {
+        let spec = spec_from_flags(&flags("")).unwrap();
+        assert_eq!(spec.topo.n_workers(), 120);
+        assert_eq!(spec.cp_every, 10);
+        assert_eq!(spec.ft, FtKind::LwCp);
+    }
+
+    #[test]
+    fn spec_from_flags_full() {
+        let spec = spec_from_flags(&flags(
+            "--app triangle --c 2 --graph friendster --n 3000 --machines 3 \
+             --workers-per-machine 2 --ft hwlog --cp-every 5 --kill 8:1 --seed 9",
+        ))
+        .unwrap();
+        assert_eq!(spec.app, AppSpec::Triangle { c: 2 });
+        assert_eq!(spec.ft, FtKind::HwLog);
+        assert_eq!(spec.plan.kills.len(), 1);
+        assert_eq!(spec.plan.kills[0].at_step, 8);
+        assert_eq!(spec.topo.n_workers(), 6);
+    }
+
+    #[test]
+    fn bad_flags_error_cleanly() {
+        assert!(spec_from_flags(&flags("--ft bogus")).is_err());
+        assert!(spec_from_flags(&flags("--app bogus")).is_err());
+        assert!(spec_from_flags(&flags("--kill badformat")).is_err());
+        assert!(Flags::parse(&["notaflag".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! The job driver: a declarative [`JobSpec`] → graph generation/loading,
+//! engine construction (with optional XLA executor), failure schedule,
+//! run, metrics. Shared by the CLI, the examples, and every bench.
+
+use crate::apps::*;
+use crate::ft::FtKind;
+use crate::graph::{generate, loader, PresetGraph, VertexId};
+use crate::metrics::RunMetrics;
+use crate::pregel::{App, Engine, EngineConfig, FailurePlan};
+use crate::runtime::XlaRegistry;
+use crate::sim::{CostModel, SystemProfile, Topology};
+use crate::storage::Backing;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Which vertex program to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AppSpec {
+    PageRank { damping: f32, supersteps: u64 },
+    HashMinCc,
+    Sssp { source: VertexId },
+    Triangle { c: usize },
+    KCore { k: usize },
+    PointerJump,
+    Bipartite,
+}
+
+impl AppSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppSpec::PageRank { .. } => "pagerank",
+            AppSpec::HashMinCc => "cc",
+            AppSpec::Sssp { .. } => "sssp",
+            AppSpec::Triangle { .. } => "triangle",
+            AppSpec::KCore { .. } => "kcore",
+            AppSpec::PointerJump => "pointerjump",
+            AppSpec::Bipartite => "bipartite",
+        }
+    }
+}
+
+/// Where the graph comes from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSource {
+    /// A dataset-shaped RMAT preset at `n` vertices.
+    Preset(PresetGraph, usize),
+    /// Erdős–Rényi-style (n, m, directed).
+    Er { n: usize, m: usize, directed: bool },
+    /// Edge-list file (text `src dst` lines).
+    File(PathBuf),
+}
+
+impl GraphSource {
+    pub fn build(&self, seed: u64) -> Result<Vec<Vec<VertexId>>> {
+        Ok(match self {
+            GraphSource::Preset(p, n) => p.spec(*n, seed).generate(),
+            GraphSource::Er { n, m, directed } => generate::erdos_renyi(*n, *m, *directed, seed),
+            GraphSource::File(path) => loader::read_edge_list_text(path, 0)
+                .with_context(|| format!("loading {}", path.display()))?,
+        })
+    }
+}
+
+/// A full job description.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub app: AppSpec,
+    pub graph: GraphSource,
+    pub seed: u64,
+    pub topo: Topology,
+    pub ft: FtKind,
+    pub cp_every: u64,
+    /// Time-interval checkpoint condition (paper §4), simulated seconds
+    /// since the last committed checkpoint (None = superstep-count only).
+    pub cp_every_secs: Option<f64>,
+    pub plan: FailurePlan,
+    pub backing: Backing,
+    pub profile: SystemProfile,
+    /// Data-volume scale (see `CostModel::data_scale`): the loaded graph
+    /// stands in for one `data_scale`× bigger.
+    pub data_scale: f64,
+    pub tag: String,
+    pub max_supersteps: u64,
+}
+
+impl JobSpec {
+    /// A paper-shaped default: PageRank on WebBase-s, the paper's
+    /// 15×8 topology, δ=10, kill worker 1 at superstep 17.
+    pub fn paper_default() -> Self {
+        JobSpec {
+            app: AppSpec::PageRank { damping: 0.85, supersteps: 30 },
+            graph: GraphSource::Preset(PresetGraph::WebBase, 120_000),
+            seed: 1,
+            topo: Topology::new(15, 8),
+            ft: FtKind::LwCp,
+            cp_every: 10,
+            cp_every_secs: None,
+            plan: FailurePlan::kill_n_at(1, 17),
+            backing: Backing::Memory,
+            profile: SystemProfile::PregelPlus,
+            data_scale: 1.0,
+            tag: "job".into(),
+            max_supersteps: 100_000,
+        }
+    }
+
+    fn config(&self) -> EngineConfig {
+        let mut cost = CostModel::with_profile(self.profile);
+        cost.data_scale = self.data_scale;
+        EngineConfig {
+            topo: self.topo,
+            cost,
+            ft: self.ft,
+            cp_every: self.cp_every,
+            cp_every_secs: self.cp_every_secs,
+            backing: self.backing,
+            tag: self.tag.clone(),
+            max_supersteps: self.max_supersteps,
+        }
+    }
+}
+
+fn run_app<A: App>(
+    app: A,
+    spec: &JobSpec,
+    adj: &[Vec<VertexId>],
+    exec: Option<Arc<XlaRegistry>>,
+) -> Result<RunMetrics> {
+    let mut engine = Engine::new(app, spec.config(), adj)?.with_failures(spec.plan.clone());
+    if let Some(exec) = exec {
+        engine = engine.with_exec(exec);
+    }
+    engine.run()
+}
+
+/// Build the graph and run the job. `exec` enables the XLA hot path for
+/// apps that support it (PageRank).
+pub fn run_job(spec: &JobSpec, exec: Option<Arc<XlaRegistry>>) -> Result<RunMetrics> {
+    let adj = spec.graph.build(spec.seed)?;
+    run_job_on(spec, &adj, exec)
+}
+
+/// Run the job on a pre-built graph (benches reuse one graph across
+/// algorithm sweeps).
+pub fn run_job_on(
+    spec: &JobSpec,
+    adj: &[Vec<VertexId>],
+    exec: Option<Arc<XlaRegistry>>,
+) -> Result<RunMetrics> {
+    match &spec.app {
+        AppSpec::PageRank { damping, supersteps } => run_app(
+            PageRank { damping: *damping, supersteps: *supersteps, combiner_enabled: true },
+            spec,
+            adj,
+            exec,
+        ),
+        AppSpec::HashMinCc => run_app(HashMinCc, spec, adj, None),
+        AppSpec::Sssp { source } => run_app(Sssp { source: *source }, spec, adj, None),
+        AppSpec::Triangle { c } => run_app(TriangleCount { c: *c }, spec, adj, None),
+        AppSpec::KCore { k } => run_app(KCore { k: *k }, spec, adj, None),
+        AppSpec::PointerJump => run_app(PointerJump, spec, adj, None),
+        AppSpec::Bipartite => run_app(BipartiteMatching, spec, adj, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_runs_small() {
+        let mut spec = JobSpec::paper_default();
+        spec.graph = GraphSource::Preset(PresetGraph::WebBase, 2000);
+        spec.topo = Topology::new(3, 2);
+        spec.app = AppSpec::PageRank { damping: 0.85, supersteps: 20 };
+        let m = run_job(&spec, None).unwrap();
+        assert!(m.supersteps_run >= 20, "incl. recovery reruns");
+        assert!(m.t_norm() > 0.0);
+        assert!(m.t_cp() > 0.0);
+        assert!(m.recovery_control > 0.0);
+    }
+
+    #[test]
+    fn every_app_spec_dispatches() {
+        for app in [
+            AppSpec::HashMinCc,
+            AppSpec::Sssp { source: 0 },
+            AppSpec::Triangle { c: 2 },
+            AppSpec::KCore { k: 3 },
+            AppSpec::PointerJump,
+            AppSpec::Bipartite,
+        ] {
+            let spec = JobSpec {
+                app,
+                graph: GraphSource::Er { n: 200, m: 600, directed: false },
+                plan: FailurePlan::none(),
+                topo: Topology::new(2, 2),
+                ..JobSpec::paper_default()
+            };
+            let m = run_job(&spec, None)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", spec.app.name()));
+            assert!(m.supersteps_run > 0, "{}", spec.app.name());
+        }
+    }
+
+    #[test]
+    fn graph_source_file_roundtrip() {
+        let adj = generate::erdos_renyi(30, 60, true, 3);
+        let p = std::env::temp_dir().join(format!("lwcp-drv-{}.txt", std::process::id()));
+        loader::write_edge_list_text(&p, &adj).unwrap();
+        let loaded = GraphSource::File(p.clone()).build(0).unwrap();
+        assert_eq!(loaded, adj);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,7 @@
+//! Job coordination: declarative job specs, the driver that builds and
+//! runs engines, and the hand-rolled CLI.
+
+pub mod cli;
+pub mod driver;
+
+pub use driver::{AppSpec, GraphSource, JobSpec};

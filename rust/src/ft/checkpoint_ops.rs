@@ -1,0 +1,202 @@
+//! Checkpoint writing, local logging, and garbage collection — the
+//! failure-free-overhead half of every algorithm (what T_cp0, T_cp and
+//! T_log measure).
+
+use crate::ft::FtKind;
+use crate::metrics::StepKind;
+use crate::pregel::app::App;
+use crate::pregel::engine::Engine;
+use crate::pregel::worker::StepOutput;
+use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, Cp0, CpMeta, HwCp};
+use crate::util::codec::Codec;
+use anyhow::Result;
+
+impl<A: App> Engine<A> {
+    /// Write the initial checkpoint CP[0] right after input loading, so
+    /// recovery never re-shuffles the input graph (paper §4).
+    pub(crate) fn write_cp0(&mut self) -> Result<()> {
+        let t0 = self.max_clock();
+        for r in self.ws.alive_ranks() {
+            let w = &self.workers[r];
+            let cp0 = Cp0 {
+                values: w.part.values.clone(),
+                active: w.part.active.clone(),
+                adj: w.part.adj.clone(),
+            };
+            let blob = cp0.to_bytes();
+            let n = self.hdfs.put(&cp_key(0, r), &blob)?;
+            let sharers = self.ws.workers_on_machine(self.ws.machine_of(r));
+            let t = self.cfg.cost.hdfs_write_time(n, sharers);
+            self.workers[r].clock.advance(t);
+            self.metrics.bytes.checkpoint_bytes += n;
+        }
+        let meta = CpMeta { step: 0, agg: Vec::new(), active_count: 0, sent_msgs: 0 };
+        self.hdfs.put(&cp_meta_key(0), &meta.to_bytes())?;
+        let t1 = self.barrier(self.cfg.cost.barrier_overhead);
+        self.metrics.t_cp0 = t1 - t0;
+        self.cp_last = 0;
+        self.cp_last_time = t1;
+        Ok(())
+    }
+
+    /// Checkpoint-condition check after a fully-committed superstep:
+    /// every δ supersteps, deferring past LWCP-masked supersteps (the
+    /// deferred checkpoint lands on the first applicable superstep).
+    pub(crate) fn maybe_checkpoint(&mut self, step: u64) -> Result<()> {
+        if self.cfg.ft == FtKind::None
+            || (self.cfg.cp_every == 0 && self.cfg.cp_every_secs.is_none())
+        {
+            return Ok(());
+        }
+        let step_due = self.cfg.cp_every > 0 && step % self.cfg.cp_every == 0;
+        // Time-interval condition (paper §4): the master compares the
+        // current time with the last checkpoint commit.
+        let time_due = self
+            .cfg
+            .cp_every_secs
+            .is_some_and(|dt| self.max_clock() - self.cp_last_time >= dt);
+        let due = self.cp_pending || step_due || time_due;
+        if !due {
+            return Ok(());
+        }
+        // Never checkpoint a recovery superstep: survivors are already
+        // past it (their states would corrupt CP[step]) and the GC that
+        // follows a checkpoint would delete logs recovery still needs.
+        // Defer to the first superstep after recovery completes, which
+        // is globally fully committed by every worker.
+        if matches!(self.stage, crate::pregel::engine::Stage::Recovering { .. }) {
+            self.cp_pending = true;
+            return Ok(());
+        }
+        if self.cfg.ft.respects_mask() && self.masked_steps.contains(&step) {
+            self.cp_pending = true;
+            return Ok(());
+        }
+        self.write_checkpoint(step)?;
+        self.cp_pending = false;
+        Ok(())
+    }
+
+    /// Write CP[step] (content per algorithm), commit it, delete the
+    /// previous checkpoint, then garbage-collect local logs. The whole
+    /// window is the paper's T_cp.
+    pub(crate) fn write_checkpoint(&mut self, step: u64) -> Result<()> {
+        let t0 = self.barrier(0.0);
+        let heavy = self.cfg.ft.heavyweight_cp();
+        for r in self.ws.alive_ranks() {
+            let w = &mut self.workers[r];
+            let blob = if heavy {
+                HwCp {
+                    states: w.part.states(),
+                    adj: w.part.adj.clone(),
+                    inbox: w.inbox.snapshot(),
+                }
+                .to_bytes()
+            } else {
+                w.part.states().to_bytes()
+            };
+            let mut total = self.hdfs.put(&cp_key(step, r), &blob)?;
+            // Incremental edge log: lightweight checkpoints append the
+            // buffered mutation requests to E_W; heavyweight checkpoints
+            // store the full adjacency, so the buffer is just discarded.
+            let drained = w.log.drain_mutations();
+            if !heavy && !drained.is_empty() {
+                let mut inc = Vec::new();
+                for (_, seg) in drained {
+                    inc.extend_from_slice(&seg);
+                }
+                total += self.hdfs.append(&ew_key(r), &inc)?;
+            }
+            let sharers = self.ws.workers_on_machine(self.ws.machine_of(r));
+            let t = self.cfg.cost.hdfs_write_time(total, sharers);
+            self.workers[r].clock.advance(t);
+            self.metrics.bytes.checkpoint_bytes += total;
+        }
+        // Commit barrier: the previous checkpoint stays valid until every
+        // worker has fully written the new one.
+        self.barrier(self.cfg.cost.barrier_overhead);
+        let g = self.agg_log.get(&step).cloned().unwrap_or_default();
+        let meta = CpMeta {
+            step,
+            agg: g.slots.clone(),
+            active_count: g.active_count,
+            sent_msgs: g.sent_msgs,
+        };
+        self.hdfs.put(&cp_meta_key(step), &meta.to_bytes())?;
+
+        // Delete the previous checkpoint. Lightweight algorithms must
+        // keep CP[0]: it is the edge source for every later recovery.
+        let delete_prev = if heavy { true } else { self.cp_last >= 1 };
+        if delete_prev {
+            let (_bytes, files) = self.hdfs.delete_prefix(&cp_prefix(self.cp_last));
+            let t = self.cfg.cost.hdfs_delete_time(files);
+            let m = self.master;
+            self.workers[m].clock.advance(t);
+        }
+
+        // Garbage-collect local logs: HWLog deletes logs ≤ step (the
+        // heavyweight checkpoint stores the inbox, so step's messages
+        // are not needed); LWLog keeps step's logs — survivors
+        // regenerate from them at the next failure (§5, Place 1).
+        if self.cfg.ft.log_based() {
+            let below = if self.cfg.ft == FtKind::HwLog { step + 1 } else { step };
+            for r in self.ws.alive_ranks() {
+                let (bytes, files) = self.workers[r].log.gc_below(below);
+                self.metrics.bytes.gc_bytes += bytes;
+                // The paper's implementation keeps one log file per
+                // (superstep, destination); we store one indexed file
+                // per superstep, so charge the per-file metadata cost
+                // as if segments were files (same inode workload).
+                let file_ops = files * self.ws.topology().n_workers() as u64;
+                let t = self.cfg.cost.gc_time(bytes, file_ops);
+                self.workers[r].clock.advance(t);
+            }
+        }
+
+        let t1 = self.barrier(0.0);
+        self.metrics.cp_writes.push((step, t1 - t0));
+        self.cp_last = step;
+        self.cp_last_time = t1;
+        Ok(())
+    }
+
+    /// Per-superstep local logging (HWLog: combined outgoing messages;
+    /// LWLog: vertex states, falling back to message logging on masked
+    /// or topology-mutating supersteps). Charged to the worker clock —
+    /// in reality it overlaps transmission, but partial commit requires
+    /// the write to complete, and the write is far cheaper than the
+    /// shuffle, so serializing it costs ≤ a few percent.
+    pub(crate) fn write_local_logs(
+        &mut self,
+        step: u64,
+        outputs: &[(usize, StepOutput<A::M>)],
+        masked: bool,
+    ) -> Result<()> {
+        let fallback = masked || self.mutated_steps.contains(&step);
+        for (r, out) in outputs {
+            let w = &mut self.workers[*r];
+            let use_msg_log = self.cfg.ft == FtKind::HwLog || fallback;
+            let bytes = if use_msg_log {
+                let batches = out.outbox.all_batches();
+                w.log.write_msg_log(step, &batches)?
+            } else {
+                let data = w.encode_vstate_log();
+                w.log.write_vstate_log(step, &data)?
+            };
+            let t = self.cfg.cost.log_write_time(bytes) + self.cfg.cost.file_op;
+            w.clock.advance(t);
+            self.metrics.log_writes.push(t);
+            self.metrics.bytes.log_bytes += bytes;
+        }
+        Ok(())
+    }
+
+    /// Record a CpStep-stage metric sample (used by recovery_ops).
+    pub(crate) fn record_cpstep(&mut self, dur: f64) {
+        self.metrics.steps.push(crate::metrics::StepRecord {
+            step: self.cp_last,
+            kind: StepKind::CpStep,
+            dur,
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! The paper's four fault-tolerance algorithms (plus "none").
+//!
+//! | algorithm | checkpoint content | local log | recovery style |
+//! |-----------|-------------------|-----------|----------------|
+//! | `HwCp`  | values + edges + messages (O(&#124;E&#124;)+) | — | roll everyone back, rerun |
+//! | `LwCp`  | (a(v), active, comp) only, O(&#124;V&#124;); edges incremental via E_W | mutation buffer | roll everyone back, regenerate messages from state, rerun |
+//! | `HwLog` | heavyweight | combined outgoing messages per superstep | survivors keep state and forward logged messages; only failed partitions recompute |
+//! | `LwLog` | lightweight | (comp(v), a(v)) per superstep (message log only for masked supersteps) | survivors regenerate messages from logged states |
+//!
+//! The mechanics live in `impl Engine<A>` blocks:
+//! [`checkpoint_ops`](self::checkpoint_ops) writes/loads CP\[i\] and runs
+//! the post-checkpoint GC; [`recovery_ops`](self::recovery_ops)
+//! implements the revoke→shrink→spawn→recover flow of Figure 1 of the
+//! paper, per algorithm.
+
+pub mod checkpoint_ops;
+pub mod recovery_ops;
+
+/// Which fault-tolerance algorithm a job runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FtKind {
+    /// No checkpointing at all (and no recovery possible).
+    None,
+    /// Conventional heavyweight checkpointing.
+    HwCp,
+    /// The paper's lightweight checkpointing.
+    LwCp,
+    /// Heavyweight checkpointing + message logging ([7]'s approach).
+    HwLog,
+    /// The paper's lightweight checkpointing + vertex-state logging.
+    LwLog,
+}
+
+impl FtKind {
+    /// Does this algorithm write heavyweight checkpoints?
+    pub fn heavyweight_cp(&self) -> bool {
+        matches!(self, FtKind::HwCp | FtKind::HwLog)
+    }
+
+    /// Does this algorithm keep local per-superstep logs?
+    pub fn log_based(&self) -> bool {
+        matches!(self, FtKind::HwLog | FtKind::LwLog)
+    }
+
+    /// Can checkpoints be written at LWCP-masked supersteps?
+    /// (Heavyweight checkpoints don't care about masking.)
+    pub fn respects_mask(&self) -> bool {
+        matches!(self, FtKind::LwCp | FtKind::LwLog)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FtKind::None => "none",
+            FtKind::HwCp => "HWCP",
+            FtKind::LwCp => "LWCP",
+            FtKind::HwLog => "HWLog",
+            FtKind::LwLog => "LWLog",
+        }
+    }
+
+    /// All four paper algorithms (bench sweeps).
+    pub fn all() -> [FtKind; 4] {
+        [FtKind::HwCp, FtKind::LwCp, FtKind::HwLog, FtKind::LwLog]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_matches_paper() {
+        assert!(FtKind::HwCp.heavyweight_cp());
+        assert!(FtKind::HwLog.heavyweight_cp());
+        assert!(!FtKind::LwCp.heavyweight_cp());
+        assert!(!FtKind::LwLog.heavyweight_cp());
+        assert!(FtKind::HwLog.log_based());
+        assert!(FtKind::LwLog.log_based());
+        assert!(!FtKind::HwCp.log_based());
+        assert!(FtKind::LwCp.respects_mask());
+        assert!(!FtKind::HwCp.respects_mask());
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(FtKind::all().map(|f| f.name()), ["HWCP", "LWCP", "HWLog", "LWLog"]);
+    }
+}

@@ -1,0 +1,319 @@
+//! Failure handling and recovery — Figure 1 of the paper, per algorithm.
+//!
+//! `perform_failure` is the error-handling flow: the failure is revoked
+//! and survivors agree on W_alive (shrink), elect the longest-living
+//! master, spawn replacements (same rank, new machine), merge, then run
+//! `survivor_recovery` / `new_worker_recovery` per algorithm, and jump
+//! back to the main loop at the superstep after the latest checkpoint.
+//!
+//! `forward_logged_messages` is Case 1 of §5: a worker whose state is
+//! ahead of the recovery superstep re-sends that superstep's messages —
+//! loaded from its message log (HWLog) or regenerated from its
+//! vertex-state log (LWLog) — to the workers that are recomputing.
+
+use crate::ft::FtKind;
+use crate::pregel::app::App;
+use crate::pregel::engine::{Engine, Stage};
+use crate::pregel::worker::Worker;
+use crate::storage::checkpoint::{cp_key, ew_key, Cp0, HwCp, LwCp};
+use crate::util::codec::{Codec, Reader};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeSet;
+
+impl<A: App> Engine<A> {
+    /// The error-handling + recovery flow. Returns the superstep the
+    /// main loop must resume from (cp_last + 1).
+    pub(crate) fn perform_failure(&mut self, step: u64, kidx: usize) -> Result<u64> {
+        if self.cfg.ft == FtKind::None {
+            bail!("worker failure at superstep {step} with fault tolerance disabled");
+        }
+        let kill = self.failure_plan.kills[kidx].clone();
+        self.next_kill = kidx + 1;
+
+        // The failure: the machines' local state (logs!) is gone.
+        self.ws.kill(&kill.ranks, kill.machine_fails);
+
+        // Survivors detect the failure mid-communication, revoke, shrink,
+        // elect, spawn, merge.
+        let s_w_vec: Vec<u64> = self.workers.iter().map(|w| w.s_w).collect();
+        let outcome = self.ws.recover(&s_w_vec, &self.cfg.cost);
+        self.master = outcome.master;
+
+        let t_base = outcome
+            .survivors
+            .iter()
+            .map(|&r| self.workers[r].clock.now())
+            .fold(0.0, f64::max);
+        let t_ready = t_base + outcome.control_time;
+        for &r in &outcome.survivors {
+            self.workers[r].clock.sync_to(t_ready);
+        }
+
+        // Replace dead workers: same rank (hash(.) unchanged), fresh
+        // local disk, state loaded below by new_worker_recovery.
+        for &(rank, _machine) in &outcome.respawned {
+            let tag = format!("{}-e{}", self.cfg.tag, self.ws.epoch());
+            let mut w = Worker::placeholder(
+                rank,
+                self.partitioner,
+                self.app.as_ref(),
+                self.cfg.backing,
+                &tag,
+            )?;
+            w.clock.sync_to(t_ready);
+            w.s_w = self.cp_last;
+            self.workers[rank] = w;
+        }
+
+        // On-the-fly messages of the failed superstep are dropped.
+        self.reset_inboxes();
+
+        match self.cfg.ft {
+            FtKind::None => unreachable!(),
+            FtKind::HwCp | FtKind::HwLog => self.recover_heavy(&outcome)?,
+            FtKind::LwCp => self.recover_lwcp(&outcome)?,
+            FtKind::LwLog => self.recover_lwlog(&outcome)?,
+        }
+
+        let t1 = self.barrier(0.0);
+        self.record_cpstep(t1 - t_base);
+        self.metrics.recovery_control += outcome.control_time;
+
+        // Metrics staging: recovery runs until the most advanced
+        // survivor's superstep is recovered.
+        let failure_step = outcome
+            .survivors
+            .iter()
+            .map(|&r| self.workers[r].s_w)
+            .max()
+            .unwrap()
+            .max(step);
+        self.stage = Stage::Recovering { failure_step };
+        Ok(self.cp_last + 1)
+    }
+
+    /// Load one worker's heavyweight checkpoint (or CP[0]).
+    fn load_heavy_cp(&mut self, rank: usize) -> Result<()> {
+        let cp_step = self.cp_last;
+        let blob = self
+            .hdfs
+            .get(&cp_key(cp_step, rank))
+            .with_context(|| format!("loading CP[{cp_step}] for worker {rank}"))?;
+        let sharers = self.ws.workers_on_machine(self.ws.machine_of(rank));
+        let t = self.cfg.cost.hdfs_read_time(blob.len() as u64, sharers);
+        self.workers[rank].clock.advance(t);
+        self.metrics.cp_loads.push(t);
+        let w = &mut self.workers[rank];
+        if cp_step == 0 {
+            let cp0 = Cp0::<A::V>::from_bytes(&blob)?;
+            w.part.values = cp0.values;
+            w.part.active = cp0.active;
+            w.part.comp = vec![false; w.part.n_slots()];
+            w.part.adj = cp0.adj;
+            // No messages exist before superstep 1.
+        } else {
+            let cp = HwCp::<A::V, A::M>::from_bytes(&blob)?;
+            w.part.restore_states(cp.states);
+            w.part.adj = cp.adj;
+            w.inbox.restore(cp.inbox)?;
+        }
+        w.log.clear_mutations();
+        w.s_w = cp_step;
+        Ok(())
+    }
+
+    /// HWCP: everyone rolls back. HWLog: only respawned workers load;
+    /// survivors keep their (more advanced) state — that is the whole
+    /// point of log-based recovery.
+    fn recover_heavy(&mut self, outcome: &crate::comm::RecoveryOutcome) -> Result<()> {
+        let loaders: Vec<usize> = if self.cfg.ft == FtKind::HwCp {
+            self.ws.alive_ranks()
+        } else {
+            outcome.respawned.iter().map(|&(r, _)| r).collect()
+        };
+        for r in loaders {
+            self.load_heavy_cp(r)?;
+        }
+        Ok(())
+    }
+
+    /// Load a worker's lightweight states + its edges (CP[0] + E_W).
+    /// `reload_edges` is skipped for survivors of mutation-free jobs —
+    /// their adjacency lists are still valid (paper §4's optimization).
+    fn load_light_cp(&mut self, rank: usize, reload_edges: bool) -> Result<()> {
+        let cp_step = self.cp_last;
+        let sharers = self.ws.workers_on_machine(self.ws.machine_of(rank));
+        if cp_step == 0 {
+            // Initial-checkpoint rollback: CP[0] is the whole partition.
+            return self.load_heavy_cp(rank);
+        }
+        let blob = self
+            .hdfs
+            .get(&cp_key(cp_step, rank))
+            .with_context(|| format!("loading LWCP[{cp_step}] for worker {rank}"))?;
+        let mut t = self.cfg.cost.hdfs_read_time(blob.len() as u64, sharers);
+        let states = LwCp::<A::V>::from_bytes(&blob)?;
+        if reload_edges {
+            let cp0_blob = self.hdfs.get(&cp_key(0, rank))?;
+            t += self.cfg.cost.hdfs_read_time(cp0_blob.len() as u64, sharers);
+            let cp0 = Cp0::<A::V>::from_bytes(&cp0_blob)?;
+            self.workers[rank].part.adj = cp0.adj;
+            // Replay the incremental mutation log E_W in append order.
+            if self.hdfs.exists(&ew_key(rank)) {
+                let ew = self.hdfs.get(&ew_key(rank))?;
+                t += self.cfg.cost.hdfs_read_time(ew.len() as u64, sharers);
+                let mut rd = Reader::new(&ew);
+                while !rd.is_empty() {
+                    let m = crate::graph::Mutation::decode(&mut rd)?;
+                    let slot = self.partitioner.slot_of(m.src());
+                    self.workers[rank].part.adj.apply(slot, &m);
+                }
+            }
+        }
+        let w = &mut self.workers[rank];
+        w.part.restore_states(states);
+        w.log.clear_mutations();
+        w.s_w = cp_step;
+        w.clock.advance(t);
+        self.metrics.cp_loads.push(t);
+        Ok(())
+    }
+
+    /// LWCP: everyone rolls back to the lightweight checkpoint, then
+    /// regenerates the checkpointed superstep's messages from the loaded
+    /// states (replay mode) and shuffles them — the extra work that makes
+    /// LWCP's T_cpstep longer than HWCP's, paid once per (rare) failure.
+    fn recover_lwcp(&mut self, outcome: &crate::comm::RecoveryOutcome) -> Result<()> {
+        let respawned: BTreeSet<usize> = outcome.respawned.iter().map(|&(r, _)| r).collect();
+        for r in self.ws.alive_ranks() {
+            let reload_edges = respawned.contains(&r) || self.any_mutation;
+            self.load_light_cp(r, reload_edges)?;
+        }
+        if self.cp_last == 0 {
+            return Ok(()); // no messages precede superstep 1
+        }
+        let agg_prev: Vec<f64> = self
+            .agg_log
+            .get(&(self.cp_last - 1))
+            .map(|a| a.slots.clone())
+            .unwrap_or_default();
+        let mut batches = Vec::new();
+        let app = std::sync::Arc::clone(&self.app);
+        for r in self.ws.alive_ranks() {
+            let ob = self.workers[r].replay_generate(&app, self.cp_last, &agg_prev, None);
+            let n_comp = self.workers[r].part.comp.iter().filter(|&&c| c).count() as u64;
+            let t = self.cfg.cost.compute_time(n_comp, ob.raw_count());
+            self.workers[r].clock.advance(t);
+            for (dst, b) in ob.all_batches() {
+                batches.push((r, dst, b));
+            }
+        }
+        self.deliver(&mut batches)
+    }
+
+    /// LWLog: survivors keep their state; respawned workers load the
+    /// lightweight checkpoint + edges. The respawned inbox for the next
+    /// superstep is rebuilt from vertex states: its own from the loaded
+    /// checkpoint, the survivors' from their *retained* vertex-state log
+    /// of the checkpointed superstep (masked/mutating supersteps fall
+    /// back to the message log written for them).
+    fn recover_lwlog(&mut self, outcome: &crate::comm::RecoveryOutcome) -> Result<()> {
+        let respawned: BTreeSet<usize> = outcome.respawned.iter().map(|&(r, _)| r).collect();
+        for &r in &respawned {
+            self.load_light_cp(r, true)?;
+            if self.cp_last > 0 {
+                // Restore the invariant "every worker holds the logs of
+                // the checkpointed superstep" (LWLog's GC rule) on the
+                // fresh local disk: if *another* failure strikes later,
+                // this worker — then a survivor — must be able to
+                // regenerate CP[s_last]'s messages from a local log
+                // like everyone else (cascading-failure case).
+                let w = &mut self.workers[r];
+                let data = w.encode_vstate_log();
+                let n = w.log.write_vstate_log(self.cp_last, &data)?;
+                let t = self.cfg.cost.log_write_time(n) + self.cfg.cost.file_op;
+                w.clock.advance(t);
+                self.metrics.bytes.log_bytes += n;
+            }
+        }
+        if self.cp_last == 0 {
+            return Ok(());
+        }
+        let agg_prev: Vec<f64> = self
+            .agg_log
+            .get(&(self.cp_last - 1))
+            .map(|a| a.slots.clone())
+            .unwrap_or_default();
+        let dests: Vec<usize> = respawned.iter().copied().collect();
+        let mut batches = Vec::new();
+        let app = std::sync::Arc::clone(&self.app);
+        // Respawned workers regenerate their own checkpointed-superstep
+        // messages (only the segments destined to recovering workers).
+        for &r in &respawned {
+            let ob = self.workers[r].replay_generate(&app, self.cp_last, &agg_prev, None);
+            let n_comp = self.workers[r].part.comp.iter().filter(|&&c| c).count() as u64;
+            self.workers[r]
+                .clock
+                .advance(self.cfg.cost.compute_time(n_comp, ob.raw_count()));
+            for &d in &dests {
+                if let Some(b) = ob.batch_for(d) {
+                    batches.push((r, d, b));
+                }
+            }
+        }
+        // Survivors contribute from their local logs of cp_last.
+        let survivors: Vec<usize> = outcome.survivors.clone();
+        self.forward_logged_messages(self.cp_last, &survivors, &dests, &agg_prev, &mut batches)?;
+        self.deliver(&mut batches)
+    }
+
+    /// Case 1 of §5: workers ahead of the recovery superstep re-send that
+    /// superstep's messages to the recovering workers.
+    pub(crate) fn forward_logged_messages(
+        &mut self,
+        step: u64,
+        forwarding: &[usize],
+        dests: &[usize],
+        agg_prev: &[f64],
+        batches: &mut Vec<(usize, usize, Vec<u8>)>,
+    ) -> Result<()> {
+        let app = std::sync::Arc::clone(&self.app);
+        for &r in forwarding {
+            let use_vstate =
+                self.cfg.ft == FtKind::LwLog && self.workers[r].log.has_vstate_log(step);
+            if use_vstate {
+                let (bytes, payload) = self.workers[r].log.read_vstate_log(step)?;
+                let t_load = self.cfg.cost.log_read_time(bytes);
+                self.metrics.log_loads.push(t_load);
+                let states = Worker::<A>::decode_vstate_log(&payload)?;
+                let n_comp = states.1.iter().filter(|&&c| c).count() as u64;
+                let ob = self.workers[r].replay_generate(&app, step, agg_prev, Some(states));
+                let t = t_load + self.cfg.cost.compute_time(n_comp, ob.raw_count());
+                self.workers[r].clock.advance(t);
+                for &d in dests {
+                    if let Some(b) = ob.batch_for(d) {
+                        batches.push((r, d, b));
+                    }
+                }
+            } else {
+                // HWLog — or an LWLog masked/mutating superstep.
+                if !self.workers[r].log.has_msg_log(step) {
+                    bail!("worker {r} has no log for recovery superstep {step}");
+                }
+                let mut t = 0.0;
+                for &d in dests {
+                    let (bytes, payload) = self.workers[r].log.read_msg_log(step, d)?;
+                    if !payload.is_empty() {
+                        t += self.cfg.cost.log_read_time(bytes);
+                        batches.push((r, d, payload));
+                    }
+                }
+                if t > 0.0 {
+                    self.metrics.log_loads.push(t);
+                    self.workers[r].clock.advance(t);
+                }
+            }
+        }
+        Ok(())
+    }
+}

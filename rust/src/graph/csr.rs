@@ -1,0 +1,210 @@
+//! Partition-local adjacency storage with mutation support.
+//!
+//! A worker stores Γ(v) for each of its vertex slots. The common case
+//! (static topology: PageRank, CC, SSSP, triangles) is served by a
+//! compact CSR layout; algorithms that mutate topology (k-core) switch a
+//! slot to an owned overflow vector on first mutation, so static
+//! partitions pay no per-slot allocation.
+
+use super::{Mutation, VertexId};
+use crate::util::codec::{Codec, Reader};
+use anyhow::Result;
+
+/// Adjacency lists for one worker partition, indexed by local slot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Adjacency {
+    /// CSR offsets into `targets`: slot s owns `targets[offsets[s]..offsets[s+1]]`.
+    offsets: Vec<u32>,
+    targets: Vec<VertexId>,
+    /// Overflow: slots whose lists have been mutated (None = still CSR).
+    dynamic: Vec<Option<Vec<VertexId>>>,
+    /// Total live edge count (kept in sync through mutations).
+    n_edges: u64,
+}
+
+impl Adjacency {
+    /// Build from per-slot neighbor lists.
+    pub fn from_lists(lists: &[Vec<VertexId>]) -> Self {
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        let mut targets = Vec::new();
+        offsets.push(0u32);
+        for l in lists {
+            targets.extend_from_slice(l);
+            offsets.push(targets.len() as u32);
+        }
+        let n_edges = targets.len() as u64;
+        Adjacency {
+            offsets,
+            targets,
+            dynamic: vec![None; lists.len()],
+            n_edges,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.dynamic.len()
+    }
+
+    pub fn n_edges(&self) -> u64 {
+        self.n_edges
+    }
+
+    /// Γ of the vertex in `slot`.
+    #[inline]
+    pub fn neighbors(&self, slot: usize) -> &[VertexId] {
+        match &self.dynamic[slot] {
+            Some(v) => v,
+            None => {
+                let a = self.offsets[slot] as usize;
+                let b = self.offsets[slot + 1] as usize;
+                &self.targets[a..b]
+            }
+        }
+    }
+
+    /// Out-degree of the vertex in `slot`.
+    #[inline]
+    pub fn degree(&self, slot: usize) -> usize {
+        self.neighbors(slot).len()
+    }
+
+    fn make_dynamic(&mut self, slot: usize) -> &mut Vec<VertexId> {
+        if self.dynamic[slot].is_none() {
+            let a = self.offsets[slot] as usize;
+            let b = self.offsets[slot + 1] as usize;
+            self.dynamic[slot] = Some(self.targets[a..b].to_vec());
+        }
+        self.dynamic[slot].as_mut().unwrap()
+    }
+
+    /// Append `dst` to the slot's list.
+    pub fn add_edge(&mut self, slot: usize, dst: VertexId) {
+        self.make_dynamic(slot).push(dst);
+        self.n_edges += 1;
+    }
+
+    /// Remove the first occurrence of `dst` (order of the remaining
+    /// edges is preserved — replay determinism depends on it).
+    pub fn del_edge(&mut self, slot: usize, dst: VertexId) {
+        let l = self.make_dynamic(slot);
+        if let Some(i) = l.iter().position(|&t| t == dst) {
+            l.remove(i);
+            self.n_edges -= 1;
+        }
+    }
+
+    /// Apply a mutation (the slot must belong to this partition).
+    pub fn apply(&mut self, slot: usize, m: &Mutation) {
+        match m {
+            Mutation::AddEdge { dst, .. } => self.add_edge(slot, *dst),
+            Mutation::DelEdge { dst, .. } => self.del_edge(slot, *dst),
+        }
+    }
+
+    /// Serialized size in bytes (as charged to checkpoints): 4 bytes per
+    /// target + 4 per slot for the length.
+    pub fn encoded_size(&self) -> u64 {
+        4 * self.n_edges + 4 * self.n_slots() as u64
+    }
+}
+
+impl Codec for Adjacency {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.n_slots() as u32).encode(buf);
+        for s in 0..self.n_slots() {
+            let nb = self.neighbors(s);
+            (nb.len() as u32).encode(buf);
+            for t in nb {
+                t.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let n = u32::decode(r)? as usize;
+        let mut lists = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = u32::decode(r)? as usize;
+            let mut l = Vec::with_capacity(k.min(r.remaining() / 4));
+            for _ in 0..k {
+                l.push(VertexId::decode(r)?);
+            }
+            lists.push(l);
+        }
+        Ok(Adjacency::from_lists(&lists))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Adjacency {
+        Adjacency::from_lists(&[vec![1, 2, 3], vec![], vec![0, 4]])
+    }
+
+    #[test]
+    fn csr_layout_reads_back() {
+        let a = sample();
+        assert_eq!(a.n_slots(), 3);
+        assert_eq!(a.n_edges(), 5);
+        assert_eq!(a.neighbors(0), &[1, 2, 3]);
+        assert_eq!(a.neighbors(1), &[] as &[u32]);
+        assert_eq!(a.neighbors(2), &[0, 4]);
+        assert_eq!(a.degree(2), 2);
+    }
+
+    #[test]
+    fn mutations_preserve_order_and_counts() {
+        let mut a = sample();
+        a.del_edge(0, 2);
+        assert_eq!(a.neighbors(0), &[1, 3]);
+        assert_eq!(a.n_edges(), 4);
+        a.add_edge(1, 9);
+        assert_eq!(a.neighbors(1), &[9]);
+        assert_eq!(a.n_edges(), 5);
+        // Deleting a non-existent edge is a no-op.
+        a.del_edge(2, 99);
+        assert_eq!(a.n_edges(), 5);
+    }
+
+    #[test]
+    fn mutated_and_static_slots_coexist() {
+        let mut a = sample();
+        a.del_edge(0, 1);
+        assert_eq!(a.neighbors(0), &[2, 3]); // dynamic
+        assert_eq!(a.neighbors(2), &[0, 4]); // still CSR
+    }
+
+    #[test]
+    fn codec_roundtrips_through_mutations() {
+        let mut a = sample();
+        a.del_edge(0, 2);
+        a.add_edge(2, 7);
+        let b = Adjacency::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.n_slots(), a.n_slots());
+        assert_eq!(b.n_edges(), a.n_edges());
+        for s in 0..a.n_slots() {
+            assert_eq!(a.neighbors(s), b.neighbors(s));
+        }
+    }
+
+    #[test]
+    fn replay_equals_direct_mutation() {
+        // Replaying logged mutations over the base reproduces the state —
+        // the invariant incremental edge checkpointing relies on.
+        let base = sample;
+        let muts = [
+            Mutation::DelEdge { src: 0, dst: 2 },
+            Mutation::AddEdge { src: 6, dst: 8 }, // slot 2 on a 3-worker partitioner... (illustrative slot 2)
+        ];
+        let mut direct = base();
+        direct.del_edge(0, 2);
+        direct.add_edge(2, 8);
+        let mut replayed = base();
+        replayed.apply(0, &muts[0]);
+        replayed.apply(2, &muts[1]);
+        for s in 0..3 {
+            assert_eq!(direct.neighbors(s), replayed.neighbors(s));
+        }
+    }
+}

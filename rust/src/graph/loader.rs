@@ -1,0 +1,130 @@
+//! Edge-list file I/O: the "input graph on HDFS" of the paper.
+//!
+//! Text format: one `src dst` pair per line, `#` comments allowed.
+//! Binary format: `u32 n_vertices`, then per vertex `u32 len` + targets
+//! (the same layout as [`Adjacency`]'s codec, but global).
+
+use super::VertexId;
+use crate::util::codec::{Codec, Reader};
+use anyhow::{Context, Result};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Parse a text edge list into global adjacency lists. Vertex count is
+/// `max id + 1` unless `n_hint` is larger.
+pub fn read_edge_list_text(path: &Path, n_hint: usize) -> Result<Vec<Vec<VertexId>>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut adj: Vec<Vec<VertexId>> = vec![Vec::new(); n_hint];
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            anyhow::bail!("line {}: expected `src dst`", lineno + 1);
+        };
+        let u: usize = a.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let v: VertexId = b.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let need = (u + 1).max(v as usize + 1);
+        if adj.len() < need {
+            adj.resize(need, Vec::new());
+        }
+        adj[u].push(v);
+    }
+    Ok(adj)
+}
+
+/// Write a text edge list.
+pub fn write_edge_list_text(path: &Path, adj: &[Vec<VertexId>]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "# lwcp edge list: {} vertices", adj.len())?;
+    for (u, l) in adj.iter().enumerate() {
+        for &v in l {
+            writeln!(f, "{u} {v}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Write the compact binary form.
+pub fn write_binary(path: &Path, adj: &[Vec<VertexId>]) -> Result<()> {
+    let mut buf = Vec::new();
+    (adj.len() as u32).encode(&mut buf);
+    for l in adj {
+        (l.len() as u32).encode(&mut buf);
+        for t in l {
+            t.encode(&mut buf);
+        }
+    }
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+/// Read the compact binary form.
+pub fn read_binary(path: &Path) -> Result<Vec<Vec<VertexId>>> {
+    let bytes = std::fs::read(path)?;
+    let mut r = Reader::new(&bytes);
+    let n = u32::decode(&mut r)? as usize;
+    let mut adj = Vec::with_capacity(n);
+    for _ in 0..n {
+        let k = u32::decode(&mut r)? as usize;
+        let mut l = Vec::with_capacity(k);
+        for _ in 0..k {
+            l.push(VertexId::decode(&mut r)?);
+        }
+        adj.push(l);
+    }
+    Ok(adj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lwcp-loader-{}-{name}", std::process::id()));
+        d
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let adj = generate::erdos_renyi(50, 120, true, 3);
+        let p = tmp("t.txt");
+        write_edge_list_text(&p, &adj).unwrap();
+        let back = read_edge_list_text(&p, 50).unwrap();
+        assert_eq!(adj, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let adj = generate::erdos_renyi(50, 120, false, 4);
+        let p = tmp("t.bin");
+        write_binary(&p, &adj).unwrap();
+        let back = read_binary(&p).unwrap();
+        assert_eq!(adj, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn text_parser_skips_comments_and_grows() {
+        let p = tmp("c.txt");
+        std::fs::write(&p, "# header\n0 3\n\n3 0\n").unwrap();
+        let adj = read_edge_list_text(&p, 0).unwrap();
+        assert_eq!(adj.len(), 4);
+        assert_eq!(adj[0], vec![3]);
+        assert_eq!(adj[3], vec![0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn malformed_line_errors() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(read_edge_list_text(&p, 0).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

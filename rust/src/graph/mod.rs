@@ -1,0 +1,21 @@
+//! Graph representation, partitioning, synthetic generators, and file I/O.
+//!
+//! Vertex ids are dense `u32` in `[0, n)`. Partitioning follows the paper
+//! (§3): `hash(v) = v mod |W|`, deliberately simple because it is
+//! evaluated on every message send, and deliberately *stable across
+//! recovery* — a respawned worker inherits the failed worker's rank, so
+//! the partitioning function never changes.
+
+pub mod csr;
+pub mod generate;
+pub mod loader;
+pub mod mutation;
+pub mod partition;
+
+pub use csr::Adjacency;
+pub use generate::{GraphSpec, PresetGraph};
+pub use mutation::Mutation;
+pub use partition::Partitioner;
+
+/// Dense global vertex identifier.
+pub type VertexId = u32;

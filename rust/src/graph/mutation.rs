@@ -1,0 +1,78 @@
+//! Topology mutation requests — the unit of the paper's *incremental
+//! checkpointing of edges* (§4).
+//!
+//! During computation a vertex may add or delete out-edges. Each request
+//! is buffered in the worker's local mutation log; when a checkpoint is
+//! written the buffered requests are appended to the worker's HDFS edge
+//! log `E_W` and the local buffer is cleared. Recovery rebuilds Γ(v) by
+//! loading CP[0] and replaying E_W in order.
+
+use super::VertexId;
+use crate::util::codec::{Codec, Reader};
+use anyhow::Result;
+
+/// One edge mutation performed by `src` on its own adjacency list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    AddEdge { src: VertexId, dst: VertexId },
+    DelEdge { src: VertexId, dst: VertexId },
+}
+
+impl Mutation {
+    pub fn src(&self) -> VertexId {
+        match self {
+            Mutation::AddEdge { src, .. } | Mutation::DelEdge { src, .. } => *src,
+        }
+    }
+}
+
+impl Codec for Mutation {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Mutation::AddEdge { src, dst } => {
+                1u8.encode(buf);
+                src.encode(buf);
+                dst.encode(buf);
+            }
+            Mutation::DelEdge { src, dst } => {
+                2u8.encode(buf);
+                src.encode(buf);
+                dst.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let tag = u8::decode(r)?;
+        let src = VertexId::decode(r)?;
+        let dst = VertexId::decode(r)?;
+        Ok(match tag {
+            1 => Mutation::AddEdge { src, dst },
+            _ => Mutation::DelEdge { src, dst },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mutation_roundtrip() {
+        for m in [
+            Mutation::AddEdge { src: 1, dst: 2 },
+            Mutation::DelEdge { src: 7, dst: 0 },
+        ] {
+            assert_eq!(Mutation::from_bytes(&m.to_bytes()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn mutation_vec_roundtrip() {
+        let v = vec![
+            Mutation::AddEdge { src: 5, dst: 6 },
+            Mutation::DelEdge { src: 5, dst: 6 },
+            Mutation::DelEdge { src: 9, dst: 1 },
+        ];
+        assert_eq!(Vec::<Mutation>::from_bytes(&v.to_bytes()).unwrap(), v);
+    }
+}

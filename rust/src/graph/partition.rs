@@ -1,0 +1,99 @@
+//! The paper's stable modulo partitioner.
+//!
+//! `hash(v) = v mod |W|` — evaluated on every message send, so it must be
+//! trivial; and it must survive recovery unchanged, which our framework
+//! guarantees by giving a respawned worker the dead worker's rank
+//! (paper §3 "Worker Reassignment").
+
+use super::VertexId;
+
+/// Maps global vertex ids to worker ranks and worker-local slots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Partitioner {
+    pub n_workers: usize,
+    pub n_vertices: usize,
+}
+
+impl Partitioner {
+    pub fn new(n_workers: usize, n_vertices: usize) -> Self {
+        assert!(n_workers > 0);
+        Partitioner { n_workers, n_vertices }
+    }
+
+    /// Worker rank owning vertex `v` — the paper's `hash(.)`.
+    #[inline]
+    pub fn rank_of(&self, v: VertexId) -> usize {
+        (v as usize) % self.n_workers
+    }
+
+    /// Worker-local slot of vertex `v` within its owner's partition.
+    #[inline]
+    pub fn slot_of(&self, v: VertexId) -> usize {
+        (v as usize) / self.n_workers
+    }
+
+    /// (rank, slot) of `v` in one step — the message-routing hot path
+    /// (one hardware division yields both quotient and remainder).
+    #[inline]
+    pub fn locate(&self, v: VertexId) -> (usize, usize) {
+        let v = v as usize;
+        (v % self.n_workers, v / self.n_workers)
+    }
+
+    /// Global id of the vertex in `slot` on worker `rank`.
+    #[inline]
+    pub fn id_of(&self, rank: usize, slot: usize) -> VertexId {
+        (slot * self.n_workers + rank) as VertexId
+    }
+
+    /// Number of vertex slots on worker `rank`: |{v < n : v ≡ rank (mod w)}|.
+    #[inline]
+    pub fn slots_of(&self, rank: usize) -> usize {
+        let n = self.n_vertices;
+        let w = self.n_workers;
+        if rank >= n {
+            0
+        } else {
+            (n - rank + w - 1) / w
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_id_slot() {
+        let p = Partitioner::new(7, 100);
+        for v in 0..100u32 {
+            let r = p.rank_of(v);
+            let s = p.slot_of(v);
+            assert_eq!(p.id_of(r, s), v);
+        }
+    }
+
+    #[test]
+    fn slots_partition_all_vertices() {
+        for (w, n) in [(7usize, 100usize), (8, 64), (120, 1_000_003), (3, 2)] {
+            let p = Partitioner::new(w, n);
+            let total: usize = (0..w).map(|r| p.slots_of(r)).sum();
+            assert_eq!(total, n, "w={w} n={n}");
+            // Every slot maps back into range.
+            for r in 0..w {
+                for s in 0..p.slots_of(r) {
+                    assert!((p.id_of(r, s) as usize) < n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn balance_within_one() {
+        let p = Partitioner::new(120, 1_000_003);
+        let sizes: Vec<usize> = (0..120).map(|r| p.slots_of(r)).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1);
+    }
+}

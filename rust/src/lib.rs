@@ -1,0 +1,45 @@
+//! # lwcp — Lightweight Fault Tolerance for Distributed Graph Processing
+//!
+//! A from-scratch reproduction of *"Lightweight Fault Tolerance in
+//! Large-Scale Distributed Graph Processing"* (Yan, Cheng, Yang; 2016):
+//! a Pregel-style vertex-centric graph processing engine with four
+//! fault-tolerance algorithms —
+//!
+//! * **HWCP** — conventional heavyweight checkpointing (vertex values +
+//!   adjacency lists + shuffled messages to HDFS),
+//! * **LWCP** — the paper's lightweight checkpointing (vertex states +
+//!   incremental edge-mutation log only; messages regenerated from state),
+//! * **HWLog** — heavyweight checkpointing + local message logging for
+//!   fast log-based recovery (Shen et al., PVLDB'15 style),
+//! * **LWLog** — the paper's vertex-state logging: LWCP + local
+//!   vertex-state logs, eliminating the message-log GC cost.
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//! the numeric per-vertex update of the built-in applications (PageRank,
+//! Hash-Min connected components, SSSP) is an AOT-compiled XLA executable
+//! authored in JAX + Pallas (`python/compile/`), loaded at startup via
+//! the PJRT C API ([`runtime`]), and invoked from the superstep hot path.
+//! Python never runs at job time.
+//!
+//! The distributed cluster of the paper (15 machines × 8 workers, Gigabit
+//! Ethernet, HDFS) is reproduced as a deterministic in-process cluster
+//! simulator: worker partitions are real, messages are real bytes, local
+//! logs and checkpoints are real files — while elapsed time is accounted
+//! by a calibrated cost model ([`sim`]) so the paper's time metrics
+//! (T_norm, T_cp, T_recov, …) can be regenerated at laptop scale.
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured tables.
+
+pub mod apps;
+pub mod bench_support;
+pub mod comm;
+pub mod coordinator;
+pub mod ft;
+pub mod graph;
+pub mod metrics;
+pub mod pregel;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;

@@ -1,0 +1,13 @@
+//! `lwcp` CLI — leader entrypoint for the fault-tolerant Pregel engine.
+//!
+//! See `lwcp info` / `coordinator/cli.rs` for usage. Typical run:
+//!
+//! ```text
+//! lwcp run --app pagerank --graph webuk --n 60000 --ft lwcp \
+//!          --cp-every 10 --kill 17:1 --xla
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    lwcp::coordinator::cli::main_with_args(&args)
+}

@@ -1,0 +1,190 @@
+//! Collection of the paper's time metrics (§6).
+//!
+//! The engine records raw per-superstep durations tagged by execution
+//! stage plus every checkpoint/log I/O sample; the helpers here derive
+//! exactly the columns the paper reports:
+//!
+//! * `T_norm`   — avg superstep during normal execution,
+//! * `T_cpstep` — recovering the latest checkpointed superstep
+//!                (checkpoint load + message generation/loading + shuffle),
+//! * `T_recov`  — avg recovery superstep (rerun window),
+//! * `T_last`   — the superstep where the failure occurred,
+//! * `T_cp0`    — writing CP[0],
+//! * `T_cp`     — writing CP[i], i ≥ 1, *including the following GC*,
+//! * `T_cpload` — loading CP[i] (averaged over workers that load),
+//! * `T_log`    — writing a local log (avg over writers × supersteps),
+//! * `T_logload` — loading a local log during recovery.
+
+pub mod report;
+
+/// Execution stage of a superstep (the paper's four stages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    /// Normal execution (stages 1 — and after recovery completes).
+    Normal,
+    /// Stage 2: recovering the latest checkpointed superstep.
+    CpStep,
+    /// Stage 3: rerunning supersteps after the checkpoint.
+    Recovery,
+    /// Stage 4: the superstep where the failure occurred.
+    LastRecovery,
+}
+
+/// One superstep's simulated duration.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: u64,
+    pub kind: StepKind,
+    /// Simulated seconds (checkpoint writing excluded — reported as T_cp).
+    pub dur: f64,
+}
+
+/// Byte-volume statistics (drive the cost model; reported for sanity).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteStats {
+    pub shuffle_bytes: u64,
+    pub checkpoint_bytes: u64,
+    pub log_bytes: u64,
+    pub gc_bytes: u64,
+    pub messages_sent: u64,
+}
+
+/// All raw samples from one job run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub steps: Vec<StepRecord>,
+    /// Time to write CP[0].
+    pub t_cp0: f64,
+    /// (step, duration incl. following GC) per CP[i], i >= 1.
+    pub cp_writes: Vec<(u64, f64)>,
+    /// Per-worker checkpoint load samples during recovery.
+    pub cp_loads: Vec<f64>,
+    /// Per (worker, superstep) local log write samples.
+    pub log_writes: Vec<f64>,
+    /// Per (worker, superstep) local log load samples during recovery.
+    pub log_loads: Vec<f64>,
+    /// Control-plane time of recovery rounds (revoke/shrink/spawn/merge).
+    pub recovery_control: f64,
+    pub bytes: ByteStats,
+    /// Final virtual time at job end.
+    pub final_time: f64,
+    /// Number of supersteps executed (incl. recovery reruns).
+    pub supersteps_run: u64,
+    /// Real wall-clock milliseconds of the whole run (perf tracking).
+    pub wall_ms: f64,
+    /// Result digest (hash of final vertex values) — equivalence checks.
+    pub result_digest: u64,
+}
+
+fn avg(xs: impl Iterator<Item = f64>) -> f64 {
+    let (mut s, mut n) = (0.0, 0usize);
+    for x in xs {
+        s += x;
+        n += 1;
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        s / n as f64
+    }
+}
+
+impl RunMetrics {
+    fn steps_of(&self, kind: StepKind) -> impl Iterator<Item = f64> + '_ {
+        self.steps.iter().filter(move |s| s.kind == kind).map(|s| s.dur)
+    }
+
+    /// Average normal-execution superstep.
+    pub fn t_norm(&self) -> f64 {
+        avg(self.steps_of(StepKind::Normal))
+    }
+
+    /// Time of recovering the latest checkpointed superstep.
+    pub fn t_cpstep(&self) -> f64 {
+        avg(self.steps_of(StepKind::CpStep))
+    }
+
+    /// Average recovery-rerun superstep.
+    pub fn t_recov(&self) -> f64 {
+        avg(self.steps_of(StepKind::Recovery))
+    }
+
+    /// The recovered failure superstep.
+    pub fn t_last(&self) -> f64 {
+        avg(self.steps_of(StepKind::LastRecovery))
+    }
+
+    /// Average CP[i] (i ≥ 1) write time, GC included (paper's T_cp).
+    pub fn t_cp(&self) -> f64 {
+        avg(self.cp_writes.iter().map(|&(_, d)| d))
+    }
+
+    pub fn t_cpload(&self) -> f64 {
+        avg(self.cp_loads.iter().copied())
+    }
+
+    pub fn t_log(&self) -> f64 {
+        avg(self.log_writes.iter().copied())
+    }
+
+    pub fn t_logload(&self) -> f64 {
+        avg(self.log_loads.iter().copied())
+    }
+
+    /// Total simulated time of supersteps in `[lo, hi]` of the given
+    /// kinds (Table 7 reports window totals, not averages).
+    pub fn window_total(&self, lo: u64, hi: u64, kinds: &[StepKind]) -> f64 {
+        self.steps
+            .iter()
+            .filter(|s| s.step >= lo && s.step <= hi && kinds.contains(&s.kind))
+            .map(|s| s.dur)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunMetrics {
+        RunMetrics {
+            steps: vec![
+                StepRecord { step: 1, kind: StepKind::Normal, dur: 10.0 },
+                StepRecord { step: 2, kind: StepKind::Normal, dur: 12.0 },
+                StepRecord { step: 1, kind: StepKind::CpStep, dur: 5.0 },
+                StepRecord { step: 2, kind: StepKind::Recovery, dur: 2.0 },
+                StepRecord { step: 3, kind: StepKind::Recovery, dur: 4.0 },
+                StepRecord { step: 4, kind: StepKind::LastRecovery, dur: 9.0 },
+            ],
+            cp_writes: vec![(1, 3.0), (2, 5.0)],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let m = sample();
+        assert_eq!(m.t_norm(), 11.0);
+        assert_eq!(m.t_cpstep(), 5.0);
+        assert_eq!(m.t_recov(), 3.0);
+        assert_eq!(m.t_last(), 9.0);
+        assert_eq!(m.t_cp(), 4.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_nan_not_panic() {
+        let m = RunMetrics::default();
+        assert!(m.t_norm().is_nan());
+        assert!(m.t_cp().is_nan());
+        assert!(m.t_logload().is_nan());
+    }
+
+    #[test]
+    fn window_total_filters_by_step_and_kind() {
+        let m = sample();
+        let t = m.window_total(2, 3, &[StepKind::Recovery]);
+        assert_eq!(t, 6.0);
+        let t2 = m.window_total(1, 4, &[StepKind::Normal, StepKind::LastRecovery]);
+        assert_eq!(t2, 31.0);
+    }
+}

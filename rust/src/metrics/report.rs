@@ -1,0 +1,59 @@
+//! Pretty reporting of run metrics in the paper's table layout.
+
+use super::RunMetrics;
+use crate::util::fmtutil::{secs, Table};
+
+/// Render the Table-2-style row for one algorithm.
+pub fn superstep_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    vec![
+        name.to_string(),
+        secs(m.t_norm()),
+        secs(m.t_cpstep()),
+        secs(m.t_recov()),
+        secs(m.t_last()),
+    ]
+}
+
+/// Render the Table-4-style I/O row for one algorithm.
+pub fn io_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    vec![
+        name.to_string(),
+        secs(m.t_cp0),
+        secs(m.t_cp()),
+        secs(m.t_cpload()),
+        secs(m.t_log()),
+        secs(m.t_logload()),
+    ]
+}
+
+/// Build the Table 2 header.
+pub fn superstep_table() -> Table {
+    Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_last"])
+}
+
+/// Build the Table 4 header.
+pub fn io_table() -> Table {
+    Table::new(vec!["", "T_cp0", "T_cp", "T_cpload", "T_log", "T_logload"])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{StepKind, StepRecord};
+
+    #[test]
+    fn rows_format_without_panic() {
+        let mut m = RunMetrics::default();
+        m.steps.push(StepRecord { step: 1, kind: StepKind::Normal, dur: 31.45 });
+        m.t_cp0 = 46.29;
+        let r = superstep_row("HWCP", &m);
+        assert_eq!(r[0], "HWCP");
+        assert_eq!(r[1], "31.45 s");
+        assert_eq!(r[3], "-"); // no recovery samples -> NaN -> "-"
+        let io = io_row("HWCP", &m);
+        assert_eq!(io[1], "46.29 s");
+        let mut t = superstep_table();
+        t.row(r);
+        assert!(t.render().contains("T_cpstep"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Aggregators and per-superstep control information.
+//!
+//! Pregel's aggregator is a commutative/associative global reduction each
+//! vertex can contribute to; the aggregated value of superstep i is
+//! visible to every vertex at superstep i+1. We provide a bank of f64
+//! *sum* slots (every algorithm in the paper — PageRank's delta, triangle
+//! counts, CC's changed-count — is a sum), plus the engine-level control
+//! info (active vertices, messages in flight) that decides termination.
+//!
+//! For fault tolerance, every worker logs the globally-synchronized
+//! aggregator of each fully-committed superstep (the paper has the
+//! master log it; electing the longest-living worker as the new master
+//! then makes these logs available through any failure), and its own
+//! *partial* aggregate of the superstep being computed (used to recover
+//! the failure superstep's aggregation without recomputation).
+
+use crate::util::codec::{Codec, Reader};
+use anyhow::Result;
+
+/// A bank of sum-aggregator slots plus control info.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct AggState {
+    /// User aggregator slots (summed across vertices and workers).
+    pub slots: Vec<f64>,
+    /// Vertices active at the end of the superstep.
+    pub active_count: u64,
+    /// Messages generated in the superstep (pre-combining).
+    pub sent_msgs: u64,
+}
+
+impl AggState {
+    pub fn new(n_slots: usize) -> Self {
+        AggState { slots: vec![0.0; n_slots], active_count: 0, sent_msgs: 0 }
+    }
+
+    /// Fold another partial into this one (order-independent for counts;
+    /// f64 slot sums are folded in worker-rank order by the engine for
+    /// bitwise determinism).
+    pub fn merge(&mut self, other: &AggState) {
+        if self.slots.len() < other.slots.len() {
+            self.slots.resize(other.slots.len(), 0.0);
+        }
+        for (a, b) in self.slots.iter_mut().zip(&other.slots) {
+            *a += b;
+        }
+        self.active_count += other.active_count;
+        self.sent_msgs += other.sent_msgs;
+    }
+
+    /// The engine's halt condition: no active vertex and no message.
+    pub fn job_done(&self) -> bool {
+        self.active_count == 0 && self.sent_msgs == 0
+    }
+}
+
+impl Codec for AggState {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.slots.encode(buf);
+        self.active_count.encode(buf);
+        self.sent_msgs.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(AggState {
+            slots: Vec::decode(r)?,
+            active_count: u64::decode(r)?,
+            sent_msgs: u64::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = AggState { slots: vec![1.0, 2.0], active_count: 3, sent_msgs: 4 };
+        let b = AggState { slots: vec![0.5, -1.0], active_count: 1, sent_msgs: 9 };
+        a.merge(&b);
+        assert_eq!(a.slots, vec![1.5, 1.0]);
+        assert_eq!(a.active_count, 4);
+        assert_eq!(a.sent_msgs, 13);
+    }
+
+    #[test]
+    fn merge_grows_slots() {
+        let mut a = AggState::new(0);
+        a.merge(&AggState { slots: vec![2.0], active_count: 0, sent_msgs: 0 });
+        assert_eq!(a.slots, vec![2.0]);
+    }
+
+    #[test]
+    fn done_requires_both_quiet() {
+        assert!(AggState::new(0).job_done());
+        assert!(!AggState { slots: vec![], active_count: 1, sent_msgs: 0 }.job_done());
+        assert!(!AggState { slots: vec![], active_count: 0, sent_msgs: 5 }.job_done());
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let a = AggState { slots: vec![0.25, f64::MAX], active_count: 7, sent_msgs: 1 };
+        assert_eq!(AggState::from_bytes(&a.to_bytes()).unwrap(), a);
+    }
+}

@@ -1,0 +1,240 @@
+//! The vertex-centric programming interface.
+
+use super::message::Outbox;
+use super::partition::Partition;
+use crate::graph::{Mutation, VertexId};
+use crate::util::codec::Codec;
+use anyhow::Result;
+
+/// Sender-side message combiner (fold `m` into `acc`).
+pub type CombineFn<M> = fn(&mut M, &M);
+
+/// A vertex program.
+///
+/// ### The LWCP contract (paper §4, Equations (2)/(3))
+///
+/// `compute` must be written in two phases:
+/// 1. fold the incoming messages into the vertex state using
+///    [`Ctx::set_value`] (and [`Ctx::vote_to_halt`]);
+/// 2. generate outgoing messages **reading the state back through
+///    [`Ctx::value`]** — never from locals computed in phase 1.
+///
+/// The engine regenerates messages after a failure by calling `compute`
+/// in *replay mode*: state writes are ignored, so phase 2 sees exactly
+/// the checkpointed state. Supersteps whose messages cannot be derived
+/// from state alone (e.g. responding supersteps of request–respond
+/// algorithms) must be masked via [`Ctx::mask_lwcp`] or
+/// [`App::lwcp_applicable`]; LWCP skips checkpointing them and LWLog
+/// falls back to message logging for them.
+pub trait App: Send + Sync + 'static {
+    /// Vertex value type a(v).
+    type V: Clone + Codec + Send + Sync + std::fmt::Debug;
+    /// Message type.
+    type M: Clone + Codec + Send + Sync + std::fmt::Debug;
+
+    /// Number of f64 sum-aggregator slots this app uses.
+    fn agg_slots(&self) -> usize {
+        0
+    }
+
+    /// Initial vertex value.
+    fn init(&self, id: VertexId, adj: &[VertexId], n_vertices: usize) -> Self::V;
+
+    /// Are vertices active at superstep 1?
+    fn initially_active(&self, _id: VertexId) -> bool {
+        true
+    }
+
+    /// The vertex UDF.
+    fn compute(&self, ctx: &mut Ctx<'_, Self::V, Self::M>, msgs: &[Self::M]);
+
+    /// Optional message combiner.
+    fn combiner(&self) -> Option<CombineFn<Self::M>> {
+        None
+    }
+
+    /// Global LWCP mask: return false for supersteps where outgoing
+    /// messages depend on incoming ones (the paper's `LWCPable()` UDF).
+    fn lwcp_applicable(&self, _superstep: u64) -> bool {
+        true
+    }
+
+    /// Upper bound on supersteps (PageRank runs a fixed number).
+    fn max_supersteps(&self) -> u64 {
+        u64::MAX
+    }
+
+    /// Extra halt condition evaluated on the global aggregator after
+    /// each superstep.
+    fn halt_on(&self, _agg: &super::AggState) -> bool {
+        false
+    }
+
+    /// Does this app provide an XLA batch hot path?
+    fn supports_xla(&self) -> bool {
+        false
+    }
+
+    /// The XLA batch superstep: perform the whole per-partition update
+    /// (value fold + message generation + aggregation) using `exec` for
+    /// the numeric kernel. Must produce results identical to the scalar
+    /// path. Only called when `supports_xla()` and an executor is
+    /// configured.
+    fn xla_superstep(
+        &self,
+        _exec: &dyn BatchExec,
+        _superstep: u64,
+        _part: &mut Partition<Self::V>,
+        _inbox: &super::Inbox<Self::M>,
+        _out: &mut Outbox<Self::M>,
+        _agg: &mut [f64],
+    ) -> Result<()> {
+        anyhow::bail!("app does not implement an XLA batch path")
+    }
+}
+
+/// Executes an AOT-compiled numeric function over f32 arrays.
+/// Implemented by [`crate::runtime::XlaRegistry`]; the `NoXla` stub
+/// rejects every call (scalar-only engines).
+///
+/// Deliberately NOT `Send`/`Sync`: the underlying PJRT handles are raw
+/// pointers and the engine drives workers from one thread (worker-level
+/// parallelism happens at the scalar compute phase, not inside PJRT).
+pub trait BatchExec {
+    /// Run `fn_name` (padding inputs to the registry's size buckets)
+    /// and return its output arrays truncated back to the input length.
+    fn run(&self, fn_name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// Always-failing executor for scalar-only configurations.
+pub struct NoXla;
+
+impl BatchExec for NoXla {
+    fn run(&self, fn_name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("no XLA runtime configured (requested {fn_name})")
+    }
+}
+
+/// Per-vertex view handed to [`App::compute`].
+pub struct Ctx<'a, V, M: Codec + Clone> {
+    pub(crate) id: VertexId,
+    pub(crate) slot: usize,
+    pub(crate) superstep: u64,
+    pub(crate) n_vertices: usize,
+    /// Replay mode: state writes ignored (transparent message generation).
+    pub(crate) replay: bool,
+    pub(crate) part: &'a mut Partition<V>,
+    pub(crate) out: &'a mut Outbox<M>,
+    pub(crate) agg: &'a mut [f64],
+    pub(crate) agg_prev: &'a [f64],
+    pub(crate) mutations: &'a mut Vec<Mutation>,
+    pub(crate) lwcp_mask: &'a mut bool,
+}
+
+impl<'a, V: Clone, M: Codec + Clone> Ctx<'a, V, M> {
+    /// This vertex's id.
+    pub fn id(&self) -> VertexId {
+        self.id
+    }
+
+    /// Current superstep number (1-based).
+    pub fn superstep(&self) -> u64 {
+        self.superstep
+    }
+
+    /// |V| of the whole graph.
+    pub fn num_vertices(&self) -> usize {
+        self.n_vertices
+    }
+
+    /// Current vertex value a(v). After `set_value` this reads the new
+    /// value in normal mode and the checkpointed value in replay mode —
+    /// the heart of the LWCP contract.
+    pub fn value(&self) -> &V {
+        &self.part.values[self.slot]
+    }
+
+    /// Update a(v). Ignored in replay mode.
+    pub fn set_value(&mut self, v: V) {
+        if !self.replay {
+            self.part.values[self.slot] = v;
+        }
+    }
+
+    /// Γ(v): this vertex's (out-)neighbors.
+    pub fn neighbors(&self) -> &[VertexId] {
+        self.part.adj.neighbors(self.slot)
+    }
+
+    /// |Γ(v)|.
+    pub fn degree(&self) -> usize {
+        self.part.adj.degree(self.slot)
+    }
+
+    /// Send a message to vertex `to` (delivered next superstep).
+    pub fn send(&mut self, to: VertexId, m: M) {
+        self.out.send(to, m);
+    }
+
+    /// Send `m` to every neighbor.
+    pub fn send_all(&mut self, m: M) {
+        // Disjoint field reborrows: adjacency read-only, outbox mutable.
+        let adj = &self.part.adj;
+        let out = &mut *self.out;
+        for &to in adj.neighbors(self.slot) {
+            out.send(to, m.clone());
+        }
+    }
+
+    /// Deactivate this vertex (it reactivates on message receipt).
+    /// Ignored in replay mode.
+    pub fn vote_to_halt(&mut self) {
+        if !self.replay {
+            self.part.active[self.slot] = false;
+        }
+    }
+
+    /// Add an out-edge v→`dst` (applied immediately; logged for
+    /// incremental checkpointing). Ignored in replay mode.
+    pub fn add_edge(&mut self, dst: VertexId) {
+        if !self.replay {
+            self.part.adj.add_edge(self.slot, dst);
+            self.mutations.push(Mutation::AddEdge { src: self.id, dst });
+        }
+    }
+
+    /// Delete the out-edge v→`dst`. Ignored in replay mode.
+    pub fn del_edge(&mut self, dst: VertexId) {
+        if !self.replay {
+            self.part.adj.del_edge(self.slot, dst);
+            self.mutations.push(Mutation::DelEdge { src: self.id, dst });
+        }
+    }
+
+    /// Contribute to aggregator `slot`. Ignored in replay mode.
+    pub fn aggregate(&mut self, slot: usize, val: f64) {
+        if !self.replay {
+            self.agg[slot] += val;
+        }
+    }
+
+    /// Global aggregator value of the previous superstep.
+    pub fn agg_prev(&self, slot: usize) -> f64 {
+        self.agg_prev.get(slot).copied().unwrap_or(0.0)
+    }
+
+    /// Mark the current superstep LWCP-inapplicable (paper §4: masking).
+    /// Ignored in replay mode (replay never checkpoints).
+    pub fn mask_lwcp(&mut self) {
+        if !self.replay {
+            *self.lwcp_mask = true;
+        }
+    }
+
+    /// Is this a replay (message-regeneration) call? Exposed for apps
+    /// with reverse-iteration replay logic (the paper's appendix
+    /// triangle algorithm).
+    pub fn is_replay(&self) -> bool {
+        self.replay
+    }
+}

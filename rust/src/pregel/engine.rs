@@ -1,0 +1,586 @@
+//! The superstep engine: compute → log → shuffle → sync → commit, with
+//! checkpointing and failure handling (Figure 1 of the paper).
+//!
+//! ## Commit protocol (paper §3)
+//!
+//! Computation strictly precedes communication in a superstep, so when a
+//! failure is detected (always at a communication point), every worker
+//! has *partially committed* the superstep: its vertex states, partial
+//! aggregator and control info are fully updated, and — for log-based
+//! algorithms — its local logs for the superstep are complete. A
+//! superstep is *fully committed* once messages are delivered and the
+//! global aggregator is synchronized; only then may it be checkpointed
+//! or the next superstep started.
+//!
+//! ## Unified recovery loop
+//!
+//! Normal execution and log-based recovery run through the same
+//! `process_superstep`: a worker with `s(W) == i-1` computes superstep i
+//! (Case 2 of §5), a worker with `s(W) ≥ i` only forwards logged (or
+//! state-regenerated) messages to workers with `s(W') ≤ i` (Case 1);
+//! `s(W) < i-1` is impossible (Case 3). Checkpoint-based algorithms
+//! reset every `s(W)` to the checkpointed superstep, making everyone a
+//! Case-2 worker — recovery *is* re-execution.
+
+use super::aggregator::AggState;
+use super::app::{App, BatchExec};
+use super::message::Inbox;
+use super::worker::{StepOutput, Worker};
+use crate::comm::WorkerSet;
+use crate::ft::FtKind;
+use crate::graph::{Partitioner, VertexId};
+use crate::metrics::{RunMetrics, StepKind, StepRecord};
+use crate::sim::{CostModel, Topology};
+use crate::storage::{Backing, SimHdfs};
+use crate::util::codec::Codec;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+/// One injected failure: kill `ranks` right after the compute+log phase
+/// of superstep `at_step` (the paper kills workers mid-communication).
+/// Kills fire in declaration order, so a later entry with a smaller
+/// `at_step` models a *cascading* failure during recovery.
+#[derive(Debug, Clone)]
+pub struct Kill {
+    pub at_step: u64,
+    pub ranks: Vec<usize>,
+    /// Whether the hosting machine is considered crashed (replacements
+    /// then avoid it).
+    pub machine_fails: bool,
+}
+
+/// The failure schedule of a run.
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    pub kills: Vec<Kill>,
+}
+
+impl FailurePlan {
+    pub fn none() -> Self {
+        FailurePlan { kills: Vec::new() }
+    }
+
+    /// Kill `n` workers (ranks 1..=n) at `step` — the paper's standard
+    /// experiment (rank 0 is spared so the longest-living master is a
+    /// survivor, as in the paper where the killed worker is not the
+    /// master).
+    pub fn kill_n_at(n: usize, step: u64) -> Self {
+        FailurePlan {
+            kills: vec![Kill { at_step: step, ranks: (1..=n).collect(), machine_fails: false }],
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub topo: Topology,
+    pub cost: CostModel,
+    pub ft: FtKind,
+    /// Checkpoint every δ supersteps (0 = only CP[0]).
+    pub cp_every: u64,
+    /// Alternative condition (paper §4): checkpoint when more than this
+    /// many simulated seconds passed since the last committed
+    /// checkpoint — suited to algorithms whose superstep time varies
+    /// (triangle counting). Checked by the master after each fully
+    /// committed superstep; combinable with `cp_every` (either fires).
+    pub cp_every_secs: Option<f64>,
+    pub backing: Backing,
+    /// Tag for temp dirs (unique per concurrent run).
+    pub tag: String,
+    /// Hard cap on supersteps (on top of the app's own).
+    pub max_supersteps: u64,
+}
+
+impl EngineConfig {
+    pub fn small_test(ft: FtKind) -> Self {
+        EngineConfig {
+            topo: Topology::new(2, 2),
+            cost: CostModel::default(),
+            ft,
+            cp_every: 4,
+            cp_every_secs: None,
+            backing: Backing::Memory,
+            tag: "test".into(),
+            max_supersteps: 10_000,
+        }
+    }
+}
+
+/// Metrics staging (which paper stage a superstep belongs to).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Stage {
+    Normal,
+    Recovering { failure_step: u64 },
+}
+
+/// The job engine.
+pub struct Engine<A: App> {
+    pub(crate) app: Arc<A>,
+    pub(crate) cfg: EngineConfig,
+    pub(crate) partitioner: Partitioner,
+    pub(crate) workers: Vec<Worker<A>>,
+    pub(crate) ws: WorkerSet,
+    pub(crate) hdfs: Arc<SimHdfs>,
+    pub(crate) exec: Option<Arc<dyn BatchExec>>,
+    pub(crate) metrics: RunMetrics,
+    /// Fully-committed global aggregator per superstep. Conceptually the
+    /// master's log; the longest-living-master election rule guarantees
+    /// it survives any recoverable failure, so we keep one copy.
+    pub(crate) agg_log: BTreeMap<u64, AggState>,
+    /// Latest committed checkpoint superstep.
+    pub(crate) cp_last: u64,
+    /// Virtual time when the latest checkpoint committed (drives the
+    /// time-interval checkpoint condition).
+    pub(crate) cp_last_time: f64,
+    /// A checkpoint is due but was deferred by a masked superstep.
+    pub(crate) cp_pending: bool,
+    /// Supersteps masked for LWCP (user/app mask).
+    pub(crate) masked_steps: BTreeSet<u64>,
+    /// Supersteps that performed topology mutation (LWLog falls back to
+    /// message logging for these — old messages cannot be regenerated
+    /// against a newer Γ).
+    pub(crate) mutated_steps: BTreeSet<u64>,
+    /// Any topology mutation so far (LWCP survivor adjacency reuse).
+    pub(crate) any_mutation: bool,
+    pub(crate) failure_plan: FailurePlan,
+    pub(crate) next_kill: usize,
+    pub(crate) stage: Stage,
+    pub(crate) master: usize,
+}
+
+impl<A: App> Engine<A> {
+    /// Build a job: generate partitions from the global adjacency.
+    pub fn new(app: A, cfg: EngineConfig, global_adj: &[Vec<VertexId>]) -> Result<Self> {
+        let n_workers = cfg.topo.n_workers();
+        let partitioner = Partitioner::new(n_workers, global_adj.len());
+        let hdfs = Arc::new(match cfg.backing {
+            Backing::Memory => SimHdfs::in_memory(),
+            Backing::Disk => SimHdfs::on_disk(&cfg.tag)?,
+        });
+        let mut workers = Vec::with_capacity(n_workers);
+        for rank in 0..n_workers {
+            workers.push(Worker::new(rank, partitioner, global_adj, &app, cfg.backing, &cfg.tag)?);
+        }
+        let ws = WorkerSet::new(cfg.topo);
+        Ok(Engine {
+            app: Arc::new(app),
+            cfg,
+            partitioner,
+            workers,
+            ws,
+            hdfs,
+            exec: None,
+            metrics: RunMetrics::default(),
+            agg_log: BTreeMap::new(),
+            cp_last: 0,
+            cp_last_time: 0.0,
+            cp_pending: false,
+            masked_steps: BTreeSet::new(),
+            mutated_steps: BTreeSet::new(),
+            any_mutation: false,
+            failure_plan: FailurePlan::none(),
+            next_kill: 0,
+            stage: Stage::Normal,
+            master: 0,
+        })
+    }
+
+    /// Install an XLA batch executor (PageRank & friends hot path).
+    pub fn with_exec(mut self, exec: Arc<dyn BatchExec>) -> Self {
+        self.exec = Some(exec);
+        self
+    }
+
+    /// Install a failure schedule.
+    pub fn with_failures(mut self, plan: FailurePlan) -> Self {
+        self.failure_plan = plan;
+        self
+    }
+
+    /// Max virtual clock over alive workers.
+    pub(crate) fn max_clock(&self) -> f64 {
+        self.ws
+            .alive_ranks()
+            .into_iter()
+            .map(|r| self.workers[r].clock.now())
+            .fold(0.0, f64::max)
+    }
+
+    /// Sync every alive worker's clock to the max (a barrier), plus
+    /// `extra` seconds of overhead; returns the post-barrier time.
+    pub(crate) fn barrier(&mut self, extra: f64) -> f64 {
+        let t = self.max_clock() + extra;
+        for r in self.ws.alive_ranks() {
+            self.workers[r].clock.sync_to(t);
+        }
+        t
+    }
+
+    fn classify(&self, step: u64) -> StepKind {
+        match self.stage {
+            Stage::Normal => StepKind::Normal,
+            Stage::Recovering { failure_step } => {
+                if step < failure_step {
+                    StepKind::Recovery
+                } else {
+                    StepKind::LastRecovery
+                }
+            }
+        }
+    }
+
+    /// Run the job to completion. Returns the collected metrics.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        let wall = std::time::Instant::now();
+        if self.cfg.ft != FtKind::None {
+            self.write_cp0()?;
+        }
+        let max_steps = self.app.max_supersteps().min(self.cfg.max_supersteps);
+        let mut step = 1u64;
+        while step <= max_steps {
+            if let Some(next) = self.process_superstep(step)? {
+                step = next; // failure: resume from the recovery point
+                continue;
+            }
+            // Leaving recovery once the failure superstep is recovered.
+            if let Stage::Recovering { failure_step } = self.stage {
+                if step >= failure_step {
+                    self.stage = Stage::Normal;
+                }
+            }
+            let done = {
+                let g = &self.agg_log[&step];
+                g.job_done() || self.app.halt_on(g)
+            };
+            if done {
+                break;
+            }
+            self.maybe_checkpoint(step)?;
+            step += 1;
+        }
+        self.metrics.final_time = self.max_clock();
+        self.metrics.supersteps_run = self.metrics.steps.len() as u64;
+        self.metrics.wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+        self.metrics.result_digest = self.digest();
+        Ok(self.metrics.clone())
+    }
+
+    /// Stable digest of all final vertex values (rank order).
+    pub fn digest(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for w in &self.workers {
+            let d = w.part.digest();
+            for b in d.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Collected global aggregator of a fully-committed superstep.
+    pub fn global_agg(&self, step: u64) -> Option<&AggState> {
+        self.agg_log.get(&step)
+    }
+
+    /// Read one vertex's current value (tests/examples).
+    pub fn value_of(&self, v: VertexId) -> &A::V {
+        let r = self.partitioner.rank_of(v);
+        &self.workers[r].part.values[self.partitioner.slot_of(v)]
+    }
+
+    /// Iterate all (id, value) pairs in id order (result dump).
+    pub fn values(&self) -> Vec<(VertexId, A::V)> {
+        let mut out = Vec::with_capacity(self.partitioner.n_vertices);
+        for v in 0..self.partitioner.n_vertices as u32 {
+            out.push((v, self.value_of(v).clone()));
+        }
+        out
+    }
+
+    /// The failure-resilient store (tests inspect checkpoint keys/sizes).
+    pub fn hdfs(&self) -> &SimHdfs {
+        &self.hdfs
+    }
+
+    /// Live local-log bytes of one worker (tests assert GC behavior).
+    pub fn log_bytes(&self, rank: usize) -> u64 {
+        self.workers[rank].log.total_bytes()
+    }
+
+    /// Does worker `rank` hold a message log / vertex-state log for
+    /// `step`? (tests assert the LWLog masked-superstep fallback).
+    pub fn log_kinds(&self, rank: usize, step: u64) -> (bool, bool) {
+        (
+            self.workers[rank].log.has_msg_log(step),
+            self.workers[rank].log.has_vstate_log(step),
+        )
+    }
+
+    /// Latest committed checkpoint superstep.
+    pub fn cp_last(&self) -> u64 {
+        self.cp_last
+    }
+
+    /// Does a kill fire at this step?
+    fn due_kill(&self, step: u64) -> Option<usize> {
+        let k = self.failure_plan.kills.get(self.next_kill)?;
+        (k.at_step == step).then_some(self.next_kill)
+    }
+
+    // ---------------------------------------------------------------
+    // The superstep
+    // ---------------------------------------------------------------
+
+    /// Process one superstep. Returns `Some(next_step)` if a failure was
+    /// injected and recovery rolled the loop back.
+    fn process_superstep(&mut self, step: u64) -> Result<Option<u64>> {
+        let t0 = self.max_clock();
+        let alive = self.ws.alive_ranks();
+        let computing: Vec<usize> =
+            alive.iter().copied().filter(|&r| self.workers[r].s_w == step - 1).collect();
+        let forwarding: Vec<usize> =
+            alive.iter().copied().filter(|&r| self.workers[r].s_w >= step).collect();
+        for &r in &alive {
+            // Case 3 of §5: impossible by induction.
+            if self.workers[r].s_w + 1 < step {
+                bail!("worker {r} at s(W)={} cannot reach superstep {step}", self.workers[r].s_w);
+            }
+        }
+        let agg_prev: Vec<f64> = self
+            .agg_log
+            .get(&(step - 1))
+            .map(|a| a.slots.clone())
+            .unwrap_or_default();
+
+        // ---- compute phase (partial commit) ----
+        // Workers are independent within a superstep; the scalar path
+        // fans out over OS threads (deterministic: results are merged in
+        // rank order, and each worker's virtual clock is its own). The
+        // XLA path stays sequential — PJRT handles are not Sync.
+        let app = Arc::clone(&self.app);
+        let exec = self.exec.clone();
+        let use_xla = exec.is_some() && app.supports_xla();
+        let mut outputs: Vec<(usize, StepOutput<A::M>)> = if use_xla || computing.len() < 2 {
+            let mut outs = Vec::with_capacity(computing.len());
+            for &r in &computing {
+                let out = self.workers[r]
+                    .compute_superstep(&app, step, &agg_prev, exec.as_deref())
+                    .with_context(|| format!("compute on worker {r} superstep {step}"))?;
+                outs.push((r, out));
+            }
+            outs
+        } else {
+            let agg_prev_ref = &agg_prev;
+            let app_ref: &A = &app;
+            // Collect disjoint &mut references to the computing workers.
+            let mut refs: Vec<(usize, &mut Worker<A>)> = self
+                .workers
+                .iter_mut()
+                .enumerate()
+                .filter(|(r, _)| computing.contains(r))
+                .collect();
+            let threads = std::thread::available_parallelism().map_or(4, |n| n.get()).min(refs.len());
+            let chunk = refs.len().div_ceil(threads);
+            let results: Vec<Result<Vec<(usize, StepOutput<A::M>)>>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = refs
+                        .chunks_mut(chunk)
+                        .map(|slice| {
+                            s.spawn(move || {
+                                let mut outs = Vec::with_capacity(slice.len());
+                                for (r, w) in slice {
+                                    let out =
+                                        w.compute_superstep(app_ref, step, agg_prev_ref, None)?;
+                                    outs.push((*r, out));
+                                }
+                                Ok(outs)
+                            })
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().expect("compute thread")).collect()
+                });
+            let mut outs = Vec::with_capacity(computing.len());
+            for r in results {
+                outs.extend(r?);
+            }
+            outs.sort_by_key(|(r, _)| *r);
+            outs
+        };
+        for (r, out) in &outputs {
+            let t = if use_xla {
+                self.cfg.cost.batch_compute_time(
+                    self.workers[*r].part.n_slots() as u64,
+                    out.outbox.raw_count(),
+                )
+            } else {
+                self.cfg.cost.compute_time(out.n_computed, out.outbox.raw_count())
+            };
+            self.workers[*r].clock.advance(t);
+            self.metrics.bytes.messages_sent += out.outbox.raw_count();
+        }
+        let _ = &mut outputs;
+
+        let masked = outputs.iter().any(|(_, o)| o.lwcp_masked)
+            || !self.app.lwcp_applicable(step);
+        if masked {
+            self.masked_steps.insert(step);
+        }
+        if outputs.iter().any(|(_, o)| o.mutated) {
+            self.mutated_steps.insert(step);
+            self.any_mutation = true;
+        }
+
+        // ---- logging phase (completes partial commit for log-based) ----
+        let mut step_aggs: BTreeMap<usize, AggState> = BTreeMap::new();
+        for (r, out) in &outputs {
+            step_aggs.insert(*r, out.agg.clone());
+        }
+        if self.cfg.ft.log_based() {
+            self.write_local_logs(step, &outputs, masked)?;
+        }
+        for (r, out) in &outputs {
+            if !out.mutations_encoded.is_empty() {
+                let t = self.cfg.cost.log_write_time(out.mutations_encoded.len() as u64);
+                self.workers[*r].clock.advance(t);
+                self.workers[*r].log.append_mutations(step, out.mutations_encoded.clone());
+            }
+            self.workers[*r].log.log_partial_agg(step, out.agg.to_bytes());
+        }
+
+        // ---- failure injection point (mid-communication) ----
+        if let Some(kidx) = self.due_kill(step) {
+            let next = self.perform_failure(step, kidx)?;
+            return Ok(Some(next));
+        }
+
+        // ---- shuffle phase ----
+        let mut batches: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+        for (r, out) in &outputs {
+            for (dst, b) in out.outbox.all_batches() {
+                // Case 2: send only to workers that will compute i+1.
+                if self.workers[dst].s_w <= step {
+                    batches.push((*r, dst, b));
+                }
+            }
+        }
+        // Case 1: forwarders replay logs to recovering workers.
+        if !forwarding.is_empty() {
+            let dests: Vec<usize> = alive
+                .iter()
+                .copied()
+                .filter(|&d| self.workers[d].s_w <= step)
+                .collect();
+            if !dests.is_empty() {
+                self.forward_logged_messages(step, &forwarding, &dests, &agg_prev, &mut batches)?;
+            }
+        }
+        self.deliver(&mut batches)?;
+
+        // ---- sync & commit ----
+        let global = if let Some(g) = self.agg_log.get(&step) {
+            // Already fully committed before the failure: every computing
+            // worker fetches it from the master's log (i < s(master)).
+            let g = g.clone();
+            for &r in &computing {
+                self.workers[r].clock.advance(self.cfg.cost.net_latency);
+            }
+            g
+        } else {
+            // Merge partials in rank order: computing workers contribute
+            // fresh partials, forwarders their logged ones.
+            let mut g = AggState::new(self.app.agg_slots());
+            for &r in &alive {
+                if let Some(p) = step_aggs.get(&r) {
+                    g.merge(p);
+                } else {
+                    let bytes = self.workers[r]
+                        .log
+                        .read_partial_agg(step)
+                        .with_context(|| format!("worker {r} missing partial agg @{step}"))?;
+                    g.merge(&AggState::from_bytes(bytes)?);
+                }
+            }
+            let t = self.cfg.cost.sync_time(alive.len());
+            for &r in &alive {
+                self.workers[r].clock.advance(t);
+            }
+            g
+        };
+        self.agg_log.insert(step, global);
+
+        let t1 = self.barrier(0.0);
+        self.metrics.steps.push(StepRecord { step, kind: self.classify(step), dur: t1 - t0 });
+        Ok(None)
+    }
+
+    /// Deliver serialized batches: sorted by (dst, src) so receivers fold
+    /// in sender-rank order (bitwise determinism), with wire/CPU costs.
+    pub(crate) fn deliver(&mut self, batches: &mut Vec<(usize, usize, Vec<u8>)>) -> Result<()> {
+        batches.sort_by_key(|(src, dst, _)| (*dst, *src));
+        let n = self.workers.len();
+        let mut sent_remote = vec![0u64; n];
+        let mut sent_intra = vec![0u64; n];
+        let mut recv_remote = vec![0u64; n];
+        let mut recv_intra = vec![0u64; n];
+        let mut recv_cpu = vec![0.0f64; n];
+        for (src, dst, b) in batches.iter() {
+            let same = self.ws.machine_of(*src) == self.ws.machine_of(*dst);
+            let len = b.len() as u64;
+            if same {
+                sent_intra[*src] += len;
+                recv_intra[*dst] += len;
+            } else {
+                sent_remote[*src] += len;
+                recv_remote[*dst] += len;
+            }
+            self.metrics.bytes.shuffle_bytes += len;
+            let cnt = self.workers[*dst].inbox.ingest(b)?;
+            recv_cpu[*dst] += self.cfg.cost.recv_time(cnt);
+        }
+        // NIC sharing: count communicating workers per machine.
+        let machines = self.cfg.topo.machines;
+        let mut send_sharers = vec![0usize; machines];
+        let mut recv_sharers = vec![0usize; machines];
+        for r in 0..n {
+            if sent_remote[r] > 0 {
+                send_sharers[self.ws.machine_of(r)] += 1;
+            }
+            if recv_remote[r] > 0 {
+                recv_sharers[self.ws.machine_of(r)] += 1;
+            }
+        }
+        for r in 0..n {
+            if !self.ws.is_alive(r) {
+                continue;
+            }
+            let m = self.ws.machine_of(r);
+            let send_t = if sent_remote[r] + sent_intra[r] > 0 {
+                self.cfg.cost.wire_time(sent_remote[r], send_sharers[m], false)
+                    + sent_intra[r] as f64 / self.cfg.cost.mem_bw
+            } else {
+                0.0
+            };
+            let recv_t = if recv_remote[r] + recv_intra[r] > 0 {
+                self.cfg.cost.wire_time(recv_remote[r], recv_sharers[m], false)
+                    + recv_intra[r] as f64 / self.cfg.cost.mem_bw
+            } else {
+                0.0
+            };
+            self.workers[r].clock.advance(send_t.max(recv_t) + recv_cpu[r]);
+        }
+        Ok(())
+    }
+
+    /// Fresh inboxes for every alive worker (recovery drops in-flight
+    /// messages).
+    pub(crate) fn reset_inboxes(&mut self) {
+        let app = Arc::clone(&self.app);
+        for r in self.ws.alive_ranks() {
+            self.workers[r].inbox =
+                Inbox::new(self.workers[r].part.partitioner.slots_of(r), app.combiner());
+        }
+    }
+}

@@ -1,0 +1,326 @@
+//! Message plumbing: per-destination outgoing queues with sender-side
+//! combining, and the receiver-side inbox.
+//!
+//! Determinism contract (the recovery-equivalence property tests depend
+//! on it): a combined batch enumerates destination slots in ascending
+//! order; the receiver folds batches in **sender-rank order**; and
+//! non-combined messages keep generation order. A recovered run then
+//! reproduces the failure-free run bit-for-bit, f32 sums included.
+
+use super::app::CombineFn;
+use crate::graph::{Partitioner, VertexId};
+use crate::util::codec::{Codec, Reader};
+use anyhow::Result;
+
+/// Outgoing messages of one worker for one superstep.
+pub enum Outbox<M> {
+    /// Sender-side combining (one accumulator per destination slot,
+    /// allocated lazily per destination worker).
+    Combined {
+        part: Partitioner,
+        combine: CombineFn<M>,
+        /// `accs[dest_rank]` = per-slot accumulator, or empty if nothing
+        /// was sent to that worker yet.
+        accs: Vec<Vec<Option<M>>>,
+        /// Messages before combining (the paper's message count).
+        raw_count: u64,
+    },
+    /// No combiner: per-destination queues in generation order.
+    Direct {
+        part: Partitioner,
+        queues: Vec<Vec<(VertexId, M)>>,
+        raw_count: u64,
+    },
+}
+
+impl<M: Codec + Clone> Outbox<M> {
+    pub fn new(part: Partitioner, combine: Option<CombineFn<M>>) -> Self {
+        let n = part.n_workers;
+        match combine {
+            Some(c) => Outbox::Combined {
+                part,
+                combine: c,
+                accs: (0..n).map(|_| Vec::new()).collect(),
+                raw_count: 0,
+            },
+            None => Outbox::Direct {
+                part,
+                queues: (0..n).map(|_| Vec::new()).collect(),
+                raw_count: 0,
+            },
+        }
+    }
+
+    /// Route one message.
+    #[inline]
+    pub fn send(&mut self, to: VertexId, m: M) {
+        match self {
+            Outbox::Combined { part, combine, accs, raw_count } => {
+                *raw_count += 1;
+                let (rank, slot) = part.locate(to);
+                let acc = &mut accs[rank];
+                if acc.is_empty() {
+                    acc.resize(part.slots_of(rank), None);
+                }
+                match &mut acc[slot] {
+                    Some(cur) => combine(cur, &m),
+                    e @ None => *e = Some(m),
+                }
+            }
+            Outbox::Direct { part, queues, raw_count } => {
+                *raw_count += 1;
+                queues[part.rank_of(to)].push((to, m));
+            }
+        }
+    }
+
+    /// Messages generated (before combining).
+    pub fn raw_count(&self) -> u64 {
+        match self {
+            Outbox::Combined { raw_count, .. } | Outbox::Direct { raw_count, .. } => *raw_count,
+        }
+    }
+
+    /// Serialize the batch for destination `rank`; `None` if no message
+    /// targets that worker. Format: `u32 count, (u32 slot|vid, M)*`.
+    pub fn batch_for(&self, rank: usize) -> Option<Vec<u8>> {
+        match self {
+            Outbox::Combined { accs, .. } => {
+                let acc = &accs[rank];
+                if acc.is_empty() {
+                    return None;
+                }
+                let count = acc.iter().filter(|m| m.is_some()).count() as u32;
+                if count == 0 {
+                    return None;
+                }
+                // Pre-size: count (4) + per message slot u32 + payload.
+                let mut buf =
+                    Vec::with_capacity(4 + count as usize * (4 + std::mem::size_of::<M>()));
+                count.encode(&mut buf);
+                for (slot, m) in acc.iter().enumerate() {
+                    if let Some(m) = m {
+                        (slot as u32).encode(&mut buf);
+                        m.encode(&mut buf);
+                    }
+                }
+                Some(buf)
+            }
+            Outbox::Direct { queues, part, .. } => {
+                let q = &queues[rank];
+                if q.is_empty() {
+                    return None;
+                }
+                let mut buf = Vec::new();
+                (q.len() as u32).encode(&mut buf);
+                for (to, m) in q {
+                    (part.slot_of(*to) as u32).encode(&mut buf);
+                    m.encode(&mut buf);
+                }
+                Some(buf)
+            }
+        }
+    }
+
+    /// All non-empty serialized batches, ascending destination rank.
+    pub fn all_batches(&self) -> Vec<(usize, Vec<u8>)> {
+        let n = match self {
+            Outbox::Combined { part, .. } | Outbox::Direct { part, .. } => part.n_workers,
+        };
+        (0..n)
+            .filter_map(|r| self.batch_for(r).map(|b| (r, b)))
+            .collect()
+    }
+}
+
+/// Incoming messages of one worker for one superstep, indexed by local
+/// slot.
+pub enum Inbox<M> {
+    Combined {
+        combine: CombineFn<M>,
+        slots: Vec<Option<M>>,
+        count: u64,
+    },
+    Lists {
+        slots: Vec<Vec<M>>,
+        count: u64,
+    },
+}
+
+impl<M: Codec + Clone> Inbox<M> {
+    pub fn new(n_slots: usize, combine: Option<CombineFn<M>>) -> Self {
+        match combine {
+            Some(c) => Inbox::Combined { combine: c, slots: vec![None; n_slots], count: 0 },
+            None => Inbox::Lists { slots: vec![Vec::new(); n_slots], count: 0 },
+        }
+    }
+
+    /// Fold one serialized batch in. Callers must ingest batches in
+    /// sender-rank order (see module docs).
+    pub fn ingest(&mut self, batch: &[u8]) -> Result<u64> {
+        let mut r = Reader::new(batch);
+        let n = u32::decode(&mut r)? as u64;
+        match self {
+            Inbox::Combined { combine, slots, count } => {
+                for _ in 0..n {
+                    let slot = u32::decode(&mut r)? as usize;
+                    let m = M::decode(&mut r)?;
+                    match &mut slots[slot] {
+                        Some(cur) => combine(cur, &m),
+                        e @ None => *e = Some(m),
+                    }
+                }
+                *count += n;
+            }
+            Inbox::Lists { slots, count } => {
+                for _ in 0..n {
+                    let slot = u32::decode(&mut r)? as usize;
+                    slots[slot].push(M::decode(&mut r)?);
+                }
+                *count += n;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Does `slot` have any message?
+    pub fn has(&self, slot: usize) -> bool {
+        match self {
+            Inbox::Combined { slots, .. } => slots[slot].is_some(),
+            Inbox::Lists { slots, .. } => !slots[slot].is_empty(),
+        }
+    }
+
+    /// Borrow the messages of `slot` as a slice.
+    pub fn msgs(&self, slot: usize) -> &[M] {
+        match self {
+            Inbox::Combined { slots, .. } => {
+                slots[slot].as_ref().map(std::slice::from_ref).unwrap_or(&[])
+            }
+            Inbox::Lists { slots, .. } => &slots[slot],
+        }
+    }
+
+    /// Total messages delivered into this inbox.
+    pub fn count(&self) -> u64 {
+        match self {
+            Inbox::Combined { count, .. } | Inbox::Lists { count, .. } => *count,
+        }
+    }
+
+    /// Snapshot for heavyweight checkpoints.
+    pub fn snapshot(&self) -> crate::storage::checkpoint::InboxSnapshot<M> {
+        match self {
+            Inbox::Combined { slots, .. } => {
+                crate::storage::checkpoint::InboxSnapshot::Combined(slots.clone())
+            }
+            Inbox::Lists { slots, .. } => {
+                crate::storage::checkpoint::InboxSnapshot::Lists(slots.clone())
+            }
+        }
+    }
+
+    /// Restore from a heavyweight checkpoint snapshot.
+    pub fn restore(
+        &mut self,
+        snap: crate::storage::checkpoint::InboxSnapshot<M>,
+    ) -> Result<()> {
+        use crate::storage::checkpoint::InboxSnapshot;
+        match (self, snap) {
+            (Inbox::Combined { slots, count, .. }, InboxSnapshot::Combined(s)) => {
+                *count = s.iter().filter(|m| m.is_some()).count() as u64;
+                *slots = s;
+            }
+            (Inbox::Lists { slots, count }, InboxSnapshot::Lists(s)) => {
+                *count = s.iter().map(|l| l.len() as u64).sum();
+                *slots = s;
+            }
+            _ => anyhow::bail!("inbox snapshot kind mismatch"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part() -> Partitioner {
+        Partitioner::new(3, 9) // ranks 0..3, slots 3 each
+    }
+
+    fn sum(acc: &mut f32, m: &f32) {
+        *acc += *m;
+    }
+
+    #[test]
+    fn combined_outbox_combines_per_slot() {
+        let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob.send(4, 1.0); // rank 1, slot 1
+        ob.send(4, 2.5);
+        ob.send(7, 1.0); // rank 1, slot 2
+        assert_eq!(ob.raw_count(), 3);
+        let b = ob.batch_for(1).unwrap();
+        let mut inbox = Inbox::new(3, Some(sum as CombineFn<f32>));
+        assert_eq!(inbox.ingest(&b).unwrap(), 2); // combined to 2
+        assert_eq!(inbox.msgs(1), &[3.5]);
+        assert_eq!(inbox.msgs(2), &[1.0]);
+        assert!(!inbox.has(0));
+        assert!(ob.batch_for(0).is_none());
+    }
+
+    #[test]
+    fn direct_outbox_preserves_order() {
+        let mut ob = Outbox::<u32>::new(part(), None);
+        ob.send(2, 10); // rank 2 slot 0
+        ob.send(2, 7);
+        ob.send(5, 1); // rank 2 slot 1
+        let b = ob.batch_for(2).unwrap();
+        let mut inbox = Inbox::<u32>::new(3, None);
+        inbox.ingest(&b).unwrap();
+        assert_eq!(inbox.msgs(0), &[10, 7]);
+        assert_eq!(inbox.msgs(1), &[1]);
+        assert_eq!(inbox.count(), 3);
+    }
+
+    #[test]
+    fn rank_order_ingest_is_deterministic_for_f32() {
+        // Batches folded in rank order reproduce the same f32 sum.
+        let run = || {
+            let mut inbox = Inbox::new(1, Some(sum as CombineFn<f32>));
+            for r in 0..3 {
+                let mut ob = Outbox::new(Partitioner::new(1, 1), Some(sum as CombineFn<f32>));
+                ob.send(0, 0.1 * (r as f32 + 1.0));
+                inbox.ingest(&ob.batch_for(0).unwrap()).unwrap();
+            }
+            inbox.msgs(0)[0].to_bits()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob.send(0, 5.0);
+        ob.send(3, 1.0);
+        let mut inbox = Inbox::new(3, Some(sum as CombineFn<f32>));
+        inbox.ingest(&ob.batch_for(0).unwrap()).unwrap();
+        let snap = inbox.snapshot();
+        let mut inbox2 = Inbox::new(3, Some(sum as CombineFn<f32>));
+        inbox2.restore(snap).unwrap();
+        assert_eq!(inbox2.msgs(0), &[5.0]);
+        assert_eq!(inbox2.msgs(1), &[1.0]);
+        assert_eq!(inbox2.count(), 2);
+    }
+
+    #[test]
+    fn all_batches_ascending_ranks() {
+        let mut ob = Outbox::<u32>::new(part(), None);
+        ob.send(8, 1); // rank 2
+        ob.send(0, 2); // rank 0
+        let batches = ob.all_batches();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].0, 0);
+        assert_eq!(batches[1].0, 2);
+    }
+}

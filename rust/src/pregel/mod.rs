@@ -1,0 +1,31 @@
+//! The vertex-centric Pregel core: programming model, message plumbing,
+//! worker partitions, aggregators, and the superstep engine.
+//!
+//! The programming contract follows the paper exactly:
+//!
+//! * users write one [`App::compute`] UDF (think like a vertex);
+//! * to be **LWCP-compatible** the UDF must follow Equations (2)/(3):
+//!   first fold the incoming messages into the vertex state via
+//!   [`Ctx::set_value`], *then* generate outgoing messages by reading
+//!   the state back through [`Ctx::value`]. The engine regenerates
+//!   messages after a failure by re-running `compute` in **replay
+//!   mode**, where every state write is silently ignored — so message
+//!   generation sees exactly the checkpointed state ("transparent
+//!   message generation", §4);
+//! * a superstep can be *masked* (LWCP-inapplicable, e.g. the responding
+//!   supersteps of pointer-jumping algorithms) either per-vertex via
+//!   [`Ctx::mask_lwcp`] or globally via [`App::lwcp_applicable`].
+
+pub mod aggregator;
+pub mod app;
+pub mod engine;
+pub mod message;
+pub mod partition;
+pub mod worker;
+
+pub use aggregator::AggState;
+pub use app::{App, BatchExec, Ctx, NoXla};
+pub use engine::{Engine, EngineConfig, FailurePlan, Kill};
+pub use message::{Inbox, Outbox};
+pub use partition::Partition;
+pub use worker::Worker;

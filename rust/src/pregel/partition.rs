@@ -1,0 +1,161 @@
+//! A worker's vertex partition: values, flags, and adjacency.
+
+use crate::graph::{Adjacency, Partitioner, VertexId};
+use crate::storage::checkpoint::VertexStates;
+use crate::util::codec::Codec;
+
+/// The vertex data owned by one worker: `state(v) = (a(v), Γ(v),
+/// active(v))` for every v with `hash(v) = rank`, plus the per-superstep
+/// `comp(v)` flag the paper adds for LWCP message regeneration.
+#[derive(Debug, Clone)]
+pub struct Partition<V> {
+    pub rank: usize,
+    pub partitioner: Partitioner,
+    pub values: Vec<V>,
+    pub active: Vec<bool>,
+    /// Did compute() run on this vertex in the current superstep?
+    pub comp: Vec<bool>,
+    pub adj: Adjacency,
+}
+
+impl<V: Clone + Codec> Partition<V> {
+    /// Build worker `rank`'s partition from the global adjacency, using
+    /// an init function for vertex values.
+    pub fn build<A>(
+        rank: usize,
+        partitioner: Partitioner,
+        global_adj: &[Vec<VertexId>],
+        app: &A,
+    ) -> Self
+    where
+        A: super::App<V = V>,
+    {
+        let n_slots = partitioner.slots_of(rank);
+        let mut lists = Vec::with_capacity(n_slots);
+        let mut values = Vec::with_capacity(n_slots);
+        let mut active = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
+            let id = partitioner.id_of(rank, slot);
+            let adj = &global_adj[id as usize];
+            values.push(app.init(id, adj, partitioner.n_vertices));
+            active.push(app.initially_active(id));
+            lists.push(adj.clone());
+        }
+        Partition {
+            rank,
+            partitioner,
+            values,
+            active,
+            comp: vec![false; n_slots],
+            adj: Adjacency::from_lists(&lists),
+        }
+    }
+
+    /// Slot count (derived from the partitioner, so a just-spawned
+    /// placeholder partition reports its true size before restore).
+    pub fn n_slots(&self) -> usize {
+        self.partitioner.slots_of(self.rank)
+    }
+
+    /// Global id of local `slot`.
+    pub fn id_of(&self, slot: usize) -> VertexId {
+        self.partitioner.id_of(self.rank, slot)
+    }
+
+    /// Number of currently active vertices.
+    pub fn active_count(&self) -> u64 {
+        self.active.iter().filter(|&&a| a).count() as u64
+    }
+
+    /// Snapshot the lightweight state triple (values, active, comp).
+    pub fn states(&self) -> VertexStates<V> {
+        VertexStates {
+            values: self.values.clone(),
+            active: self.active.clone(),
+            comp: self.comp.clone(),
+        }
+    }
+
+    /// Restore the lightweight state triple.
+    pub fn restore_states(&mut self, s: VertexStates<V>) {
+        assert_eq!(
+            s.values.len(),
+            self.partitioner.slots_of(self.rank),
+            "state size mismatch"
+        );
+        self.values = s.values;
+        self.active = s.active;
+        self.comp = s.comp;
+    }
+
+    /// Stable digest of the vertex values (equivalence testing).
+    pub fn digest(&self) -> u64 {
+        // FNV-1a over the encoded values + active flags.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut buf = Vec::new();
+        self.values.encode(&mut buf);
+        self.active.encode(&mut buf);
+        for b in buf {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pregel::app::{App, Ctx};
+
+    struct Dummy;
+    impl App for Dummy {
+        type V = f32;
+        type M = f32;
+        fn init(&self, id: VertexId, adj: &[VertexId], _n: usize) -> f32 {
+            id as f32 + adj.len() as f32 * 0.5
+        }
+        fn compute(&self, _ctx: &mut Ctx<'_, f32, f32>, _msgs: &[f32]) {}
+    }
+
+    fn global() -> Vec<Vec<VertexId>> {
+        vec![vec![1, 2], vec![2], vec![0], vec![], vec![0, 1, 2]]
+    }
+
+    #[test]
+    fn build_assigns_hashed_vertices() {
+        let p = Partitioner::new(2, 5);
+        let part = Partition::build(0, p, &global(), &Dummy);
+        // Rank 0 owns ids 0, 2, 4.
+        assert_eq!(part.n_slots(), 3);
+        assert_eq!(part.id_of(0), 0);
+        assert_eq!(part.id_of(2), 4);
+        assert_eq!(part.values, vec![1.0, 2.5, 5.5]);
+        assert_eq!(part.adj.neighbors(2), &[0, 1, 2]);
+        assert_eq!(part.active_count(), 3);
+    }
+
+    #[test]
+    fn states_roundtrip() {
+        let p = Partitioner::new(2, 5);
+        let mut part = Partition::build(1, p, &global(), &Dummy);
+        part.active[0] = false;
+        part.comp[1] = true;
+        let s = part.states();
+        let mut other = Partition::build(1, p, &global(), &Dummy);
+        other.restore_states(s);
+        assert_eq!(other.values, part.values);
+        assert_eq!(other.active, part.active);
+        assert_eq!(other.comp, part.comp);
+        assert_eq!(other.digest(), part.digest());
+    }
+
+    #[test]
+    fn digest_tracks_values() {
+        let p = Partitioner::new(2, 5);
+        let mut part = Partition::build(0, p, &global(), &Dummy);
+        let d0 = part.digest();
+        part.values[1] = 99.0;
+        assert_ne!(part.digest(), d0);
+    }
+}

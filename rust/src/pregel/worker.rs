@@ -1,0 +1,238 @@
+//! One worker: its partition, inbox, local log store, virtual clock,
+//! and per-superstep state s(W).
+
+use super::aggregator::AggState;
+use super::app::{App, BatchExec, Ctx};
+use super::message::{Inbox, Outbox};
+use super::partition::Partition;
+use crate::graph::{Mutation, Partitioner, VertexId};
+use crate::sim::Clock;
+use crate::storage::{Backing, LocalLogStore};
+use crate::util::codec::Codec;
+use anyhow::Result;
+
+/// Everything a superstep's compute phase produces on one worker.
+pub struct StepOutput<M: Codec + Clone> {
+    pub outbox: Outbox<M>,
+    pub agg: AggState,
+    /// Encoded mutation requests performed this superstep (empty if none).
+    pub mutations_encoded: Vec<u8>,
+    /// Vertices on which compute() was called.
+    pub n_computed: u64,
+    /// Did any vertex mask this superstep for LWCP?
+    pub lwcp_masked: bool,
+    /// Did any vertex mutate topology? (LWLog auto-masks such steps:
+    /// older messages cannot be regenerated against a newer Γ(v).)
+    pub mutated: bool,
+}
+
+/// A worker process.
+pub struct Worker<A: App> {
+    pub rank: usize,
+    pub part: Partition<A::V>,
+    /// Messages to be consumed by the *next* compute phase.
+    pub inbox: Inbox<A::M>,
+    pub log: LocalLogStore,
+    pub clock: Clock,
+    /// Partially-committed superstep s(W).
+    pub s_w: u64,
+}
+
+impl<A: App> Worker<A> {
+    pub fn new(
+        rank: usize,
+        partitioner: Partitioner,
+        global_adj: &[Vec<VertexId>],
+        app: &A,
+        backing: Backing,
+        tag: &str,
+    ) -> Result<Self> {
+        let part = Partition::build(rank, partitioner, global_adj, app);
+        let inbox = Inbox::new(part.n_slots(), app.combiner());
+        Ok(Worker {
+            rank,
+            part,
+            inbox,
+            log: LocalLogStore::new(backing, tag, rank)?,
+            clock: Clock::new(),
+            s_w: 0,
+        })
+    }
+
+    /// A freshly-spawned replacement worker: empty partition (filled by
+    /// `new_worker_recovery` from the latest checkpoint), fresh local
+    /// log store (the dead worker's local disk is gone).
+    pub fn placeholder(
+        rank: usize,
+        partitioner: Partitioner,
+        app: &A,
+        backing: Backing,
+        tag: &str,
+    ) -> Result<Self> {
+        let part = Partition {
+            rank,
+            partitioner,
+            values: Vec::new(),
+            active: Vec::new(),
+            comp: Vec::new(),
+            adj: Default::default(),
+        };
+        let inbox = Inbox::new(partitioner.slots_of(rank), app.combiner());
+        Ok(Worker {
+            rank,
+            part,
+            inbox,
+            log: LocalLogStore::new(backing, tag, rank)?,
+            clock: Clock::new(),
+            s_w: 0,
+        })
+    }
+
+    /// Fresh empty inbox matching this worker's shape.
+    pub fn fresh_inbox(&self, app: &A) -> Inbox<A::M> {
+        Inbox::new(self.part.n_slots(), app.combiner())
+    }
+
+    /// Run the compute phase of `superstep`: call compute() on every
+    /// active-or-messaged vertex, consuming the current inbox.
+    pub fn compute_superstep(
+        &mut self,
+        app: &A,
+        superstep: u64,
+        agg_prev: &[f64],
+        exec: Option<&dyn BatchExec>,
+    ) -> Result<StepOutput<A::M>> {
+        // Swap in a fresh, correctly-sized inbox: the shuffle phase of
+        // this same superstep will deliver next-superstep messages into it.
+        let inbox = std::mem::replace(
+            &mut self.inbox,
+            Inbox::new(self.part.n_slots(), app.combiner()),
+        );
+        let mut out = Outbox::new(self.part.partitioner, app.combiner());
+        let mut agg = AggState::new(app.agg_slots());
+        let mut mutations: Vec<Mutation> = Vec::new();
+        let mut lwcp_mask = false;
+        let mut n_computed = 0u64;
+
+        if let (Some(exec), true) = (exec, app.supports_xla()) {
+            // Batch path: the app performs the whole partition update
+            // (incl. comp/active bookkeeping) through the XLA executor.
+            app.xla_superstep(exec, superstep, &mut self.part, &inbox, &mut out, &mut agg.slots)?;
+            n_computed = self.part.comp.iter().filter(|&&c| c).count() as u64;
+        } else {
+            for slot in 0..self.part.n_slots() {
+                let has_msg = inbox.has(slot);
+                if !self.part.active[slot] && !has_msg {
+                    self.part.comp[slot] = false;
+                    continue;
+                }
+                // A halted vertex is reactivated by incoming messages.
+                self.part.active[slot] = true;
+                self.part.comp[slot] = true;
+                n_computed += 1;
+                let id = self.part.id_of(slot);
+                // Split borrows: move msgs out of the inbox view.
+                let msgs: &[A::M] = inbox.msgs(slot);
+                let mut ctx = Ctx {
+                    id,
+                    slot,
+                    superstep,
+                    n_vertices: self.part.partitioner.n_vertices,
+                    replay: false,
+                    part: &mut self.part,
+                    out: &mut out,
+                    agg: &mut agg.slots,
+                    agg_prev,
+                    mutations: &mut mutations,
+                    lwcp_mask: &mut lwcp_mask,
+                };
+                app.compute(&mut ctx, msgs);
+            }
+        }
+
+        agg.active_count = self.part.active_count();
+        agg.sent_msgs = out.raw_count();
+        let mutated = !mutations.is_empty();
+        // Encoded as a raw record stream (no length prefix): E_W on HDFS
+        // is a pure append log, decoded by streaming until exhaustion.
+        let mut mutations_encoded = Vec::new();
+        for m in &mutations {
+            m.encode(&mut mutations_encoded);
+        }
+        self.s_w = superstep;
+        Ok(StepOutput { outbox: out, agg, mutations_encoded, n_computed, lwcp_masked: lwcp_mask, mutated })
+    }
+
+    /// Regenerate the outgoing messages of a past superstep from vertex
+    /// states (LWCP/LWLog recovery): call compute() in replay mode with
+    /// no messages for every vertex whose stored comp(v) flag is set.
+    ///
+    /// `states` optionally substitutes (values, comp) — used when the
+    /// states come from a local log and must not clobber the worker's
+    /// live (newer) state. All state writes are suppressed either way.
+    pub fn replay_generate(
+        &mut self,
+        app: &A,
+        superstep: u64,
+        agg_prev: &[f64],
+        states: Option<(Vec<A::V>, Vec<bool>)>,
+    ) -> Outbox<A::M> {
+        // Temporarily swap in the logged states if provided.
+        let saved = states.map(|(vals, comp)| {
+            (
+                std::mem::replace(&mut self.part.values, vals),
+                std::mem::replace(&mut self.part.comp, comp),
+            )
+        });
+
+        let mut out = Outbox::new(self.part.partitioner, app.combiner());
+        let mut agg_scratch = vec![0.0; app.agg_slots()];
+        let mut mutations = Vec::new();
+        let mut mask = false;
+        for slot in 0..self.part.n_slots() {
+            if !self.part.comp[slot] {
+                continue;
+            }
+            let id = self.part.id_of(slot);
+            let mut ctx = Ctx {
+                id,
+                slot,
+                superstep,
+                n_vertices: self.part.partitioner.n_vertices,
+                replay: true,
+                part: &mut self.part,
+                out: &mut out,
+                agg: &mut agg_scratch,
+                agg_prev,
+                mutations: &mut mutations,
+                lwcp_mask: &mut mask,
+            };
+            app.compute(&mut ctx, &[]);
+        }
+        debug_assert!(mutations.is_empty(), "replay must not mutate");
+
+        if let Some((vals, comp)) = saved {
+            self.part.values = vals;
+            self.part.comp = comp;
+        }
+        out
+    }
+
+    /// Encode this worker's (comp(v), a(v)) pairs for the LWLog
+    /// vertex-state log. Unlike a checkpoint, active(v) is not stored:
+    /// logged states only feed message regeneration (§5).
+    pub fn encode_vstate_log(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.part.values.encode(&mut buf);
+        self.part.comp.encode(&mut buf);
+        buf
+    }
+
+    /// Decode a vertex-state log payload into (values, comp).
+    pub fn decode_vstate_log(bytes: &[u8]) -> Result<(Vec<A::V>, Vec<bool>)> {
+        let mut r = crate::util::codec::Reader::new(bytes);
+        let values = Vec::<A::V>::decode(&mut r)?;
+        let comp = Vec::<bool>::decode(&mut r)?;
+        Ok((values, comp))
+    }
+}

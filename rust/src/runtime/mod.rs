@@ -1,0 +1,8 @@
+//! The AOT runtime: loads HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client via
+//! the `xla` crate — the only place Python output touches the Rust hot
+//! path, and it does so as compiled executables, never as Python.
+
+pub mod registry;
+
+pub use registry::XlaRegistry;

@@ -1,0 +1,178 @@
+//! Size-bucketed executable registry.
+//!
+//! `artifacts/manifest.txt` lists one artifact per (function, bucket):
+//! `<fn> <bucket> <n_inputs> <file>`. A worker partition of any size is
+//! served by the smallest bucket ≥ its size; inputs are padded with
+//! function-specific *inert* values (chosen so padded slots contribute
+//! nothing to reductions) and outputs are truncated back.
+//!
+//! Executables are compiled lazily on first use and cached; the PJRT
+//! client is shared. All methods are thread-safe (a mutex guards the
+//! cache; PJRT execution itself is serialized per executable, which is
+//! fine — the simulated cluster's workers execute sequentially and the
+//! real-time hot path is measured in the `hotpath` bench).
+
+use crate::pregel::app::BatchExec;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+struct ArtifactInfo {
+    bucket: usize,
+    n_inputs: usize,
+    file: PathBuf,
+}
+
+/// Registry of AOT-compiled numeric functions.
+pub struct XlaRegistry {
+    client: xla::PjRtClient,
+    /// (fn, bucket) -> artifact metadata; buckets ascending per fn.
+    artifacts: HashMap<String, Vec<ArtifactInfo>>,
+    /// Compiled executables, keyed by (fn, bucket).
+    compiled: Mutex<HashMap<(String, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Inert padding values per function input (see module docs): padded
+/// slots must not perturb in-artifact reductions (delta sums, change
+/// counts).
+fn padding_for(fn_name: &str, n_inputs: usize) -> Result<Vec<f32>> {
+    match fn_name {
+        // old_rank = 1-d, msg_sum = 0, deg = 0 → new == old, delta == 0,
+        // contrib == 0. (The artifact bakes d = 0.85.)
+        "pagerank_step" => Ok(vec![0.15, 0.0, 0.0]),
+        // cur = +inf, incoming = +inf → unchanged, changed == 0.
+        "min_step" => Ok(vec![f32::INFINITY, f32::INFINITY]),
+        other => {
+            if n_inputs == 0 {
+                bail!("unknown function {other} with no inputs");
+            }
+            bail!("no padding rule for function {other}; add one to registry.rs")
+        }
+    }
+}
+
+impl XlaRegistry {
+    /// Load the manifest from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut artifacts: HashMap<String, Vec<ArtifactInfo>> = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields", lineno + 1);
+            }
+            let info = ArtifactInfo {
+                bucket: parts[1].parse()?,
+                n_inputs: parts[2].parse()?,
+                file: dir.join(parts[3]),
+            };
+            artifacts.entry(parts[0].to_string()).or_default().push(info);
+        }
+        for infos in artifacts.values_mut() {
+            infos.sort_by_key(|i| i.bucket);
+        }
+        if artifacts.is_empty() {
+            bail!("empty manifest at {}", manifest.display());
+        }
+        Ok(XlaRegistry { client, artifacts, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: `$LWCP_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("LWCP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Functions available in the manifest.
+    pub fn functions(&self) -> Vec<&str> {
+        let mut f: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        f.sort();
+        f
+    }
+
+    /// Buckets available for `fn_name`, ascending.
+    pub fn buckets(&self, fn_name: &str) -> Vec<usize> {
+        self.artifacts
+            .get(fn_name)
+            .map(|v| v.iter().map(|i| i.bucket).collect())
+            .unwrap_or_default()
+    }
+
+    fn pick(&self, fn_name: &str, n: usize) -> Result<&ArtifactInfo> {
+        let infos = self
+            .artifacts
+            .get(fn_name)
+            .with_context(|| format!("no artifact for function {fn_name}"))?;
+        infos
+            .iter()
+            .find(|i| i.bucket >= n)
+            .with_context(|| format!("{fn_name}: no bucket >= {n} (largest: {})",
+                infos.last().map(|i| i.bucket).unwrap_or(0)))
+    }
+
+    fn executable(
+        &self,
+        fn_name: &str,
+        info: &ArtifactInfo,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (fn_name.to_string(), info.bucket);
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(e) = cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("parsing {}", info.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {fn_name}/{}", info.bucket))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+impl BatchExec for XlaRegistry {
+    fn run(&self, fn_name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let n = inputs.first().map(|i| i.len()).unwrap_or(0);
+        for (i, inp) in inputs.iter().enumerate() {
+            if inp.len() != n {
+                bail!("{fn_name}: input {i} length {} != {n}", inp.len());
+            }
+        }
+        let info = self.pick(fn_name, n)?;
+        if inputs.len() != info.n_inputs {
+            bail!("{fn_name}: expected {} inputs, got {}", info.n_inputs, inputs.len());
+        }
+        let pads = padding_for(fn_name, info.n_inputs)?;
+        let exe = self.executable(fn_name, info)?;
+
+        // Pad inputs up to the bucket.
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, inp) in inputs.iter().enumerate() {
+            let mut padded = Vec::with_capacity(info.bucket);
+            padded.extend_from_slice(inp);
+            padded.resize(info.bucket, pads[i]);
+            literals.push(xla::Literal::vec1(&padded));
+        }
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let mut v: Vec<f32> = p.to_vec::<f32>()?;
+            if v.len() >= n && v.len() == info.bucket {
+                v.truncate(n); // vector outputs shrink back to the input size
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,73 @@
+//! Per-worker virtual clocks.
+
+/// A worker's virtual clock, in simulated seconds since job start.
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    t: f64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock { t: 0.0 }
+    }
+
+    /// Current virtual time.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Advance by `dt` seconds (no-op for non-positive dt).
+    #[inline]
+    pub fn advance(&mut self, dt: f64) {
+        if dt > 0.0 {
+            self.t += dt;
+        }
+    }
+
+    /// Move forward to absolute time `t` (never backwards).
+    #[inline]
+    pub fn sync_to(&mut self, t: f64) {
+        if t > self.t {
+            self.t = t;
+        }
+    }
+}
+
+/// Synchronize a set of clocks at a barrier: everyone jumps to the max,
+/// plus a fixed barrier overhead. Returns the post-barrier time.
+pub fn barrier(clocks: &mut [&mut Clock], overhead: f64) -> f64 {
+    let t = clocks.iter().map(|c| c.now()).fold(0.0f64, f64::max) + overhead;
+    for c in clocks.iter_mut() {
+        c.sync_to(t);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_and_sync() {
+        let mut c = Clock::new();
+        c.advance(1.5);
+        c.advance(-3.0); // ignored
+        assert_eq!(c.now(), 1.5);
+        c.sync_to(1.0); // never backwards
+        assert_eq!(c.now(), 1.5);
+        c.sync_to(2.0);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn barrier_jumps_to_max_plus_overhead() {
+        let mut a = Clock::new();
+        let mut b = Clock::new();
+        a.advance(3.0);
+        b.advance(5.0);
+        let t = barrier(&mut [&mut a, &mut b], 0.1);
+        assert!((t - 5.1).abs() < 1e-12);
+        assert_eq!(a.now(), b.now());
+    }
+}

@@ -1,0 +1,20 @@
+//! Deterministic cluster timing simulation.
+//!
+//! The engine moves *real bytes* through *real data structures and files*;
+//! this module supplies the clock: every I/O and compute operation reports
+//! its size/op-count and a calibrated [`cost::CostModel`] converts that
+//! into simulated seconds on per-worker [`clock::Clock`]s. Barriers take
+//! the max across workers, exactly like a BSP superstep.
+//!
+//! Why simulate time at all? The paper's testbed is 15 machines × 8
+//! workers on Gigabit Ethernet with HDFS; its tables are second-scale
+//! timings whose *ratios* are driven by data volumes (messages vs. vertex
+//! states vs. edges). Charging measured byte counts to a fixed hardware
+//! model reproduces those ratios deterministically at laptop scale —
+//! see DESIGN.md §2 and §7.
+
+pub mod clock;
+pub mod cost;
+
+pub use clock::Clock;
+pub use cost::{CostModel, SystemProfile, Topology};

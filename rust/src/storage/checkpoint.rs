@@ -1,0 +1,310 @@
+//! Checkpoint content formats (what CP\[i\] actually stores).
+//!
+//! The paper's core contrast is *what goes into a checkpoint*:
+//!
+//! * **CP\[0\]** (all algorithms): the loaded partition — initial vertex
+//!   values, active flags, and the full adjacency lists. Written right
+//!   after input loading so recovery never re-shuffles the input (§4).
+//! * **Heavyweight CP\[i\]** (HWCP/HWLog): values + active flags + the
+//!   full adjacency lists **+ the shuffled incoming messages** for
+//!   superstep i+1. O(|E|) edges and up to Ω(|E|^1.5) messages.
+//! * **Lightweight CP\[i\]** (LWCP/LWLog): per vertex only
+//!   `(a(v), active(v), comp(v))` — O(|V|); edges are recovered from
+//!   CP\[0\] plus the incremental mutation log E_W, and messages are
+//!   regenerated from the stored states.
+//!
+//! All structures round-trip through [`Codec`] so checkpoint sizes
+//! charged to the cost model are real encoded sizes.
+
+use crate::graph::Adjacency;
+use crate::util::codec::{Codec, Reader};
+use anyhow::Result;
+
+/// HDFS key for worker `rank`'s part of CP\[step\].
+pub fn cp_key(step: u64, rank: usize) -> String {
+    format!("cp/{step:06}/w{rank:04}")
+}
+
+/// HDFS key prefix for all of CP\[step\].
+pub fn cp_prefix(step: u64) -> String {
+    format!("cp/{step:06}/")
+}
+
+/// HDFS key for the master's checkpoint metadata blob.
+pub fn cp_meta_key(step: u64) -> String {
+    format!("cp/{step:06}/meta")
+}
+
+/// HDFS key for worker `rank`'s incremental edge-mutation log E_W.
+pub fn ew_key(rank: usize) -> String {
+    format!("ew/w{rank:04}")
+}
+
+/// Per-vertex state triple of the lightweight checkpoint:
+/// values, active(v), and comp(v) (whether compute() ran in the
+/// checkpointed superstep — needed because message regeneration must
+/// skip vertices that did not compute; active(v) cannot substitute for
+/// it since a vertex may compute and then vote to halt).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VertexStates<V> {
+    pub values: Vec<V>,
+    pub active: Vec<bool>,
+    pub comp: Vec<bool>,
+}
+
+impl<V: Codec> Codec for VertexStates<V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.values.encode(buf);
+        pack_bools(&self.active, buf);
+        pack_bools(&self.comp, buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let values = Vec::<V>::decode(r)?;
+        let active = unpack_bools(r)?;
+        let comp = unpack_bools(r)?;
+        Ok(VertexStates { values, active, comp })
+    }
+}
+
+/// Bit-packed bool vectors — flags must not bloat the lightweight
+/// checkpoint (1 bit/vertex, as a real implementation would store them).
+fn pack_bools(bs: &[bool], buf: &mut Vec<u8>) {
+    (bs.len() as u32).encode(buf);
+    let mut byte = 0u8;
+    for (i, &b) in bs.iter().enumerate() {
+        if b {
+            byte |= 1 << (i % 8);
+        }
+        if i % 8 == 7 {
+            buf.push(byte);
+            byte = 0;
+        }
+    }
+    if bs.len() % 8 != 0 {
+        buf.push(byte);
+    }
+}
+
+fn unpack_bools(r: &mut Reader) -> Result<Vec<bool>> {
+    let n = u32::decode(r)? as usize;
+    let nbytes = n.div_ceil(8);
+    let bytes = r.take(nbytes)?;
+    Ok((0..n).map(|i| bytes[i / 8] & (1 << (i % 8)) != 0).collect())
+}
+
+/// Snapshot of a worker's inbox (messages for superstep i+1), stored
+/// only by heavyweight checkpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InboxSnapshot<M> {
+    /// Combiner apps: at most one combined message per local slot.
+    Combined(Vec<Option<M>>),
+    /// Non-combiner apps: full per-slot message lists (arrival order).
+    Lists(Vec<Vec<M>>),
+}
+
+impl<M: Codec> Codec for InboxSnapshot<M> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            InboxSnapshot::Combined(v) => {
+                0u8.encode(buf);
+                v.encode(buf);
+            }
+            InboxSnapshot::Lists(v) => {
+                1u8.encode(buf);
+                v.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(match u8::decode(r)? {
+            0 => InboxSnapshot::Combined(Vec::decode(r)?),
+            _ => InboxSnapshot::Lists(Vec::decode(r)?),
+        })
+    }
+}
+
+impl<M> InboxSnapshot<M> {
+    pub fn message_count(&self) -> u64 {
+        match self {
+            InboxSnapshot::Combined(v) => v.iter().filter(|m| m.is_some()).count() as u64,
+            InboxSnapshot::Lists(v) => v.iter().map(|l| l.len() as u64).sum(),
+        }
+    }
+}
+
+/// CP\[0\]: the post-load partition (also serves as the "initial edges"
+/// source for LWCP recovery).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cp0<V> {
+    pub values: Vec<V>,
+    pub active: Vec<bool>,
+    pub adj: Adjacency,
+}
+
+impl<V: Codec> Codec for Cp0<V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.values.encode(buf);
+        pack_bools(&self.active, buf);
+        self.adj.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(Cp0 {
+            values: Vec::decode(r)?,
+            active: unpack_bools(r)?,
+            adj: Adjacency::decode(r)?,
+        })
+    }
+}
+
+/// Heavyweight CP\[i\]: everything.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwCp<V, M> {
+    pub states: VertexStates<V>,
+    pub adj: Adjacency,
+    pub inbox: InboxSnapshot<M>,
+}
+
+impl<V: Codec, M: Codec> Codec for HwCp<V, M> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.states.encode(buf);
+        self.adj.encode(buf);
+        self.inbox.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(HwCp {
+            states: VertexStates::decode(r)?,
+            adj: Adjacency::decode(r)?,
+            inbox: InboxSnapshot::decode(r)?,
+        })
+    }
+}
+
+/// Lightweight CP\[i\]: vertex states only.
+pub type LwCp<V> = VertexStates<V>;
+
+/// Master's checkpoint metadata: the fully-committed superstep, the
+/// global aggregator values and control info at that superstep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpMeta {
+    pub step: u64,
+    pub agg: Vec<f64>,
+    pub active_count: u64,
+    pub sent_msgs: u64,
+}
+
+impl Codec for CpMeta {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.step.encode(buf);
+        self.agg.encode(buf);
+        self.active_count.encode(buf);
+        self.sent_msgs.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(CpMeta {
+            step: u64::decode(r)?,
+            agg: Vec::decode(r)?,
+            active_count: u64::decode(r)?,
+            sent_msgs: u64::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_sort_by_step() {
+        assert!(cp_key(2, 0) < cp_key(10, 0));
+        assert!(cp_prefix(9) < cp_prefix(10));
+    }
+
+    #[test]
+    fn bool_packing_is_one_bit_per_vertex() {
+        let states = VertexStates {
+            values: vec![0f32; 1000],
+            active: vec![true; 1000],
+            comp: vec![false; 1000],
+        };
+        let sz = states.to_bytes().len();
+        // 4 (len) + 4000 values + 2 * (4 + 125) flags.
+        assert!(sz < 4300, "sz={sz}");
+        let back = VertexStates::<f32>::from_bytes(&states.to_bytes()).unwrap();
+        assert_eq!(back, states);
+    }
+
+    #[test]
+    fn vertex_states_roundtrip_mixed_flags() {
+        let states = VertexStates {
+            values: vec![1.5f32, -2.0, 3.25],
+            active: vec![true, false, true],
+            comp: vec![false, false, true],
+        };
+        assert_eq!(
+            VertexStates::<f32>::from_bytes(&states.to_bytes()).unwrap(),
+            states
+        );
+    }
+
+    #[test]
+    fn hwcp_roundtrip() {
+        let cp = HwCp {
+            states: VertexStates {
+                values: vec![1u64, 2, 3],
+                active: vec![true, true, false],
+                comp: vec![true, false, false],
+            },
+            adj: Adjacency::from_lists(&[vec![1], vec![2, 0], vec![]]),
+            inbox: InboxSnapshot::Combined(vec![Some(5.0f32), None, Some(-1.0)]),
+        };
+        let back = HwCp::<u64, f32>::from_bytes(&cp.to_bytes()).unwrap();
+        assert_eq!(back.states, cp.states);
+        assert_eq!(back.inbox, cp.inbox);
+        assert_eq!(back.adj.neighbors(1), cp.adj.neighbors(1));
+    }
+
+    #[test]
+    fn inbox_lists_roundtrip_and_count() {
+        let inbox = InboxSnapshot::Lists(vec![vec![1u32, 2], vec![], vec![3]]);
+        assert_eq!(inbox.message_count(), 3);
+        assert_eq!(
+            InboxSnapshot::<u32>::from_bytes(&inbox.to_bytes()).unwrap(),
+            inbox
+        );
+    }
+
+    #[test]
+    fn lw_is_much_smaller_than_hw() {
+        let n = 2000;
+        let adj = Adjacency::from_lists(
+            &(0..n).map(|i| vec![(i as u32 + 1) % n as u32; 20]).collect::<Vec<_>>(),
+        );
+        let states = VertexStates {
+            values: vec![1.0f32; n],
+            active: vec![true; n],
+            comp: vec![true; n],
+        };
+        let lw_size = states.to_bytes().len();
+        let hw = HwCp {
+            states: states.clone(),
+            adj,
+            inbox: InboxSnapshot::Combined(vec![Some(1.0f32); n]),
+        };
+        let hw_size = hw.to_bytes().len();
+        assert!(
+            hw_size > 10 * lw_size,
+            "hw={hw_size} lw={lw_size}: the paper's core size asymmetry"
+        );
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let m = CpMeta {
+            step: 10,
+            agg: vec![0.5, -1.0],
+            active_count: 42,
+            sent_msgs: 99,
+        };
+        assert_eq!(CpMeta::from_bytes(&m.to_bytes()).unwrap(), m);
+    }
+}

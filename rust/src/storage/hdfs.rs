@@ -1,0 +1,288 @@
+//! SimHDFS: the failure-resilient replicated blob store.
+//!
+//! Semantics reproduced from the paper's use of HDFS:
+//! * `put` is atomic (write to a temp name, then rename) so a checkpoint
+//!   file is either fully present or absent — the commit barrier in the
+//!   engine relies on this;
+//! * data survives any number of worker failures (it lives outside the
+//!   workers);
+//! * replication is a *cost* property (3× block replication), charged by
+//!   the cost model from the byte counts we return — the store itself
+//!   keeps one copy.
+//!
+//! Keys are slash-separated logical paths, e.g. `cp/10/w003` or `ew/w003`.
+
+use super::Backing;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// The shared blob store. Thread-safe; workers hold `Arc<SimHdfs>`.
+pub struct SimHdfs {
+    backing: Backing,
+    root: PathBuf,
+    /// Logical key -> byte size (and the data itself when memory-backed).
+    index: Mutex<BTreeMap<String, Blob>>,
+}
+
+enum Blob {
+    OnDisk { size: u64 },
+    InMem { data: Vec<u8> },
+}
+
+impl Blob {
+    fn size(&self) -> u64 {
+        match self {
+            Blob::OnDisk { size } => *size,
+            Blob::InMem { data } => data.len() as u64,
+        }
+    }
+}
+
+fn sanitize(key: &str) -> String {
+    key.replace('/', "__")
+}
+
+impl SimHdfs {
+    /// Create a memory-backed store (tests).
+    pub fn in_memory() -> Self {
+        SimHdfs {
+            backing: Backing::Memory,
+            root: PathBuf::new(),
+            index: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Create a disk-backed store rooted at a fresh temp directory.
+    pub fn on_disk(tag: &str) -> Result<Self> {
+        let root = std::env::temp_dir().join(format!(
+            "lwcp-hdfs-{}-{}",
+            std::process::id(),
+            tag
+        ));
+        std::fs::create_dir_all(&root)?;
+        Ok(SimHdfs {
+            backing: Backing::Disk,
+            root,
+            index: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn backing(&self) -> Backing {
+        self.backing
+    }
+
+    /// Atomically store `data` under `key`, replacing any previous blob.
+    /// Returns the byte count (for cost accounting).
+    pub fn put(&self, key: &str, data: &[u8]) -> Result<u64> {
+        let n = data.len() as u64;
+        match self.backing {
+            Backing::Memory => {
+                self.index
+                    .lock()
+                    .unwrap()
+                    .insert(key.to_string(), Blob::InMem { data: data.to_vec() });
+            }
+            Backing::Disk => {
+                let path = self.root.join(sanitize(key));
+                let tmp = self.root.join(format!(".tmp-{}", sanitize(key)));
+                std::fs::write(&tmp, data).with_context(|| format!("write {key}"))?;
+                std::fs::rename(&tmp, &path)?;
+                self.index
+                    .lock()
+                    .unwrap()
+                    .insert(key.to_string(), Blob::OnDisk { size: n });
+            }
+        }
+        Ok(n)
+    }
+
+    /// Append `data` to the blob under `key` (creating it if absent) —
+    /// the paper appends each checkpoint's mutation increments to the
+    /// per-worker edge log E_W. Returns the appended byte count (only
+    /// the increment is charged to the cost model).
+    pub fn append(&self, key: &str, data: &[u8]) -> Result<u64> {
+        let n = data.len() as u64;
+        match self.backing {
+            Backing::Memory => {
+                let mut idx = self.index.lock().unwrap();
+                match idx.get_mut(key) {
+                    Some(Blob::InMem { data: d }) => d.extend_from_slice(data),
+                    _ => {
+                        idx.insert(key.to_string(), Blob::InMem { data: data.to_vec() });
+                    }
+                }
+            }
+            Backing::Disk => {
+                use std::io::Write;
+                let path = self.root.join(sanitize(key));
+                let mut f = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&path)?;
+                f.write_all(data)?;
+                let size = f.metadata()?.len();
+                self.index
+                    .lock()
+                    .unwrap()
+                    .insert(key.to_string(), Blob::OnDisk { size });
+            }
+        }
+        Ok(n)
+    }
+
+    /// Fetch the blob stored under `key`.
+    pub fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let idx = self.index.lock().unwrap();
+        match idx.get(key) {
+            None => bail!("hdfs: no such key {key}"),
+            Some(Blob::InMem { data }) => Ok(data.clone()),
+            Some(Blob::OnDisk { .. }) => {
+                let path = self.root.join(sanitize(key));
+                drop(idx);
+                Ok(std::fs::read(path).with_context(|| format!("read {key}"))?)
+            }
+        }
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.index.lock().unwrap().contains_key(key)
+    }
+
+    pub fn size_of(&self, key: &str) -> Option<u64> {
+        self.index.lock().unwrap().get(key).map(Blob::size)
+    }
+
+    /// Delete one blob; returns its size (0 if absent).
+    pub fn delete(&self, key: &str) -> u64 {
+        let mut idx = self.index.lock().unwrap();
+        match idx.remove(key) {
+            None => 0,
+            Some(b) => {
+                if let Blob::OnDisk { .. } = b {
+                    std::fs::remove_file(self.root.join(sanitize(key))).ok();
+                }
+                b.size()
+            }
+        }
+    }
+
+    /// Delete every blob whose key starts with `prefix`; returns
+    /// (bytes, files) removed — the engine charges the namenode cost.
+    pub fn delete_prefix(&self, prefix: &str) -> (u64, u64) {
+        let keys: Vec<String> = {
+            let idx = self.index.lock().unwrap();
+            idx.keys().filter(|k| k.starts_with(prefix)).cloned().collect()
+        };
+        let mut bytes = 0;
+        for k in &keys {
+            bytes += self.delete(k);
+        }
+        (bytes, keys.len() as u64)
+    }
+
+    /// Keys under a prefix, sorted.
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.index
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// Total stored bytes (for disk-usage assertions in tests).
+    pub fn total_bytes(&self) -> u64 {
+        self.index.lock().unwrap().values().map(Blob::size).sum()
+    }
+}
+
+impl Drop for SimHdfs {
+    fn drop(&mut self) {
+        if self.backing == Backing::Disk {
+            std::fs::remove_dir_all(&self.root).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stores() -> Vec<SimHdfs> {
+        vec![SimHdfs::in_memory(), SimHdfs::on_disk("t").unwrap()]
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        for h in stores() {
+            let n = h.put("cp/1/w0", b"hello").unwrap();
+            assert_eq!(n, 5);
+            assert_eq!(h.get("cp/1/w0").unwrap(), b"hello");
+            assert!(h.exists("cp/1/w0"));
+            assert_eq!(h.size_of("cp/1/w0"), Some(5));
+        }
+    }
+
+    #[test]
+    fn put_replaces() {
+        for h in stores() {
+            h.put("k", b"aaa").unwrap();
+            h.put("k", b"bb").unwrap();
+            assert_eq!(h.get("k").unwrap(), b"bb");
+            assert_eq!(h.total_bytes(), 2);
+        }
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        for h in stores() {
+            assert!(h.get("nope").is_err());
+            assert_eq!(h.delete("nope"), 0);
+        }
+    }
+
+    #[test]
+    fn delete_prefix_scopes() {
+        for h in stores() {
+            h.put("cp/1/w0", b"a").unwrap();
+            h.put("cp/1/w1", b"bc").unwrap();
+            h.put("cp/2/w0", b"d").unwrap();
+            let (bytes, files) = h.delete_prefix("cp/1/");
+            assert_eq!((bytes, files), (3, 2));
+            assert!(!h.exists("cp/1/w0"));
+            assert!(h.exists("cp/2/w0"));
+        }
+    }
+
+    #[test]
+    fn list_is_sorted_and_scoped() {
+        for h in stores() {
+            h.put("ew/w1", b"x").unwrap();
+            h.put("ew/w0", b"y").unwrap();
+            h.put("cp/0/w0", b"z").unwrap();
+            assert_eq!(h.list("ew/"), vec!["ew/w0".to_string(), "ew/w1".to_string()]);
+        }
+    }
+
+    #[test]
+    fn survives_concurrent_access() {
+        let h = std::sync::Arc::new(SimHdfs::in_memory());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    h.put(&format!("k/{t}/{i}"), &[t as u8; 100]).unwrap();
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.list("k/").len(), 400);
+        assert_eq!(h.total_bytes(), 400 * 100);
+    }
+}

@@ -1,0 +1,353 @@
+//! A worker's local disk: message logs, vertex-state logs, and the
+//! buffered topology-mutation requests.
+//!
+//! Layout per worker:
+//! * **message log** `mlog_<step>` — the combined outgoing batches of one
+//!   superstep, with a per-destination offset index so recovery can load
+//!   just the segment for one recovering worker (the paper stores one
+//!   file per (step, dest); we store one file per step with an index —
+//!   same bytes, far fewer inodes; the GC cost model charges per byte +
+//!   per file either way).
+//! * **vertex-state log** `vlog_<step>` — LWLog's `(comp(v), a(v))` per
+//!   vertex, used to regenerate messages.
+//! * **mutation buffer** — edge mutation requests since the last
+//!   checkpoint, appended to the HDFS edge log `E_W` at checkpoint time.
+//!
+//! The store of a killed worker is dropped by the engine — local disks
+//! die with their machine.
+
+use super::Backing;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Per-superstep message log metadata: per-destination segments.
+#[derive(Debug, Clone, Default)]
+struct MsgLogMeta {
+    /// (offset, len) per destination rank; absent rank = no messages.
+    segments: BTreeMap<usize, (u64, u64)>,
+    total: u64,
+}
+
+/// Worker-local log store.
+pub struct LocalLogStore {
+    backing: Backing,
+    dir: PathBuf,
+    rank: usize,
+    msg_meta: BTreeMap<u64, MsgLogMeta>,
+    msg_mem: BTreeMap<u64, Vec<u8>>,
+    vstate_meta: BTreeMap<u64, u64>,
+    vstate_mem: BTreeMap<u64, Vec<u8>>,
+    /// (superstep, encoded mutation batch) since the last checkpoint.
+    mutations: Vec<(u64, Vec<u8>)>,
+    /// Partial aggregator/control log: superstep -> encoded partial agg.
+    agg_log: BTreeMap<u64, Vec<u8>>,
+}
+
+impl LocalLogStore {
+    pub fn new(backing: Backing, tag: &str, rank: usize) -> Result<Self> {
+        let dir = match backing {
+            Backing::Memory => PathBuf::new(),
+            Backing::Disk => {
+                let d = std::env::temp_dir().join(format!(
+                    "lwcp-local-{}-{}-w{}",
+                    std::process::id(),
+                    tag,
+                    rank
+                ));
+                std::fs::create_dir_all(&d)?;
+                d
+            }
+        };
+        Ok(LocalLogStore {
+            backing,
+            dir,
+            rank,
+            msg_meta: BTreeMap::new(),
+            msg_mem: BTreeMap::new(),
+            vstate_meta: BTreeMap::new(),
+            vstate_mem: BTreeMap::new(),
+            mutations: Vec::new(),
+            agg_log: BTreeMap::new(),
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    // ------------------------------------------------------ message log
+
+    /// Write the message log for `step`: one segment per destination
+    /// rank (already-combined batches). Returns bytes written.
+    pub fn write_msg_log(&mut self, step: u64, batches: &[(usize, Vec<u8>)]) -> Result<u64> {
+        let mut data = Vec::new();
+        let mut meta = MsgLogMeta::default();
+        for (dest, b) in batches {
+            meta.segments.insert(*dest, (data.len() as u64, b.len() as u64));
+            data.extend_from_slice(b);
+        }
+        meta.total = data.len() as u64;
+        let total = meta.total;
+        match self.backing {
+            Backing::Memory => {
+                self.msg_mem.insert(step, data);
+            }
+            Backing::Disk => {
+                std::fs::write(self.dir.join(format!("mlog_{step}")), &data)?;
+            }
+        }
+        self.msg_meta.insert(step, meta);
+        Ok(total)
+    }
+
+    /// Does a message log exist for `step`?
+    pub fn has_msg_log(&self, step: u64) -> bool {
+        self.msg_meta.contains_key(&step)
+    }
+
+    /// Load the segment of `step`'s message log destined for `dest`.
+    /// Returns (bytes, payload); empty payload if no messages were sent.
+    pub fn read_msg_log(&self, step: u64, dest: usize) -> Result<(u64, Vec<u8>)> {
+        let Some(meta) = self.msg_meta.get(&step) else {
+            bail!("w{}: no message log for superstep {step}", self.rank);
+        };
+        let Some(&(off, len)) = meta.segments.get(&dest) else {
+            return Ok((0, Vec::new()));
+        };
+        let payload = match self.backing {
+            Backing::Memory => {
+                self.msg_mem[&step][off as usize..(off + len) as usize].to_vec()
+            }
+            Backing::Disk => {
+                use std::io::{Read, Seek, SeekFrom};
+                let mut f = std::fs::File::open(self.dir.join(format!("mlog_{step}")))?;
+                f.seek(SeekFrom::Start(off))?;
+                let mut buf = vec![0u8; len as usize];
+                f.read_exact(&mut buf)?;
+                buf
+            }
+        };
+        Ok((len, payload))
+    }
+
+    // ------------------------------------------------- vertex-state log
+
+    /// Write the vertex-state log for `step`. Returns bytes written.
+    pub fn write_vstate_log(&mut self, step: u64, data: &[u8]) -> Result<u64> {
+        let n = data.len() as u64;
+        match self.backing {
+            Backing::Memory => {
+                self.vstate_mem.insert(step, data.to_vec());
+            }
+            Backing::Disk => {
+                std::fs::write(self.dir.join(format!("vlog_{step}")), data)?;
+            }
+        }
+        self.vstate_meta.insert(step, n);
+        Ok(n)
+    }
+
+    pub fn has_vstate_log(&self, step: u64) -> bool {
+        self.vstate_meta.contains_key(&step)
+    }
+
+    /// Load the vertex-state log of `step`: (bytes, payload).
+    pub fn read_vstate_log(&self, step: u64) -> Result<(u64, Vec<u8>)> {
+        let Some(&n) = self.vstate_meta.get(&step) else {
+            bail!("w{}: no vertex-state log for superstep {step}", self.rank);
+        };
+        let payload = match self.backing {
+            Backing::Memory => self.vstate_mem[&step].clone(),
+            Backing::Disk => std::fs::read(self.dir.join(format!("vlog_{step}")))?,
+        };
+        Ok((n, payload))
+    }
+
+    // ------------------------------------------------- mutation buffer
+
+    /// Buffer this superstep's encoded mutation requests.
+    pub fn append_mutations(&mut self, step: u64, encoded: Vec<u8>) {
+        if !encoded.is_empty() {
+            self.mutations.push((step, encoded));
+        }
+    }
+
+    /// Bytes currently buffered.
+    pub fn mutation_bytes(&self) -> u64 {
+        self.mutations.iter().map(|(_, b)| b.len() as u64).sum()
+    }
+
+    /// Drain the buffer (at checkpoint commit: the engine appends these
+    /// to E_W on HDFS, then clears the local buffer — paper §4).
+    pub fn drain_mutations(&mut self) -> Vec<(u64, Vec<u8>)> {
+        std::mem::take(&mut self.mutations)
+    }
+
+    /// Discard the buffer (rollback recovery: the rerun will re-buffer
+    /// the same mutations; keeping them would replay each twice).
+    pub fn clear_mutations(&mut self) {
+        self.mutations.clear();
+    }
+
+    /// Read mutations buffered since the last checkpoint for supersteps
+    /// `<= step` without draining (log-based recovery forwards these).
+    pub fn mutations_through(&self, step: u64) -> Vec<(u64, Vec<u8>)> {
+        self.mutations
+            .iter()
+            .filter(|(s, _)| *s <= step)
+            .cloned()
+            .collect()
+    }
+
+    // -------------------------------------------------- aggregator log
+
+    /// Record this worker's encoded partial aggregator/control info.
+    pub fn log_partial_agg(&mut self, step: u64, encoded: Vec<u8>) {
+        self.agg_log.insert(step, encoded);
+    }
+
+    pub fn read_partial_agg(&self, step: u64) -> Option<&Vec<u8>> {
+        self.agg_log.get(&step)
+    }
+
+    // ------------------------------------------------------------- GC
+
+    /// Delete all logs for supersteps `< below`. Returns (bytes, files)
+    /// removed — the engine charges the cost model's gc_time.
+    /// (LWLog's rule keeps the checkpointed superstep's logs: pass
+    /// `below = checkpoint_step`, not `checkpoint_step + 1` — see §5.)
+    pub fn gc_below(&mut self, below: u64) -> (u64, u64) {
+        let mut bytes = 0u64;
+        let mut files = 0u64;
+        let msg_steps: Vec<u64> = self.msg_meta.range(..below).map(|(s, _)| *s).collect();
+        for s in msg_steps {
+            let meta = self.msg_meta.remove(&s).unwrap();
+            bytes += meta.total;
+            files += 1;
+            match self.backing {
+                Backing::Memory => {
+                    self.msg_mem.remove(&s);
+                }
+                Backing::Disk => {
+                    std::fs::remove_file(self.dir.join(format!("mlog_{s}"))).ok();
+                }
+            }
+        }
+        let v_steps: Vec<u64> = self.vstate_meta.range(..below).map(|(s, _)| *s).collect();
+        for s in v_steps {
+            bytes += self.vstate_meta.remove(&s).unwrap();
+            files += 1;
+            match self.backing {
+                Backing::Memory => {
+                    self.vstate_mem.remove(&s);
+                }
+                Backing::Disk => {
+                    std::fs::remove_file(self.dir.join(format!("vlog_{s}"))).ok();
+                }
+            }
+        }
+        self.agg_log.retain(|s, _| *s >= below);
+        (bytes, files)
+    }
+
+    /// Total live log bytes (disk-usage growth assertions).
+    pub fn total_bytes(&self) -> u64 {
+        self.msg_meta.values().map(|m| m.total).sum::<u64>()
+            + self.vstate_meta.values().sum::<u64>()
+            + self.mutation_bytes()
+    }
+}
+
+impl Drop for LocalLogStore {
+    fn drop(&mut self) {
+        if self.backing == Backing::Disk {
+            std::fs::remove_dir_all(&self.dir).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stores() -> Vec<LocalLogStore> {
+        vec![
+            LocalLogStore::new(Backing::Memory, "t", 0).unwrap(),
+            LocalLogStore::new(Backing::Disk, "t", 1).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn msg_log_segments_roundtrip() {
+        for mut s in stores() {
+            let batches = vec![(0usize, vec![1u8, 2, 3]), (2usize, vec![9u8; 5])];
+            let n = s.write_msg_log(4, &batches).unwrap();
+            assert_eq!(n, 8);
+            let (b0, p0) = s.read_msg_log(4, 0).unwrap();
+            assert_eq!((b0, p0), (3, vec![1, 2, 3]));
+            let (b2, p2) = s.read_msg_log(4, 2).unwrap();
+            assert_eq!((b2, p2), (5, vec![9u8; 5]));
+            // Destination with no messages: empty, zero cost.
+            let (b1, p1) = s.read_msg_log(4, 1).unwrap();
+            assert_eq!((b1, p1.len()), (0, 0));
+            // Missing step errors.
+            assert!(s.read_msg_log(5, 0).is_err());
+        }
+    }
+
+    #[test]
+    fn vstate_log_roundtrip() {
+        for mut s in stores() {
+            s.write_vstate_log(7, &[5u8; 64]).unwrap();
+            assert!(s.has_vstate_log(7));
+            let (n, p) = s.read_vstate_log(7).unwrap();
+            assert_eq!(n, 64);
+            assert_eq!(p, vec![5u8; 64]);
+        }
+    }
+
+    #[test]
+    fn gc_below_removes_old_keeps_new() {
+        for mut s in stores() {
+            for step in 1..=5u64 {
+                s.write_msg_log(step, &[(0, vec![0u8; 10])]).unwrap();
+                s.write_vstate_log(step, &[0u8; 4]).unwrap();
+            }
+            // LWLog rule: checkpoint at 3 keeps step 3's logs.
+            let (bytes, files) = s.gc_below(3);
+            assert_eq!(bytes, 2 * 14);
+            assert_eq!(files, 4);
+            assert!(!s.has_msg_log(2));
+            assert!(s.has_msg_log(3));
+            assert!(s.has_vstate_log(5));
+            assert_eq!(s.total_bytes(), 3 * 14);
+        }
+    }
+
+    #[test]
+    fn mutation_buffer_drains() {
+        for mut s in stores() {
+            s.append_mutations(1, vec![1, 2]);
+            s.append_mutations(2, vec![3]);
+            s.append_mutations(2, Vec::new()); // ignored
+            assert_eq!(s.mutation_bytes(), 3);
+            assert_eq!(s.mutations_through(1).len(), 1);
+            let drained = s.drain_mutations();
+            assert_eq!(drained, vec![(1, vec![1, 2]), (2, vec![3])]);
+            assert_eq!(s.mutation_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn agg_log_roundtrip_and_gc() {
+        for mut s in stores() {
+            s.log_partial_agg(1, vec![1]);
+            s.log_partial_agg(2, vec![2]);
+            assert_eq!(s.read_partial_agg(1), Some(&vec![1]));
+            s.gc_below(2);
+            assert_eq!(s.read_partial_agg(1), None);
+            assert_eq!(s.read_partial_agg(2), Some(&vec![2]));
+        }
+    }
+}

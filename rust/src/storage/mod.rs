@@ -1,0 +1,31 @@
+//! Failure-resilient and worker-local storage substrates.
+//!
+//! * [`hdfs::SimHdfs`] — the paper's HDFS: a replicated blob store with
+//!   atomic commit semantics. Checkpoints (CP\[i\]) and the incremental
+//!   edge logs (E_W) live here; it survives any worker failure.
+//! * [`locallog::LocalLogStore`] — a worker's local disk: message logs
+//!   (HWLog), vertex-state logs (LWLog) and the buffered topology
+//!   mutation requests. **Lost when the worker's machine dies** — the
+//!   engine drops the store of a killed worker, which is exactly why
+//!   log-based recovery still needs checkpoints.
+//!
+//! Both stores can be file-backed (benches/examples — real bytes on a
+//! real filesystem) or memory-backed (unit/property tests — same code
+//! paths, no I/O latency). Simulated time is charged by the engine via
+//! [`crate::sim::CostModel`] from the byte counts these stores return.
+
+pub mod checkpoint;
+pub mod hdfs;
+pub mod locallog;
+
+pub use hdfs::SimHdfs;
+pub use locallog::LocalLogStore;
+
+/// Backing medium for a store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backing {
+    /// Real files under a temp directory.
+    Disk,
+    /// In-memory map (tests).
+    Memory,
+}

@@ -1,0 +1,239 @@
+//! Minimal deterministic binary codec.
+//!
+//! Everything that crosses a worker boundary — messages, vertex values,
+//! checkpoints, local logs — is serialized through this trait, so the
+//! byte volumes charged to the cost model are the volumes of real
+//! encoded data, and so that checkpoint/log files are genuinely
+//! round-trippable. Little-endian, no self-description, no versioning:
+//! both ends are the same binary.
+
+use anyhow::{bail, Result};
+
+/// Cursor over a borrowed byte buffer.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("codec underrun: need {n}, have {}", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+/// Fixed binary encoding to/from byte buffers.
+pub trait Codec: Sized {
+    fn encode(&self, buf: &mut Vec<u8>);
+    fn decode(r: &mut Reader) -> Result<Self>;
+
+    /// Convenience: encode into a fresh buffer.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        self.encode(&mut b);
+        b
+    }
+
+    /// Convenience: decode a full buffer, requiring it be fully consumed.
+    fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
+        let v = Self::decode(&mut r)?;
+        if !r.is_empty() {
+            bail!("codec: {} trailing bytes", r.remaining());
+        }
+        Ok(v)
+    }
+}
+
+macro_rules! num_codec {
+    ($($t:ty),*) => {$(
+        impl Codec for $t {
+            #[inline]
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+            #[inline]
+            fn decode(r: &mut Reader) -> Result<Self> {
+                let n = std::mem::size_of::<$t>();
+                let b = r.take(n)?;
+                Ok(<$t>::from_le_bytes(b.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+num_codec!(u8, u16, u32, u64, i32, i64, f32, f64);
+
+impl Codec for bool {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(*self as u8);
+    }
+    #[inline]
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(r.take(1)?[0] != 0)
+    }
+}
+
+impl Codec for usize {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (*self as u64).encode(buf);
+    }
+    #[inline]
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(u64::decode(r)? as usize)
+    }
+}
+
+impl Codec for () {
+    fn encode(&self, _buf: &mut Vec<u8>) {}
+    fn decode(_r: &mut Reader) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl<T: Codec> Codec for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u32).encode(buf);
+        for x in self {
+            x.encode(buf);
+        }
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let n = u32::decode(r)? as usize;
+        let mut v = Vec::with_capacity(n.min(r.remaining())); // cap guard
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Codec> Codec for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(x) => {
+                buf.push(1);
+                x.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        match r.take(1)?[0] {
+            0 => Ok(None),
+            _ => Ok(Some(T::decode(r)?)),
+        }
+    }
+}
+
+impl<A: Codec, B: Codec> Codec for (A, B) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<A: Codec, B: Codec, C: Codec> Codec for (A, B, C) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+        self.2.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok((A::decode(r)?, B::decode(r)?, C::decode(r)?))
+    }
+}
+
+impl Codec for String {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u32).encode(buf);
+        buf.extend_from_slice(self.as_bytes());
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let n = u32::decode(r)? as usize;
+        Ok(String::from_utf8(r.take(n)?.to_vec())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        let b = v.to_bytes();
+        assert_eq!(T::from_bytes(&b).unwrap(), v);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(12345u32);
+        roundtrip(u64::MAX);
+        roundtrip(-7i64);
+        roundtrip(3.5f32);
+        roundtrip(f32::INFINITY);
+        roundtrip(-0.0f64);
+        roundtrip(true);
+        roundtrip(false);
+        roundtrip(42usize);
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Vec::<f32>::new());
+        roundtrip(Some(9u64));
+        roundtrip(Option::<u32>::None);
+        roundtrip((1u32, 2.5f32));
+        roundtrip((1u8, 2u16, 3u32));
+        roundtrip("hello κόσμε".to_string());
+    }
+
+    #[test]
+    fn nested_roundtrip() {
+        roundtrip(vec![vec![(1u32, true)], vec![], vec![(3u32, false), (4u32, true)]]);
+    }
+
+    #[test]
+    fn truncated_input_errors() {
+        let b = 12345u64.to_bytes();
+        assert!(u64::from_bytes(&b[..4]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_error() {
+        let mut b = 1u32.to_bytes();
+        b.push(0);
+        assert!(u32::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn nan_f32_roundtrips_bitwise() {
+        let v = f32::from_bits(0x7fc0_1234);
+        let b = v.to_bytes();
+        let d = f32::from_bytes(&b).unwrap();
+        assert_eq!(d.to_bits(), v.to_bits());
+    }
+}

@@ -1,0 +1,130 @@
+//! Formatting helpers for the bench harnesses: fixed-width ASCII tables
+//! matching the paper's row/column layout, and human-readable durations
+//! and byte sizes.
+
+/// Format simulated seconds the way the paper prints them ("31.45 s").
+pub fn secs(t: f64) -> String {
+    if !t.is_finite() {
+        return "-".to_string();
+    }
+    if t >= 100.0 {
+        format!("{t:.1} s")
+    } else if t >= 0.01 {
+        format!("{t:.2} s")
+    } else if t > 0.0 {
+        format!("{:.2} ms", t * 1e3)
+    } else {
+        "0 s".to_string()
+    }
+}
+
+/// Human-readable byte size.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// A simple fixed-width table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], w: &[usize]| {
+            out.push('|');
+            for (c, width) in cells.iter().zip(w) {
+                out.push_str(&format!(" {:<width$} |", c, width = width));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.header, &w);
+        out.push('|');
+        for width in &w {
+            out.push_str(&format!("{:-<1$}|", "", width + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(&mut out, r, &w);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_formats() {
+        assert_eq!(secs(31.454), "31.45 s");
+        assert_eq!(secs(165.0), "165.0 s");
+        assert_eq!(secs(0.0021), "2.10 ms");
+        assert_eq!(secs(0.0), "0 s");
+        assert_eq!(secs(f64::NAN), "-");
+    }
+
+    #[test]
+    fn bytes_formats() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["algo", "T_cp"]);
+        t.row(vec!["HWCP", "65.18 s"]);
+        t.row(vec!["LWCP", "2.41 s"]);
+        let s = t.render();
+        assert!(s.contains("| HWCP | 65.18 s |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities shared across the crate: deterministic
+//! PRNG, binary codec, and wall-clock timing helpers.
+
+pub mod codec;
+pub mod fmtutil;
+pub mod rng;
+
+pub use codec::{Codec, Reader};
+pub use rng::Rng;

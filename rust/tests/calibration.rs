@@ -1,0 +1,154 @@
+//! Cost-model calibration tests (DESIGN.md §7): at paper scale the
+//! simulated cluster must land inside the paper's qualitative bands.
+//! Run on a small graph with `data_scale` restoring WebBase-scale
+//! volumes — the same mechanism the table benches use, kept here as a
+//! fast regression gate so cost-model edits cannot silently break the
+//! reproduction shape.
+
+use lwcp::bench_support as bs;
+use lwcp::coordinator::driver::run_job_on;
+use lwcp::ft::FtKind;
+use lwcp::graph::generate;
+use lwcp::metrics::RunMetrics;
+use lwcp::sim::{CostModel, SystemProfile};
+
+/// Small WebBase-shaped job (12k vertices) at paper scale.
+fn run(ft: FtKind) -> RunMetrics {
+    let ds = bs::Dataset {
+        preset: lwcp::graph::PresetGraph::WebBase,
+        n: 12_000,
+        paper_edges: bs::WEBBASE_EDGES,
+    };
+    let (adj, scale) = ds.build(3);
+    let mut spec = bs::pagerank_spec(&ds, scale, &format!("cal-{}", ft.name()));
+    spec.graph = lwcp::coordinator::GraphSource::Preset(ds.preset, adj.len());
+    spec.ft = ft;
+    run_job_on(&spec, &adj, None).expect("calibration run")
+}
+
+#[test]
+fn lwcp_checkpoints_are_tens_of_times_cheaper() {
+    let hw = run(FtKind::HwCp);
+    let lw = run(FtKind::LwCp);
+    let ratio = hw.t_cp() / lw.t_cp();
+    assert!(ratio > 10.0, "HWCP/LWCP T_cp ratio {ratio:.1} (paper: ~27×)");
+    // And the lightweight checkpoint is a small fraction of a superstep.
+    assert!(lw.t_cp() < 0.5 * lw.t_norm(), "LWCP t_cp {} vs t_norm {}", lw.t_cp(), lw.t_norm());
+}
+
+#[test]
+fn log_based_recovery_is_several_times_faster() {
+    let hwlog = run(FtKind::HwLog);
+    let lwlog = run(FtKind::LwLog);
+    assert!(
+        hwlog.t_recov() < 0.5 * hwlog.t_norm(),
+        "HWLog t_recov {} vs t_norm {}",
+        hwlog.t_recov(),
+        hwlog.t_norm()
+    );
+    assert!(lwlog.t_recov() < 0.5 * lwlog.t_norm());
+}
+
+#[test]
+fn hwlog_gc_makes_its_checkpoints_the_most_expensive() {
+    let hwcp = run(FtKind::HwCp);
+    let hwlog = run(FtKind::HwLog);
+    let lwlog = run(FtKind::LwLog);
+    assert!(hwlog.t_cp() > hwcp.t_cp(), "message-log GC must dominate");
+    assert!(lwlog.t_cp() < hwcp.t_cp() / 5.0, "vertex-state GC must be ~free");
+}
+
+#[test]
+fn cpstep_ordering_matches_the_paper() {
+    let hwcp = run(FtKind::HwCp);
+    let lwcp = run(FtKind::LwCp);
+    // LWCP regenerates+reshuffles messages: slower cp recovery than
+    // HWCP's direct inbox load, and roughly a superstep's magnitude.
+    assert!(lwcp.t_cpstep() > hwcp.t_cpstep());
+    assert!(lwcp.t_cpstep() > 0.5 * lwcp.t_norm());
+}
+
+#[test]
+fn t_cp0_is_algorithm_insensitive() {
+    let times: Vec<f64> = FtKind::all().iter().map(|&ft| run(ft).t_cp0).collect();
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 1.05, "T_cp0 spread {times:?}");
+}
+
+#[test]
+fn logging_overhead_is_negligible_during_normal_execution() {
+    let lwlog = run(FtKind::LwLog);
+    let lwcp = run(FtKind::LwCp);
+    // The paper's claim: vertex-state logging does not hurt failure-free
+    // performance.
+    assert!(
+        lwlog.t_norm() < lwcp.t_norm() * 1.10,
+        "LWLog t_norm {} vs LWCP {}",
+        lwlog.t_norm(),
+        lwcp.t_norm()
+    );
+    assert!(lwlog.t_log() < 0.05 * lwlog.t_norm());
+}
+
+#[test]
+fn default_cost_model_constants_are_sane() {
+    let m = CostModel::default();
+    // Gigabit Ethernet.
+    assert!((m.net_bw - 125.0e6).abs() < 1.0);
+    // Local sequential log writes beat the shared NIC (the paper's
+    // premise for free message logging).
+    assert!(m.disk_write_bw > m.net_bw / 8.0 * 4.0);
+    // HDFS triple replication.
+    assert_eq!(m.hdfs_replication, 3.0);
+    // Deleting cold data is the slowest path of all.
+    assert!(m.disk_delete_bw < m.disk_write_bw);
+}
+
+#[test]
+fn calibrated_constructor_scales_volumes() {
+    let m = CostModel::calibrated(1_000_000_000, 1_000_000);
+    assert!((m.data_scale - 1000.0).abs() < 1e-9);
+    let base = CostModel::default();
+    assert!(m.log_write_time(1000) > 900.0 * base.log_write_time(1000));
+    // Fixed latencies must NOT scale.
+    assert_eq!(m.sync_time(120), base.sync_time(120));
+}
+
+#[test]
+fn profiles_preserve_system_ordering() {
+    // Table 5's qualitative ordering is a property of the profiles.
+    let ds = bs::Dataset {
+        preset: lwcp::graph::PresetGraph::WebBase,
+        n: 8_000,
+        paper_edges: bs::WEBBASE_EDGES,
+    };
+    let (adj, scale) = ds.build(4);
+    let t_norm_of = |p: SystemProfile| {
+        let mut spec = bs::pagerank_spec(&ds, scale, "cal-prof");
+        spec.graph = lwcp::coordinator::GraphSource::Preset(ds.preset, adj.len());
+        spec.ft = FtKind::HwCp;
+        spec.profile = p;
+        spec.plan = lwcp::pregel::FailurePlan::none();
+        run_job_on(&spec, &adj, None).unwrap().t_norm()
+    };
+    let ours = t_norm_of(SystemProfile::PregelPlus);
+    let giraph = t_norm_of(SystemProfile::GiraphLike);
+    let graphlab = t_norm_of(SystemProfile::GraphLabLike);
+    let graphx = t_norm_of(SystemProfile::GraphXLike);
+    assert!(ours < giraph && giraph < graphlab && graphlab < graphx);
+}
+
+#[test]
+fn dataset_presets_expose_paper_shapes() {
+    // BTC's hub skew must show up as a much larger max degree than the
+    // web presets at the same size.
+    let btc = lwcp::graph::PresetGraph::Btc.spec(8000, 1).generate();
+    let web = lwcp::graph::PresetGraph::WebBase.spec(8000, 1).generate();
+    let maxd = |a: &[Vec<u32>]| a.iter().map(Vec::len).max().unwrap();
+    assert!(maxd(&btc) > 2 * maxd(&web), "btc={} web={}", maxd(&btc), maxd(&web));
+    // Friendster's average degree is the largest (Table 1).
+    let fr = lwcp::graph::PresetGraph::Friendster.spec(8000, 1).generate();
+    let avg = |a: &[Vec<u32>]| generate::edge_count(a) as f64 / a.len() as f64;
+    assert!(avg(&fr) > avg(&web) * 3.0);
+}

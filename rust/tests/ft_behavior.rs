@@ -1,0 +1,254 @@
+//! Behavioral tests of the fault-tolerance mechanics themselves:
+//! checkpoint contents and lifecycle on (Sim)HDFS, local-log growth and
+//! garbage collection, masked-superstep fallbacks, and failure-plan
+//! edge cases — the paper's §4/§5 protocol details.
+
+use lwcp::apps::{HashMinCc, KCore, PageRank, PointerJump};
+use lwcp::ft::FtKind;
+use lwcp::graph::{generate, PresetGraph};
+use lwcp::pregel::{Engine, EngineConfig, FailurePlan};
+use lwcp::sim::Topology;
+use lwcp::storage::checkpoint::{cp_key, cp_prefix, ew_key};
+use lwcp::storage::Backing;
+
+fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
+    EngineConfig {
+        topo: Topology::new(3, 2),
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+    }
+}
+
+fn pagerank(steps: u64) -> PageRank {
+    PageRank { damping: 0.85, supersteps: steps, combiner_enabled: true }
+}
+
+#[test]
+fn lightweight_checkpoints_are_much_smaller_on_hdfs() {
+    let adj = PresetGraph::WebBase.spec(3000, 1).generate();
+    let size_of = |ft: FtKind| {
+        let mut eng = Engine::new(pagerank(12), cfg(ft, 10, "sz"), &adj).unwrap();
+        eng.run().unwrap();
+        // CP[10] is the live checkpoint at job end.
+        let keys = eng.hdfs().list(&cp_prefix(10));
+        assert!(!keys.is_empty(), "{}: no CP[10]", ft.name());
+        keys.iter()
+            .filter(|k| !k.ends_with("meta"))
+            .map(|k| eng.hdfs().size_of(k).unwrap())
+            .sum::<u64>()
+    };
+    let hw = size_of(FtKind::HwCp);
+    let lw = size_of(FtKind::LwCp);
+    assert!(hw > 10 * lw, "HWCP {hw} bytes vs LWCP {lw} bytes");
+}
+
+#[test]
+fn previous_checkpoint_is_deleted_after_commit() {
+    let adj = PresetGraph::WebBase.spec(1500, 2).generate();
+    let mut eng = Engine::new(pagerank(25), cfg(FtKind::HwCp, 10, "del"), &adj).unwrap();
+    eng.run().unwrap();
+    assert!(eng.hdfs().list(&cp_prefix(10)).is_empty(), "CP[10] not GC'd");
+    assert!(!eng.hdfs().list(&cp_prefix(20)).is_empty(), "CP[20] missing");
+    assert_eq!(eng.cp_last(), 20);
+}
+
+#[test]
+fn lwcp_retains_cp0_as_edge_source() {
+    let adj = PresetGraph::WebBase.spec(1500, 3).generate();
+    let mut eng = Engine::new(pagerank(25), cfg(FtKind::LwCp, 10, "cp0"), &adj).unwrap();
+    eng.run().unwrap();
+    // CP[0] must survive every later checkpoint (edges live there)…
+    assert!(eng.hdfs().exists(&cp_key(0, 0)), "CP[0] was deleted");
+    // …while intermediate lightweight checkpoints are GC'd.
+    assert!(eng.hdfs().list(&cp_prefix(10)).is_empty());
+    assert!(!eng.hdfs().list(&cp_prefix(20)).is_empty());
+}
+
+#[test]
+fn hwcp_may_discard_cp0_after_first_checkpoint() {
+    let adj = PresetGraph::WebBase.spec(1500, 4).generate();
+    let mut eng = Engine::new(pagerank(25), cfg(FtKind::HwCp, 10, "hw0"), &adj).unwrap();
+    eng.run().unwrap();
+    // Heavyweight checkpoints are self-contained: CP[0] is gone.
+    assert!(eng.hdfs().list(&cp_prefix(0)).is_empty());
+}
+
+#[test]
+fn mutations_append_to_ew_incrementally() {
+    // k=2 peeling of a path: deletions every superstep.
+    let adj: Vec<Vec<u32>> = (0..60usize)
+        .map(|v| {
+            let mut l = Vec::new();
+            if v > 0 {
+                l.push(v as u32 - 1);
+            }
+            if v + 1 < 60 {
+                l.push(v as u32 + 1);
+            }
+            l
+        })
+        .collect();
+    let mut eng = Engine::new(KCore { k: 2 }, cfg(FtKind::LwCp, 5, "ew"), &adj).unwrap();
+    eng.run().unwrap();
+    let total_ew: u64 = (0..6)
+        .filter_map(|r| eng.hdfs().size_of(&ew_key(r)))
+        .sum();
+    assert!(total_ew > 0, "no mutation increments on HDFS");
+    // Each mutation record is 9 bytes; a path of 60 vertices has 118
+    // directed adjacency entries, each deleted at most once, and the
+    // final checkpoint may predate the last few deletions.
+    assert!(total_ew <= 9 * 118, "E_W larger than total possible mutations: {total_ew}");
+}
+
+#[test]
+fn hwlog_gc_bounds_log_growth() {
+    let adj = PresetGraph::WebBase.spec(2000, 5).generate();
+    // Without checkpoints (δ=0 ⇒ only CP[0]) logs grow with supersteps…
+    let mut nogc = Engine::new(pagerank(20), cfg(FtKind::HwLog, 0, "nogc"), &adj).unwrap();
+    nogc.run().unwrap();
+    let unbounded: u64 = (0..6).map(|r| nogc.log_bytes(r)).sum();
+    // …with δ=5 they are GC'd down to at most δ supersteps' worth.
+    let mut gc = Engine::new(pagerank(20), cfg(FtKind::HwLog, 5, "gc"), &adj).unwrap();
+    gc.run().unwrap();
+    let bounded: u64 = (0..6).map(|r| gc.log_bytes(r)).sum();
+    assert!(
+        bounded * 3 < unbounded,
+        "GC ineffective: bounded={bounded} unbounded={unbounded}"
+    );
+}
+
+#[test]
+fn lwlog_keeps_checkpoint_superstep_logs() {
+    let adj = PresetGraph::WebBase.spec(2000, 6).generate();
+    let mut eng = Engine::new(pagerank(17), cfg(FtKind::LwLog, 5, "keep"), &adj).unwrap();
+    eng.run().unwrap();
+    // After CP[15], logs < 15 are gone but 15's vertex-state log stays
+    // (survivor error-handling reads it — §5 Place 1).
+    for r in 0..6 {
+        let (msg10, v10) = eng.log_kinds(r, 10);
+        assert!(!msg10 && !v10, "worker {r}: logs for superstep 10 not GC'd");
+        let (_, v15) = eng.log_kinds(r, 15);
+        assert!(v15, "worker {r}: vertex-state log for CP superstep 15 missing");
+    }
+}
+
+#[test]
+fn lwlog_falls_back_to_message_log_on_masked_supersteps() {
+    let adj = generate::erdos_renyi(600, 900, false, 7);
+    let mut eng = Engine::new(PointerJump, cfg(FtKind::LwLog, 100, "mask"), &adj).unwrap();
+    eng.run().unwrap();
+    // Phase layout: superstep 2 is a respond phase (masked) ⇒ message
+    // log; supersteps 1/3 are request/apply ⇒ vertex-state logs.
+    for r in 0..6 {
+        let (msg2, v2) = eng.log_kinds(r, 2);
+        assert!(msg2 && !v2, "worker {r}: masked superstep must use message logging");
+        let (msg1, v1) = eng.log_kinds(r, 1);
+        assert!(v1 && !msg1, "worker {r}: applicable superstep must use vertex-state logging");
+    }
+}
+
+#[test]
+fn time_interval_checkpointing_tracks_virtual_time() {
+    // Paper §4: "a checkpoint can be written … every δ minutes", suited
+    // to algorithms with varying superstep times.
+    let adj = PresetGraph::WebBase.spec(2500, 12).generate();
+    let mut c = cfg(FtKind::LwCp, 0, "tcp"); // no superstep condition
+    c.cp_every_secs = Some(0.05);
+    c.cost.data_scale = 50.0; // make supersteps take visible virtual time
+    let mut eng = Engine::new(pagerank(20), c, &adj).unwrap();
+    let m = eng.run().unwrap();
+    assert!(
+        m.cp_writes.len() >= 3,
+        "expected several time-driven checkpoints, got {:?}",
+        m.cp_writes
+    );
+    // And recovery from a time-driven checkpoint must be equivalent.
+    let digest_of = |kill: bool| {
+        let mut c = cfg(FtKind::LwCp, 0, "tcp2");
+        c.cp_every_secs = Some(0.05);
+        c.cost.data_scale = 50.0;
+        let mut eng = Engine::new(pagerank(20), c, &adj).unwrap();
+        if kill {
+            eng = eng.with_failures(FailurePlan::kill_n_at(1, 15));
+        }
+        eng.run().unwrap();
+        eng.digest()
+    };
+    assert_eq!(digest_of(false), digest_of(true));
+}
+
+#[test]
+fn failure_without_fault_tolerance_is_an_error() {
+    let adj = generate::erdos_renyi(300, 600, true, 8);
+    let mut eng = Engine::new(pagerank(10), cfg(FtKind::None, 0, "noft"), &adj)
+        .unwrap()
+        .with_failures(FailurePlan::kill_n_at(1, 4));
+    let err = eng.run().unwrap_err().to_string();
+    assert!(err.contains("fault tolerance disabled"), "got: {err}");
+}
+
+#[test]
+fn metrics_stage_tagging_matches_the_paper_stages() {
+    let adj = PresetGraph::WebBase.spec(2000, 9).generate();
+    let mut eng = Engine::new(pagerank(20), cfg(FtKind::HwCp, 5, "stages"), &adj)
+        .unwrap()
+        .with_failures(FailurePlan::kill_n_at(1, 13));
+    let m = eng.run().unwrap();
+    use lwcp::metrics::StepKind;
+    // Normal: 1..13 pre-failure + 14..20 post-recovery = 19 records; the
+    // failed superstep 13 itself re-runs as LastRecovery.
+    let normals = m.steps.iter().filter(|s| s.kind == StepKind::Normal).count();
+    let cpsteps: Vec<u64> =
+        m.steps.iter().filter(|s| s.kind == StepKind::CpStep).map(|s| s.step).collect();
+    let recov: Vec<u64> =
+        m.steps.iter().filter(|s| s.kind == StepKind::Recovery).map(|s| s.step).collect();
+    let last: Vec<u64> = m
+        .steps
+        .iter()
+        .filter(|s| s.kind == StepKind::LastRecovery)
+        .map(|s| s.step)
+        .collect();
+    assert_eq!(cpsteps, vec![10], "checkpoint-recovery stage at CP[10]");
+    assert_eq!(recov, vec![11, 12], "reruns strictly before the failure superstep");
+    assert_eq!(last, vec![13], "the failure superstep is stage 4");
+    assert_eq!(normals, 19, "12 pre-failure + 7 post-recovery normal steps");
+}
+
+#[test]
+fn aggregator_is_recovered_not_recomputed_for_committed_steps() {
+    // Deterministic equivalence of aggregator values across recovery.
+    let adj = generate::erdos_renyi(800, 2400, false, 10);
+    let run = |plan: FailurePlan, tag: &str| {
+        let mut eng = Engine::new(HashMinCc, cfg(FtKind::LwLog, 4, tag), &adj)
+            .unwrap()
+            .with_failures(plan);
+        eng.run().unwrap();
+        (1..=6u64)
+            .filter_map(|s| eng.global_agg(s).cloned())
+            .collect::<Vec<_>>()
+    };
+    let base = run(FailurePlan::none(), "agg-b");
+    let failed = run(FailurePlan::kill_n_at(1, 6), "agg-f");
+    assert_eq!(base, failed, "aggregator history diverged across recovery");
+}
+
+#[test]
+fn kill_all_but_one_worker_still_recovers() {
+    let adj = PresetGraph::WebBase.spec(1200, 11).generate();
+    let digest = |plan: FailurePlan, tag: &str| {
+        let mut eng = Engine::new(pagerank(14), cfg(FtKind::HwCp, 5, tag), &adj)
+            .unwrap()
+            .with_failures(plan);
+        eng.run().unwrap();
+        eng.digest()
+    };
+    let base = digest(FailurePlan::none(), "all-b");
+    // Kill 5 of 6 workers (rank 0 survives to be elected master).
+    let catastrophic = digest(FailurePlan::kill_n_at(5, 9), "all-f");
+    assert_eq!(base, catastrophic);
+}

@@ -1,0 +1,248 @@
+//! Property-based recovery testing: randomized graphs × randomized
+//! failure plans × all algorithms × a rotating app set, always asserting
+//! the central invariant — recovered state ≡ failure-free state —
+//! plus engine-level invariants (clock monotonicity, commit ordering).
+//!
+//! Uses the crate's own deterministic PRNG (no external proptest dep);
+//! every case prints its parameters on failure for replay.
+
+use lwcp::apps::*;
+use lwcp::ft::FtKind;
+use lwcp::graph::{generate, VertexId};
+use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan, Kill};
+use lwcp::sim::Topology;
+use lwcp::storage::Backing;
+use lwcp::util::Rng;
+
+struct Case {
+    seed: u64,
+    n: usize,
+    m: usize,
+    topo: Topology,
+    ft: FtKind,
+    cp_every: u64,
+    kill_step: u64,
+    n_kill: usize,
+    cascade: Option<u64>,
+}
+
+impl std::fmt::Display for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "seed={} n={} m={} workers={} ft={} δ={} kill={}@{} cascade={:?}",
+            self.seed,
+            self.n,
+            self.m,
+            self.topo.n_workers(),
+            self.ft.name(),
+            self.cp_every,
+            self.n_kill,
+            self.kill_step,
+            self.cascade
+        )
+    }
+}
+
+fn random_case(rng: &mut Rng) -> Case {
+    let machines = 2 + rng.below_usize(3); // 2..=4
+    let wpm = 1 + rng.below_usize(3); // 1..=3
+    let topo = Topology::new(machines, wpm);
+    let n = 150 + rng.below_usize(500);
+    let m = n * (1 + rng.below_usize(5));
+    let ft = FtKind::all()[rng.below_usize(4)];
+    let cp_every = 1 + rng.below(6);
+    let kill_step = 2 + rng.below(10);
+    let max_kill = topo.n_workers() - 1;
+    let n_kill = 1 + rng.below_usize(max_kill.min(3));
+    let cascade = rng.chance(0.3).then(|| 1 + rng.below(kill_step.max(2) - 1));
+    Case { seed: rng.next_u64(), n, m, topo, ft, cp_every, kill_step, n_kill, cascade }
+}
+
+fn cfg(case: &Case, tag: &str) -> EngineConfig {
+    EngineConfig {
+        topo: case.topo,
+        cost: Default::default(),
+        ft: case.ft,
+        cp_every: case.cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+    }
+}
+
+fn plan(case: &Case) -> FailurePlan {
+    let mut kills = vec![Kill {
+        at_step: case.kill_step,
+        ranks: (1..=case.n_kill).collect(),
+        machine_fails: false,
+    }];
+    if let Some(cascade_at) = case.cascade {
+        // A later-declared kill with a smaller step = cascading failure
+        // during recovery (fires on the recovery pass). Must target a
+        // rank distinct from the first kill's.
+        let rank = case.topo.n_workers() - 1;
+        if rank > case.n_kill {
+            kills.push(Kill { at_step: cascade_at, ranks: vec![rank], machine_fails: false });
+        }
+    }
+    FailurePlan { kills }
+}
+
+/// Check the invariant for one app on one case. Returns false if the
+/// failure plan never fired (job too short) — not a failure.
+fn check<A: App, F: Fn() -> A>(app_fn: F, adj: &[Vec<VertexId>], case: &Case) -> bool {
+    let mut base =
+        Engine::new(app_fn(), cfg(case, "prop-b"), adj).expect("baseline engine");
+    let base_metrics = base.run().expect("baseline run");
+
+    let mut failed = Engine::new(app_fn(), cfg(case, "prop-f"), adj)
+        .expect("failure engine")
+        .with_failures(plan(case));
+    let failed_metrics = failed
+        .run()
+        .unwrap_or_else(|e| panic!("recovery run [{case}]: {e:#}"));
+
+    if failed_metrics.recovery_control == 0.0 {
+        return false; // job finished before the kill step
+    }
+    assert_eq!(
+        base.digest(),
+        failed.digest(),
+        "INVARIANT VIOLATION [{case}] — replay with these parameters"
+    );
+    // Clock sanity: virtual time strictly positive and recovery run at
+    // least as long as the baseline.
+    assert!(failed_metrics.final_time >= base_metrics.final_time * 0.8);
+    // Every recorded superstep duration is non-negative.
+    assert!(failed_metrics.steps.iter().all(|s| s.dur >= 0.0), "[{case}] negative duration");
+    true
+}
+
+#[test]
+fn randomized_pagerank_recovery_equivalence() {
+    let mut rng = Rng::new(0xA11CE);
+    let mut fired = 0;
+    for i in 0..14 {
+        let case = random_case(&mut rng);
+        let adj = generate::erdos_renyi(case.n, case.m, i % 2 == 0, case.seed);
+        if check(
+            || PageRank { damping: 0.85, supersteps: 16, combiner_enabled: true },
+            &adj,
+            &case,
+        ) {
+            fired += 1;
+        }
+    }
+    assert!(fired >= 10, "only {fired}/14 plans fired — enlarge kill windows");
+}
+
+#[test]
+fn randomized_traversal_recovery_equivalence() {
+    let mut rng = Rng::new(0xB0B);
+    let mut fired = 0;
+    for i in 0..12 {
+        let mut case = random_case(&mut rng);
+        case.kill_step = 2 + case.kill_step % 4; // CC/SSSP converge fast
+        let adj = generate::erdos_renyi(case.n, case.m, false, case.seed);
+        let ok = if i % 2 == 0 {
+            check(|| HashMinCc, &adj, &case)
+        } else {
+            check(|| Sssp { source: 0 }, &adj, &case)
+        };
+        if ok {
+            fired += 1;
+        }
+    }
+    assert!(fired >= 6, "only {fired}/12 plans fired");
+}
+
+#[test]
+fn randomized_request_respond_recovery_equivalence() {
+    let mut rng = Rng::new(0xC0DE);
+    let mut fired = 0;
+    for i in 0..10 {
+        let case = random_case(&mut rng);
+        let adj = generate::erdos_renyi(case.n, case.m, false, case.seed);
+        let ok = match i % 3 {
+            0 => check(|| TriangleCount { c: 1 }, &adj, &case),
+            1 => check(|| PointerJump, &adj, &case),
+            _ => check(|| BipartiteMatching, &adj, &case),
+        };
+        if ok {
+            fired += 1;
+        }
+    }
+    assert!(fired >= 5, "only {fired}/10 plans fired");
+}
+
+#[test]
+fn randomized_mutation_recovery_equivalence() {
+    let mut rng = Rng::new(0xD00D);
+    let mut fired = 0;
+    for _ in 0..8 {
+        let mut case = random_case(&mut rng);
+        case.kill_step = 2 + case.kill_step % 6;
+        // Long path + chords: long peeling cascade with mutations.
+        let n = 80 + rng.below_usize(80);
+        let mut adj: Vec<Vec<VertexId>> = (0..n)
+            .map(|v| {
+                let mut l = Vec::new();
+                if v > 0 {
+                    l.push(v as u32 - 1);
+                }
+                if v + 1 < n {
+                    l.push(v as u32 + 1);
+                }
+                l
+            })
+            .collect();
+        // A few random chords (kept symmetric).
+        for _ in 0..n / 10 {
+            let a = rng.below_usize(n);
+            let b = rng.below_usize(n);
+            if a != b && !adj[a].contains(&(b as u32)) {
+                adj[a].push(b as u32);
+                adj[b].push(a as u32);
+            }
+        }
+        for l in adj.iter_mut() {
+            l.sort_unstable();
+        }
+        if check(|| KCore { k: 2 }, &adj, &case) {
+            fired += 1;
+        }
+    }
+    assert!(fired >= 4, "only {fired}/8 plans fired");
+}
+
+#[test]
+fn double_failure_same_worker_rank() {
+    // The same rank dying twice (respawned worker dies again).
+    let adj = generate::erdos_renyi(400, 1200, false, 99);
+    let plan = FailurePlan {
+        kills: vec![
+            Kill { at_step: 8, ranks: vec![2], machine_fails: false },
+            Kill { at_step: 6, ranks: vec![2], machine_fails: false },
+        ],
+    };
+    for ft in FtKind::all() {
+        let c = EngineConfig {
+            topo: Topology::new(3, 2),
+            cost: Default::default(),
+            ft,
+            cp_every: 3,
+            cp_every_secs: None,
+            backing: Backing::Memory,
+            tag: format!("dbl-{}", ft.name()),
+            max_supersteps: 10_000,
+        };
+        let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
+        let mut base = Engine::new(app(), c.clone(), &adj).unwrap();
+        base.run().unwrap();
+        let mut failed = Engine::new(app(), c, &adj).unwrap().with_failures(plan.clone());
+        failed.run().unwrap();
+        assert_eq!(base.digest(), failed.digest(), "{}", ft.name());
+    }
+}
