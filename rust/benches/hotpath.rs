@@ -7,6 +7,9 @@
 //! 2. Whole-engine superstep wall time, scalar vs XLA hot path.
 //! 3. Shuffle+combine throughput (messages/second through the Outbox/
 //!    Inbox plumbing, serialization included).
+//! 4. Superstep pipeline scaling: the persistent-pool executor against a
+//!    forced single-thread baseline on an 8-worker topology, with the
+//!    per-phase wall breakdown (compute/log/shuffle/deliver/sync/cp).
 
 use lwcp::apps::PageRank;
 use lwcp::bench_support as bs;
@@ -66,6 +69,7 @@ fn main() {
                 backing: lwcp::storage::Backing::Memory,
                 tag: format!("hp-{n}-{use_xla}"),
                 max_supersteps: 10_000,
+                threads: 0,
             };
             let mut eng = Engine::new(app, cfg, &adj).expect("engine");
             if use_xla {
@@ -117,4 +121,45 @@ fn main() {
         ser_dt * 1e3,
         ing_dt * 1e3,
     );
+
+    // -------------------------------------- 4: superstep pipeline scaling
+    // The executor's persistent pool vs a forced single-thread baseline,
+    // 8 workers (4 machines × 2), log-based FT so the logging and
+    // checkpoint phases carry real per-worker work too.
+    println!("\n=== Hot path 4 — pipeline executor, 1 thread vs pool (8 workers) ===");
+    let adj = PresetGraph::WebBase.spec(120_000, 11).generate();
+    let mut t = Table::new(vec![
+        "threads",
+        "wall ms/step",
+        "speedup",
+        "phase wall cmp/log/shf/dlv/syn/cp (ms)",
+    ]);
+    let mut base_ms = 0.0;
+    for threads in [1usize, 0] {
+        let app = PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true };
+        let cfg = EngineConfig {
+            topo: Topology::new(4, 2),
+            cost: Default::default(),
+            ft: FtKind::LwLog,
+            cp_every: 4,
+            cp_every_secs: None,
+            backing: lwcp::storage::Backing::Memory,
+            tag: format!("hp4-{threads}"),
+            max_supersteps: 10_000,
+            threads,
+        };
+        let mut eng = Engine::new(app, cfg, &adj).expect("engine");
+        let m = eng.run().expect("run");
+        let per_step = m.wall_ms / m.supersteps_run as f64;
+        if threads == 1 {
+            base_ms = per_step;
+        }
+        t.row(vec![
+            if threads == 0 { "auto".to_string() } else { threads.to_string() },
+            format!("{per_step:.1}"),
+            format!("{:.2}x", base_ms / per_step),
+            m.phase_wall.compact(),
+        ]);
+    }
+    t.print();
 }

@@ -38,6 +38,7 @@ fn triangle_spec(ds: &bs::Dataset, adj_n: usize, scale: f64, tag: &str) -> JobSp
         // The timing window of the experiment is supersteps 1–30; the
         // full triangle count would run the long tail of hub rounds.
         max_supersteps: 40,
+        threads: 0,
     }
 }
 

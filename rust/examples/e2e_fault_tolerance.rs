@@ -117,6 +117,7 @@ fn main() -> anyhow::Result<()> {
         backing: lwcp::storage::Backing::Memory,
         tag: "e2e-curve".into(),
         max_supersteps: 100_000,
+        threads: 0,
     };
     let mut eng = lwcp::pregel::Engine::new(app, cfg, &adj2)?;
     if let Some(e) = exec {

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             backing: Backing::Memory,
             tag: format!("kcore-{}-{kill}", ft.name()),
             max_supersteps: 100_000,
+            threads: 0,
         };
         let mut eng = Engine::new(KCore { k: 4 }, cfg, &adj)?;
         if kill {

@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
             backing: Backing::Memory,
             tag: format!("tri-{c}-{kill:?}"),
             max_supersteps: 100_000,
+            threads: 0,
         };
         let mut eng = Engine::new(TriangleCount { c }, cfg, &adj)?;
         if let Some(at) = kill {

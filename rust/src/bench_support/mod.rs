@@ -90,6 +90,7 @@ pub fn pagerank_spec(ds: &Dataset, data_scale: f64, tag: &str) -> JobSpec {
         data_scale,
         tag: tag.into(),
         max_supersteps: 100_000,
+        threads: 0,
     }
 }
 

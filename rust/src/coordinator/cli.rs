@@ -10,6 +10,7 @@
 //!          [--cp-every-secs 60] [--data-scale 1.0]
 //!          [--kill STEP:N]... [--seed 1] [--supersteps 30]
 //!          [--xla] [--disk] [--profile pregel+|giraph|graphlab|graphx|shen]
+//!          [--threads 0]   (engine pool size; 0 = auto, 1 = sequential)
 //! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
 //! lwcp info
 //! ```
@@ -166,6 +167,7 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         data_scale: f.parse_or("data-scale", 1.0)?,
         tag: f.get("tag").unwrap_or("cli").to_string(),
         max_supersteps: f.parse_or("max-supersteps", 100_000)?,
+        threads: f.parse_or("threads", 0)?,
     })
 }
 

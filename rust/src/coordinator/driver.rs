@@ -82,6 +82,9 @@ pub struct JobSpec {
     pub data_scale: f64,
     pub tag: String,
     pub max_supersteps: u64,
+    /// Engine worker-pool size (see `EngineConfig::threads`): 0 = auto,
+    /// 1 = fully sequential. Results are identical at any setting.
+    pub threads: usize,
 }
 
 impl JobSpec {
@@ -102,6 +105,7 @@ impl JobSpec {
             data_scale: 1.0,
             tag: "job".into(),
             max_supersteps: 100_000,
+            threads: 0,
         }
     }
 
@@ -117,6 +121,7 @@ impl JobSpec {
             backing: self.backing,
             tag: self.tag.clone(),
             max_supersteps: self.max_supersteps,
+            threads: self.threads,
         }
     }
 }

@@ -1,39 +1,58 @@
-//! Checkpoint writing, local logging, and garbage collection — the
-//! failure-free-overhead half of every algorithm (what T_cp0, T_cp and
-//! T_log measure).
+//! Checkpoint writing and garbage collection — the failure-free-overhead
+//! half of every algorithm (what T_cp0 and T_cp measure).
+//!
+//! Per-worker checkpoint encoding and the `SimHdfs` puts fan out on the
+//! engine's persistent pool ([`crate::pregel::executor`]): `SimHdfs` is
+//! `Mutex`-protected, each task touches only its own worker, and every
+//! engine-global tally comes back in a [`PhaseCost`] ledger applied by
+//! the master. Per-superstep local logging lives in the executor's
+//! logging phase (`executor::log_phase`).
 
 use crate::ft::FtKind;
 use crate::metrics::StepKind;
 use crate::pregel::app::App;
 use crate::pregel::engine::Engine;
-use crate::pregel::worker::StepOutput;
+use crate::pregel::executor;
+use crate::sim::PhaseCost;
 use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, Cp0, CpMeta, HwCp};
 use crate::util::codec::Codec;
 use anyhow::Result;
+use std::sync::Arc;
 
 impl<A: App> Engine<A> {
     /// Write the initial checkpoint CP[0] right after input loading, so
-    /// recovery never re-shuffles the input graph (paper §4).
+    /// recovery never re-shuffles the input graph (paper §4). All
+    /// workers encode and write concurrently.
     pub(crate) fn write_cp0(&mut self) -> Result<()> {
         let t0 = self.max_clock();
-        for r in self.ws.alive_ranks() {
-            let w = &self.workers[r];
-            let cp0 = Cp0 {
-                values: w.part.values.clone(),
-                active: w.part.active.clone(),
-                adj: w.part.adj.clone(),
-            };
-            let blob = cp0.to_bytes();
-            let n = self.hdfs.put(&cp_key(0, r), &blob)?;
-            let sharers = self.ws.workers_on_machine(self.ws.machine_of(r));
-            let t = self.cfg.cost.hdfs_write_time(n, sharers);
-            self.workers[r].clock.advance(t);
-            self.metrics.bytes.checkpoint_bytes += n;
+        let wall = std::time::Instant::now();
+        let alive = self.ws.alive_ranks();
+        let sharers = self.sharers_by_rank();
+        let hdfs = Arc::clone(&self.hdfs);
+        {
+            let cost = &self.cfg.cost;
+            let refs = executor::select_workers(&mut self.workers, &alive);
+            let results = self.pool.map(refs, |(r, w)| -> Result<PhaseCost> {
+                let cp0 = Cp0 {
+                    values: w.part.values.clone(),
+                    active: w.part.active.clone(),
+                    adj: w.part.adj.clone(),
+                };
+                let blob = cp0.to_bytes();
+                let n = hdfs.put(&cp_key(0, r), &blob)?;
+                let t = cost.hdfs_write_time(n, sharers[r]);
+                w.clock.advance(t);
+                Ok(PhaseCost { checkpoint_bytes: n, ..Default::default() })
+            });
+            for pc in results {
+                pc?.merge_into(&mut self.metrics.bytes);
+            }
         }
         let meta = CpMeta { step: 0, agg: Vec::new(), active_count: 0, sent_msgs: 0 };
         self.hdfs.put(&cp_meta_key(0), &meta.to_bytes())?;
         let t1 = self.barrier(self.cfg.cost.barrier_overhead);
         self.metrics.t_cp0 = t1 - t0;
+        self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
         self.cp_last = 0;
         self.cp_last_time = t1;
         Ok(())
@@ -79,38 +98,49 @@ impl<A: App> Engine<A> {
 
     /// Write CP[step] (content per algorithm), commit it, delete the
     /// previous checkpoint, then garbage-collect local logs. The whole
-    /// window is the paper's T_cp.
+    /// window is the paper's T_cp. Encoding, HDFS I/O and GC all fan
+    /// out per worker on the pool.
     pub(crate) fn write_checkpoint(&mut self, step: u64) -> Result<()> {
         let t0 = self.barrier(0.0);
+        let wall = std::time::Instant::now();
         let heavy = self.cfg.ft.heavyweight_cp();
-        for r in self.ws.alive_ranks() {
-            let w = &mut self.workers[r];
-            let blob = if heavy {
-                HwCp {
-                    states: w.part.states(),
-                    adj: w.part.adj.clone(),
-                    inbox: w.inbox.snapshot(),
+        let alive = self.ws.alive_ranks();
+        let sharers = self.sharers_by_rank();
+        let hdfs = Arc::clone(&self.hdfs);
+        {
+            let cost = &self.cfg.cost;
+            let refs = executor::select_workers(&mut self.workers, &alive);
+            let results = self.pool.map(refs, |(r, w)| -> Result<PhaseCost> {
+                let blob = if heavy {
+                    HwCp {
+                        states: w.part.states(),
+                        adj: w.part.adj.clone(),
+                        inbox: w.inbox.snapshot(),
+                    }
+                    .to_bytes()
+                } else {
+                    w.part.states().to_bytes()
+                };
+                let mut total = hdfs.put(&cp_key(step, r), &blob)?;
+                // Incremental edge log: lightweight checkpoints append
+                // the buffered mutation requests to E_W; heavyweight
+                // checkpoints store the full adjacency, so the buffer is
+                // just discarded.
+                let drained = w.log.drain_mutations();
+                if !heavy && !drained.is_empty() {
+                    let mut inc = Vec::new();
+                    for (_, seg) in drained {
+                        inc.extend_from_slice(&seg);
+                    }
+                    total += hdfs.append(&ew_key(r), &inc)?;
                 }
-                .to_bytes()
-            } else {
-                w.part.states().to_bytes()
-            };
-            let mut total = self.hdfs.put(&cp_key(step, r), &blob)?;
-            // Incremental edge log: lightweight checkpoints append the
-            // buffered mutation requests to E_W; heavyweight checkpoints
-            // store the full adjacency, so the buffer is just discarded.
-            let drained = w.log.drain_mutations();
-            if !heavy && !drained.is_empty() {
-                let mut inc = Vec::new();
-                for (_, seg) in drained {
-                    inc.extend_from_slice(&seg);
-                }
-                total += self.hdfs.append(&ew_key(r), &inc)?;
+                let t = cost.hdfs_write_time(total, sharers[r]);
+                w.clock.advance(t);
+                Ok(PhaseCost { checkpoint_bytes: total, ..Default::default() })
+            });
+            for pc in results {
+                pc?.merge_into(&mut self.metrics.bytes);
             }
-            let sharers = self.ws.workers_on_machine(self.ws.machine_of(r));
-            let t = self.cfg.cost.hdfs_write_time(total, sharers);
-            self.workers[r].clock.advance(t);
-            self.metrics.bytes.checkpoint_bytes += total;
         }
         // Commit barrier: the previous checkpoint stays valid until every
         // worker has fully written the new one.
@@ -140,54 +170,30 @@ impl<A: App> Engine<A> {
         // regenerate from them at the next failure (§5, Place 1).
         if self.cfg.ft.log_based() {
             let below = if self.cfg.ft == FtKind::HwLog { step + 1 } else { step };
-            for r in self.ws.alive_ranks() {
-                let (bytes, files) = self.workers[r].log.gc_below(below);
-                self.metrics.bytes.gc_bytes += bytes;
-                // The paper's implementation keeps one log file per
-                // (superstep, destination); we store one indexed file
-                // per superstep, so charge the per-file metadata cost
-                // as if segments were files (same inode workload).
-                let file_ops = files * self.ws.topology().n_workers() as u64;
-                let t = self.cfg.cost.gc_time(bytes, file_ops);
-                self.workers[r].clock.advance(t);
+            // The paper's implementation keeps one log file per
+            // (superstep, destination); we store one indexed file per
+            // superstep, so charge the per-file metadata cost as if
+            // segments were files (same inode workload).
+            let n_workers = self.ws.topology().n_workers() as u64;
+            let cost = &self.cfg.cost;
+            let refs = executor::select_workers(&mut self.workers, &alive);
+            let results = self.pool.map(refs, |(_, w)| {
+                let (bytes, files) = w.log.gc_below(below);
+                let file_ops = files * n_workers;
+                let t = cost.gc_time(bytes, file_ops);
+                w.clock.advance(t);
+                PhaseCost { gc_bytes: bytes, ..Default::default() }
+            });
+            for pc in results {
+                pc.merge_into(&mut self.metrics.bytes);
             }
         }
 
         let t1 = self.barrier(0.0);
         self.metrics.cp_writes.push((step, t1 - t0));
+        self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
         self.cp_last = step;
         self.cp_last_time = t1;
-        Ok(())
-    }
-
-    /// Per-superstep local logging (HWLog: combined outgoing messages;
-    /// LWLog: vertex states, falling back to message logging on masked
-    /// or topology-mutating supersteps). Charged to the worker clock —
-    /// in reality it overlaps transmission, but partial commit requires
-    /// the write to complete, and the write is far cheaper than the
-    /// shuffle, so serializing it costs ≤ a few percent.
-    pub(crate) fn write_local_logs(
-        &mut self,
-        step: u64,
-        outputs: &[(usize, StepOutput<A::M>)],
-        masked: bool,
-    ) -> Result<()> {
-        let fallback = masked || self.mutated_steps.contains(&step);
-        for (r, out) in outputs {
-            let w = &mut self.workers[*r];
-            let use_msg_log = self.cfg.ft == FtKind::HwLog || fallback;
-            let bytes = if use_msg_log {
-                let batches = out.outbox.all_batches();
-                w.log.write_msg_log(step, &batches)?
-            } else {
-                let data = w.encode_vstate_log();
-                w.log.write_vstate_log(step, &data)?
-            };
-            let t = self.cfg.cost.log_write_time(bytes) + self.cfg.cost.file_op;
-            w.clock.advance(t);
-            self.metrics.log_writes.push(t);
-            self.metrics.bytes.log_bytes += bytes;
-        }
         Ok(())
     }
 

@@ -10,15 +10,105 @@
 //! ahead of the recovery superstep re-sends that superstep's messages —
 //! loaded from its message log (HWLog) or regenerated from its
 //! vertex-state log (LWLog) — to the workers that are recomputing.
+//!
+//! Recovery runs through the same phase pipeline as normal execution
+//! ([`crate::pregel::executor`]): checkpoint loads fan out per worker on
+//! the engine's persistent pool, message regeneration is the shared
+//! `replay_phase`, and everything funnels into the shared `deliver`.
 
 use crate::ft::FtKind;
 use crate::pregel::app::App;
 use crate::pregel::engine::{Engine, Stage};
+use crate::pregel::executor;
 use crate::pregel::worker::Worker;
+use crate::sim::CostModel;
 use crate::storage::checkpoint::{cp_key, ew_key, Cp0, HwCp, LwCp};
+use crate::storage::SimHdfs;
 use crate::util::codec::{Codec, Reader};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeSet;
+use std::sync::Arc;
+
+/// Load one worker's heavyweight checkpoint (or CP[0]) — the per-worker
+/// unit of the parallel checkpoint-load phase. Returns the load-time
+/// sample (also charged to the worker's clock).
+fn load_heavy_cp_worker<A: App>(
+    w: &mut Worker<A>,
+    hdfs: &SimHdfs,
+    cost: &CostModel,
+    sharers: usize,
+    cp_step: u64,
+) -> Result<f64> {
+    let rank = w.rank;
+    let blob = hdfs
+        .get(&cp_key(cp_step, rank))
+        .with_context(|| format!("loading CP[{cp_step}] for worker {rank}"))?;
+    let t = cost.hdfs_read_time(blob.len() as u64, sharers);
+    w.clock.advance(t);
+    if cp_step == 0 {
+        let cp0 = Cp0::<A::V>::from_bytes(&blob)?;
+        w.part.values = cp0.values;
+        w.part.active = cp0.active;
+        w.part.comp = vec![false; w.part.n_slots()];
+        w.part.adj = cp0.adj;
+        // No messages exist before superstep 1.
+    } else {
+        let cp = HwCp::<A::V, A::M>::from_bytes(&blob)?;
+        w.part.restore_states(cp.states);
+        w.part.adj = cp.adj;
+        w.inbox.restore(cp.inbox)?;
+    }
+    w.log.clear_mutations();
+    w.s_w = cp_step;
+    Ok(t)
+}
+
+/// Load one worker's lightweight states + optionally its edges
+/// (CP[0] + E_W replay) — the per-worker unit of the LWCP/LWLog
+/// checkpoint-load phase. `reload_edges` is skipped for survivors of
+/// mutation-free jobs — their adjacency lists are still valid (paper
+/// §4's optimization). Returns the load-time sample.
+fn load_light_cp_worker<A: App>(
+    w: &mut Worker<A>,
+    hdfs: &SimHdfs,
+    cost: &CostModel,
+    sharers: usize,
+    cp_step: u64,
+    reload_edges: bool,
+) -> Result<f64> {
+    if cp_step == 0 {
+        // Initial-checkpoint rollback: CP[0] is the whole partition.
+        return load_heavy_cp_worker(w, hdfs, cost, sharers, 0);
+    }
+    let rank = w.rank;
+    let blob = hdfs
+        .get(&cp_key(cp_step, rank))
+        .with_context(|| format!("loading LWCP[{cp_step}] for worker {rank}"))?;
+    let mut t = cost.hdfs_read_time(blob.len() as u64, sharers);
+    let states = LwCp::<A::V>::from_bytes(&blob)?;
+    if reload_edges {
+        let cp0_blob = hdfs.get(&cp_key(0, rank))?;
+        t += cost.hdfs_read_time(cp0_blob.len() as u64, sharers);
+        let cp0 = Cp0::<A::V>::from_bytes(&cp0_blob)?;
+        w.part.adj = cp0.adj;
+        // Replay the incremental mutation log E_W in append order.
+        if hdfs.exists(&ew_key(rank)) {
+            let ew = hdfs.get(&ew_key(rank))?;
+            t += cost.hdfs_read_time(ew.len() as u64, sharers);
+            let mut rd = Reader::new(&ew);
+            while !rd.is_empty() {
+                let m = crate::graph::Mutation::decode(&mut rd)?;
+                let slot = w.part.partitioner.slot_of(m.src());
+                w.part.adj.apply(slot, &m);
+            }
+        }
+    }
+    w.part.restore_states(states);
+    w.log.clear_mutations();
+    w.s_w = cp_step;
+    w.clock.advance(t);
+    Ok(t)
+}
 
 impl<A: App> Engine<A> {
     /// The error-handling + recovery flow. Returns the superstep the
@@ -92,183 +182,145 @@ impl<A: App> Engine<A> {
         Ok(self.cp_last + 1)
     }
 
-    /// Load one worker's heavyweight checkpoint (or CP[0]).
-    fn load_heavy_cp(&mut self, rank: usize) -> Result<()> {
-        let cp_step = self.cp_last;
-        let blob = self
-            .hdfs
-            .get(&cp_key(cp_step, rank))
-            .with_context(|| format!("loading CP[{cp_step}] for worker {rank}"))?;
-        let sharers = self.ws.workers_on_machine(self.ws.machine_of(rank));
-        let t = self.cfg.cost.hdfs_read_time(blob.len() as u64, sharers);
-        self.workers[rank].clock.advance(t);
-        self.metrics.cp_loads.push(t);
-        let w = &mut self.workers[rank];
-        if cp_step == 0 {
-            let cp0 = Cp0::<A::V>::from_bytes(&blob)?;
-            w.part.values = cp0.values;
-            w.part.active = cp0.active;
-            w.part.comp = vec![false; w.part.n_slots()];
-            w.part.adj = cp0.adj;
-            // No messages exist before superstep 1.
-        } else {
-            let cp = HwCp::<A::V, A::M>::from_bytes(&blob)?;
-            w.part.restore_states(cp.states);
-            w.part.adj = cp.adj;
-            w.inbox.restore(cp.inbox)?;
-        }
-        w.log.clear_mutations();
-        w.s_w = cp_step;
-        Ok(())
-    }
-
     /// HWCP: everyone rolls back. HWLog: only respawned workers load;
     /// survivors keep their (more advanced) state — that is the whole
-    /// point of log-based recovery.
+    /// point of log-based recovery. Loads fan out on the pool.
     fn recover_heavy(&mut self, outcome: &crate::comm::RecoveryOutcome) -> Result<()> {
         let loaders: Vec<usize> = if self.cfg.ft == FtKind::HwCp {
             self.ws.alive_ranks()
         } else {
             outcome.respawned.iter().map(|&(r, _)| r).collect()
         };
-        for r in loaders {
-            self.load_heavy_cp(r)?;
-        }
-        Ok(())
-    }
-
-    /// Load a worker's lightweight states + its edges (CP[0] + E_W).
-    /// `reload_edges` is skipped for survivors of mutation-free jobs —
-    /// their adjacency lists are still valid (paper §4's optimization).
-    fn load_light_cp(&mut self, rank: usize, reload_edges: bool) -> Result<()> {
         let cp_step = self.cp_last;
-        let sharers = self.ws.workers_on_machine(self.ws.machine_of(rank));
-        if cp_step == 0 {
-            // Initial-checkpoint rollback: CP[0] is the whole partition.
-            return self.load_heavy_cp(rank);
+        let sharers = self.sharers_by_rank();
+        let hdfs = Arc::clone(&self.hdfs);
+        let cost = &self.cfg.cost;
+        let refs = executor::select_workers(&mut self.workers, &loaders);
+        let results = self
+            .pool
+            .map(refs, |(r, w)| load_heavy_cp_worker(w, &hdfs, cost, sharers[r], cp_step));
+        for t in results {
+            self.metrics.cp_loads.push(t?);
         }
-        let blob = self
-            .hdfs
-            .get(&cp_key(cp_step, rank))
-            .with_context(|| format!("loading LWCP[{cp_step}] for worker {rank}"))?;
-        let mut t = self.cfg.cost.hdfs_read_time(blob.len() as u64, sharers);
-        let states = LwCp::<A::V>::from_bytes(&blob)?;
-        if reload_edges {
-            let cp0_blob = self.hdfs.get(&cp_key(0, rank))?;
-            t += self.cfg.cost.hdfs_read_time(cp0_blob.len() as u64, sharers);
-            let cp0 = Cp0::<A::V>::from_bytes(&cp0_blob)?;
-            self.workers[rank].part.adj = cp0.adj;
-            // Replay the incremental mutation log E_W in append order.
-            if self.hdfs.exists(&ew_key(rank)) {
-                let ew = self.hdfs.get(&ew_key(rank))?;
-                t += self.cfg.cost.hdfs_read_time(ew.len() as u64, sharers);
-                let mut rd = Reader::new(&ew);
-                while !rd.is_empty() {
-                    let m = crate::graph::Mutation::decode(&mut rd)?;
-                    let slot = self.partitioner.slot_of(m.src());
-                    self.workers[rank].part.adj.apply(slot, &m);
-                }
-            }
-        }
-        let w = &mut self.workers[rank];
-        w.part.restore_states(states);
-        w.log.clear_mutations();
-        w.s_w = cp_step;
-        w.clock.advance(t);
-        self.metrics.cp_loads.push(t);
         Ok(())
     }
 
-    /// LWCP: everyone rolls back to the lightweight checkpoint, then
-    /// regenerates the checkpointed superstep's messages from the loaded
-    /// states (replay mode) and shuffles them — the extra work that makes
-    /// LWCP's T_cpstep longer than HWCP's, paid once per (rare) failure.
+    /// LWCP: everyone rolls back to the lightweight checkpoint (loads in
+    /// parallel), then regenerates the checkpointed superstep's messages
+    /// from the loaded states (the shared replay phase) and delivers
+    /// them — the extra work that makes LWCP's T_cpstep longer than
+    /// HWCP's, paid once per (rare) failure.
     fn recover_lwcp(&mut self, outcome: &crate::comm::RecoveryOutcome) -> Result<()> {
         let respawned: BTreeSet<usize> = outcome.respawned.iter().map(|&(r, _)| r).collect();
-        for r in self.ws.alive_ranks() {
-            let reload_edges = respawned.contains(&r) || self.any_mutation;
-            self.load_light_cp(r, reload_edges)?;
+        let alive = self.ws.alive_ranks();
+        let cp_step = self.cp_last;
+        let any_mutation = self.any_mutation;
+        {
+            let sharers = self.sharers_by_rank();
+            let hdfs = Arc::clone(&self.hdfs);
+            let cost = &self.cfg.cost;
+            let refs = executor::select_workers(&mut self.workers, &alive);
+            let results = self.pool.map(refs, |(r, w)| {
+                let reload_edges = respawned.contains(&r) || any_mutation;
+                load_light_cp_worker(w, &hdfs, cost, sharers[r], cp_step, reload_edges)
+            });
+            for t in results {
+                self.metrics.cp_loads.push(t?);
+            }
         }
-        if self.cp_last == 0 {
+        if cp_step == 0 {
             return Ok(()); // no messages precede superstep 1
         }
         let agg_prev: Vec<f64> = self
             .agg_log
-            .get(&(self.cp_last - 1))
+            .get(&(cp_step - 1))
             .map(|a| a.slots.clone())
             .unwrap_or_default();
-        let mut batches = Vec::new();
-        let app = std::sync::Arc::clone(&self.app);
-        for r in self.ws.alive_ranks() {
-            let ob = self.workers[r].replay_generate(&app, self.cp_last, &agg_prev, None);
-            let n_comp = self.workers[r].part.comp.iter().filter(|&&c| c).count() as u64;
-            let t = self.cfg.cost.compute_time(n_comp, ob.raw_count());
-            self.workers[r].clock.advance(t);
-            for (dst, b) in ob.all_batches() {
-                batches.push((r, dst, b));
-            }
-        }
+        let app = Arc::clone(&self.app);
+        let refs = executor::select_workers(&mut self.workers, &alive);
+        let mut batches = executor::replay_phase(
+            &self.pool,
+            refs,
+            app.as_ref(),
+            cp_step,
+            &agg_prev,
+            None,
+            &self.cfg.cost,
+        );
         self.deliver(&mut batches)
     }
 
     /// LWLog: survivors keep their state; respawned workers load the
-    /// lightweight checkpoint + edges. The respawned inbox for the next
-    /// superstep is rebuilt from vertex states: its own from the loaded
-    /// checkpoint, the survivors' from their *retained* vertex-state log
-    /// of the checkpointed superstep (masked/mutating supersteps fall
-    /// back to the message log written for them).
+    /// lightweight checkpoint + edges (in parallel). The respawned inbox
+    /// for the next superstep is rebuilt from vertex states: its own
+    /// from the loaded checkpoint (replay phase), the survivors' from
+    /// their *retained* vertex-state log of the checkpointed superstep
+    /// (masked/mutating supersteps fall back to the message log).
     fn recover_lwlog(&mut self, outcome: &crate::comm::RecoveryOutcome) -> Result<()> {
         let respawned: BTreeSet<usize> = outcome.respawned.iter().map(|&(r, _)| r).collect();
-        for &r in &respawned {
-            self.load_light_cp(r, true)?;
-            if self.cp_last > 0 {
-                // Restore the invariant "every worker holds the logs of
-                // the checkpointed superstep" (LWLog's GC rule) on the
-                // fresh local disk: if *another* failure strikes later,
-                // this worker — then a survivor — must be able to
-                // regenerate CP[s_last]'s messages from a local log
-                // like everyone else (cascading-failure case).
-                let w = &mut self.workers[r];
-                let data = w.encode_vstate_log();
-                let n = w.log.write_vstate_log(self.cp_last, &data)?;
-                let t = self.cfg.cost.log_write_time(n) + self.cfg.cost.file_op;
-                w.clock.advance(t);
+        let respawned_v: Vec<usize> = respawned.iter().copied().collect();
+        let cp_step = self.cp_last;
+        {
+            let sharers = self.sharers_by_rank();
+            let hdfs = Arc::clone(&self.hdfs);
+            let cost = &self.cfg.cost;
+            let refs = executor::select_workers(&mut self.workers, &respawned_v);
+            let results = self.pool.map(refs, |(r, w)| -> Result<(f64, u64)> {
+                let t = load_light_cp_worker(w, &hdfs, cost, sharers[r], cp_step, true)?;
+                let mut log_bytes = 0u64;
+                if cp_step > 0 {
+                    // Restore the invariant "every worker holds the logs
+                    // of the checkpointed superstep" (LWLog's GC rule)
+                    // on the fresh local disk: if *another* failure
+                    // strikes later, this worker — then a survivor —
+                    // must be able to regenerate CP[s_last]'s messages
+                    // from a local log like everyone else
+                    // (cascading-failure case).
+                    let data = w.encode_vstate_log();
+                    let n = w.log.write_vstate_log(cp_step, &data)?;
+                    let tl = cost.log_write_time(n) + cost.file_op;
+                    w.clock.advance(tl);
+                    log_bytes = n;
+                }
+                Ok((t, log_bytes))
+            });
+            for res in results {
+                let (t, n) = res?;
+                self.metrics.cp_loads.push(t);
                 self.metrics.bytes.log_bytes += n;
             }
         }
-        if self.cp_last == 0 {
+        if cp_step == 0 {
             return Ok(());
         }
         let agg_prev: Vec<f64> = self
             .agg_log
-            .get(&(self.cp_last - 1))
+            .get(&(cp_step - 1))
             .map(|a| a.slots.clone())
             .unwrap_or_default();
-        let dests: Vec<usize> = respawned.iter().copied().collect();
-        let mut batches = Vec::new();
-        let app = std::sync::Arc::clone(&self.app);
+        let dests: Vec<usize> = respawned_v.clone();
         // Respawned workers regenerate their own checkpointed-superstep
         // messages (only the segments destined to recovering workers).
-        for &r in &respawned {
-            let ob = self.workers[r].replay_generate(&app, self.cp_last, &agg_prev, None);
-            let n_comp = self.workers[r].part.comp.iter().filter(|&&c| c).count() as u64;
-            self.workers[r]
-                .clock
-                .advance(self.cfg.cost.compute_time(n_comp, ob.raw_count()));
-            for &d in &dests {
-                if let Some(b) = ob.batch_for(d) {
-                    batches.push((r, d, b));
-                }
-            }
-        }
+        let app = Arc::clone(&self.app);
+        let refs = executor::select_workers(&mut self.workers, &respawned_v);
+        let mut batches = executor::replay_phase(
+            &self.pool,
+            refs,
+            app.as_ref(),
+            cp_step,
+            &agg_prev,
+            Some(&dests),
+            &self.cfg.cost,
+        );
         // Survivors contribute from their local logs of cp_last.
         let survivors: Vec<usize> = outcome.survivors.clone();
-        self.forward_logged_messages(self.cp_last, &survivors, &dests, &agg_prev, &mut batches)?;
+        self.forward_logged_messages(cp_step, &survivors, &dests, &agg_prev, &mut batches)?;
         self.deliver(&mut batches)
     }
 
     /// Case 1 of §5: workers ahead of the recovery superstep re-send that
-    /// superstep's messages to the recovering workers.
+    /// superstep's messages to the recovering workers. Each forwarder
+    /// regenerates (or loads) its batches as one pool task.
     pub(crate) fn forward_logged_messages(
         &mut self,
         step: u64,
@@ -277,42 +329,56 @@ impl<A: App> Engine<A> {
         agg_prev: &[f64],
         batches: &mut Vec<(usize, usize, Vec<u8>)>,
     ) -> Result<()> {
-        let app = std::sync::Arc::clone(&self.app);
-        for &r in forwarding {
-            let use_vstate =
-                self.cfg.ft == FtKind::LwLog && self.workers[r].log.has_vstate_log(step);
+        let ft = self.cfg.ft;
+        let app = Arc::clone(&self.app);
+        let app_ref: &A = app.as_ref();
+        let cost = &self.cfg.cost;
+        type Forwarded = (Vec<(usize, usize, Vec<u8>)>, Option<f64>);
+        let refs = executor::select_workers(&mut self.workers, forwarding);
+        let results = self.pool.map(refs, |(r, w)| -> Result<Forwarded> {
+            let use_vstate = ft == FtKind::LwLog && w.log.has_vstate_log(step);
             if use_vstate {
-                let (bytes, payload) = self.workers[r].log.read_vstate_log(step)?;
-                let t_load = self.cfg.cost.log_read_time(bytes);
-                self.metrics.log_loads.push(t_load);
+                let (bytes, payload) = w.log.read_vstate_log(step)?;
+                let t_load = cost.log_read_time(bytes);
                 let states = Worker::<A>::decode_vstate_log(&payload)?;
                 let n_comp = states.1.iter().filter(|&&c| c).count() as u64;
-                let ob = self.workers[r].replay_generate(&app, step, agg_prev, Some(states));
-                let t = t_load + self.cfg.cost.compute_time(n_comp, ob.raw_count());
-                self.workers[r].clock.advance(t);
-                for &d in dests {
-                    if let Some(b) = ob.batch_for(d) {
-                        batches.push((r, d, b));
-                    }
-                }
+                let ob = w.replay_generate(app_ref, step, agg_prev, Some(states));
+                let t = t_load + cost.compute_time(n_comp, ob.raw_count());
+                w.clock.advance(t);
+                let out: Vec<(usize, usize, Vec<u8>)> = dests
+                    .iter()
+                    .filter_map(|&d| ob.batch_for(d).map(|b| (r, d, b)))
+                    .collect();
+                Ok((out, Some(t_load)))
             } else {
                 // HWLog — or an LWLog masked/mutating superstep.
-                if !self.workers[r].log.has_msg_log(step) {
+                if !w.log.has_msg_log(step) {
                     bail!("worker {r} has no log for recovery superstep {step}");
                 }
                 let mut t = 0.0;
+                let mut out: Vec<(usize, usize, Vec<u8>)> = Vec::new();
                 for &d in dests {
-                    let (bytes, payload) = self.workers[r].log.read_msg_log(step, d)?;
+                    let (bytes, payload) = w.log.read_msg_log(step, d)?;
                     if !payload.is_empty() {
-                        t += self.cfg.cost.log_read_time(bytes);
-                        batches.push((r, d, payload));
+                        t += cost.log_read_time(bytes);
+                        out.push((r, d, payload));
                     }
                 }
-                if t > 0.0 {
-                    self.metrics.log_loads.push(t);
-                    self.workers[r].clock.advance(t);
-                }
+                let sample = if t > 0.0 {
+                    w.clock.advance(t);
+                    Some(t)
+                } else {
+                    None
+                };
+                Ok((out, sample))
             }
+        });
+        for res in results {
+            let (mut out, sample) = res?;
+            if let Some(t) = sample {
+                self.metrics.log_loads.push(t);
+            }
+            batches.append(&mut out);
         }
         Ok(())
     }

@@ -49,6 +49,36 @@ pub struct ByteStats {
     pub messages_sent: u64,
 }
 
+/// Real wall-clock milliseconds spent in each phase of the superstep
+/// pipeline (`pregel::executor`), accumulated over the run. Virtual
+/// (simulated-cluster) time is tracked separately by the cost model;
+/// this is the perf instrument for the executor itself, reported by
+/// `benches/hotpath.rs`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseWall {
+    pub compute: f64,
+    pub logging: f64,
+    pub shuffle: f64,
+    pub deliver: f64,
+    pub sync: f64,
+    pub checkpoint: f64,
+}
+
+impl PhaseWall {
+    /// Total milliseconds across all phases.
+    pub fn total(&self) -> f64 {
+        self.compute + self.logging + self.shuffle + self.deliver + self.sync + self.checkpoint
+    }
+
+    /// Compact `cmp/log/shf/dlv/syn/cp` rendering for bench tables.
+    pub fn compact(&self) -> String {
+        format!(
+            "{:.0}/{:.0}/{:.0}/{:.0}/{:.0}/{:.0}",
+            self.compute, self.logging, self.shuffle, self.deliver, self.sync, self.checkpoint
+        )
+    }
+}
+
 /// All raw samples from one job run.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -72,6 +102,8 @@ pub struct RunMetrics {
     pub supersteps_run: u64,
     /// Real wall-clock milliseconds of the whole run (perf tracking).
     pub wall_ms: f64,
+    /// Wall-clock breakdown per pipeline phase (perf tracking).
+    pub phase_wall: PhaseWall,
     /// Result digest (hash of final vertex values) — equivalence checks.
     pub result_digest: u64,
 }

@@ -24,6 +24,7 @@
 
 use super::aggregator::AggState;
 use super::app::{App, BatchExec};
+use super::executor::{self, WorkerPool};
 use super::message::Inbox;
 use super::worker::{StepOutput, Worker};
 use crate::comm::WorkerSet;
@@ -36,6 +37,12 @@ use crate::util::codec::Codec;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Elapsed milliseconds since `t` (phase wall accounting).
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
 
 /// One injected failure: kill `ranks` right after the compute+log phase
 /// of superstep `at_step` (the paper kills workers mid-communication).
@@ -91,6 +98,13 @@ pub struct EngineConfig {
     pub tag: String,
     /// Hard cap on supersteps (on top of the app's own).
     pub max_supersteps: u64,
+    /// Size of the engine's persistent worker thread pool, shared by
+    /// every pipeline phase (compute, logging, shuffle delivery,
+    /// checkpoint/recovery I/O). `0` = one thread per hardware thread,
+    /// capped at |W|; `1` = fully inline execution. Results are
+    /// bit-for-bit identical at any setting (see
+    /// `tests/recovery_equivalence.rs`).
+    pub threads: usize,
 }
 
 impl EngineConfig {
@@ -104,6 +118,7 @@ impl EngineConfig {
             backing: Backing::Memory,
             tag: "test".into(),
             max_supersteps: 10_000,
+            threads: 0,
         }
     }
 }
@@ -148,6 +163,9 @@ pub struct Engine<A: App> {
     pub(crate) next_kill: usize,
     pub(crate) stage: Stage,
     pub(crate) master: usize,
+    /// Persistent worker thread pool, created once and reused by every
+    /// superstep pipeline phase across normal execution and recovery.
+    pub(crate) pool: WorkerPool,
 }
 
 impl<A: App> Engine<A> {
@@ -164,6 +182,12 @@ impl<A: App> Engine<A> {
             workers.push(Worker::new(rank, partitioner, global_adj, &app, cfg.backing, &cfg.tag)?);
         }
         let ws = WorkerSet::new(cfg.topo);
+        let pool_threads = match cfg.threads {
+            0 => std::thread::available_parallelism().map_or(4, |t| t.get()),
+            t => t,
+        }
+        .min(n_workers);
+        let pool = WorkerPool::new(pool_threads);
         Ok(Engine {
             app: Arc::new(app),
             cfg,
@@ -184,6 +208,7 @@ impl<A: App> Engine<A> {
             next_kill: 0,
             stage: Stage::Normal,
             master: 0,
+            pool,
         })
     }
 
@@ -206,6 +231,15 @@ impl<A: App> Engine<A> {
             .into_iter()
             .map(|r| self.workers[r].clock.now())
             .fold(0.0, f64::max)
+    }
+
+    /// Per-rank NIC sharers (workers on the same machine) — precomputed
+    /// so checkpoint/recovery pool tasks need no access to the shared
+    /// `WorkerSet`.
+    pub(crate) fn sharers_by_rank(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .map(|r| self.ws.workers_on_machine(self.ws.machine_of(r)))
+            .collect()
     }
 
     /// Sync every alive worker's clock to the max (a barrier), plus
@@ -334,7 +368,10 @@ impl<A: App> Engine<A> {
     // The superstep
     // ---------------------------------------------------------------
 
-    /// Process one superstep. Returns `Some(next_step)` if a failure was
+    /// Process one superstep by driving the phase pipeline: compute(+log)
+    /// → [failure injection] → shuffle → deliver → sync/commit. Normal
+    /// execution, log forwarding (Cases 1/2 of §5) and recovery reruns
+    /// all pass through here. Returns `Some(next_step)` if a failure was
     /// injected and recovery rolled the loop back.
     fn process_superstep(&mut self, step: u64) -> Result<Option<u64>> {
         let t0 = self.max_clock();
@@ -356,99 +393,79 @@ impl<A: App> Engine<A> {
             .unwrap_or_default();
 
         // ---- compute phase (partial commit) ----
-        // Workers are independent within a superstep; the scalar path
-        // fans out over OS threads (deterministic: results are merged in
-        // rank order, and each worker's virtual clock is its own). The
-        // XLA path stays sequential — PJRT handles are not Sync.
+        // Workers are independent within a superstep: the phase fans out
+        // on the persistent pool (results merged in rank order, each
+        // worker charging its own virtual clock).
+        let wall = Instant::now();
         let app = Arc::clone(&self.app);
         let exec = self.exec.clone();
-        let use_xla = exec.is_some() && app.supports_xla();
-        let mut outputs: Vec<(usize, StepOutput<A::M>)> = if use_xla || computing.len() < 2 {
-            let mut outs = Vec::with_capacity(computing.len());
-            for &r in &computing {
-                let out = self.workers[r]
-                    .compute_superstep(&app, step, &agg_prev, exec.as_deref())
-                    .with_context(|| format!("compute on worker {r} superstep {step}"))?;
-                outs.push((r, out));
-            }
-            outs
-        } else {
-            let agg_prev_ref = &agg_prev;
-            let app_ref: &A = &app;
-            // Collect disjoint &mut references to the computing workers.
-            let mut refs: Vec<(usize, &mut Worker<A>)> = self
-                .workers
-                .iter_mut()
-                .enumerate()
-                .filter(|(r, _)| computing.contains(r))
-                .collect();
-            let threads = std::thread::available_parallelism().map_or(4, |n| n.get()).min(refs.len());
-            let chunk = refs.len().div_ceil(threads);
-            let results: Vec<Result<Vec<(usize, StepOutput<A::M>)>>> =
-                std::thread::scope(|s| {
-                    let handles: Vec<_> = refs
-                        .chunks_mut(chunk)
-                        .map(|slice| {
-                            s.spawn(move || {
-                                let mut outs = Vec::with_capacity(slice.len());
-                                for (r, w) in slice {
-                                    let out =
-                                        w.compute_superstep(app_ref, step, agg_prev_ref, None)?;
-                                    outs.push((*r, out));
-                                }
-                                Ok(outs)
-                            })
-                        })
-                        .collect();
-                    handles.into_iter().map(|h| h.join().expect("compute thread")).collect()
-                });
-            let mut outs = Vec::with_capacity(computing.len());
-            for r in results {
-                outs.extend(r?);
-            }
-            outs.sort_by_key(|(r, _)| *r);
-            outs
+        let outputs: Vec<(usize, StepOutput<A::M>, crate::sim::PhaseCost)> = {
+            let refs = executor::select_workers(&mut self.workers, &computing);
+            executor::compute_phase(
+                &self.pool,
+                refs,
+                app.as_ref(),
+                exec.as_deref(),
+                step,
+                &agg_prev,
+                &self.cfg.cost,
+            )?
         };
-        for (r, out) in &outputs {
-            let t = if use_xla {
-                self.cfg.cost.batch_compute_time(
-                    self.workers[*r].part.n_slots() as u64,
-                    out.outbox.raw_count(),
-                )
-            } else {
-                self.cfg.cost.compute_time(out.n_computed, out.outbox.raw_count())
-            };
-            self.workers[*r].clock.advance(t);
-            self.metrics.bytes.messages_sent += out.outbox.raw_count();
+        for (_, _, pc) in &outputs {
+            pc.merge_into(&mut self.metrics.bytes);
         }
-        let _ = &mut outputs;
+        self.metrics.phase_wall.compute += ms_since(wall);
 
-        let masked = outputs.iter().any(|(_, o)| o.lwcp_masked)
+        let masked = outputs.iter().any(|(_, o, _)| o.lwcp_masked)
             || !self.app.lwcp_applicable(step);
         if masked {
             self.masked_steps.insert(step);
         }
-        if outputs.iter().any(|(_, o)| o.mutated) {
+        if outputs.iter().any(|(_, o, _)| o.mutated) {
             self.mutated_steps.insert(step);
             self.any_mutation = true;
         }
 
         // ---- logging phase (completes partial commit for log-based) ----
+        // The log *kind* depends on the global mask, so this is a second
+        // dispatch on the pool rather than fully fused into compute.
+        let wall = Instant::now();
         let mut step_aggs: BTreeMap<usize, AggState> = BTreeMap::new();
-        for (r, out) in &outputs {
+        for (r, out, _) in &outputs {
             step_aggs.insert(*r, out.agg.clone());
         }
         if self.cfg.ft.log_based() {
-            self.write_local_logs(step, &outputs, masked)?;
-        }
-        for (r, out) in &outputs {
-            if !out.mutations_encoded.is_empty() {
-                let t = self.cfg.cost.log_write_time(out.mutations_encoded.len() as u64);
-                self.workers[*r].clock.advance(t);
-                self.workers[*r].log.append_mutations(step, out.mutations_encoded.clone());
+            let fallback = masked || self.mutated_steps.contains(&step);
+            let use_msg_log = self.cfg.ft == FtKind::HwLog || fallback;
+            let ranks: Vec<usize> = outputs.iter().map(|(r, _, _)| *r).collect();
+            let refs = executor::select_workers(&mut self.workers, &ranks);
+            let mut items: Vec<(&mut Worker<A>, &StepOutput<A::M>)> =
+                Vec::with_capacity(outputs.len());
+            for ((wr, w), (or, o, _)) in refs.into_iter().zip(outputs.iter()) {
+                debug_assert_eq!(wr, *or);
+                items.push((w, o));
             }
-            self.workers[*r].log.log_partial_agg(step, out.agg.to_bytes());
+            let costs =
+                executor::log_phase(&self.pool, items, step, use_msg_log, &self.cfg.cost)?;
+            for pc in &costs {
+                pc.merge_into(&mut self.metrics.bytes);
+                if let Some(t) = pc.sample {
+                    self.metrics.log_writes.push(t);
+                }
+            }
+        } else {
+            // No per-superstep log: only the mutation buffer and the
+            // partial-aggregate log complete the partial commit.
+            for (r, out, _) in &outputs {
+                if !out.mutations_encoded.is_empty() {
+                    let t = self.cfg.cost.log_write_time(out.mutations_encoded.len() as u64);
+                    self.workers[*r].clock.advance(t);
+                    self.workers[*r].log.append_mutations(step, out.mutations_encoded.clone());
+                }
+                self.workers[*r].log.log_partial_agg(step, out.agg.to_bytes());
+            }
         }
+        self.metrics.phase_wall.logging += ms_since(wall);
 
         // ---- failure injection point (mid-communication) ----
         if let Some(kidx) = self.due_kill(step) {
@@ -457,8 +474,9 @@ impl<A: App> Engine<A> {
         }
 
         // ---- shuffle phase ----
+        let wall = Instant::now();
         let mut batches: Vec<(usize, usize, Vec<u8>)> = Vec::new();
-        for (r, out) in &outputs {
+        for (r, out, _) in &outputs {
             for (dst, b) in out.outbox.all_batches() {
                 // Case 2: send only to workers that will compute i+1.
                 if self.workers[dst].s_w <= step {
@@ -477,9 +495,11 @@ impl<A: App> Engine<A> {
                 self.forward_logged_messages(step, &forwarding, &dests, &agg_prev, &mut batches)?;
             }
         }
+        self.metrics.phase_wall.shuffle += ms_since(wall);
         self.deliver(&mut batches)?;
 
         // ---- sync & commit ----
+        let wall = Instant::now();
         let global = if let Some(g) = self.agg_log.get(&step) {
             // Already fully committed before the failure: every computing
             // worker fetches it from the master's log (i < s(master)).
@@ -510,6 +530,7 @@ impl<A: App> Engine<A> {
             g
         };
         self.agg_log.insert(step, global);
+        self.metrics.phase_wall.sync += ms_since(wall);
 
         let t1 = self.barrier(0.0);
         self.metrics.steps.push(StepRecord { step, kind: self.classify(step), dur: t1 - t0 });
@@ -517,8 +538,11 @@ impl<A: App> Engine<A> {
     }
 
     /// Deliver serialized batches: sorted by (dst, src) so receivers fold
-    /// in sender-rank order (bitwise determinism), with wire/CPU costs.
+    /// in sender-rank order (bitwise determinism), then all destination
+    /// inboxes ingest concurrently on the pool, with wire/CPU costs
+    /// applied by the master from the returned ledgers.
     pub(crate) fn deliver(&mut self, batches: &mut Vec<(usize, usize, Vec<u8>)>) -> Result<()> {
+        let wall = Instant::now();
         batches.sort_by_key(|(src, dst, _)| (*dst, *src));
         let n = self.workers.len();
         let mut sent_remote = vec![0u64; n];
@@ -537,8 +561,31 @@ impl<A: App> Engine<A> {
                 recv_remote[*dst] += len;
             }
             self.metrics.bytes.shuffle_bytes += len;
-            let cnt = self.workers[*dst].inbox.ingest(b)?;
-            recv_cpu[*dst] += self.cfg.cost.recv_time(cnt);
+        }
+        // Group by destination (batches are (dst, src)-sorted, so groups
+        // are contiguous and each group is in sender-rank order), then
+        // ingest every destination's inbox concurrently.
+        {
+            let mut dst_ranks: Vec<usize> = Vec::new();
+            let mut groups: Vec<Vec<&[u8]>> = Vec::new();
+            for (_, dst, b) in batches.iter() {
+                if dst_ranks.last() == Some(dst) {
+                    groups.last_mut().expect("group exists").push(b.as_slice());
+                } else {
+                    dst_ranks.push(*dst);
+                    groups.push(vec![b.as_slice()]);
+                }
+            }
+            let refs = executor::select_workers(&mut self.workers, &dst_ranks);
+            let mut items: Vec<(&mut Worker<A>, Vec<&[u8]>)> = Vec::with_capacity(refs.len());
+            for ((wr, w), (gr, g)) in refs.into_iter().zip(dst_ranks.iter().zip(groups)) {
+                debug_assert_eq!(wr, *gr);
+                items.push((w, g));
+            }
+            let costs = executor::deliver_phase(&self.pool, items, &self.cfg.cost)?;
+            for (d, pc) in dst_ranks.iter().zip(costs) {
+                recv_cpu[*d] = pc.recv_cpu;
+            }
         }
         // NIC sharing: count communicating workers per machine.
         let machines = self.cfg.topo.machines;
@@ -571,6 +618,7 @@ impl<A: App> Engine<A> {
             };
             self.workers[r].clock.advance(send_t.max(recv_t) + recv_cpu[r]);
         }
+        self.metrics.phase_wall.deliver += ms_since(wall);
         Ok(())
     }
 

@@ -111,7 +111,9 @@ impl<M: Codec + Clone> Outbox<M> {
                 if q.is_empty() {
                     return None;
                 }
-                let mut buf = Vec::new();
+                // Pre-size like the Combined arm: count (4) + per
+                // message slot u32 + payload.
+                let mut buf = Vec::with_capacity(4 + q.len() * (4 + std::mem::size_of::<M>()));
                 (q.len() as u32).encode(&mut buf);
                 for (to, m) in q {
                     (part.slot_of(*to) as u32).encode(&mut buf);
@@ -183,6 +185,22 @@ impl<M: Codec + Clone> Inbox<M> {
         Ok(n)
     }
 
+    /// Fold several serialized batches in, **in the order given** — the
+    /// delivery phase passes each destination's batches in sender-rank
+    /// order (see module docs), one destination per pool task. Returns
+    /// the per-batch message counts (receiver-side cost accounting).
+    pub fn ingest_all<'a, I>(&mut self, batches: I) -> Result<Vec<u64>>
+    where
+        I: IntoIterator<Item = &'a [u8]>,
+    {
+        let it = batches.into_iter();
+        let mut counts = Vec::with_capacity(it.size_hint().0);
+        for b in it {
+            counts.push(self.ingest(b)?);
+        }
+        Ok(counts)
+    }
+
     /// Does `slot` have any message?
     pub fn has(&self, slot: usize) -> bool {
         match self {
@@ -241,6 +259,17 @@ impl<M: Codec + Clone> Inbox<M> {
     }
 }
 
+/// The executor moves outboxes across pool threads and ingests inboxes
+/// on them; both must stay `Send`/`Sync` for message types that are
+/// (the `App` trait requires `M: Send + Sync`). Compile-time guard —
+/// adding a non-`Send` field to either type breaks this function.
+#[allow(dead_code)]
+fn _assert_plumbing_send_sync<M: Codec + Clone + Send + Sync>() {
+    fn ok<T: Send + Sync>() {}
+    ok::<Inbox<M>>();
+    ok::<Outbox<M>>();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +310,28 @@ mod tests {
         assert_eq!(inbox.msgs(0), &[10, 7]);
         assert_eq!(inbox.msgs(1), &[1]);
         assert_eq!(inbox.count(), 3);
+    }
+
+    #[test]
+    fn ingest_all_equals_sequential_ingest() {
+        let batches: Vec<Vec<u8>> = (0..3u32)
+            .map(|r| {
+                let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+                ob.send(1, r as f32 + 0.25); // rank 1, slot 0
+                ob.send(4, 1.0); // rank 1, slot 1
+                ob.batch_for(1).unwrap()
+            })
+            .collect();
+        let mut one = Inbox::new(3, Some(sum as CombineFn<f32>));
+        for b in &batches {
+            one.ingest(b).unwrap();
+        }
+        let mut all = Inbox::new(3, Some(sum as CombineFn<f32>));
+        let counts = all.ingest_all(batches.iter().map(Vec::as_slice)).unwrap();
+        assert_eq!(counts, vec![2, 2, 2]);
+        assert_eq!(all.count(), one.count());
+        assert_eq!(all.msgs(0)[0].to_bits(), one.msgs(0)[0].to_bits());
+        assert_eq!(all.msgs(1)[0].to_bits(), one.msgs(1)[0].to_bits());
     }
 
     #[test]

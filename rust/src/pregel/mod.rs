@@ -19,6 +19,7 @@
 pub mod aggregator;
 pub mod app;
 pub mod engine;
+pub mod executor;
 pub mod message;
 pub mod partition;
 pub mod worker;
@@ -26,6 +27,7 @@ pub mod worker;
 pub use aggregator::AggState;
 pub use app::{App, BatchExec, Ctx, NoXla};
 pub use engine::{Engine, EngineConfig, FailurePlan, Kill};
+pub use executor::WorkerPool;
 pub use message::{Inbox, Outbox};
 pub use partition::Partition;
 pub use worker::Worker;

@@ -163,6 +163,27 @@ impl<A: App> Worker<A> {
         Ok(StepOutput { outbox: out, agg, mutations_encoded, n_computed, lwcp_masked: lwcp_mask, mutated })
     }
 
+    /// Write this worker's per-superstep local log — the logging half of
+    /// the compute+log phase unit, run on the executor pool. HWLog (and
+    /// LWLog's fallback on masked/mutating supersteps) logs the combined
+    /// outgoing batches; LWLog otherwise logs `(comp(v), a(v))`. The
+    /// caller decides `use_msg_log` globally (the LWCP mask is a
+    /// whole-superstep property). Returns bytes written.
+    pub fn write_step_log(
+        &mut self,
+        step: u64,
+        out: &StepOutput<A::M>,
+        use_msg_log: bool,
+    ) -> Result<u64> {
+        if use_msg_log {
+            let batches = out.outbox.all_batches();
+            self.log.write_msg_log(step, &batches)
+        } else {
+            let data = self.encode_vstate_log();
+            self.log.write_vstate_log(step, &data)
+        }
+    }
+
     /// Regenerate the outgoing messages of a past superstep from vertex
     /// states (LWCP/LWLog recovery): call compute() in replay mode with
     /// no messages for every vertex whose stored comp(v) flag is set.

@@ -2,7 +2,20 @@
 //! `python/compile/aot.py` and executes them on the PJRT CPU client via
 //! the `xla` crate — the only place Python output touches the Rust hot
 //! path, and it does so as compiled executables, never as Python.
+//!
+//! The PJRT-backed implementation needs the external `xla` crate (and a
+//! local XLA build), which the offline build environment does not ship.
+//! It is therefore gated behind the `xla-pjrt` feature; the default
+//! build uses a stub [`XlaRegistry`] whose `load()` always errors, so
+//! every caller (CLI `--xla`, benches, tests) falls back to the scalar
+//! path with a clear message.
 
+#[cfg(feature = "xla-pjrt")]
 pub mod registry;
-
+#[cfg(feature = "xla-pjrt")]
 pub use registry::XlaRegistry;
+
+#[cfg(not(feature = "xla-pjrt"))]
+pub mod registry_stub;
+#[cfg(not(feature = "xla-pjrt"))]
+pub use registry_stub::XlaRegistry;

@@ -1,0 +1,48 @@
+//! Stub executable registry for builds without the `xla-pjrt` feature.
+//!
+//! Mirrors the API surface of the PJRT-backed `registry::XlaRegistry`
+//! exactly, but `load()`/`load_default()` always fail, so the engine's
+//! scalar path is used everywhere. This keeps the default build free of
+//! the external `xla` crate (see `runtime/mod.rs`).
+
+use crate::pregel::app::BatchExec;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Stub registry: never constructible through the public API.
+pub struct XlaRegistry {
+    _priv: (),
+}
+
+impl XlaRegistry {
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load(dir: &Path) -> Result<Self> {
+        bail!(
+            "XLA runtime not compiled in (artifacts dir {}): rebuild with \
+             --features xla-pjrt and the `xla` crate available",
+            dir.display()
+        )
+    }
+
+    /// Always fails: the PJRT runtime is not compiled in.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("LWCP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Functions available in the manifest (none for the stub).
+    pub fn functions(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Buckets available for `fn_name`, ascending (none for the stub).
+    pub fn buckets(&self, _fn_name: &str) -> Vec<usize> {
+        Vec::new()
+    }
+}
+
+impl BatchExec for XlaRegistry {
+    fn run(&self, fn_name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!("XLA runtime not compiled in (requested {fn_name})")
+    }
+}

@@ -14,6 +14,7 @@
 //! with a single-receiver NIC bottleneck, HDFS CP[0] dominated by
 //! replicated edge data.
 
+use crate::metrics::ByteStats;
 use crate::util::codec::{Codec, Reader};
 use anyhow::Result;
 
@@ -299,6 +300,48 @@ impl CostModel {
     pub fn sync_time(&self, n_workers: usize) -> f64 {
         let rounds = (n_workers.max(2) as f64).log2().ceil();
         2.0 * rounds * self.net_latency + self.barrier_overhead
+    }
+}
+
+/// Deferred cost/metric deltas produced by one worker's share of a
+/// parallel pipeline phase (see `pregel::executor`).
+///
+/// Phase units run concurrently on the engine's worker pool and may
+/// only touch *their own* worker (clock included); everything destined
+/// for engine-global state — the run's byte tallies and per-operation
+/// duration samples — is returned in this ledger and applied by the
+/// master thread after the phase joins. This replaces the seed engine's
+/// interleaved master-thread metric mutation, which would have been a
+/// data race under the parallel executor.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseCost {
+    /// Messages generated, pre-combining (→ `ByteStats::messages_sent`).
+    pub messages_sent: u64,
+    /// Local-log bytes written (→ `ByteStats::log_bytes`).
+    pub log_bytes: u64,
+    /// Checkpoint bytes written (→ `ByteStats::checkpoint_bytes`).
+    pub checkpoint_bytes: u64,
+    /// Local-log bytes garbage-collected (→ `ByteStats::gc_bytes`).
+    pub gc_bytes: u64,
+    /// Receiver-side ingest CPU seconds; the delivery phase folds this
+    /// into the worker's clock together with the wire times, which need
+    /// the *global* NIC-sharing picture and so stay on the master.
+    pub recv_cpu: f64,
+    /// One duration sample for the per-operation metric streams
+    /// (`log_writes` / `cp_loads` / `log_loads`), if the phase unit
+    /// produced one.
+    pub sample: Option<f64>,
+}
+
+impl PhaseCost {
+    /// Fold this ledger's byte tallies into the run's statistics.
+    /// (Shuffle bytes are tallied by the master directly in `deliver`,
+    /// which needs the global NIC picture anyway.)
+    pub fn merge_into(&self, bytes: &mut ByteStats) {
+        bytes.messages_sent += self.messages_sent;
+        bytes.log_bytes += self.log_bytes;
+        bytes.checkpoint_bytes += self.checkpoint_bytes;
+        bytes.gc_bytes += self.gc_bytes;
     }
 }
 

@@ -17,4 +17,4 @@ pub mod clock;
 pub mod cost;
 
 pub use clock::Clock;
-pub use cost::{CostModel, SystemProfile, Topology};
+pub use cost::{CostModel, PhaseCost, SystemProfile, Topology};

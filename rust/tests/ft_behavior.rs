@@ -21,6 +21,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         backing: Backing::Memory,
         tag: tag.into(),
         max_supersteps: 10_000,
+        threads: 0,
     }
 }
 

@@ -69,6 +69,7 @@ fn cfg(case: &Case, tag: &str) -> EngineConfig {
         backing: Backing::Memory,
         tag: tag.into(),
         max_supersteps: 10_000,
+        threads: 0,
     }
 }
 
@@ -237,6 +238,7 @@ fn double_failure_same_worker_rank() {
             backing: Backing::Memory,
             tag: format!("dbl-{}", ft.name()),
             max_supersteps: 10_000,
+            threads: 0,
         };
         let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
         let mut base = Engine::new(app(), c.clone(), &adj).unwrap();

@@ -23,6 +23,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         backing: Backing::Memory,
         tag: tag.into(),
         max_supersteps: 10_000,
+        threads: 0,
     }
 }
 
@@ -280,6 +281,76 @@ fn kcore_failure_right_after_checkpoint() {
             FailurePlan::kill_n_at(1, 7),
             &format!("kcore-postcp-{}", ft.name()),
         );
+    }
+}
+
+// ------------------------------------------------- parallel determinism
+
+/// Digest of a run with a pinned engine-pool size (1 = fully inline,
+/// N = N pool threads, 0 = auto).
+fn digest_with_threads<A: App, F: Fn() -> A>(
+    app_fn: F,
+    adj: &[Vec<VertexId>],
+    ft: FtKind,
+    cp_every: u64,
+    threads: usize,
+    plan: Option<FailurePlan>,
+    label: &str,
+) -> u64 {
+    let mut c = cfg(ft, cp_every, &format!("{label}-t{threads}"));
+    c.threads = threads;
+    let mut eng = Engine::new(app_fn(), c, adj).expect("build engine");
+    if let Some(p) = plan {
+        eng = eng.with_failures(p);
+    }
+    eng.run().expect("run");
+    eng.digest()
+}
+
+/// The executor contract: the parallel pipeline (compute fan-out,
+/// parallel shuffle delivery, parallel checkpoint/log I/O) reproduces
+/// the single-thread run bit-for-bit — f32 PageRank sums included —
+/// with and without an injected failure.
+#[test]
+fn pagerank_f32_digest_identical_across_thread_counts() {
+    let adj = webbase(500);
+    let app = || PageRank { damping: 0.85, supersteps: 13, combiner_enabled: true };
+    for plan in [None, Some(FailurePlan::kill_n_at(1, 8))] {
+        let want = digest_with_threads(app, &adj, FtKind::LwCp, 4, 1, plan.clone(), "pdet");
+        for threads in [2usize, 4, 0] {
+            let got = digest_with_threads(app, &adj, FtKind::LwCp, 4, threads, plan.clone(), "pdet");
+            assert_eq!(
+                got, want,
+                "pagerank digest differs at threads={threads} (failure: {})",
+                plan.is_some()
+            );
+        }
+    }
+}
+
+#[test]
+fn sssp_digest_identical_across_thread_counts() {
+    let adj = generate::erdos_renyi(400, 1600, false, 31);
+    let app = || Sssp { source: 0 };
+    for plan in [None, Some(FailurePlan::kill_n_at(2, 4))] {
+        let want = digest_with_threads(app, &adj, FtKind::LwLog, 3, 1, plan.clone(), "sdet");
+        for threads in [3usize, 0] {
+            let got = digest_with_threads(app, &adj, FtKind::LwLog, 3, threads, plan.clone(), "sdet");
+            assert_eq!(got, want, "sssp digest differs at threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn triangle_digest_identical_across_thread_counts() {
+    let adj = generate::erdos_renyi(150, 1200, false, 32);
+    let app = || TriangleCount { c: 1 };
+    for plan in [None, Some(FailurePlan::kill_n_at(1, 5))] {
+        let want = digest_with_threads(app, &adj, FtKind::HwLog, 3, 1, plan.clone(), "tdet");
+        for threads in [2usize, 0] {
+            let got = digest_with_threads(app, &adj, FtKind::HwLog, 3, threads, plan.clone(), "tdet");
+            assert_eq!(got, want, "triangle digest differs at threads={threads}");
+        }
     }
 }
 

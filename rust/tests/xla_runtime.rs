@@ -106,6 +106,7 @@ fn cfg(tag: &str, ft: FtKind) -> EngineConfig {
         backing: Backing::Memory,
         tag: tag.into(),
         max_supersteps: 10_000,
+        threads: 0,
     }
 }
 

@@ -1,0 +1,260 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository is offline, so instead of a
+//! crates.io dependency we vendor the small surface the codebase uses:
+//! [`Error`] (a context-chained dynamic error), [`Result`], the
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! [`anyhow!`]/[`bail!`]/[`ensure!`] macros. Semantics mirror the real
+//! crate where observable: `Display` shows the outermost message,
+//! `{:#}` shows the full `outer: inner: …` chain, `Debug` shows the
+//! chain in `Caused by:` form, and any `std::error::Error` converts via
+//! `?`.
+
+use std::fmt::{self, Debug, Display};
+
+/// A context-chained error. Like `anyhow::Error`, this deliberately does
+/// **not** implement `std::error::Error` so the blanket
+/// `From<E: std::error::Error>` conversion below stays coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: Display>(m: M) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().copied().unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, colon-separated (anyhow's format).
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in self.chain().iter().skip(1) {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the std source chain as context frames.
+        let mut frames = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = Some(&e);
+        while let Some(c) = cur {
+            frames.push(c.to_string());
+            cur = c.source();
+        }
+        let mut built: Option<Error> = None;
+        for msg in frames.into_iter().rev() {
+            built = Some(match built {
+                None => Error::msg(msg),
+                Some(inner) => Error { msg, source: Some(Box::new(inner)) },
+            });
+        }
+        built.expect("at least one frame")
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Anything that can become an [`Error`] to be context-wrapped.
+    /// Implemented for every `std::error::Error` and for `Error` itself
+    /// (the two never overlap: `Error` is not a `std::error::Error`).
+    pub trait IntoChain {
+        fn into_chain(self) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoChain for E {
+        fn into_chain(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoChain for Error {
+        fn into_chain(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoChain> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_chain().context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_chain().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a formattable value, or a
+/// format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "Condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Error::from(io_err()).context("loading CP[3]");
+        assert_eq!(format!("{e}"), "loading CP[3]");
+        assert_eq!(format!("{e:#}"), "loading CP[3]: file gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.chain(), vec!["outer", "file gone"]);
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn macros_roundtrip() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x != 1);
+            ensure!(x != 2, "two is bad: {x}");
+            if x == 3 {
+                bail!("three: {}", x);
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_ok());
+        assert!(format!("{}", f(1).unwrap_err()).contains("Condition failed"));
+        assert_eq!(format!("{}", f(2).unwrap_err()), "two is bad: 2");
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three: 3");
+        let e = anyhow!(io_err());
+        assert_eq!(format!("{e}"), "file gone");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let e = Error::msg("root").context("mid").context("top");
+        let d = format!("{e:?}");
+        assert!(d.starts_with("top"));
+        assert!(d.contains("Caused by:"));
+        assert!(d.contains("root"));
+    }
+}
