@@ -10,14 +10,19 @@
 //! 4. Superstep pipeline scaling: the persistent-pool executor against a
 //!    forced single-thread baseline on an 8-worker topology, with the
 //!    per-phase wall breakdown (compute/log/shuffle/deliver/sync/cp).
+//! 5. Replay-phase cost: message regeneration through the emit-only
+//!    `Worker::replay_generate` vs the full `update`+`emit` superstep —
+//!    the recovery-path saving bought by the two-phase vertex API (the
+//!    old API replayed the entire monolithic `compute`, fold included).
 
-use lwcp::apps::PageRank;
+use lwcp::apps::{PageRank, TriangleCount};
 use lwcp::bench_support as bs;
 use lwcp::ft::FtKind;
-use lwcp::graph::{PresetGraph, Partitioner};
+use lwcp::graph::{Partitioner, PresetGraph};
 use lwcp::pregel::app::{BatchExec, CombineFn};
-use lwcp::pregel::{Engine, EngineConfig, Inbox, Outbox};
+use lwcp::pregel::{App, Engine, EngineConfig, Inbox, Outbox, Worker};
 use lwcp::sim::Topology;
+use lwcp::storage::Backing;
 use lwcp::util::fmtutil::Table;
 use std::time::Instant;
 
@@ -162,4 +167,78 @@ fn main() {
         ]);
     }
     t.print();
+
+    // --------------------------------- 5: emit-only replay vs full compute
+    // LWCP/LWLog recovery regenerates a committed superstep's messages.
+    // Under the two-phase API that is `emit` alone; the pre-redesign API
+    // re-ran the whole monolithic compute (message fold + scratch
+    // allocations included) with writes suppressed. `compute_superstep`
+    // (update+emit) stands in for the old full-compute replay cost.
+    println!("\n=== Hot path 5 — replay: emit-only vs full update+emit (per partition) ===");
+    let mut t = Table::new(vec![
+        "app",
+        "vertices",
+        "full ms/replay",
+        "emit-only ms/replay",
+        "speedup",
+    ]);
+    t.row(bench_replay_row(
+        "pagerank",
+        &PresetGraph::WebBase.spec(120_000, 11).generate(),
+        PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true },
+    ));
+    t.row(bench_replay_row(
+        "triangle",
+        &PresetGraph::Friendster.spec(20_000, 5).generate(),
+        TriangleCount { c: 4 },
+    ));
+    t.print();
+}
+
+/// Time superstep 3 of a single-worker partition two ways, from an
+/// identical starting state each iteration (fresh worker, superstep 1
+/// pre-run untimed):
+///
+/// * **full** — `compute_superstep` (update + emit): what the old API
+///   paid to replay, since it re-ran the whole monolithic compute;
+/// * **emit-only** — `replay_generate`: what LWCP/LWLog recovery pays
+///   under the two-phase API.
+fn bench_replay_row<A: App>(name: &str, adj: &[Vec<u32>], app: A) -> Vec<String> {
+    let part = Partitioner::new(1, adj.len());
+    let agg_prev = vec![0.0f64; app.agg_slots()];
+    let fresh = |tag: &str| {
+        let mut w =
+            Worker::new(0, part, adj, &app, Backing::Memory, tag).expect("worker");
+        w.compute_superstep(&app, 1, &agg_prev, None).expect("superstep 1");
+        w
+    };
+
+    let iters = 10u32;
+    let mut full_s = 0.0f64;
+    for i in 0..iters {
+        let mut w = fresh(&format!("hp5-{name}-f{i}"));
+        let t0 = Instant::now();
+        let out = w.compute_superstep(&app, 3, &agg_prev, None).expect("full superstep");
+        full_s += t0.elapsed().as_secs_f64();
+        std::hint::black_box(out.outbox.raw_count());
+    }
+    let mut emit_s = 0.0f64;
+    for i in 0..iters {
+        let mut w = fresh(&format!("hp5-{name}-e{i}"));
+        w.compute_superstep(&app, 3, &agg_prev, None).expect("superstep 3");
+        let t1 = Instant::now();
+        let ob = w.replay_generate(&app, 3, &agg_prev, None);
+        emit_s += t1.elapsed().as_secs_f64();
+        std::hint::black_box(ob.raw_count());
+    }
+
+    let full_ms = full_s * 1e3 / iters as f64;
+    let emit_ms = emit_s * 1e3 / iters as f64;
+    vec![
+        name.to_string(),
+        adj.len().to_string(),
+        format!("{full_ms:.2}"),
+        format!("{emit_ms:.2}"),
+        format!("{:.2}x", full_ms / emit_ms),
+    ]
 }

@@ -9,7 +9,7 @@
 //! (superstep mod 4): 1 = request, 2 = grant, 3 = accept, 0 = confirm.
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, Ctx};
+use crate::pregel::app::{App, EmitCtx, UpdateCtx};
 
 /// Value = (matched partner id or NONE, selected candidate id or NONE).
 pub type BmValue = (u32, u32);
@@ -44,27 +44,19 @@ impl App for BipartiteMatching {
         agg.slots.len() >= 2 && agg.slots[1] > 0.0 && agg.slots[0] == 0.0
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, BmValue, u32>, msgs: &[u32]) {
-        let id = ctx.id();
-        let left = is_left(id);
+    fn update(&self, ctx: &mut UpdateCtx<'_, BmValue>, msgs: &[u32]) {
+        let left = is_left(ctx.id());
         match phase(ctx.superstep()) {
             0 => {
-                // Request: unmatched left vertices ask every (right)
-                // neighbor. State-only.
-                let (matched, _) = *ctx.value();
-                if left && matched == NONE {
-                    for i in 0..ctx.degree() {
-                        let to = ctx.neighbors()[i];
-                        if !is_left(to) {
-                            ctx.send(to, id);
-                        }
-                    }
-                }
+                // Request phase folds nothing: requests are generated
+                // from state alone in `emit`.
             }
             1 => {
                 // Grant: an unmatched right vertex selects ONE requester
-                // (Equation 2: store it in the value) and answers it
-                // (Equation 3: from the stored field).
+                // (Equation 2: store it in the value) so `emit` can
+                // answer it from the stored field (Equation 3) — the
+                // paper's request–respond *type 1* trick that keeps
+                // every phase state-derivable.
                 let (matched, _) = *ctx.value();
                 let selected = if !left && matched == NONE {
                     msgs.iter().copied().min().unwrap_or(NONE)
@@ -72,16 +64,12 @@ impl App for BipartiteMatching {
                     NONE
                 };
                 ctx.set_value((matched, selected));
-                let (_, sel) = *ctx.value();
-                if sel != NONE {
-                    ctx.send(sel, id);
-                }
             }
             2 => {
-                // Accept: an unmatched left vertex picks one grant,
-                // records the match, and accepts it. Right vertices do
-                // nothing here — their pending `selected` (who they
-                // granted) must survive until the confirm phase.
+                // Accept: an unmatched left vertex picks one grant and
+                // records the match. Right vertices do nothing here —
+                // their pending `selected` (who they granted) must
+                // survive until the confirm phase.
                 if left {
                     let (matched, _) = *ctx.value();
                     if matched == NONE {
@@ -93,10 +81,6 @@ impl App for BipartiteMatching {
                         }
                     } else {
                         ctx.set_value((matched, NONE));
-                    }
-                    let (_, sel) = *ctx.value();
-                    if sel != NONE {
-                        ctx.send(sel, id);
                     }
                 }
             }
@@ -119,6 +103,46 @@ impl App for BipartiteMatching {
             }
         }
         // All vertices stay awake until the round-level halt condition.
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, BmValue, u32>) {
+        let id = ctx.id();
+        let left = is_left(id);
+        match phase(ctx.superstep()) {
+            0 => {
+                // Request: unmatched left vertices ask every (right)
+                // neighbor. State-only.
+                let (matched, _) = *ctx.value();
+                if left && matched == NONE {
+                    for &to in ctx.neighbors() {
+                        if !is_left(to) {
+                            ctx.send(to, id);
+                        }
+                    }
+                }
+            }
+            1 => {
+                // Grant: answer the selected requester from the stored
+                // field (left vertices cleared it in `update`).
+                let (_, sel) = *ctx.value();
+                if sel != NONE {
+                    ctx.send(sel, id);
+                }
+            }
+            2 => {
+                // Accept: only left vertices answer — a right vertex's
+                // `selected` is its *pending grant*, not an acceptance.
+                if left {
+                    let (_, sel) = *ctx.value();
+                    if sel != NONE {
+                        ctx.send(sel, id);
+                    }
+                }
+            }
+            _ => {
+                // Confirm phase sends nothing.
+            }
+        }
     }
 }
 
@@ -194,10 +218,10 @@ mod tests {
     #[test]
     fn all_phases_lwcp_applicable() {
         // Type-1 request-respond: the selected-vertex field makes every
-        // phase state-derivable (paper §4).
+        // phase state-derivable (paper §4) — no responding supersteps.
         let app = BipartiteMatching;
         for s in 1..=8 {
-            assert!(app.lwcp_applicable(s));
+            assert!(!app.responds_at(s));
         }
     }
 }

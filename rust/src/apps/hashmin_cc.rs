@@ -4,7 +4,7 @@
 //! the vertex value.
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, CombineFn, Ctx};
+use crate::pregel::app::{App, CombineFn, EmitCtx, UpdateCtx};
 
 /// Value = (component min-label, changed-this-superstep flag).
 pub type CcValue = (u32, bool);
@@ -32,7 +32,7 @@ impl App for HashMinCc {
         Some(combine_min)
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, CcValue, u32>, msgs: &[u32]) {
+    fn update(&self, ctx: &mut UpdateCtx<'_, CcValue>, msgs: &[u32]) {
         // Equation (2): fold the min of incoming labels into the state.
         if ctx.superstep() > 1 {
             let (cur, _) = *ctx.value();
@@ -43,13 +43,16 @@ impl App for HashMinCc {
                 ctx.set_value((cur, false));
             }
         }
+        ctx.vote_to_halt();
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, CcValue, u32>) {
         // Equation (3): traversal style — send only if the state says the
         // value changed (replay reads the checkpointed flag).
         let (label, changed) = *ctx.value();
         if changed {
             ctx.send_all(label);
         }
-        ctx.vote_to_halt();
     }
 }
 

@@ -16,7 +16,7 @@
 //! after Equation (2)'s mutations.
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, Ctx};
+use crate::pregel::app::{App, EmitCtx, UpdateCtx};
 
 /// Value = (removed, just_removed_this_superstep).
 pub type KcoreValue = (bool, bool);
@@ -37,7 +37,7 @@ impl App for KCore {
         (false, false)
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, KcoreValue, u32>, msgs: &[u32]) {
+    fn update(&self, ctx: &mut UpdateCtx<'_, KcoreValue>, msgs: &[u32]) {
         // Equation (2): apply removal notices, then re-check the degree.
         let (removed, _) = *ctx.value();
         for &gone in msgs {
@@ -49,13 +49,19 @@ impl App for KCore {
         } else {
             ctx.set_value((removed, false));
         }
-        // Equation (3): notify remaining neighbors from state.
+        ctx.vote_to_halt();
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, KcoreValue, u32>) {
+        // Equation (3): notify remaining neighbors from state. Replay
+        // sees the recovered superstep-i adjacency (CP[0] + E_W), so the
+        // notices regenerate against exactly the Γ(v) they were first
+        // sent over.
         let (_, just) = *ctx.value();
         if just {
             let id = ctx.id();
             ctx.send_all(id);
         }
-        ctx.vote_to_halt();
     }
 }
 

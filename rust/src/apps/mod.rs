@@ -1,15 +1,20 @@
 //! Vertex programs (the paper's evaluated algorithms + coverage of all
 //! three algorithm classes of §4).
 //!
+//! Every program is written against the two-phase interface —
+//! `update` folds messages into state, `emit` generates messages from a
+//! read-only state view — so replay safety is checked by the compiler,
+//! not by convention.
+//!
 //! | app | class (§4) | LWCP handling |
 //! |-----|-----------|----------------|
-//! | [`pagerank::PageRank`] | always-active | unmodified compute() |
+//! | [`pagerank::PageRank`] | always-active | emit already reads state only |
 //! | [`hashmin_cc::HashMinCc`] | traversal | `changed` flag in the value |
 //! | [`sssp::Sssp`] | traversal | `changed` flag in the value |
 //! | [`triangle::TriangleCount`] | request–respond (no response msgs) | iterator pair (prev, cur) in the value; appendix algorithm |
 //! | [`kcore::KCore`] | traversal + topology mutation | `just_removed` flag; incremental edge log |
-//! | [`pointer_jump::PointerJump`] | request–respond type 2 | responding supersteps masked |
-//! | [`bipartite::BipartiteMatching`] | request–respond type 1 | 3 of 4 phases masked |
+//! | [`pointer_jump::PointerJump`] | request–respond type 2 | responding supersteps declared via `responds_at` → auto-masked |
+//! | [`bipartite::BipartiteMatching`] | request–respond type 1 | selected-requester field in the value; no masking needed |
 
 pub mod bipartite;
 pub mod hashmin_cc;

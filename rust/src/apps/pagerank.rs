@@ -2,16 +2,17 @@
 //!
 //! Pregel-style unnormalized PageRank: in superstep 1 every vertex
 //! distributes its initial rank; in superstep i > 1 it folds the summed
-//! incoming contributions with the damping factor and redistributes.
-//! `compute()` is *identical* for HWCP and LWCP (the paper's point):
-//! message generation already reads only the vertex state.
+//! incoming contributions with the damping factor ([`App::update`]) and
+//! redistributes ([`App::emit`]). The program is *identical* for HWCP
+//! and LWCP (the paper's point): message generation reads only the
+//! vertex state, which the two-phase trait guarantees by construction.
 //!
 //! The numeric update is also available as an XLA batch path
 //! ([`App::xla_superstep`]): the whole partition's fold runs through the
 //! AOT-compiled `pagerank_step` artifact (JAX/Pallas, Layer 1/2), with
 //! message values computed from the kernel's `contrib` output.
 
-use crate::pregel::app::{App, BatchExec, CombineFn, Ctx};
+use crate::pregel::app::{App, BatchExec, CombineFn, EmitCtx, UpdateCtx};
 use crate::pregel::message::{Inbox, Outbox};
 use crate::pregel::partition::Partition;
 use crate::graph::VertexId;
@@ -58,7 +59,7 @@ impl App for PageRank {
         self.supersteps
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, f32, f32>, msgs: &[f32]) {
+    fn update(&self, ctx: &mut UpdateCtx<'_, f32>, msgs: &[f32]) {
         // Equation (2): fold messages into the state.
         if ctx.superstep() > 1 {
             // With the combiner there is at most one (pre-summed)
@@ -69,15 +70,18 @@ impl App for PageRank {
             ctx.set_value(new);
             ctx.aggregate(0, (new - old).abs() as f64);
         }
-        // Equation (3): generate messages from the state (read back via
-        // value() so replay sees the checkpointed rank).
+        // Always-active: never votes to halt; the job ends at the
+        // superstep budget.
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, f32, f32>) {
+        // Equation (3): generate messages from the state (replay reruns
+        // only this phase against the checkpointed rank).
         let deg = ctx.degree();
         if deg > 0 {
             let share = *ctx.value() / deg as f32;
             ctx.send_all(share);
         }
-        // Always-active: never votes to halt; the job ends at the
-        // superstep budget.
     }
 
     fn supports_xla(&self) -> bool {

@@ -1,10 +1,11 @@
 //! Pointer jumping (path doubling) — the paper's *request–respond type 2*
 //! example (§4): a vertex must answer every requester, and requesters
 //! are not neighbors, so their ids cannot live in a(v). The responding
-//! supersteps are therefore LWCP-**masked** (outgoing messages depend on
-//! the incoming requests); LWCP defers due checkpoints past them and
-//! LWLog temporarily switches to message logging — exactly the paper's
-//! S-V / minimum-spanning-forest scenario.
+//! supersteps are declared via [`App::responds_at`] and implemented in
+//! [`App::respond`] — which statically marks them LWCP-**masked**
+//! (outgoing messages depend on the incoming requests): LWCP defers due
+//! checkpoints past them and LWLog temporarily switches to message
+//! logging — exactly the paper's S-V / minimum-spanning-forest scenario.
 //!
 //! The computation: over the forest `parent(v) = min(v, min Γ(v))`, find
 //! each vertex's root by repeated doubling. Three-superstep rounds:
@@ -13,7 +14,7 @@
 //!   3. apply: v adopts the grandparent; converged when nothing changed.
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, Ctx};
+use crate::pregel::app::{App, EmitCtx, UpdateCtx};
 
 /// Value = (current parent pointer, changed-in-last-round flag).
 pub type PjValue = (u32, bool);
@@ -39,9 +40,11 @@ impl App for PointerJump {
         (p, true)
     }
 
-    /// Responding supersteps (phase 2 of each round) are masked.
-    fn lwcp_applicable(&self, superstep: u64) -> bool {
-        phase(superstep) != 1
+    /// Responding supersteps (phase 2 of each round): implementing this
+    /// hook *is* the LWCP mask — the engine routes these supersteps to
+    /// [`App::respond`] and never attempts state-replay for them.
+    fn responds_at(&self, superstep: u64) -> bool {
+        phase(superstep) == 1
     }
 
     fn halt_on(&self, agg: &crate::pregel::AggState) -> bool {
@@ -49,43 +52,48 @@ impl App for PointerJump {
         agg.slots.len() >= 2 && agg.slots[1] > 0.0 && agg.slots[0] == 0.0
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, PjValue, u32>, msgs: &[u32]) {
-        match phase(ctx.superstep()) {
-            0 => {
-                // Request phase: ask parent for its parent. Roots
-                // (parent == self) have converged locally but keep
-                // participating until the global change count is 0.
-                let (p, _) = *ctx.value();
-                if p != ctx.id() {
-                    ctx.send(p, ctx.id());
+    fn update(&self, ctx: &mut UpdateCtx<'_, PjValue>, msgs: &[u32]) {
+        // Only the apply phase folds messages into state; request and
+        // respond phases leave a(v) untouched.
+        if phase(ctx.superstep()) == 2 {
+            // Apply phase: adopt the grandparent.
+            let (p, _) = *ctx.value();
+            if let Some(&gp) = msgs.first() {
+                let changed = gp != p;
+                ctx.set_value((gp, changed));
+                if changed {
+                    ctx.aggregate(0, 1.0);
                 }
+            } else {
+                ctx.set_value((p, false));
             }
-            1 => {
-                // Respond phase (masked): answer every requester with our
-                // parent pointer. Message content depends on incoming
-                // requests — not derivable from state.
-                let (p, _) = *ctx.value();
-                for &requester in msgs {
-                    ctx.send(requester, p);
-                }
-            }
-            _ => {
-                // Apply phase: adopt the grandparent.
-                let (p, _) = *ctx.value();
-                if let Some(&gp) = msgs.first() {
-                    let changed = gp != p;
-                    ctx.set_value((gp, changed));
-                    if changed {
-                        ctx.aggregate(0, 1.0);
-                    }
-                } else {
-                    ctx.set_value((p, false));
-                }
-                ctx.aggregate(1, 1.0);
-            }
+            ctx.aggregate(1, 1.0);
         }
         // Every phase keeps vertices active until the engine halts the
         // job via halt_on (request-respond needs all vertices awake).
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, PjValue, u32>) {
+        // Request phase: ask parent for its parent. Roots (parent ==
+        // self) have converged locally but keep participating until the
+        // global change count is 0. Apply phases send nothing; respond
+        // phases are served by `respond`.
+        if phase(ctx.superstep()) == 0 {
+            let (p, _) = *ctx.value();
+            if p != ctx.id() {
+                ctx.send(p, ctx.id());
+            }
+        }
+    }
+
+    fn respond(&self, ctx: &mut EmitCtx<'_, PjValue, u32>, msgs: &[u32]) {
+        // Respond phase (masked by construction): answer every requester
+        // with our parent pointer. Message content depends on incoming
+        // requests — not derivable from state.
+        let (p, _) = *ctx.value();
+        for &requester in msgs {
+            ctx.send(requester, p);
+        }
     }
 }
 
@@ -163,9 +171,9 @@ mod tests {
     #[test]
     fn respond_phases_are_masked() {
         let app = PointerJump;
-        assert!(app.lwcp_applicable(1)); // request
-        assert!(!app.lwcp_applicable(2)); // respond
-        assert!(app.lwcp_applicable(3)); // apply
-        assert!(!app.lwcp_applicable(5));
+        assert!(!app.responds_at(1)); // request
+        assert!(app.responds_at(2)); // respond
+        assert!(!app.responds_at(3)); // apply
+        assert!(app.responds_at(5));
     }
 }

@@ -4,7 +4,7 @@
 //! identical messages from state alone.
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, CombineFn, Ctx};
+use crate::pregel::app::{App, CombineFn, EmitCtx, UpdateCtx};
 
 /// Value = (distance, changed flag).
 pub type SsspValue = (f32, bool);
@@ -48,8 +48,9 @@ impl App for Sssp {
         Some(combine_min)
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, SsspValue, f32>, msgs: &[f32]) {
-        // Equation (2): relax.
+    fn update(&self, ctx: &mut UpdateCtx<'_, SsspValue>, msgs: &[f32]) {
+        // Equation (2): relax — the changed flag lives in the value so
+        // emit can decide to propagate from state alone.
         if ctx.superstep() > 1 {
             let (cur, _) = *ctx.value();
             let best = msgs.iter().copied().fold(f32::INFINITY, f32::min);
@@ -59,16 +60,18 @@ impl App for Sssp {
                 ctx.set_value((cur, false));
             }
         }
+        ctx.vote_to_halt();
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, SsspValue, f32>) {
         // Equation (3): propagate from state.
         let (dist, changed) = *ctx.value();
         if changed && dist.is_finite() {
             let id = ctx.id();
-            for i in 0..ctx.degree() {
-                let to = ctx.neighbors()[i];
+            for &to in ctx.neighbors() {
                 ctx.send(to, dist + edge_weight(id, to));
             }
         }
-        ctx.vote_to_halt();
     }
 }
 

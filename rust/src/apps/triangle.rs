@@ -10,14 +10,15 @@
 //! **LWCP integration (the appendix's pitfall):** the pair iterator must
 //! live inside a(v1) so probes can be regenerated from state. We store
 //! *both* the pre-superstep and post-superstep iterator positions
-//! (`prev`, `cur`); message generation walks prev→cur reading only the
-//! state, which is exactly Equation (3) — equivalent to the appendix's
-//! "reverse iterate from a(i) back to a(i-1)", without needing the
-//! reverse walk. Counting supersteps send nothing, so every superstep is
-//! LWCP-applicable.
+//! (`prev`, `cur`); [`App::emit`] walks prev→cur reading only the state,
+//! which is exactly Equation (3) — equivalent to the appendix's "reverse
+//! iterate from a(i) back to a(i-1)", without needing the reverse walk.
+//! Counting supersteps send nothing, so every superstep is
+//! LWCP-applicable. Replay re-runs only `emit`, so it pays one pair walk
+//! instead of the old two (iterator advance + emission).
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, Ctx};
+use crate::pregel::app::{App, EmitCtx, UpdateCtx};
 use crate::util::codec::{Codec, Reader};
 use anyhow::Result;
 
@@ -118,15 +119,15 @@ impl App for TriangleCount {
         TriValue::default()
     }
 
-    fn compute(&self, ctx: &mut Ctx<'_, TriValue, u32>, msgs: &[u32]) {
-        let budget = self.c * ctx.degree().max(1);
+    fn update(&self, ctx: &mut UpdateCtx<'_, TriValue>, msgs: &[u32]) {
         let odd = ctx.superstep() % 2 == 1;
+        let v = *ctx.value();
         if odd {
             // Equation (2): advance the iterator (state update only —
             // the paper's "first iterate forward updating the iterators
             // in a(v1) without generating messages").
-            let v = *ctx.value();
             if !v.done {
+                let budget = self.c * ctx.degree().max(1);
                 let (cur, done) = walk_pairs(ctx.id(), ctx.neighbors(), v.cur, budget, |_, _| {});
                 ctx.set_value(TriValue { count: v.count, prev: v.cur, cur, done });
             } else if v.prev != v.cur {
@@ -134,29 +135,8 @@ impl App for TriangleCount {
                 // not re-emit the final round's probes.
                 ctx.set_value(TriValue { prev: v.cur, ..v });
             }
-            // Equation (3): emit probes purely from state. Walking from
-            // `prev` with the same budget deterministically reproduces
-            // the prev→cur window — in replay this reads the
-            // checkpointed iterators and regenerates the identical
-            // probe set (the appendix's reverse-iterate requirement,
-            // satisfied by storing both iterator positions).
-            let v = *ctx.value();
-            if v.prev != v.cur {
-                let id = ctx.id();
-                let mut probes: Vec<(VertexId, u32)> = Vec::new();
-                walk_pairs(id, ctx.neighbors(), v.prev, budget, |v2, v3| {
-                    probes.push((v2, v3));
-                });
-                for (v2, v3) in probes {
-                    ctx.send(v2, v3);
-                }
-            }
-            if v.done {
-                ctx.vote_to_halt();
-            }
         } else {
             // Counting superstep: membership probes, no messages out.
-            let v = *ctx.value();
             let mut hits = 0u64;
             for &v3 in msgs {
                 if ctx.neighbors().binary_search(&v3).is_ok() {
@@ -167,8 +147,32 @@ impl App for TriangleCount {
                 ctx.aggregate(0, hits as f64);
                 ctx.set_value(TriValue { count: v.count + hits, ..v });
             }
-            if v.done {
-                ctx.vote_to_halt();
+        }
+        // The *post-update* iterator state decides the halt vote: a
+        // vertex whose walk just exhausted halts now (probes addressed
+        // to it keep reactivating it for the counting supersteps).
+        if ctx.value().done {
+            ctx.vote_to_halt();
+        }
+    }
+
+    fn emit(&self, ctx: &mut EmitCtx<'_, TriValue, u32>) {
+        // Equation (3): emit probes purely from state. Walking from
+        // `prev` with the same budget deterministically reproduces the
+        // prev→cur window — in replay this reads the checkpointed
+        // iterators and regenerates the identical probe set (the
+        // appendix's reverse-iterate requirement, satisfied by storing
+        // both iterator positions). Counting (even) supersteps send
+        // nothing: their window is collapsed.
+        if ctx.superstep() % 2 == 1 {
+            let v = *ctx.value();
+            if v.prev != v.cur {
+                let budget = self.c * ctx.degree().max(1);
+                let id = ctx.id();
+                let neighbors = ctx.neighbors();
+                walk_pairs(id, neighbors, v.prev, budget, |v2, v3| {
+                    ctx.send(v2, v3);
+                });
             }
         }
     }

@@ -8,7 +8,7 @@
 //!          [--machines 15] [--workers-per-machine 8]
 //!          [--ft none|hwcp|lwcp|hwlog|lwlog] [--cp-every 10]
 //!          [--cp-every-secs 60] [--data-scale 1.0]
-//!          [--kill STEP:N]... [--seed 1] [--supersteps 30]
+//!          [--kill STEP:N]... [--kill-during-cp] [--seed 1] [--supersteps 30]
 //!          [--xla] [--disk] [--profile pregel+|giraph|graphlab|graphx|shen]
 //!          [--threads 0]   (engine pool size; 0 = auto, 1 = sequential)
 //! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
@@ -148,6 +148,7 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
             at_step: step.parse()?,
             ranks: (1..=count.parse::<usize>()?).collect(),
             machine_fails: f.has("machine-fails"),
+            during_cp: f.has("kill-during-cp"),
         });
     }
     Ok(JobSpec {

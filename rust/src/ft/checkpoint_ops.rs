@@ -61,11 +61,13 @@ impl<A: App> Engine<A> {
     /// Checkpoint-condition check after a fully-committed superstep:
     /// every δ supersteps, deferring past LWCP-masked supersteps (the
     /// deferred checkpoint lands on the first applicable superstep).
-    pub(crate) fn maybe_checkpoint(&mut self, step: u64) -> Result<()> {
+    /// Returns `Some(resume_step)` if a failure was injected during the
+    /// checkpoint write and recovery rolled the main loop back.
+    pub(crate) fn maybe_checkpoint(&mut self, step: u64) -> Result<Option<u64>> {
         if self.cfg.ft == FtKind::None
             || (self.cfg.cp_every == 0 && self.cfg.cp_every_secs.is_none())
         {
-            return Ok(());
+            return Ok(None);
         }
         let step_due = self.cfg.cp_every > 0 && step % self.cfg.cp_every == 0;
         // Time-interval condition (paper §4): the master compares the
@@ -76,7 +78,7 @@ impl<A: App> Engine<A> {
             .is_some_and(|dt| self.max_clock() - self.cp_last_time >= dt);
         let due = self.cp_pending || step_due || time_due;
         if !due {
-            return Ok(());
+            return Ok(None);
         }
         // Never checkpoint a recovery superstep: survivors are already
         // past it (their states would corrupt CP[step]) and the GC that
@@ -85,32 +87,47 @@ impl<A: App> Engine<A> {
         // is globally fully committed by every worker.
         if matches!(self.stage, crate::pregel::engine::Stage::Recovering { .. }) {
             self.cp_pending = true;
-            return Ok(());
+            return Ok(None);
         }
         if self.cfg.ft.respects_mask() && self.masked_steps.contains(&step) {
             self.cp_pending = true;
-            return Ok(());
+            return Ok(None);
         }
-        self.write_checkpoint(step)?;
-        self.cp_pending = false;
-        Ok(())
+        let resumed = self.write_checkpoint(step)?;
+        if resumed.is_none() {
+            self.cp_pending = false;
+        }
+        Ok(resumed)
     }
 
     /// Write CP[step] (content per algorithm), commit it, delete the
     /// previous checkpoint, then garbage-collect local logs. The whole
     /// window is the paper's T_cp. Encoding, HDFS I/O and GC all fan
     /// out per worker on the pool.
-    pub(crate) fn write_checkpoint(&mut self, step: u64) -> Result<()> {
+    ///
+    /// The commit barrier sits between the per-worker blob puts and the
+    /// meta write / previous-checkpoint deletion: until every worker has
+    /// fully written its blob, `cp_last` (and the old checkpoint's data)
+    /// stay untouched, so a failure mid-write leaves the half-written
+    /// CP\[step\] invisible and recovery selects CP\[i-1\]. Returns
+    /// `Some(resume_step)` when such a failure was injected.
+    pub(crate) fn write_checkpoint(&mut self, step: u64) -> Result<Option<u64>> {
         let t0 = self.barrier(0.0);
         let wall = std::time::Instant::now();
         let heavy = self.cfg.ft.heavyweight_cp();
         let alive = self.ws.alive_ranks();
         let sharers = self.sharers_by_rank();
         let hdfs = Arc::clone(&self.hdfs);
+        // Per-rank E_W increments, transmitted pre-commit but made
+        // visible (appended + buffer drained) only at commit: an aborted
+        // checkpoint must leave both E_W and the local mutation buffers
+        // exactly as they were, or a later commit would miss or
+        // double-apply mutations.
+        let mut ew_incs: Vec<(usize, Vec<u8>)> = Vec::new();
         {
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &alive);
-            let results = self.pool.map(refs, |(r, w)| -> Result<PhaseCost> {
+            let results = self.pool.map(refs, |(r, w)| -> Result<(usize, PhaseCost, Vec<u8>)> {
                 let blob = if heavy {
                     HwCp {
                         states: w.part.states(),
@@ -122,26 +139,39 @@ impl<A: App> Engine<A> {
                     w.part.states().to_bytes()
                 };
                 let mut total = hdfs.put(&cp_key(step, r), &blob)?;
-                // Incremental edge log: lightweight checkpoints append
-                // the buffered mutation requests to E_W; heavyweight
+                // Incremental edge log: lightweight checkpoints ship the
+                // buffered mutation requests for E_W; heavyweight
                 // checkpoints store the full adjacency, so the buffer is
-                // just discarded.
-                let drained = w.log.drain_mutations();
-                if !heavy && !drained.is_empty() {
-                    let mut inc = Vec::new();
-                    for (_, seg) in drained {
+                // simply discarded at commit.
+                let mut inc = Vec::new();
+                if !heavy {
+                    for (_, seg) in w.log.mutations_through(step) {
                         inc.extend_from_slice(&seg);
                     }
-                    total += hdfs.append(&ew_key(r), &inc)?;
+                    total += inc.len() as u64;
                 }
                 let t = cost.hdfs_write_time(total, sharers[r]);
                 w.clock.advance(t);
-                Ok(PhaseCost { checkpoint_bytes: total, ..Default::default() })
+                Ok((r, PhaseCost { checkpoint_bytes: total, ..Default::default() }, inc))
             });
-            for pc in results {
-                pc?.merge_into(&mut self.metrics.bytes);
+            for res in results {
+                let (r, pc, inc) = res?;
+                pc.merge_into(&mut self.metrics.bytes);
+                ew_incs.push((r, inc));
             }
         }
+        // ---- failure injection point (mid-checkpoint-write) ----
+        // The kill strikes after (some) workers put their blobs but
+        // before the commit: no meta is written, `cp_last` is not
+        // advanced, the previous checkpoint is not deleted. Recovery
+        // below therefore rolls back to CP[cp_last] — the half-written
+        // CP[step] is never observable.
+        if let Some(kidx) = self.due_kill(step, true) {
+            self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+            let next = self.perform_failure(step, kidx)?;
+            return Ok(Some(next));
+        }
+
         // Commit barrier: the previous checkpoint stays valid until every
         // worker has fully written the new one.
         self.barrier(self.cfg.cost.barrier_overhead);
@@ -153,6 +183,15 @@ impl<A: App> Engine<A> {
             sent_msgs: g.sent_msgs,
         };
         self.hdfs.put(&cp_meta_key(step), &meta.to_bytes())?;
+        // The commit makes the staged E_W increments visible and empties
+        // the local mutation buffers (heavyweight checkpoints discard
+        // them — the full adjacency was just stored).
+        for (r, inc) in ew_incs {
+            if !inc.is_empty() {
+                self.hdfs.append(&ew_key(r), &inc)?;
+            }
+            self.workers[r].log.clear_mutations();
+        }
 
         // Delete the previous checkpoint. Lightweight algorithms must
         // keep CP[0]: it is the edge source for every later recovery.
@@ -194,7 +233,7 @@ impl<A: App> Engine<A> {
         self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
         self.cp_last = step;
         self.cp_last_time = t1;
-        Ok(())
+        Ok(None)
     }
 
     /// Record a CpStep-stage metric sample (used by recovery_ops).

@@ -231,11 +231,7 @@ impl<A: App> Engine<A> {
         if cp_step == 0 {
             return Ok(()); // no messages precede superstep 1
         }
-        let agg_prev: Vec<f64> = self
-            .agg_log
-            .get(&(cp_step - 1))
-            .map(|a| a.slots.clone())
-            .unwrap_or_default();
+        let agg_prev = self.agg_prev_for(cp_step);
         let app = Arc::clone(&self.app);
         let refs = executor::select_workers(&mut self.workers, &alive);
         let mut batches = executor::replay_phase(
@@ -293,11 +289,7 @@ impl<A: App> Engine<A> {
         if cp_step == 0 {
             return Ok(());
         }
-        let agg_prev: Vec<f64> = self
-            .agg_log
-            .get(&(cp_step - 1))
-            .map(|a| a.slots.clone())
-            .unwrap_or_default();
+        let agg_prev = self.agg_prev_for(cp_step);
         let dests: Vec<usize> = respawned_v.clone();
         // Respawned workers regenerate their own checkpointed-superstep
         // messages (only the segments destined to recovering workers).

@@ -1,31 +1,55 @@
-//! The vertex-centric programming interface.
+//! The vertex-centric programming interface: a **two-phase** vertex
+//! program whose replay safety is enforced by the type system.
+//!
+//! ### The LWCP contract (paper §4, Equations (2)/(3))
+//!
+//! Lightweight checkpointing rests on one property of the vertex UDF:
+//! outgoing messages must be derivable from vertex state alone, so the
+//! engine can *regenerate* them after a failure instead of checkpointing
+//! or logging them. The trait encodes that contract structurally:
+//!
+//! 1. [`App::update`] — Equation (2): fold the incoming messages into
+//!    the vertex state through [`UpdateCtx`] (state writes, halt votes,
+//!    aggregation, edge mutations). It cannot send.
+//! 2. [`App::emit`] — Equation (3): generate outgoing messages through
+//!    [`EmitCtx`], a **read-only view** of the vertex state. It cannot
+//!    write state, mutate topology, or aggregate.
+//!
+//! After a failure the engine replays a committed superstep by calling
+//! **only `emit`** against the recovered states ("transparent message
+//! generation", §4). Because `EmitCtx` hands out no `&mut` access to
+//! values, active flags, adjacency, or aggregators, a UDF that would
+//! corrupt recovery — e.g. by caching a phase-1 local or mutating state
+//! during message generation — simply does not compile. The earlier
+//! design enforced this by convention only: one monolithic `compute`
+//! plus a hidden replay flag that silently ignored every state write.
+//!
+//! ### Request–respond supersteps ([`App::respond`])
+//!
+//! Some supersteps cannot obey the contract: a *responding* superstep of
+//! a request–respond algorithm (pointer jumping, S-V, MSF) must answer
+//! the requesters named in its incoming messages, so its outgoing
+//! messages are not a function of state. Declare those supersteps with
+//! [`App::responds_at`]; the engine then calls [`App::respond`] (which
+//! receives the messages) instead of `emit`, and the superstep is
+//! **automatically LWCP-masked**: LWCP defers due checkpoints past it
+//! and LWLog falls back to message logging for it. There is no manual
+//! mask to forget — implementing the hook *is* the mask.
 
 use super::message::Outbox;
 use super::partition::Partition;
-use crate::graph::{Mutation, VertexId};
+use crate::graph::{Adjacency, Mutation, VertexId};
 use crate::util::codec::Codec;
 use anyhow::Result;
 
 /// Sender-side message combiner (fold `m` into `acc`).
 pub type CombineFn<M> = fn(&mut M, &M);
 
-/// A vertex program.
-///
-/// ### The LWCP contract (paper §4, Equations (2)/(3))
-///
-/// `compute` must be written in two phases:
-/// 1. fold the incoming messages into the vertex state using
-///    [`Ctx::set_value`] (and [`Ctx::vote_to_halt`]);
-/// 2. generate outgoing messages **reading the state back through
-///    [`Ctx::value`]** — never from locals computed in phase 1.
-///
-/// The engine regenerates messages after a failure by calling `compute`
-/// in *replay mode*: state writes are ignored, so phase 2 sees exactly
-/// the checkpointed state. Supersteps whose messages cannot be derived
-/// from state alone (e.g. responding supersteps of request–respond
-/// algorithms) must be masked via [`Ctx::mask_lwcp`] or
-/// [`App::lwcp_applicable`]; LWCP skips checkpointing them and LWLog
-/// falls back to message logging for them.
+/// A vertex program, written as two typed phases (see the module docs):
+/// [`App::update`] folds messages into state, [`App::emit`] generates
+/// messages from state through a read-only view, and the optional
+/// [`App::respond`] hook serves message-dependent (LWCP-masked)
+/// supersteps.
 pub trait App: Send + Sync + 'static {
     /// Vertex value type a(v).
     type V: Clone + Codec + Send + Sync + std::fmt::Debug;
@@ -45,18 +69,46 @@ pub trait App: Send + Sync + 'static {
         true
     }
 
-    /// The vertex UDF.
-    fn compute(&self, ctx: &mut Ctx<'_, Self::V, Self::M>, msgs: &[Self::M]);
+    /// Equation (2): fold the incoming messages into the vertex state.
+    /// This is the only phase that may write state — update a(v), vote
+    /// to halt, contribute to aggregators, mutate edges.
+    fn update(&self, ctx: &mut UpdateCtx<'_, Self::V>, msgs: &[Self::M]);
+
+    /// Equation (3): generate outgoing messages **from state alone**.
+    /// [`EmitCtx`] is a read-only view of the vertex, so this phase is
+    /// replay-safe by construction; the engine re-invokes it against
+    /// checkpointed or logged states to regenerate a committed
+    /// superstep's messages during recovery.
+    fn emit(&self, ctx: &mut EmitCtx<'_, Self::V, Self::M>);
+
+    /// Which supersteps are *responding* supersteps, i.e. their outgoing
+    /// messages depend on the incoming ones and cannot be regenerated
+    /// from state (the paper's `LWCPable()` UDF, inverted). On these
+    /// supersteps the engine calls [`App::respond`] instead of
+    /// [`App::emit`] and marks the superstep LWCP-masked.
+    fn responds_at(&self, _superstep: u64) -> bool {
+        false
+    }
+
+    /// Message-dependent message generation, called instead of
+    /// [`App::emit`] on supersteps declared by [`App::responds_at`].
+    /// Runs after [`App::update`], so state reads see the folded state.
+    ///
+    /// The default body panics: it is only ever invoked on supersteps
+    /// where `responds_at` returned true, so reaching it means the app
+    /// declared responding supersteps without implementing the hook —
+    /// a bug that would otherwise silently drop every response. (The
+    /// converse — overriding `respond` without `responds_at` — cannot
+    /// be detected; the hook is simply never called.)
+    fn respond(&self, _ctx: &mut EmitCtx<'_, Self::V, Self::M>, _msgs: &[Self::M]) {
+        unimplemented!(
+            "responds_at() declared a responding superstep but respond() is not implemented"
+        )
+    }
 
     /// Optional message combiner.
     fn combiner(&self) -> Option<CombineFn<Self::M>> {
         None
-    }
-
-    /// Global LWCP mask: return false for supersteps where outgoing
-    /// messages depend on incoming ones (the paper's `LWCPable()` UDF).
-    fn lwcp_applicable(&self, _superstep: u64) -> bool {
-        true
     }
 
     /// Upper bound on supersteps (PageRank runs a fixed number).
@@ -78,8 +130,8 @@ pub trait App: Send + Sync + 'static {
     /// The XLA batch superstep: perform the whole per-partition update
     /// (value fold + message generation + aggregation) using `exec` for
     /// the numeric kernel. Must produce results identical to the scalar
-    /// path. Only called when `supports_xla()` and an executor is
-    /// configured.
+    /// two-phase path. Only called when `supports_xla()` and an executor
+    /// is configured.
     fn xla_superstep(
         &self,
         _exec: &dyn BatchExec,
@@ -115,23 +167,36 @@ impl BatchExec for NoXla {
     }
 }
 
-/// Per-vertex view handed to [`App::compute`].
-pub struct Ctx<'a, V, M: Codec + Clone> {
+/// Shared range-check policy for the `agg_prev` accessors of both ctx
+/// types: debug builds panic on a slot index outside the app's declared
+/// [`App::agg_slots`] range so app bugs surface in tests; release
+/// builds return 0.0 (the value every slot holds before the first
+/// contribution).
+fn agg_prev_checked(agg_prev: &[f64], slot: usize) -> f64 {
+    debug_assert!(
+        slot < agg_prev.len(),
+        "aggregator slot {slot} out of range ({} slots declared by agg_slots())",
+        agg_prev.len()
+    );
+    agg_prev.get(slot).copied().unwrap_or(0.0)
+}
+
+/// Per-vertex **state-fold** view handed to [`App::update`] — the only
+/// context with write access to the vertex (Equation (2) of the paper).
+/// It deliberately cannot send messages: message generation lives in
+/// [`App::emit`] / [`App::respond`] via [`EmitCtx`].
+pub struct UpdateCtx<'a, V> {
     pub(crate) id: VertexId,
     pub(crate) slot: usize,
     pub(crate) superstep: u64,
     pub(crate) n_vertices: usize,
-    /// Replay mode: state writes ignored (transparent message generation).
-    pub(crate) replay: bool,
     pub(crate) part: &'a mut Partition<V>,
-    pub(crate) out: &'a mut Outbox<M>,
     pub(crate) agg: &'a mut [f64],
     pub(crate) agg_prev: &'a [f64],
     pub(crate) mutations: &'a mut Vec<Mutation>,
-    pub(crate) lwcp_mask: &'a mut bool,
 }
 
-impl<'a, V: Clone, M: Codec + Clone> Ctx<'a, V, M> {
+impl<'a, V: Clone> UpdateCtx<'a, V> {
     /// This vertex's id.
     pub fn id(&self) -> VertexId {
         self.id
@@ -147,18 +212,14 @@ impl<'a, V: Clone, M: Codec + Clone> Ctx<'a, V, M> {
         self.n_vertices
     }
 
-    /// Current vertex value a(v). After `set_value` this reads the new
-    /// value in normal mode and the checkpointed value in replay mode —
-    /// the heart of the LWCP contract.
+    /// Current vertex value a(v).
     pub fn value(&self) -> &V {
         &self.part.values[self.slot]
     }
 
-    /// Update a(v). Ignored in replay mode.
+    /// Update a(v).
     pub fn set_value(&mut self, v: V) {
-        if !self.replay {
-            self.part.values[self.slot] = v;
-        }
+        self.part.values[self.slot] = v;
     }
 
     /// Γ(v): this vertex's (out-)neighbors.
@@ -171,6 +232,106 @@ impl<'a, V: Clone, M: Codec + Clone> Ctx<'a, V, M> {
         self.part.adj.degree(self.slot)
     }
 
+    /// Deactivate this vertex (it reactivates on message receipt).
+    pub fn vote_to_halt(&mut self) {
+        self.part.active[self.slot] = false;
+    }
+
+    /// Add an out-edge v→`dst` (applied immediately; logged for
+    /// incremental checkpointing).
+    pub fn add_edge(&mut self, dst: VertexId) {
+        self.part.adj.add_edge(self.slot, dst);
+        self.mutations.push(Mutation::AddEdge { src: self.id, dst });
+    }
+
+    /// Delete the out-edge v→`dst`.
+    pub fn del_edge(&mut self, dst: VertexId) {
+        self.part.adj.del_edge(self.slot, dst);
+        self.mutations.push(Mutation::DelEdge { src: self.id, dst });
+    }
+
+    /// Contribute to aggregator `slot`.
+    pub fn aggregate(&mut self, slot: usize, val: f64) {
+        debug_assert!(
+            slot < self.agg.len(),
+            "aggregator slot {slot} out of range ({} slots declared by agg_slots())",
+            self.agg.len()
+        );
+        self.agg[slot] += val;
+    }
+
+    /// Global aggregator value of the previous superstep. Debug builds
+    /// panic on an out-of-range slot index (see `agg_prev_checked`).
+    pub fn agg_prev(&self, slot: usize) -> f64 {
+        agg_prev_checked(self.agg_prev, slot)
+    }
+}
+
+/// Per-vertex **message-generation** view handed to [`App::emit`] and
+/// [`App::respond`] — a read-only view of the vertex state plus the
+/// outbox (Equation (3) of the paper).
+///
+/// The replay-safety guarantee lives in this type: it holds only shared
+/// references to vertex values, adjacency, and the previous aggregator,
+/// and exposes no way to write state, vote, mutate topology, or
+/// aggregate. The engine can therefore re-invoke `emit` against
+/// checkpointed or logged states during recovery and *prove* the states
+/// come back untouched — no runtime replay flag needed.
+pub struct EmitCtx<'a, V, M: Codec + Clone> {
+    pub(crate) id: VertexId,
+    pub(crate) slot: usize,
+    pub(crate) superstep: u64,
+    pub(crate) n_vertices: usize,
+    pub(crate) values: &'a [V],
+    pub(crate) adj: &'a Adjacency,
+    pub(crate) agg_prev: &'a [f64],
+    pub(crate) out: &'a mut Outbox<M>,
+}
+
+impl<'a, V: Clone, M: Codec + Clone> EmitCtx<'a, V, M> {
+    /// This vertex's id.
+    pub fn id(&self) -> VertexId {
+        self.id
+    }
+
+    /// Current superstep number (1-based).
+    pub fn superstep(&self) -> u64 {
+        self.superstep
+    }
+
+    /// |V| of the whole graph.
+    pub fn num_vertices(&self) -> usize {
+        self.n_vertices
+    }
+
+    /// The vertex value a(v) *after* [`App::update`] — during replay,
+    /// the recovered (checkpointed or logged) value, which is the same
+    /// thing: that equality is the LWCP contract.
+    ///
+    /// The `'a` lifetime outlives the `&self` borrow, so the value can
+    /// be held across [`EmitCtx::send`] calls.
+    pub fn value(&self) -> &'a V {
+        &self.values[self.slot]
+    }
+
+    /// Γ(v): this vertex's (out-)neighbors. Borrows for `'a` (not from
+    /// `&self`), so iterating neighbors while sending compiles without
+    /// an intermediate copy.
+    pub fn neighbors(&self) -> &'a [VertexId] {
+        self.adj.neighbors(self.slot)
+    }
+
+    /// |Γ(v)|.
+    pub fn degree(&self) -> usize {
+        self.adj.degree(self.slot)
+    }
+
+    /// Global aggregator value of the previous superstep. Debug builds
+    /// panic on an out-of-range slot index (see `agg_prev_checked`).
+    pub fn agg_prev(&self, slot: usize) -> f64 {
+        agg_prev_checked(self.agg_prev, slot)
+    }
+
     /// Send a message to vertex `to` (delivered next superstep).
     pub fn send(&mut self, to: VertexId, m: M) {
         self.out.send(to, m);
@@ -178,63 +339,122 @@ impl<'a, V: Clone, M: Codec + Clone> Ctx<'a, V, M> {
 
     /// Send `m` to every neighbor.
     pub fn send_all(&mut self, m: M) {
-        // Disjoint field reborrows: adjacency read-only, outbox mutable.
-        let adj = &self.part.adj;
+        let adj = self.adj;
         let out = &mut *self.out;
         for &to in adj.neighbors(self.slot) {
             out.send(to, m.clone());
         }
     }
+}
 
-    /// Deactivate this vertex (it reactivates on message receipt).
-    /// Ignored in replay mode.
-    pub fn vote_to_halt(&mut self) {
-        if !self.replay {
-            self.part.active[self.slot] = false;
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Partitioner;
+
+    fn tiny_partition() -> Partition<f32> {
+        let part = Partitioner::new(1, 2);
+        Partition {
+            rank: 0,
+            partitioner: part,
+            values: vec![1.0, 2.0],
+            active: vec![true, true],
+            comp: vec![false, false],
+            adj: Adjacency::from_lists(&[vec![1], vec![0]]),
         }
     }
 
-    /// Add an out-edge v→`dst` (applied immediately; logged for
-    /// incremental checkpointing). Ignored in replay mode.
-    pub fn add_edge(&mut self, dst: VertexId) {
-        if !self.replay {
-            self.part.adj.add_edge(self.slot, dst);
-            self.mutations.push(Mutation::AddEdge { src: self.id, dst });
+    #[test]
+    fn update_ctx_reads_and_writes_state() {
+        let mut p = tiny_partition();
+        let mut agg = vec![0.0f64];
+        let agg_prev = vec![0.5f64];
+        let mut muts = Vec::new();
+        let mut ctx = UpdateCtx {
+            id: 0,
+            slot: 0,
+            superstep: 3,
+            n_vertices: 2,
+            part: &mut p,
+            agg: &mut agg,
+            agg_prev: &agg_prev,
+            mutations: &mut muts,
+        };
+        assert_eq!(*ctx.value(), 1.0);
+        assert_eq!(ctx.agg_prev(0), 0.5);
+        ctx.set_value(9.0);
+        ctx.aggregate(0, 2.0);
+        ctx.vote_to_halt();
+        assert_eq!(*ctx.value(), 9.0);
+        drop(ctx);
+        assert_eq!(p.values[0], 9.0);
+        assert!(!p.active[0]);
+        assert_eq!(agg[0], 2.0);
+    }
+
+    #[test]
+    fn emit_ctx_neighbors_outlive_the_send_borrow() {
+        let p = tiny_partition();
+        let mut out = Outbox::<f32>::new(p.partitioner, None);
+        let agg_prev: Vec<f64> = vec![0.0];
+        let mut ctx = EmitCtx {
+            id: 0,
+            slot: 0,
+            superstep: 3,
+            n_vertices: 2,
+            values: &p.values,
+            adj: &p.adj,
+            agg_prev: &agg_prev,
+            out: &mut out,
+        };
+        // The whole point of the `'a` accessors: hold neighbors/value
+        // across mutable sends.
+        let ns = ctx.neighbors();
+        let v = ctx.value();
+        for &to in ns {
+            ctx.send(to, *v);
         }
+        assert_eq!(out.raw_count(), 1);
     }
 
-    /// Delete the out-edge v→`dst`. Ignored in replay mode.
-    pub fn del_edge(&mut self, dst: VertexId) {
-        if !self.replay {
-            self.part.adj.del_edge(self.slot, dst);
-            self.mutations.push(Mutation::DelEdge { src: self.id, dst });
-        }
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "aggregator slot")]
+    fn update_ctx_agg_prev_panics_on_bad_slot_in_debug() {
+        let mut p = tiny_partition();
+        let mut agg = vec![0.0f64];
+        let agg_prev = vec![0.0f64]; // one declared slot
+        let mut muts = Vec::new();
+        let ctx = UpdateCtx {
+            id: 0,
+            slot: 0,
+            superstep: 1,
+            n_vertices: 2,
+            part: &mut p,
+            agg: &mut agg,
+            agg_prev: &agg_prev,
+            mutations: &mut muts,
+        };
+        let _ = ctx.agg_prev(7); // out of range: must panic, not yield 0.0
     }
 
-    /// Contribute to aggregator `slot`. Ignored in replay mode.
-    pub fn aggregate(&mut self, slot: usize, val: f64) {
-        if !self.replay {
-            self.agg[slot] += val;
-        }
-    }
-
-    /// Global aggregator value of the previous superstep.
-    pub fn agg_prev(&self, slot: usize) -> f64 {
-        self.agg_prev.get(slot).copied().unwrap_or(0.0)
-    }
-
-    /// Mark the current superstep LWCP-inapplicable (paper §4: masking).
-    /// Ignored in replay mode (replay never checkpoints).
-    pub fn mask_lwcp(&mut self) {
-        if !self.replay {
-            *self.lwcp_mask = true;
-        }
-    }
-
-    /// Is this a replay (message-regeneration) call? Exposed for apps
-    /// with reverse-iteration replay logic (the paper's appendix
-    /// triangle algorithm).
-    pub fn is_replay(&self) -> bool {
-        self.replay
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "aggregator slot")]
+    fn emit_ctx_agg_prev_panics_on_bad_slot_in_debug() {
+        let p = tiny_partition();
+        let mut out = Outbox::<f32>::new(p.partitioner, None);
+        let agg_prev: Vec<f64> = vec![0.0];
+        let ctx = EmitCtx {
+            id: 0,
+            slot: 0,
+            superstep: 1,
+            n_vertices: 2,
+            values: &p.values,
+            adj: &p.adj,
+            agg_prev: &agg_prev,
+            out: &mut out,
+        };
+        let _ = ctx.agg_prev(3);
     }
 }

@@ -55,6 +55,12 @@ pub struct Kill {
     /// Whether the hosting machine is considered crashed (replacements
     /// then avoid it).
     pub machine_fails: bool,
+    /// Fire *during the checkpoint write* of `at_step` (after the
+    /// per-worker blob puts, before the commit) instead of at the
+    /// superstep's communication point. Exercises the commit barrier:
+    /// the half-written CP\[at_step\] must stay invisible and recovery
+    /// must select the previous committed checkpoint.
+    pub during_cp: bool,
 }
 
 /// The failure schedule of a run.
@@ -74,7 +80,12 @@ impl FailurePlan {
     /// master).
     pub fn kill_n_at(n: usize, step: u64) -> Self {
         FailurePlan {
-            kills: vec![Kill { at_step: step, ranks: (1..=n).collect(), machine_fails: false }],
+            kills: vec![Kill {
+                at_step: step,
+                ranks: (1..=n).collect(),
+                machine_fails: false,
+                during_cp: false,
+            }],
         }
     }
 }
@@ -289,10 +300,30 @@ impl<A: App> Engine<A> {
                 g.job_done() || self.app.halt_on(g)
             };
             if done {
-                break;
+                break; // unfired during-cp kills are caught below
             }
-            self.maybe_checkpoint(step)?;
+            // A failure injected *during* the checkpoint write rolls the
+            // loop back exactly like a mid-communication one.
+            if let Some(next) = self.maybe_checkpoint(step)? {
+                step = next;
+                continue;
+            }
+            // A during-cp kill scheduled here but still pending means no
+            // checkpoint write happened at this step (not due, deferred
+            // past a masked superstep, or checkpointing disabled): fail
+            // loudly rather than silently skip it and every later kill.
+            self.ensure_no_pending_during_cp_kill(step)?;
             step += 1;
+        }
+        // Communication kills scheduled past the job's end are tolerated
+        // (randomized failure plans rely on it), but a during-cp kill
+        // exists only to probe the checkpoint commit barrier — leaving
+        // one unfired means the experiment silently measured nothing.
+        if self.failure_plan.kills[self.next_kill..].iter().any(|k| k.during_cp) {
+            bail!(
+                "failure plan has an unfired during-cp kill: the job ended before \
+                 its checkpoint write (check at_step vs job length and cp_every)"
+            );
         }
         self.metrics.final_time = self.max_clock();
         self.metrics.supersteps_run = self.metrics.steps.len() as u64;
@@ -358,10 +389,43 @@ impl<A: App> Engine<A> {
         self.cp_last
     }
 
-    /// Does a kill fire at this step?
-    fn due_kill(&self, step: u64) -> Option<usize> {
+    /// Does a kill fire at this step and injection point? Communication
+    /// kills (`during_cp == false`) fire between the logging and shuffle
+    /// phases; checkpoint kills fire inside `write_checkpoint`, after
+    /// the blob puts but before the commit.
+    pub(crate) fn due_kill(&self, step: u64, during_cp: bool) -> Option<usize> {
         let k = self.failure_plan.kills.get(self.next_kill)?;
-        (k.at_step == step).then_some(self.next_kill)
+        (k.at_step == step && k.during_cp == during_cp).then_some(self.next_kill)
+    }
+
+    /// Error out if a during-cp kill was scheduled at `step` but no
+    /// checkpoint write happened there to host it (not due, deferred
+    /// past a masked superstep, checkpointing disabled, or the job
+    /// ended at `step`).
+    fn ensure_no_pending_during_cp_kill(&self, step: u64) -> Result<()> {
+        if self.due_kill(step, true).is_some() {
+            bail!(
+                "during-cp kill scheduled at superstep {step}, but no checkpoint \
+                 was written there (check cp_every/ft/masking)"
+            );
+        }
+        Ok(())
+    }
+
+    /// The previous superstep's globally-committed aggregator slots,
+    /// padded to the app's declared [`App::agg_slots`] width so the ctx
+    /// accessors can range-check slot indices (before superstep 1 no
+    /// AggState exists and every slot reads 0.0).
+    pub(crate) fn agg_prev_for(&self, step: u64) -> Vec<f64> {
+        let mut slots = self
+            .agg_log
+            .get(&(step - 1))
+            .map(|a| a.slots.clone())
+            .unwrap_or_default();
+        if slots.len() < self.app.agg_slots() {
+            slots.resize(self.app.agg_slots(), 0.0);
+        }
+        slots
     }
 
     // ---------------------------------------------------------------
@@ -386,11 +450,7 @@ impl<A: App> Engine<A> {
                 bail!("worker {r} at s(W)={} cannot reach superstep {step}", self.workers[r].s_w);
             }
         }
-        let agg_prev: Vec<f64> = self
-            .agg_log
-            .get(&(step - 1))
-            .map(|a| a.slots.clone())
-            .unwrap_or_default();
+        let agg_prev = self.agg_prev_for(step);
 
         // ---- compute phase (partial commit) ----
         // Workers are independent within a superstep: the phase fans out
@@ -416,8 +476,10 @@ impl<A: App> Engine<A> {
         }
         self.metrics.phase_wall.compute += ms_since(wall);
 
-        let masked = outputs.iter().any(|(_, o, _)| o.lwcp_masked)
-            || !self.app.lwcp_applicable(step);
+        // Responding supersteps are LWCP-masked by construction: the
+        // respond hook statically declares that messages depend on
+        // messages (no manual per-vertex mask to forget).
+        let masked = self.app.responds_at(step);
         if masked {
             self.masked_steps.insert(step);
         }
@@ -468,7 +530,7 @@ impl<A: App> Engine<A> {
         self.metrics.phase_wall.logging += ms_since(wall);
 
         // ---- failure injection point (mid-communication) ----
-        if let Some(kidx) = self.due_kill(step) {
+        if let Some(kidx) = self.due_kill(step, false) {
             let next = self.perform_failure(step, kidx)?;
             return Ok(Some(next));
         }

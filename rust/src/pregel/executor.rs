@@ -29,7 +29,10 @@
 //!   determinism contract of `pregel::message`), all destinations'
 //!   inboxes ingesting concurrently;
 //! * **replay** ([`replay_phase`]) — LWCP/LWLog message regeneration
-//!   from vertex states, the recovery-side twin of compute;
+//!   from vertex states: the recovery-side twin of compute, but it runs
+//!   only the emit half of the vertex program (the read-only
+//!   [`super::app::EmitCtx`] phase) — no message fold, no aggregator
+//!   scratch, no mutation buffer;
 //! * checkpoint encode + `SimHdfs` I/O fan out on the same pool from
 //!   `ft::checkpoint_ops` / `ft::recovery_ops`.
 //!
@@ -312,8 +315,9 @@ pub fn deliver_phase<A: App>(
 }
 
 /// The replay phase unit (LWCP/LWLog recovery): regenerate the selected
-/// workers' outgoing messages of `step` from vertex states and serialize
-/// the batches for `dests` (`None` = every destination), charging each
+/// workers' outgoing messages of `step` from vertex states — emit-only,
+/// via [`super::worker::Worker::replay_generate`] — and serialize the
+/// batches for `dests` (`None` = every destination), charging each
 /// worker's clock. Batches come back in (rank, dest) order.
 pub fn replay_phase<A: App>(
     pool: &WorkerPool,

@@ -1,20 +1,24 @@
 //! The vertex-centric Pregel core: programming model, message plumbing,
 //! worker partitions, aggregators, and the superstep engine.
 //!
-//! The programming contract follows the paper exactly:
+//! The programming contract is the paper's Equations (2)/(3), made
+//! structural (think like a vertex, in two typed phases):
 //!
-//! * users write one [`App::compute`] UDF (think like a vertex);
-//! * to be **LWCP-compatible** the UDF must follow Equations (2)/(3):
-//!   first fold the incoming messages into the vertex state via
-//!   [`Ctx::set_value`], *then* generate outgoing messages by reading
-//!   the state back through [`Ctx::value`]. The engine regenerates
-//!   messages after a failure by re-running `compute` in **replay
-//!   mode**, where every state write is silently ignored — so message
-//!   generation sees exactly the checkpointed state ("transparent
-//!   message generation", §4);
-//! * a superstep can be *masked* (LWCP-inapplicable, e.g. the responding
-//!   supersteps of pointer-jumping algorithms) either per-vertex via
-//!   [`Ctx::mask_lwcp`] or globally via [`App::lwcp_applicable`].
+//! * [`App::update`] folds the incoming messages into the vertex state
+//!   through [`UpdateCtx`] — the only phase with write access (state,
+//!   halt votes, aggregation, edge mutations);
+//! * [`App::emit`] generates outgoing messages through [`EmitCtx`], a
+//!   **read-only view** of the state. After a failure the engine
+//!   regenerates a committed superstep's messages by re-running *only*
+//!   `emit` against the recovered states ("transparent message
+//!   generation", §4) — and because `EmitCtx` exposes no `&mut` access
+//!   to values, active flags, adjacency, or aggregators, a program that
+//!   would corrupt recovery does not compile;
+//! * a superstep whose messages depend on the incoming ones (the
+//!   responding supersteps of pointer-jumping algorithms) is declared
+//!   via [`App::responds_at`] and served by [`App::respond`]; such
+//!   supersteps are LWCP-masked automatically — checkpoints defer past
+//!   them and LWLog falls back to message logging for them.
 
 pub mod aggregator;
 pub mod app;
@@ -25,7 +29,7 @@ pub mod partition;
 pub mod worker;
 
 pub use aggregator::AggState;
-pub use app::{App, BatchExec, Ctx, NoXla};
+pub use app::{App, BatchExec, EmitCtx, NoXla, UpdateCtx};
 pub use engine::{Engine, EngineConfig, FailurePlan, Kill};
 pub use executor::WorkerPool;
 pub use message::{Inbox, Outbox};

@@ -106,7 +106,7 @@ impl<V: Clone + Codec> Partition<V> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pregel::app::{App, Ctx};
+    use crate::pregel::app::{App, EmitCtx, UpdateCtx};
 
     struct Dummy;
     impl App for Dummy {
@@ -115,7 +115,8 @@ mod tests {
         fn init(&self, id: VertexId, adj: &[VertexId], _n: usize) -> f32 {
             id as f32 + adj.len() as f32 * 0.5
         }
-        fn compute(&self, _ctx: &mut Ctx<'_, f32, f32>, _msgs: &[f32]) {}
+        fn update(&self, _ctx: &mut UpdateCtx<'_, f32>, _msgs: &[f32]) {}
+        fn emit(&self, _ctx: &mut EmitCtx<'_, f32, f32>) {}
     }
 
     fn global() -> Vec<Vec<VertexId>> {

@@ -2,7 +2,7 @@
 //! and per-superstep state s(W).
 
 use super::aggregator::AggState;
-use super::app::{App, BatchExec, Ctx};
+use super::app::{App, BatchExec, EmitCtx, UpdateCtx};
 use super::message::{Inbox, Outbox};
 use super::partition::Partition;
 use crate::graph::{Mutation, Partitioner, VertexId};
@@ -17,10 +17,8 @@ pub struct StepOutput<M: Codec + Clone> {
     pub agg: AggState,
     /// Encoded mutation requests performed this superstep (empty if none).
     pub mutations_encoded: Vec<u8>,
-    /// Vertices on which compute() was called.
+    /// Vertices on which the vertex program was run.
     pub n_computed: u64,
-    /// Did any vertex mask this superstep for LWCP?
-    pub lwcp_masked: bool,
     /// Did any vertex mutate topology? (LWLog auto-masks such steps:
     /// older messages cannot be regenerated against a newer Γ(v).)
     pub mutated: bool,
@@ -93,8 +91,10 @@ impl<A: App> Worker<A> {
         Inbox::new(self.part.n_slots(), app.combiner())
     }
 
-    /// Run the compute phase of `superstep`: call compute() on every
-    /// active-or-messaged vertex, consuming the current inbox.
+    /// Run the compute phase of `superstep`: run the two-phase vertex
+    /// program — [`App::update`] then [`App::emit`] (or [`App::respond`]
+    /// on responding supersteps) — on every active-or-messaged vertex,
+    /// consuming the current inbox.
     pub fn compute_superstep(
         &mut self,
         app: &A,
@@ -111,15 +111,24 @@ impl<A: App> Worker<A> {
         let mut out = Outbox::new(self.part.partitioner, app.combiner());
         let mut agg = AggState::new(app.agg_slots());
         let mut mutations: Vec<Mutation> = Vec::new();
-        let mut lwcp_mask = false;
         let mut n_computed = 0u64;
+        let responding = app.responds_at(superstep);
 
         if let (Some(exec), true) = (exec, app.supports_xla()) {
+            // The batch path generates messages from state only — it has
+            // no respond hook, so an app combining supports_xla with
+            // responding supersteps would silently drop its responses.
+            anyhow::ensure!(
+                !responding,
+                "superstep {superstep} is a responding superstep but the app routes it \
+                 through the XLA batch path, which cannot run respond()"
+            );
             // Batch path: the app performs the whole partition update
             // (incl. comp/active bookkeeping) through the XLA executor.
             app.xla_superstep(exec, superstep, &mut self.part, &inbox, &mut out, &mut agg.slots)?;
             n_computed = self.part.comp.iter().filter(|&&c| c).count() as u64;
         } else {
+            let n_vertices = self.part.partitioner.n_vertices;
             for slot in 0..self.part.n_slots() {
                 let has_msg = inbox.has(slot);
                 if !self.part.active[slot] && !has_msg {
@@ -131,22 +140,39 @@ impl<A: App> Worker<A> {
                 self.part.comp[slot] = true;
                 n_computed += 1;
                 let id = self.part.id_of(slot);
-                // Split borrows: move msgs out of the inbox view.
                 let msgs: &[A::M] = inbox.msgs(slot);
-                let mut ctx = Ctx {
+                // Phase 1 — Equation (2): fold messages into state.
+                app.update(
+                    &mut UpdateCtx {
+                        id,
+                        slot,
+                        superstep,
+                        n_vertices,
+                        part: &mut self.part,
+                        agg: &mut agg.slots,
+                        agg_prev,
+                        mutations: &mut mutations,
+                    },
+                    msgs,
+                );
+                // Phase 2 — Equation (3): generate messages through the
+                // read-only state view (or the respond hook, which may
+                // read the messages, on LWCP-masked supersteps).
+                let mut ectx = EmitCtx {
                     id,
                     slot,
                     superstep,
-                    n_vertices: self.part.partitioner.n_vertices,
-                    replay: false,
-                    part: &mut self.part,
-                    out: &mut out,
-                    agg: &mut agg.slots,
+                    n_vertices,
+                    values: &self.part.values,
+                    adj: &self.part.adj,
                     agg_prev,
-                    mutations: &mut mutations,
-                    lwcp_mask: &mut lwcp_mask,
+                    out: &mut out,
                 };
-                app.compute(&mut ctx, msgs);
+                if responding {
+                    app.respond(&mut ectx, msgs);
+                } else {
+                    app.emit(&mut ectx);
+                }
             }
         }
 
@@ -160,7 +186,7 @@ impl<A: App> Worker<A> {
             m.encode(&mut mutations_encoded);
         }
         self.s_w = superstep;
-        Ok(StepOutput { outbox: out, agg, mutations_encoded, n_computed, lwcp_masked: lwcp_mask, mutated })
+        Ok(StepOutput { outbox: out, agg, mutations_encoded, n_computed, mutated })
     }
 
     /// Write this worker's per-superstep local log — the logging half of
@@ -185,12 +211,18 @@ impl<A: App> Worker<A> {
     }
 
     /// Regenerate the outgoing messages of a past superstep from vertex
-    /// states (LWCP/LWLog recovery): call compute() in replay mode with
-    /// no messages for every vertex whose stored comp(v) flag is set.
+    /// states (LWCP/LWLog recovery): invoke **only** [`App::emit`] for
+    /// every vertex whose stored comp(v) flag is set.
+    ///
+    /// Because [`EmitCtx`] is a read-only view, replay cannot touch the
+    /// recovered states — the old full-`compute`-with-writes-suppressed
+    /// replay (and its dead aggregator scratch, mutation buffer, and
+    /// per-write replay branches) is gone, along with the fold half of
+    /// the work.
     ///
     /// `states` optionally substitutes (values, comp) — used when the
     /// states come from a local log and must not clobber the worker's
-    /// live (newer) state. All state writes are suppressed either way.
+    /// live (newer) state.
     pub fn replay_generate(
         &mut self,
         app: &A,
@@ -198,6 +230,12 @@ impl<A: App> Worker<A> {
         agg_prev: &[f64],
         states: Option<(Vec<A::V>, Vec<bool>)>,
     ) -> Outbox<A::M> {
+        // Responding (masked) supersteps are never replayed from state:
+        // checkpoints defer past them and LWLog logs their messages.
+        debug_assert!(
+            !app.responds_at(superstep),
+            "replay of responding superstep {superstep} (masked supersteps use message logs)"
+        );
         // Temporarily swap in the logged states if provided.
         let saved = states.map(|(vals, comp)| {
             (
@@ -207,30 +245,23 @@ impl<A: App> Worker<A> {
         });
 
         let mut out = Outbox::new(self.part.partitioner, app.combiner());
-        let mut agg_scratch = vec![0.0; app.agg_slots()];
-        let mut mutations = Vec::new();
-        let mut mask = false;
+        let n_vertices = self.part.partitioner.n_vertices;
         for slot in 0..self.part.n_slots() {
             if !self.part.comp[slot] {
                 continue;
             }
-            let id = self.part.id_of(slot);
-            let mut ctx = Ctx {
-                id,
+            let mut ctx = EmitCtx {
+                id: self.part.id_of(slot),
                 slot,
                 superstep,
-                n_vertices: self.part.partitioner.n_vertices,
-                replay: true,
-                part: &mut self.part,
-                out: &mut out,
-                agg: &mut agg_scratch,
+                n_vertices,
+                values: &self.part.values,
+                adj: &self.part.adj,
                 agg_prev,
-                mutations: &mut mutations,
-                lwcp_mask: &mut mask,
+                out: &mut out,
             };
-            app.compute(&mut ctx, &[]);
+            app.emit(&mut ctx);
         }
-        debug_assert!(mutations.is_empty(), "replay must not mutate");
 
         if let Some((vals, comp)) = saved {
             self.part.values = vals;

@@ -178,20 +178,19 @@ impl LocalLogStore {
         self.mutations.iter().map(|(_, b)| b.len() as u64).sum()
     }
 
-    /// Drain the buffer (at checkpoint commit: the engine appends these
-    /// to E_W on HDFS, then clears the local buffer — paper §4).
-    pub fn drain_mutations(&mut self) -> Vec<(u64, Vec<u8>)> {
-        std::mem::take(&mut self.mutations)
-    }
-
-    /// Discard the buffer (rollback recovery: the rerun will re-buffer
-    /// the same mutations; keeping them would replay each twice).
+    /// Discard the buffer. Called at checkpoint *commit* (the staged
+    /// E_W increment read via [`LocalLogStore::mutations_through`] has
+    /// just been appended on HDFS — an aborted checkpoint must leave
+    /// the buffer intact) and on rollback recovery (the rerun will
+    /// re-buffer the same mutations; keeping them would replay each
+    /// twice).
     pub fn clear_mutations(&mut self) {
         self.mutations.clear();
     }
 
     /// Read mutations buffered since the last checkpoint for supersteps
-    /// `<= step` without draining (log-based recovery forwards these).
+    /// `<= step` without draining (checkpoint writes stage these for
+    /// the commit; log-based recovery forwards them).
     pub fn mutations_through(&self, step: u64) -> Vec<(u64, Vec<u8>)> {
         self.mutations
             .iter()
@@ -326,16 +325,21 @@ mod tests {
     }
 
     #[test]
-    fn mutation_buffer_drains() {
+    fn mutation_buffer_stages_then_clears() {
         for mut s in stores() {
             s.append_mutations(1, vec![1, 2]);
             s.append_mutations(2, vec![3]);
             s.append_mutations(2, Vec::new()); // ignored
             assert_eq!(s.mutation_bytes(), 3);
             assert_eq!(s.mutations_through(1).len(), 1);
-            let drained = s.drain_mutations();
-            assert_eq!(drained, vec![(1, vec![1, 2]), (2, vec![3])]);
+            // Staging reads leave the buffer intact (abort safety)...
+            let staged = s.mutations_through(2);
+            assert_eq!(staged, vec![(1, vec![1, 2]), (2, vec![3])]);
+            assert_eq!(s.mutation_bytes(), 3);
+            // ...and the commit clears it.
+            s.clear_mutations();
             assert_eq!(s.mutation_bytes(), 0);
+            assert!(s.mutations_through(2).is_empty());
         }
     }
 

@@ -6,7 +6,7 @@
 use lwcp::apps::{HashMinCc, KCore, PageRank, PointerJump};
 use lwcp::ft::FtKind;
 use lwcp::graph::{generate, PresetGraph};
-use lwcp::pregel::{Engine, EngineConfig, FailurePlan};
+use lwcp::pregel::{Engine, EngineConfig, FailurePlan, Kill};
 use lwcp::sim::Topology;
 use lwcp::storage::checkpoint::{cp_key, cp_prefix, ew_key};
 use lwcp::storage::Backing;
@@ -181,6 +181,58 @@ fn time_interval_checkpointing_tracks_virtual_time() {
         eng.digest()
     };
     assert_eq!(digest_of(false), digest_of(true));
+}
+
+#[test]
+fn failure_during_checkpoint_write_keeps_half_written_cp_invisible() {
+    // A worker dies while CP[8] is being written — after the per-worker
+    // blob puts, before the commit. The commit barrier must keep the
+    // half-written CP[8] invisible: recovery selects CP[4], reruns, and
+    // converges to the failure-free result; CP[8] is then written (and
+    // committed) exactly once, after recovery.
+    let adj = PresetGraph::WebBase.spec(1500, 13).generate();
+    for ft in FtKind::all() {
+        let tag = format!("cpfail-{}", ft.name());
+        let mut base =
+            Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-b")), &adj).unwrap();
+        base.run().unwrap();
+
+        let plan = FailurePlan {
+            kills: vec![Kill {
+                at_step: 8,
+                ranks: vec![1],
+                machine_fails: false,
+                during_cp: true,
+            }],
+        };
+        let mut failed = Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-f")), &adj)
+            .unwrap()
+            .with_failures(plan);
+        let m = failed.run().unwrap();
+        assert_eq!(
+            failed.digest(),
+            base.digest(),
+            "{}: mid-checkpoint failure corrupted the result",
+            ft.name()
+        );
+        assert!(m.recovery_control > 0.0, "{}: no recovery recorded", ft.name());
+
+        use lwcp::metrics::StepKind;
+        // Recovery must have rolled back to the *previous* committed
+        // checkpoint: the checkpoint-recovery stage is recorded at
+        // CP[4], never at the half-written CP[8].
+        let cpsteps: Vec<u64> =
+            m.steps.iter().filter(|s| s.kind == StepKind::CpStep).map(|s| s.step).collect();
+        assert_eq!(cpsteps, vec![4], "{}: recovery did not select CP[4]", ft.name());
+        let recov: Vec<u64> =
+            m.steps.iter().filter(|s| s.kind == StepKind::Recovery).map(|s| s.step).collect();
+        assert_eq!(recov, vec![5, 6, 7], "{}: rerun window wrong", ft.name());
+        // The aborted CP[8] never produced a commit record; the rewrite
+        // after recovery produced exactly one.
+        let cp8_commits = m.cp_writes.iter().filter(|&&(s, _)| s == 8).count();
+        assert_eq!(cp8_commits, 1, "{}: CP[8] committed {cp8_commits} times", ft.name());
+        assert_eq!(failed.cp_last(), 12, "{}: wrong final live checkpoint", ft.name());
+    }
 }
 
 #[test]

@@ -1,0 +1,750 @@
+//! Golden-value equivalence for the `update`/`emit` API migration.
+//!
+//! The pre-redesign programming interface was one monolithic
+//! `App::compute(&mut Ctx, msgs)` per vertex. This suite keeps those
+//! original vertex programs alive **verbatim** (as `LegacyApp` impls
+//! below, copied from the seed sources) and drives them through a
+//! minimal sequential reference interpreter that reproduces the
+//! engine's superstep semantics exactly — same `Outbox`/`Inbox`
+//! plumbing, same sender-side combining, same (dst, src)-ordered
+//! delivery, same rank-ordered aggregator merge, same halt conditions —
+//! so every f32/f64 operation happens in the identical order.
+//!
+//! Each migrated app must then produce **bit-identical** final state
+//! digests (vertex values + active flags) and identical sent-message
+//! counts to its legacy twin on the failure-free path, and the same
+//! digest again when a worker is killed and recovered mid-job. Any
+//! semantic drift introduced by splitting `compute` into
+//! `update`/`emit`/`respond` fails here, bit for bit.
+
+use lwcp::apps::sssp::edge_weight;
+use lwcp::apps::*;
+use lwcp::ft::FtKind;
+use lwcp::graph::{generate, Adjacency, Partitioner, PresetGraph, VertexId};
+use lwcp::pregel::app::CombineFn;
+use lwcp::pregel::{AggState, App, Engine, EngineConfig, FailurePlan, Inbox, Outbox, Partition};
+use lwcp::sim::Topology;
+use lwcp::storage::Backing;
+use lwcp::util::codec::Codec;
+
+/// Six workers on three machines — the standard test topology.
+const N_WORKERS: usize = 6;
+
+// ------------------------------------------------------------------
+// The pre-redesign programming interface, reproduced for reference.
+// ------------------------------------------------------------------
+
+/// The old monolithic per-vertex context: read/write state access plus
+/// message sends in one object, exactly like the seed's `Ctx` (minus
+/// the replay flag, which the reference interpreter never needs — it
+/// only runs the failure-free path).
+struct LegacyCtx<'a, V, M: Codec + Clone> {
+    id: VertexId,
+    slot: usize,
+    superstep: u64,
+    values: &'a mut [V],
+    active: &'a mut [bool],
+    adj: &'a mut Adjacency,
+    out: &'a mut Outbox<M>,
+    agg: &'a mut [f64],
+}
+
+impl<'a, V: Clone, M: Codec + Clone> LegacyCtx<'a, V, M> {
+    fn id(&self) -> VertexId {
+        self.id
+    }
+    fn superstep(&self) -> u64 {
+        self.superstep
+    }
+    fn value(&self) -> &V {
+        &self.values[self.slot]
+    }
+    fn set_value(&mut self, v: V) {
+        self.values[self.slot] = v;
+    }
+    fn neighbors(&self) -> &[VertexId] {
+        self.adj.neighbors(self.slot)
+    }
+    fn degree(&self) -> usize {
+        self.adj.degree(self.slot)
+    }
+    fn send(&mut self, to: VertexId, m: M) {
+        self.out.send(to, m);
+    }
+    fn send_all(&mut self, m: M) {
+        let adj = &*self.adj;
+        let out = &mut *self.out;
+        for &to in adj.neighbors(self.slot) {
+            out.send(to, m.clone());
+        }
+    }
+    fn vote_to_halt(&mut self) {
+        self.active[self.slot] = false;
+    }
+    fn del_edge(&mut self, dst: VertexId) {
+        self.adj.del_edge(self.slot, dst);
+    }
+    fn aggregate(&mut self, slot: usize, val: f64) {
+        self.agg[slot] += val;
+    }
+}
+
+/// The old single-UDF vertex-program trait.
+trait LegacyApp {
+    type V: Clone + Codec + std::fmt::Debug;
+    type M: Codec + Clone;
+    fn agg_slots(&self) -> usize {
+        0
+    }
+    fn init(&self, id: VertexId, adj: &[VertexId], n_vertices: usize) -> Self::V;
+    fn initially_active(&self, _id: VertexId) -> bool {
+        true
+    }
+    fn combiner(&self) -> Option<CombineFn<Self::M>> {
+        None
+    }
+    fn max_supersteps(&self) -> u64 {
+        u64::MAX
+    }
+    fn halt_on(&self, _agg: &AggState) -> bool {
+        false
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, Self::V, Self::M>, msgs: &[Self::M]);
+}
+
+/// Sequential reference interpreter with the engine's exact superstep
+/// semantics. Returns (state digest, total messages generated).
+fn run_legacy<L: LegacyApp>(app: &L, global_adj: &[Vec<VertexId>]) -> (u64, u64) {
+    let part = Partitioner::new(N_WORKERS, global_adj.len());
+    let mut values: Vec<Vec<L::V>> = Vec::new();
+    let mut active: Vec<Vec<bool>> = Vec::new();
+    let mut adjs: Vec<Adjacency> = Vec::new();
+    for rank in 0..N_WORKERS {
+        let n_slots = part.slots_of(rank);
+        let mut vals = Vec::with_capacity(n_slots);
+        let mut act = Vec::with_capacity(n_slots);
+        let mut lists = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
+            let id = part.id_of(rank, slot);
+            let l = &global_adj[id as usize];
+            vals.push(app.init(id, l, global_adj.len()));
+            act.push(app.initially_active(id));
+            lists.push(l.clone());
+        }
+        values.push(vals);
+        active.push(act);
+        adjs.push(Adjacency::from_lists(&lists));
+    }
+    let mut inboxes: Vec<Inbox<L::M>> = (0..N_WORKERS)
+        .map(|r| Inbox::new(part.slots_of(r), app.combiner()))
+        .collect();
+    let mut total_msgs = 0u64;
+    let max_steps = app.max_supersteps().min(10_000);
+    let mut step = 1u64;
+    loop {
+        // Compute phase: ranks ascending, slots ascending (the engine's
+        // deterministic order).
+        let mut outboxes: Vec<Outbox<L::M>> = Vec::with_capacity(N_WORKERS);
+        let mut global = AggState::new(app.agg_slots());
+        for rank in 0..N_WORKERS {
+            let inbox = std::mem::replace(
+                &mut inboxes[rank],
+                Inbox::new(part.slots_of(rank), app.combiner()),
+            );
+            let mut out = Outbox::new(part, app.combiner());
+            let mut agg = AggState::new(app.agg_slots());
+            for slot in 0..part.slots_of(rank) {
+                let has_msg = inbox.has(slot);
+                if !active[rank][slot] && !has_msg {
+                    continue;
+                }
+                active[rank][slot] = true; // reactivation on receipt
+                let id = part.id_of(rank, slot);
+                let mut ctx = LegacyCtx {
+                    id,
+                    slot,
+                    superstep: step,
+                    values: &mut values[rank][..],
+                    active: &mut active[rank][..],
+                    adj: &mut adjs[rank],
+                    out: &mut out,
+                    agg: &mut agg.slots[..],
+                };
+                app.compute(&mut ctx, inbox.msgs(slot));
+            }
+            agg.active_count = active[rank].iter().filter(|&&a| a).count() as u64;
+            agg.sent_msgs = out.raw_count();
+            global.merge(&agg); // rank-ordered f64 merge
+            total_msgs += out.raw_count();
+            outboxes.push(out);
+        }
+        // Delivery: (dst, src)-sorted, each destination folding batches
+        // in sender-rank order — the bitwise-determinism contract.
+        for (dst, inbox) in inboxes.iter_mut().enumerate() {
+            for ob in outboxes.iter() {
+                if let Some(b) = ob.batch_for(dst) {
+                    inbox.ingest(&b).expect("legacy ingest");
+                }
+            }
+        }
+        if global.job_done() || app.halt_on(&global) || step >= max_steps {
+            break;
+        }
+        step += 1;
+    }
+    // Digest exactly like Engine::digest: FNV over per-rank partition
+    // digests (values + active flags), rank ascending.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for rank in 0..N_WORKERS {
+        let p = Partition {
+            rank,
+            partitioner: part,
+            values: values[rank].clone(),
+            active: active[rank].clone(),
+            comp: vec![false; part.slots_of(rank)],
+            adj: adjs[rank].clone(),
+        };
+        let d = p.digest();
+        for b in d.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    (h, total_msgs)
+}
+
+/// Run the migrated app on the real engine. Returns (digest, messages
+/// generated by compute phases, recovery-control time).
+fn run_new<A: App, F: Fn() -> A>(
+    app_fn: F,
+    adj: &[Vec<VertexId>],
+    ft: FtKind,
+    cp_every: u64,
+    plan: Option<FailurePlan>,
+    tag: &str,
+) -> (u64, u64, f64) {
+    let cfg = EngineConfig {
+        topo: Topology::new(3, 2),
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+        threads: 0,
+    };
+    let mut eng = Engine::new(app_fn(), cfg, adj).expect("engine");
+    if let Some(p) = plan {
+        eng = eng.with_failures(p);
+    }
+    let m = eng.run().expect("run");
+    (eng.digest(), m.bytes.messages_sent, m.recovery_control)
+}
+
+/// Assert the full golden contract for one app: failure-free digest and
+/// message count bit-identical to the legacy path, and the recovered
+/// digest (worker killed at `kill_step`, LWCP δ=`cp_every`) identical
+/// again.
+fn assert_golden<L, A, F>(
+    legacy: &L,
+    app_fn: F,
+    adj: &[Vec<VertexId>],
+    cp_every: u64,
+    kill_step: u64,
+    label: &str,
+) where
+    L: LegacyApp,
+    A: App,
+    F: Fn() -> A,
+{
+    let (gold_digest, gold_msgs) = run_legacy(legacy, adj);
+    let (digest, msgs, _) =
+        run_new(&app_fn, adj, FtKind::None, 0, None, &format!("gold-{label}"));
+    assert_eq!(
+        digest, gold_digest,
+        "{label}: migrated app diverged from pre-redesign values"
+    );
+    assert_eq!(
+        msgs, gold_msgs,
+        "{label}: migrated app generated a different message count"
+    );
+    let (rec_digest, _, rc) = run_new(
+        &app_fn,
+        adj,
+        FtKind::LwCp,
+        cp_every,
+        Some(FailurePlan::kill_n_at(1, kill_step)),
+        &format!("gold-{label}-f"),
+    );
+    assert!(rc > 0.0, "{label}: failure plan never fired");
+    assert_eq!(
+        rec_digest, gold_digest,
+        "{label}: recovered run diverged from pre-redesign values"
+    );
+}
+
+// ------------------------------------------------------------------
+// The seven pre-redesign vertex programs, verbatim from the seed.
+// ------------------------------------------------------------------
+
+struct LegacyPageRank {
+    damping: f32,
+    supersteps: u64,
+}
+
+fn combine_sum(acc: &mut f32, m: &f32) {
+    *acc += *m;
+}
+
+impl LegacyApp for LegacyPageRank {
+    type V = f32;
+    type M = f32;
+    fn agg_slots(&self) -> usize {
+        1
+    }
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> f32 {
+        1.0
+    }
+    fn combiner(&self) -> Option<CombineFn<f32>> {
+        Some(combine_sum)
+    }
+    fn max_supersteps(&self) -> u64 {
+        self.supersteps
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, f32, f32>, msgs: &[f32]) {
+        if ctx.superstep() > 1 {
+            let sum: f32 = msgs.iter().sum();
+            let old = *ctx.value();
+            let new = (1.0 - self.damping) + self.damping * sum;
+            ctx.set_value(new);
+            ctx.aggregate(0, (new - old).abs() as f64);
+        }
+        let deg = ctx.degree();
+        if deg > 0 {
+            let share = *ctx.value() / deg as f32;
+            ctx.send_all(share);
+        }
+    }
+}
+
+struct LegacySssp {
+    source: VertexId,
+}
+
+fn combine_min_f32(acc: &mut f32, m: &f32) {
+    if *m < *acc {
+        *acc = *m;
+    }
+}
+
+impl LegacyApp for LegacySssp {
+    type V = (f32, bool);
+    type M = f32;
+    fn init(&self, id: VertexId, _adj: &[VertexId], _n: usize) -> (f32, bool) {
+        if id == self.source {
+            (0.0, true)
+        } else {
+            (f32::INFINITY, false)
+        }
+    }
+    fn initially_active(&self, id: VertexId) -> bool {
+        id == self.source
+    }
+    fn combiner(&self) -> Option<CombineFn<f32>> {
+        Some(combine_min_f32)
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, (f32, bool), f32>, msgs: &[f32]) {
+        if ctx.superstep() > 1 {
+            let (cur, _) = *ctx.value();
+            let best = msgs.iter().copied().fold(f32::INFINITY, f32::min);
+            if best < cur {
+                ctx.set_value((best, true));
+            } else {
+                ctx.set_value((cur, false));
+            }
+        }
+        let (dist, changed) = *ctx.value();
+        if changed && dist.is_finite() {
+            let id = ctx.id();
+            for i in 0..ctx.degree() {
+                let to = ctx.neighbors()[i];
+                ctx.send(to, dist + edge_weight(id, to));
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+struct LegacyHashMinCc;
+
+fn combine_min_u32(acc: &mut u32, m: &u32) {
+    if *m < *acc {
+        *acc = *m;
+    }
+}
+
+impl LegacyApp for LegacyHashMinCc {
+    type V = (u32, bool);
+    type M = u32;
+    fn init(&self, id: VertexId, _adj: &[VertexId], _n: usize) -> (u32, bool) {
+        (id, true)
+    }
+    fn combiner(&self) -> Option<CombineFn<u32>> {
+        Some(combine_min_u32)
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, (u32, bool), u32>, msgs: &[u32]) {
+        if ctx.superstep() > 1 {
+            let (cur, _) = *ctx.value();
+            let incoming = msgs.iter().copied().min().unwrap_or(u32::MAX);
+            if incoming < cur {
+                ctx.set_value((incoming, true));
+            } else {
+                ctx.set_value((cur, false));
+            }
+        }
+        let (label, changed) = *ctx.value();
+        if changed {
+            ctx.send_all(label);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+struct LegacyKCore {
+    k: usize,
+}
+
+impl LegacyApp for LegacyKCore {
+    type V = (bool, bool);
+    type M = u32;
+    fn agg_slots(&self) -> usize {
+        1
+    }
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> (bool, bool) {
+        (false, false)
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, (bool, bool), u32>, msgs: &[u32]) {
+        let (removed, _) = *ctx.value();
+        for &gone in msgs {
+            ctx.del_edge(gone);
+        }
+        if !removed && ctx.degree() < self.k {
+            ctx.set_value((true, true));
+            ctx.aggregate(0, 1.0);
+        } else {
+            ctx.set_value((removed, false));
+        }
+        let (_, just) = *ctx.value();
+        if just {
+            let id = ctx.id();
+            ctx.send_all(id);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// The seed's pair-iterator walk, copied verbatim.
+fn walk_pairs(
+    id: VertexId,
+    adj: &[VertexId],
+    mut pos: (u32, u32),
+    budget: usize,
+    mut emit: impl FnMut(VertexId, VertexId),
+) -> ((u32, u32), bool) {
+    let n = adj.len() as u32;
+    let mut emitted = 0usize;
+    while emitted < budget {
+        let (i, j) = (pos.0, pos.1);
+        if i >= n {
+            return (pos, true);
+        }
+        if j >= n {
+            pos = (i + 1, i + 2);
+            continue;
+        }
+        if j <= i {
+            pos = (i, i + 1);
+            continue;
+        }
+        let v2 = adj[i as usize];
+        let v3 = adj[j as usize];
+        if v2 > id {
+            emit(v2, v3);
+            emitted += 1;
+        } else {
+            pos = (i + 1, i + 2);
+            continue;
+        }
+        pos = (i, j + 1);
+    }
+    (pos, pos.0 >= n)
+}
+
+struct LegacyTriangle {
+    c: usize,
+}
+
+impl LegacyApp for LegacyTriangle {
+    type V = triangle::TriValue;
+    type M = u32;
+    fn agg_slots(&self) -> usize {
+        1
+    }
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> triangle::TriValue {
+        triangle::TriValue::default()
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, triangle::TriValue, u32>, msgs: &[u32]) {
+        use triangle::TriValue;
+        let budget = self.c * ctx.degree().max(1);
+        let odd = ctx.superstep() % 2 == 1;
+        if odd {
+            let v = *ctx.value();
+            if !v.done {
+                let (cur, done) =
+                    walk_pairs(ctx.id(), ctx.neighbors(), v.cur, budget, |_, _| {});
+                ctx.set_value(TriValue { count: v.count, prev: v.cur, cur, done });
+            } else if v.prev != v.cur {
+                ctx.set_value(TriValue { prev: v.cur, ..v });
+            }
+            // Shadowed re-read, exactly as the seed: the emit window and
+            // the halt vote both read the *post-update* value.
+            let v = *ctx.value();
+            if v.prev != v.cur {
+                let id = ctx.id();
+                let mut probes: Vec<(VertexId, u32)> = Vec::new();
+                walk_pairs(id, ctx.neighbors(), v.prev, budget, |v2, v3| {
+                    probes.push((v2, v3));
+                });
+                for (v2, v3) in probes {
+                    ctx.send(v2, v3);
+                }
+            }
+            if v.done {
+                ctx.vote_to_halt();
+            }
+        } else {
+            let v = *ctx.value();
+            let mut hits = 0u64;
+            for &v3 in msgs {
+                if ctx.neighbors().binary_search(&v3).is_ok() {
+                    hits += 1;
+                }
+            }
+            if hits > 0 {
+                ctx.aggregate(0, hits as f64);
+                ctx.set_value(TriValue { count: v.count + hits, ..v });
+            }
+            if v.done {
+                ctx.vote_to_halt();
+            }
+        }
+    }
+}
+
+struct LegacyPointerJump;
+
+fn pj_phase(step: u64) -> u64 {
+    (step - 1) % 3
+}
+
+impl LegacyApp for LegacyPointerJump {
+    type V = (u32, bool);
+    type M = u32;
+    fn agg_slots(&self) -> usize {
+        2
+    }
+    fn init(&self, id: VertexId, adj: &[VertexId], _n: usize) -> (u32, bool) {
+        let p = adj.iter().copied().min().map_or(id, |m| m.min(id));
+        (p, true)
+    }
+    fn halt_on(&self, agg: &AggState) -> bool {
+        agg.slots.len() >= 2 && agg.slots[1] > 0.0 && agg.slots[0] == 0.0
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, (u32, bool), u32>, msgs: &[u32]) {
+        match pj_phase(ctx.superstep()) {
+            0 => {
+                let (p, _) = *ctx.value();
+                if p != ctx.id() {
+                    ctx.send(p, ctx.id());
+                }
+            }
+            1 => {
+                let (p, _) = *ctx.value();
+                for &requester in msgs {
+                    ctx.send(requester, p);
+                }
+            }
+            _ => {
+                let (p, _) = *ctx.value();
+                if let Some(&gp) = msgs.first() {
+                    let changed = gp != p;
+                    ctx.set_value((gp, changed));
+                    if changed {
+                        ctx.aggregate(0, 1.0);
+                    }
+                } else {
+                    ctx.set_value((p, false));
+                }
+                ctx.aggregate(1, 1.0);
+            }
+        }
+    }
+}
+
+struct LegacyBipartite;
+
+const NONE: u32 = u32::MAX;
+
+fn is_left(id: VertexId) -> bool {
+    id % 2 == 0
+}
+
+fn bm_phase(step: u64) -> u64 {
+    (step - 1) % 4
+}
+
+impl LegacyApp for LegacyBipartite {
+    type V = (u32, u32);
+    type M = u32;
+    fn agg_slots(&self) -> usize {
+        2
+    }
+    fn init(&self, _id: VertexId, _adj: &[VertexId], _n: usize) -> (u32, u32) {
+        (NONE, NONE)
+    }
+    fn halt_on(&self, agg: &AggState) -> bool {
+        agg.slots.len() >= 2 && agg.slots[1] > 0.0 && agg.slots[0] == 0.0
+    }
+    fn compute(&self, ctx: &mut LegacyCtx<'_, (u32, u32), u32>, msgs: &[u32]) {
+        let id = ctx.id();
+        let left = is_left(id);
+        match bm_phase(ctx.superstep()) {
+            0 => {
+                let (matched, _) = *ctx.value();
+                if left && matched == NONE {
+                    for i in 0..ctx.degree() {
+                        let to = ctx.neighbors()[i];
+                        if !is_left(to) {
+                            ctx.send(to, id);
+                        }
+                    }
+                }
+            }
+            1 => {
+                let (matched, _) = *ctx.value();
+                let selected = if !left && matched == NONE {
+                    msgs.iter().copied().min().unwrap_or(NONE)
+                } else {
+                    NONE
+                };
+                ctx.set_value((matched, selected));
+                let (_, sel) = *ctx.value();
+                if sel != NONE {
+                    ctx.send(sel, id);
+                }
+            }
+            2 => {
+                if left {
+                    let (matched, _) = *ctx.value();
+                    if matched == NONE {
+                        let choice = msgs.iter().copied().min().unwrap_or(NONE);
+                        if choice != NONE {
+                            ctx.set_value((choice, choice));
+                        } else {
+                            ctx.set_value((matched, NONE));
+                        }
+                    } else {
+                        ctx.set_value((matched, NONE));
+                    }
+                    let (_, sel) = *ctx.value();
+                    if sel != NONE {
+                        ctx.send(sel, id);
+                    }
+                }
+            }
+            _ => {
+                let (matched, selected) = *ctx.value();
+                if !left && matched == NONE {
+                    if let Some(&acceptor) = msgs.first() {
+                        debug_assert_eq!(acceptor, selected);
+                        ctx.set_value((acceptor, NONE));
+                        ctx.aggregate(0, 1.0);
+                    } else {
+                        ctx.set_value((matched, NONE));
+                    }
+                } else {
+                    ctx.set_value((matched, NONE));
+                }
+                ctx.aggregate(1, 1.0);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// The golden assertions, one per migrated app.
+// ------------------------------------------------------------------
+
+#[test]
+fn pagerank_bit_identical_to_pre_redesign() {
+    let adj = PresetGraph::WebBase.spec(600, 42).generate();
+    assert_golden(
+        &LegacyPageRank { damping: 0.85, supersteps: 17 },
+        || PageRank { damping: 0.85, supersteps: 17, combiner_enabled: true },
+        &adj,
+        5,
+        12,
+        "pagerank",
+    );
+}
+
+#[test]
+fn sssp_bit_identical_to_pre_redesign() {
+    let adj = generate::erdos_renyi(400, 1600, false, 6);
+    assert_golden(&LegacySssp { source: 0 }, || Sssp { source: 0 }, &adj, 3, 4, "sssp");
+}
+
+#[test]
+fn hashmin_cc_bit_identical_to_pre_redesign() {
+    let adj = generate::erdos_renyi(500, 700, false, 5);
+    assert_golden(&LegacyHashMinCc, || HashMinCc, &adj, 3, 5, "cc");
+}
+
+#[test]
+fn kcore_bit_identical_to_pre_redesign() {
+    // Undirected path: k=2 peeling cascades with edge deletions in
+    // every superstep (the topology-mutation path).
+    let n = 120usize;
+    let adj: Vec<Vec<VertexId>> = (0..n)
+        .map(|v| {
+            let mut l = Vec::new();
+            if v > 0 {
+                l.push(v as u32 - 1);
+            }
+            if v + 1 < n {
+                l.push(v as u32 + 1);
+            }
+            l
+        })
+        .collect();
+    assert_golden(&LegacyKCore { k: 2 }, || KCore { k: 2 }, &adj, 4, 10, "kcore");
+}
+
+#[test]
+fn triangle_bit_identical_to_pre_redesign() {
+    let adj = generate::erdos_renyi(150, 1200, false, 7);
+    assert_golden(&LegacyTriangle { c: 1 }, || TriangleCount { c: 1 }, &adj, 3, 5, "triangle");
+}
+
+#[test]
+fn pointer_jump_bit_identical_to_pre_redesign() {
+    let adj = generate::erdos_renyi(300, 450, false, 8);
+    assert_golden(&LegacyPointerJump, || PointerJump, &adj, 2, 7, "pointerjump");
+}
+
+#[test]
+fn bipartite_bit_identical_to_pre_redesign() {
+    let adj = generate::erdos_renyi(200, 500, false, 9);
+    assert_golden(&LegacyBipartite, || BipartiteMatching, &adj, 3, 6, "bipartite");
+}

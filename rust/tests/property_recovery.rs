@@ -78,6 +78,7 @@ fn plan(case: &Case) -> FailurePlan {
         at_step: case.kill_step,
         ranks: (1..=case.n_kill).collect(),
         machine_fails: false,
+        during_cp: false,
     }];
     if let Some(cascade_at) = case.cascade {
         // A later-declared kill with a smaller step = cascading failure
@@ -85,7 +86,12 @@ fn plan(case: &Case) -> FailurePlan {
         // rank distinct from the first kill's.
         let rank = case.topo.n_workers() - 1;
         if rank > case.n_kill {
-            kills.push(Kill { at_step: cascade_at, ranks: vec![rank], machine_fails: false });
+            kills.push(Kill {
+                at_step: cascade_at,
+                ranks: vec![rank],
+                machine_fails: false,
+                during_cp: false,
+            });
         }
     }
     FailurePlan { kills }
@@ -224,8 +230,8 @@ fn double_failure_same_worker_rank() {
     let adj = generate::erdos_renyi(400, 1200, false, 99);
     let plan = FailurePlan {
         kills: vec![
-            Kill { at_step: 8, ranks: vec![2], machine_fails: false },
-            Kill { at_step: 6, ranks: vec![2], machine_fails: false },
+            Kill { at_step: 8, ranks: vec![2], machine_fails: false, during_cp: false },
+            Kill { at_step: 6, ranks: vec![2], machine_fails: false, during_cp: false },
         ],
     };
     for ft in FtKind::all() {

@@ -99,7 +99,7 @@ fn pagerank_machine_failure() {
     let adj = webbase(400);
     // Ranks 1 and 4 live on machine 1 of Topology(3, 2).
     let plan = FailurePlan {
-        kills: vec![Kill { at_step: 8, ranks: vec![1, 4], machine_fails: true }],
+        kills: vec![Kill { at_step: 8, ranks: vec![1, 4], machine_fails: true, during_cp: false }],
     };
     for ft in FtKind::all() {
         assert_equivalent(
@@ -119,8 +119,8 @@ fn pagerank_cascading_failure() {
     // Second failure strikes while recovery is replaying superstep 8.
     let plan = FailurePlan {
         kills: vec![
-            Kill { at_step: 11, ranks: vec![2], machine_fails: false },
-            Kill { at_step: 8, ranks: vec![3], machine_fails: false },
+            Kill { at_step: 11, ranks: vec![2], machine_fails: false, during_cp: false },
+            Kill { at_step: 8, ranks: vec![3], machine_fails: false, during_cp: false },
         ],
     };
     for ft in FtKind::all() {
@@ -263,6 +263,35 @@ fn kcore_mutation_all_algorithms() {
             4,
             FailurePlan::kill_n_at(1, 10),
             &format!("kcore-{}", ft.name()),
+        );
+    }
+}
+
+#[test]
+fn kcore_failure_during_checkpoint_write_stages_ew_correctly() {
+    // The kill fires *inside* the CP[4] write, after the blob puts but
+    // before the commit. The staged E_W increments and the local
+    // mutation buffers must be left untouched by the abort: recovery
+    // rolls back to CP[0], and the eventually-committed CP[4] must
+    // append each mutation to E_W exactly once — a drain-before-commit
+    // bug shows up here as a corrupted k-core.
+    let adj = path_graph(100);
+    for ft in FtKind::all() {
+        let plan = FailurePlan {
+            kills: vec![Kill {
+                at_step: 4,
+                ranks: vec![1],
+                machine_fails: false,
+                during_cp: true,
+            }],
+        };
+        assert_equivalent(
+            || KCore { k: 2 },
+            &adj,
+            ft,
+            4,
+            plan,
+            &format!("kcore-duringcp-{}", ft.name()),
         );
     }
 }
