@@ -14,6 +14,15 @@
 //!    `Worker::replay_generate` vs the full `update`+`emit` superstep —
 //!    the recovery-path saving bought by the two-phase vertex API (the
 //!    old API replayed the entire monolithic `compute`, fold included).
+//! 6. Overlapped checkpoint commit: checkpoint every superstep and
+//!    compare the synchronous flush (stalls the loop) against the
+//!    background flush lane, in simulated job time and real wall time,
+//!    with the hidden/exposed split.
+//!
+//! Results of sections 4 and 6 are also written to
+//! `BENCH_hotpath.json` (machine-readable, consumed by CI). Pass
+//! `--check` for a fast smoke run (small graphs, same assertions) —
+//! the CI invocation.
 
 use lwcp::apps::{PageRank, TriangleCount};
 use lwcp::bench_support as bs;
@@ -26,7 +35,25 @@ use lwcp::storage::Backing;
 use lwcp::util::fmtutil::Table;
 use std::time::Instant;
 
+/// One JSON scalar row (hand-rolled: the vendored crate set has no
+/// serde; the schema is flat string/number pairs).
+fn json_obj(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> =
+        fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+fn json_str(s: &str) -> String {
+    format!("\"{s}\"")
+}
+
 fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    if check {
+        println!("hotpath: --check smoke mode (small graphs, full assertions)");
+    }
+    let mut json_pipeline: Vec<String> = Vec::new();
+    let mut json_overlap: Vec<String> = Vec::new();
     // ------------------------------------------------ 1: XLA throughput
     if let Some(reg) = bs::try_registry() {
         println!("\n=== Hot path 1 — pagerank_step artifact throughput (PJRT CPU) ===");
@@ -59,7 +86,8 @@ fn main() {
     // ----------------------------------- 2: engine superstep wall time
     println!("\n=== Hot path 2 — engine wall ms/superstep, scalar vs XLA ===");
     let mut t = Table::new(vec!["n vertices", "edges", "scalar ms/step", "xla ms/step"]);
-    for n in [20_000usize, 60_000, 120_000] {
+    let sizes: &[usize] = if check { &[20_000] } else { &[20_000, 60_000, 120_000] };
+    for &n in sizes {
         let adj = PresetGraph::WebBase.spec(n, 7).generate();
         let edges: u64 = adj.iter().map(|l| l.len() as u64).sum();
         let mut row = vec![n.to_string(), edges.to_string()];
@@ -75,6 +103,7 @@ fn main() {
                 tag: format!("hp-{n}-{use_xla}"),
                 max_supersteps: 10_000,
                 threads: 0,
+                async_cp: true,
             };
             let mut eng = Engine::new(app, cfg, &adj).expect("engine");
             if use_xla {
@@ -97,7 +126,7 @@ fn main() {
     println!("\n=== Hot path 3 — Outbox/Inbox combine+serialize throughput ===");
     let part = Partitioner::new(8, 1 << 16);
     let combine: CombineFn<f32> = |a, b| *a += *b;
-    let n_msgs = 4_000_000u64;
+    let n_msgs = if check { 400_000u64 } else { 4_000_000u64 };
     let t0 = Instant::now();
     let mut ob = Outbox::new(part, Some(combine));
     let mut x = 0u32;
@@ -132,7 +161,7 @@ fn main() {
     // 8 workers (4 machines × 2), log-based FT so the logging and
     // checkpoint phases carry real per-worker work too.
     println!("\n=== Hot path 4 — pipeline executor, 1 thread vs pool (8 workers) ===");
-    let adj = PresetGraph::WebBase.spec(120_000, 11).generate();
+    let adj = PresetGraph::WebBase.spec(if check { 30_000 } else { 120_000 }, 11).generate();
     let mut t = Table::new(vec![
         "threads",
         "wall ms/step",
@@ -152,6 +181,7 @@ fn main() {
             tag: format!("hp4-{threads}"),
             max_supersteps: 10_000,
             threads,
+            async_cp: true,
         };
         let mut eng = Engine::new(app, cfg, &adj).expect("engine");
         let m = eng.run().expect("run");
@@ -159,6 +189,11 @@ fn main() {
         if threads == 1 {
             base_ms = per_step;
         }
+        json_pipeline.push(json_obj(&[
+            ("threads", json_str(if threads == 0 { "auto" } else { "1" })),
+            ("wall_ms_per_step", format!("{per_step:.3}")),
+            ("speedup", format!("{:.3}", base_ms / per_step)),
+        ]));
         t.row(vec![
             if threads == 0 { "auto".to_string() } else { threads.to_string() },
             format!("{per_step:.1}"),
@@ -184,15 +219,104 @@ fn main() {
     ]);
     t.row(bench_replay_row(
         "pagerank",
-        &PresetGraph::WebBase.spec(120_000, 11).generate(),
+        &PresetGraph::WebBase.spec(if check { 30_000 } else { 120_000 }, 11).generate(),
         PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true },
     ));
     t.row(bench_replay_row(
         "triangle",
-        &PresetGraph::Friendster.spec(20_000, 5).generate(),
+        &PresetGraph::Friendster.spec(if check { 6_000 } else { 20_000 }, 5).generate(),
         TriangleCount { c: 4 },
     ));
     t.print();
+
+    // ------------------- 6: overlapped checkpoint commit, sync vs async
+    // Checkpoint every superstep — the worst failure-free case — and
+    // compare the flush stalling the loop (sync) against the background
+    // flush lane (async): simulated job time (the cost model charges
+    // the overlapped flush as max(flush, compute), not the sum) plus
+    // the real wall clock of the run.
+    println!("\n=== Hot path 6 — checkpoint commit: sync vs overlapped (cp_every=1) ===");
+    let adj6 = PresetGraph::WebBase.spec(if check { 15_000 } else { 60_000 }, 17).generate();
+    let mut t = Table::new(vec![
+        "ft",
+        "mode",
+        "virtual s",
+        "speedup",
+        "T_cp s",
+        "hidden s",
+        "exposed s",
+        "wall ms",
+    ]);
+    for ft in [FtKind::LwCp, FtKind::HwCp] {
+        let mut sync_virtual = 0.0f64;
+        for async_cp in [false, true] {
+            let app = PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(4, 2),
+                cost: Default::default(),
+                ft,
+                cp_every: 1,
+                cp_every_secs: None,
+                backing: Backing::Memory,
+                tag: format!("hp6-{}-{async_cp}", ft.name()),
+                max_supersteps: 10_000,
+                threads: 0,
+                async_cp,
+            };
+            let mut eng = Engine::new(app, cfg, &adj6).expect("engine");
+            let m = eng.run().expect("run");
+            if !async_cp {
+                sync_virtual = m.final_time;
+            } else {
+                // The acceptance bar of the overlapped commit: hiding
+                // flush time behind compute must shorten the
+                // failure-free job, deterministically.
+                assert!(
+                    m.final_time < sync_virtual,
+                    "{}: async {} !< sync {}",
+                    ft.name(),
+                    m.final_time,
+                    sync_virtual
+                );
+                assert!(m.cp_hidden() > 0.0, "{}: nothing overlapped", ft.name());
+            }
+            let mode = if async_cp { "async" } else { "sync" };
+            json_overlap.push(json_obj(&[
+                ("ft", json_str(ft.name())),
+                ("mode", json_str(mode)),
+                ("virtual_s", format!("{:.6}", m.final_time)),
+                ("speedup_vs_sync", format!("{:.4}", sync_virtual / m.final_time)),
+                ("t_cp_s", format!("{:.6}", m.t_cp())),
+                ("cp_hidden_s", format!("{:.6}", m.cp_hidden())),
+                ("cp_exposed_s", format!("{:.6}", m.cp_exposed())),
+                ("wall_ms", format!("{:.3}", m.wall_ms)),
+                ("flush_wall_ms", format!("{:.3}", m.flush_wall_ms)),
+            ]));
+            t.row(vec![
+                ft.name().to_string(),
+                mode.to_string(),
+                format!("{:.3}", m.final_time),
+                format!("{:.2}x", sync_virtual / m.final_time),
+                format!("{:.3}", m.t_cp()),
+                format!("{:.3}", m.cp_hidden()),
+                format!("{:.3}", m.cp_exposed()),
+                format!("{:.1}", m.wall_ms),
+            ]);
+        }
+    }
+    t.print();
+
+    // ------------------------------------------- machine-readable dump
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"check_mode\": {check},\n  \
+         \"pipeline_scaling\": [\n    {}\n  ],\n  \
+         \"overlapped_checkpoint\": [\n    {}\n  ]\n}}\n",
+        json_pipeline.join(",\n    "),
+        json_overlap.join(",\n    "),
+    );
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, &json).expect("write BENCH_hotpath.json");
+    println!("\nwrote {path}");
 }
 
 /// Time superstep 3 of a single-worker partition two ways, from an

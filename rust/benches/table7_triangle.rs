@@ -39,6 +39,7 @@ fn triangle_spec(ds: &bs::Dataset, adj_n: usize, scale: f64, tag: &str) -> JobSp
         // full triangle count would run the long tail of hub rounds.
         max_supersteps: 40,
         threads: 0,
+        async_cp: true,
     }
 }
 

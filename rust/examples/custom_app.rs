@@ -84,6 +84,7 @@ fn main() -> anyhow::Result<()> {
             tag: format!("custom-{kill:?}"),
             max_supersteps: 10_000,
             threads: 0,
+            async_cp: true,
         };
         let mut eng = Engine::new(HashMax, cfg, &adj)?;
         if let Some(at) = kill {

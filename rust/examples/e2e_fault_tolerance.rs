@@ -118,6 +118,7 @@ fn main() -> anyhow::Result<()> {
         tag: "e2e-curve".into(),
         max_supersteps: 100_000,
         threads: 0,
+        async_cp: true,
     };
     let mut eng = lwcp::pregel::Engine::new(app, cfg, &adj2)?;
     if let Some(e) = exec {

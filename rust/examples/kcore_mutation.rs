@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             tag: format!("kcore-{}-{kill}", ft.name()),
             max_supersteps: 100_000,
             threads: 0,
+            async_cp: true,
         };
         let mut eng = Engine::new(KCore { k: 4 }, cfg, &adj)?;
         if kill {

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             tag: format!("tri-{c}-{kill:?}"),
             max_supersteps: 100_000,
             threads: 0,
+            async_cp: true,
         };
         let mut eng = Engine::new(TriangleCount { c }, cfg, &adj)?;
         if let Some(at) = kill {

@@ -91,6 +91,7 @@ pub fn pagerank_spec(ds: &Dataset, data_scale: f64, tag: &str) -> JobSpec {
         tag: tag.into(),
         max_supersteps: 100_000,
         threads: 0,
+        async_cp: true,
     }
 }
 

@@ -11,6 +11,7 @@
 //!          [--kill STEP:N]... [--kill-during-cp] [--seed 1] [--supersteps 30]
 //!          [--xla] [--disk] [--profile pregel+|giraph|graphlab|graphx|shen]
 //!          [--threads 0]   (engine pool size; 0 = auto, 1 = sequential)
+//!          [--sync-cp]     (disable the overlapped checkpoint commit)
 //! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
 //! lwcp info
 //! ```
@@ -169,6 +170,7 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         tag: f.get("tag").unwrap_or("cli").to_string(),
         max_supersteps: f.parse_or("max-supersteps", 100_000)?,
         threads: f.parse_or("threads", 0)?,
+        async_cp: !f.has("sync-cp"),
     })
 }
 
@@ -193,6 +195,11 @@ fn cmd_run(f: &Flags) -> Result<()> {
     let mut io = report::io_table();
     io.row(report::io_row(spec.ft.name(), &m));
     io.print();
+    if !m.cp_overlap.is_empty() {
+        let mut ov = report::overlap_table();
+        ov.row(report::overlap_row(spec.ft.name(), &m));
+        ov.print();
+    }
     println!(
         "supersteps={} virtual_time={} wall={:.0} ms shuffled={} cp_bytes={}",
         m.supersteps_run,

@@ -85,6 +85,10 @@ pub struct JobSpec {
     /// Engine worker-pool size (see `EngineConfig::threads`): 0 = auto,
     /// 1 = fully sequential. Results are identical at any setting.
     pub threads: usize,
+    /// Overlap checkpoint commits with the next superstep's compute
+    /// (see `EngineConfig::async_cp`); `false` = the flush stalls the
+    /// superstep loop. Results are identical either way.
+    pub async_cp: bool,
 }
 
 impl JobSpec {
@@ -106,6 +110,7 @@ impl JobSpec {
             tag: "job".into(),
             max_supersteps: 100_000,
             threads: 0,
+            async_cp: true,
         }
     }
 
@@ -122,6 +127,7 @@ impl JobSpec {
             tag: self.tag.clone(),
             max_supersteps: self.max_supersteps,
             threads: self.threads,
+            async_cp: self.async_cp,
         }
     }
 }

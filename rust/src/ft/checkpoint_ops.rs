@@ -1,60 +1,141 @@
 //! Checkpoint writing and garbage collection — the failure-free-overhead
-//! half of every algorithm (what T_cp0 and T_cp measure).
+//! half of every algorithm (what T_cp0 and T_cp measure) — built as an
+//! **overlapped commit pipeline**:
 //!
-//! Per-worker checkpoint encoding and the `SimHdfs` puts fan out on the
-//! engine's persistent pool ([`crate::pregel::executor`]): `SimHdfs` is
-//! `Mutex`-protected, each task touches only its own worker, and every
-//! engine-global tally comes back in a [`PhaseCost`] ledger applied by
-//! the master. Per-superstep local logging lives in the executor's
-//! logging phase (`executor::log_phase`).
+//! 1. **Snapshot (synchronous, memory-speed).** At the barrier after a
+//!    fully-committed superstep, every worker encodes its checkpoint
+//!    blob and stages its E_W mutation increment on the engine's pool
+//!    ([`crate::pregel::executor`]), charged at memory bandwidth
+//!    (`CostModel::snapshot_time`). This is the only stall the
+//!    superstep loop pays.
+//! 2. **Flush (background).** The serialized blobs move to a detached
+//!    flush lane (`WorkerPool::submit`) that performs the `SimHdfs`
+//!    puts, writes the commit marker (the meta blob — atomic via
+//!    put-by-rename), appends the staged E_W increments and deletes the
+//!    previous checkpoint, while the engine proceeds into the next
+//!    superstep's compute/emit/shuffle phases.
+//! 3. **Join.** The engine tracks at most one [`InflightCp`] and joins
+//!    it before the *next* checkpoint, before any recovery, and at job
+//!    end. Virtual time charges the flush as `max(flush, compute)`:
+//!    only the part of the modeled flush duration that outlives the
+//!    overlapping compute is exposed as a stall
+//!    (`metrics::CpOverlap`). The commit's worker-local side — the
+//!    mutation-buffer drain *through the snapshot superstep* and the
+//!    local-log GC — also lands at the join, because it must not
+//!    happen unless the commit did.
+//!
+//! A [`crate::pregel::Kill`] with `during_cp` resolves at dispatch: the
+//! flush performs the blob puts but never writes the commit marker, so
+//! the half-written CP\[i\] stays invisible and recovery selects
+//! CP\[i-1\] — the same commit-barrier guarantee as the synchronous
+//! path (`async_cp = false`), now under concurrency.
 
 use crate::ft::FtKind;
-use crate::metrics::StepKind;
+use crate::metrics::{CpOverlap, StepKind};
 use crate::pregel::app::App;
 use crate::pregel::engine::Engine;
-use crate::pregel::executor;
-use crate::sim::PhaseCost;
+use crate::pregel::executor::{self, TaskHandle};
 use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, Cp0, CpMeta, HwCp};
 use crate::util::codec::Codec;
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 use std::sync::Arc;
+
+/// One in-flight background checkpoint flush. Created by
+/// `write_cp0`/`write_checkpoint`, consumed by `join_inflight_cp`.
+pub(crate) struct InflightCp {
+    /// Superstep being checkpointed.
+    step: u64,
+    /// The background flush lane; returns (checkpoint bytes written,
+    /// real flush wall milliseconds).
+    handle: TaskHandle<Result<(u64, f64)>>,
+    /// Whether the flush writes the commit marker. `false` when a
+    /// `Kill::during_cp` was due at dispatch: blob puts only, the
+    /// checkpoint stays invisible.
+    committed: bool,
+    /// Barrier (virtual) time of the snapshot.
+    t_snap: f64,
+    /// Modeled virtual duration of the flush: parallel puts + commit
+    /// barrier + previous-CP delete + local-log GC.
+    flush_virtual: f64,
+    /// Per-rank modeled put time. Abort accounting only: a flush killed
+    /// mid-write charged its workers the writes they performed, exactly
+    /// as the synchronous path did.
+    put_times: Vec<(usize, f64)>,
+    /// Ranks whose mutation buffers drain (through `step`) at commit.
+    drain_ranks: Vec<usize>,
+    /// Local-log GC threshold applied at commit (log-based FT).
+    gc_below: Option<u64>,
+    /// CP\[0\] reports `t_cp0` instead of a `cp_writes` sample.
+    is_cp0: bool,
+    /// Synchronous snapshot-encode window (virtual), reported as part
+    /// of T_cp/T_cp0.
+    t_encode: f64,
+}
 
 impl<A: App> Engine<A> {
     /// Write the initial checkpoint CP[0] right after input loading, so
-    /// recovery never re-shuffles the input graph (paper §4). All
-    /// workers encode and write concurrently.
+    /// recovery never re-shuffles the input graph (paper §4). Runs
+    /// through the same snapshot → background-flush pipeline as CP[i]:
+    /// superstep 1's compute overlaps the largest write of the job.
     pub(crate) fn write_cp0(&mut self) -> Result<()> {
+        debug_assert!(self.inflight.is_none(), "CP[0] precedes every other checkpoint");
         let t0 = self.max_clock();
         let wall = std::time::Instant::now();
         let alive = self.ws.alive_ranks();
         let sharers = self.sharers_by_rank();
-        let hdfs = Arc::clone(&self.hdfs);
-        {
+        let blobs: Vec<(usize, Vec<u8>)> = {
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &alive);
-            let results = self.pool.map(refs, |(r, w)| -> Result<PhaseCost> {
+            self.pool.map_named("cp0-snapshot", Some(alive.as_slice()), refs, |(r, w)| {
                 let cp0 = Cp0 {
                     values: w.part.values.clone(),
                     active: w.part.active.clone(),
                     adj: w.part.adj.clone(),
                 };
                 let blob = cp0.to_bytes();
-                let n = hdfs.put(&cp_key(0, r), &blob)?;
-                let t = cost.hdfs_write_time(n, sharers[r]);
-                w.clock.advance(t);
-                Ok(PhaseCost { checkpoint_bytes: n, ..Default::default() })
-            });
-            for pc in results {
-                pc?.merge_into(&mut self.metrics.bytes);
-            }
+                w.clock.advance(cost.snapshot_time(blob.len() as u64));
+                (r, blob)
+            })
+        };
+        let t_snap = self.barrier(0.0);
+        let mut flush_virtual = 0.0f64;
+        let mut put_times = Vec::with_capacity(blobs.len());
+        for (r, b) in &blobs {
+            let t = self.cfg.cost.hdfs_write_time(b.len() as u64, sharers[*r]);
+            flush_virtual = flush_virtual.max(t);
+            put_times.push((*r, t));
         }
+        flush_virtual += self.cfg.cost.barrier_overhead;
         let meta = CpMeta { step: 0, agg: Vec::new(), active_count: 0, sent_msgs: 0 };
-        self.hdfs.put(&cp_meta_key(0), &meta.to_bytes())?;
-        let t1 = self.barrier(self.cfg.cost.barrier_overhead);
-        self.metrics.t_cp0 = t1 - t0;
+        let meta_bytes = meta.to_bytes();
+        let hdfs = Arc::clone(&self.hdfs);
+        let handle = self.pool.submit(move || -> Result<(u64, f64)> {
+            let t0 = std::time::Instant::now();
+            let mut n = 0u64;
+            for (r, blob) in &blobs {
+                n += hdfs.put(&cp_key(0, *r), blob)?;
+            }
+            hdfs.put(&cp_meta_key(0), &meta_bytes)?;
+            Ok((n, t0.elapsed().as_secs_f64() * 1e3))
+        });
+        self.inflight = Some(InflightCp {
+            step: 0,
+            handle,
+            committed: true,
+            t_snap,
+            flush_virtual,
+            put_times,
+            drain_ranks: Vec::new(),
+            gc_below: None,
+            is_cp0: true,
+            t_encode: t_snap - t0,
+        });
         self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
         self.cp_last = 0;
-        self.cp_last_time = t1;
+        self.cp_last_time = t_snap; // refined to the commit time at join
+        if !self.cfg.async_cp {
+            self.join_inflight_cp()?;
+        }
         Ok(())
     }
 
@@ -93,6 +174,24 @@ impl<A: App> Engine<A> {
             self.cp_pending = true;
             return Ok(None);
         }
+        // At most one checkpoint in flight: join the previous flush
+        // before snapshotting the next one.
+        if self.inflight.is_some() {
+            self.join_inflight_cp()?;
+            // The join fixed `cp_last_time` to the previous flush's
+            // commit time: re-evaluate a purely time-driven trigger so
+            // a commit that only just landed does not immediately
+            // spawn another checkpoint.
+            if !self.cp_pending && !step_due {
+                let still_due = self
+                    .cfg
+                    .cp_every_secs
+                    .is_some_and(|dt| self.max_clock() - self.cp_last_time >= dt);
+                if !still_due {
+                    return Ok(None);
+                }
+            }
+        }
         let resumed = self.write_checkpoint(step)?;
         if resumed.is_none() {
             self.cp_pending = false;
@@ -100,34 +199,48 @@ impl<A: App> Engine<A> {
         Ok(resumed)
     }
 
-    /// Write CP[step] (content per algorithm), commit it, delete the
-    /// previous checkpoint, then garbage-collect local logs. The whole
-    /// window is the paper's T_cp. Encoding, HDFS I/O and GC all fan
-    /// out per worker on the pool.
+    /// Snapshot CP[step] at the barrier and dispatch its background
+    /// flush (content per algorithm). The whole synchronous window is
+    /// the snapshot encode; everything else — puts, commit marker, E_W
+    /// appends, previous-checkpoint delete, log GC — is priced into the
+    /// flush's modeled duration and settles at `join_inflight_cp`.
     ///
-    /// The commit barrier sits between the per-worker blob puts and the
-    /// meta write / previous-checkpoint deletion: until every worker has
-    /// fully written its blob, `cp_last` (and the old checkpoint's data)
-    /// stay untouched, so a failure mid-write leaves the half-written
-    /// CP\[step\] invisible and recovery selects CP\[i-1\]. Returns
+    /// The commit barrier survives the overlap: until the flush lane
+    /// has fully written every blob, it does not write the meta marker,
+    /// and `cp_last` (plus the old checkpoint's data, the E_W log and
+    /// the local mutation buffers) stay untouched until the join
+    /// observes a *committed* flush. A `Kill::during_cp` due here
+    /// aborts the commit at dispatch and injects the failure — the
+    /// half-written CP\[step\] is never observable. Returns
     /// `Some(resume_step)` when such a failure was injected.
     pub(crate) fn write_checkpoint(&mut self, step: u64) -> Result<Option<u64>> {
+        debug_assert!(self.inflight.is_none(), "at most one checkpoint in flight");
         let t0 = self.barrier(0.0);
         let wall = std::time::Instant::now();
         let heavy = self.cfg.ft.heavyweight_cp();
         let alive = self.ws.alive_ranks();
         let sharers = self.sharers_by_rank();
-        let hdfs = Arc::clone(&self.hdfs);
-        // Per-rank E_W increments, transmitted pre-commit but made
-        // visible (appended + buffer drained) only at commit: an aborted
-        // checkpoint must leave both E_W and the local mutation buffers
-        // exactly as they were, or a later commit would miss or
-        // double-apply mutations.
-        let mut ew_incs: Vec<(usize, Vec<u8>)> = Vec::new();
-        {
+        // Garbage-collect local logs at commit: HWLog deletes logs
+        // ≤ step (the heavyweight checkpoint stores the inbox, so
+        // step's messages are not needed); LWLog keeps step's logs —
+        // survivors regenerate from them at the next failure (§5,
+        // Place 1).
+        let gc_below = if self.cfg.ft.log_based() {
+            Some(if self.cfg.ft == FtKind::HwLog { step + 1 } else { step })
+        } else {
+            None
+        };
+
+        // ---- snapshot phase (synchronous, memory-speed) ----
+        // Each worker encodes its blob and stages its E_W increment:
+        // lightweight checkpoints ship the buffered mutation requests,
+        // heavyweight checkpoints store the full adjacency so the
+        // buffer is simply discarded (through `step`) at commit.
+        type Snap = (usize, Vec<u8>, Vec<u8>, (u64, u64));
+        let snaps: Vec<Snap> = {
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &alive);
-            let results = self.pool.map(refs, |(r, w)| -> Result<(usize, PhaseCost, Vec<u8>)> {
+            self.pool.map_named("checkpoint-snapshot", Some(alive.as_slice()), refs, |(r, w)| {
                 let blob = if heavy {
                     HwCp {
                         states: w.part.states(),
@@ -138,102 +251,220 @@ impl<A: App> Engine<A> {
                 } else {
                     w.part.states().to_bytes()
                 };
-                let mut total = hdfs.put(&cp_key(step, r), &blob)?;
-                // Incremental edge log: lightweight checkpoints ship the
-                // buffered mutation requests for E_W; heavyweight
-                // checkpoints store the full adjacency, so the buffer is
-                // simply discarded at commit.
                 let mut inc = Vec::new();
                 if !heavy {
                     for (_, seg) in w.log.mutations_through(step) {
                         inc.extend_from_slice(&seg);
                     }
-                    total += inc.len() as u64;
                 }
-                let t = cost.hdfs_write_time(total, sharers[r]);
-                w.clock.advance(t);
-                Ok((r, PhaseCost { checkpoint_bytes: total, ..Default::default() }, inc))
-            });
-            for res in results {
-                let (r, pc, inc) = res?;
-                pc.merge_into(&mut self.metrics.bytes);
-                ew_incs.push((r, inc));
-            }
+                w.clock.advance(cost.snapshot_time((blob.len() + inc.len()) as u64));
+                let gc = match gc_below {
+                    Some(below) => w.log.gc_preview(below),
+                    None => (0, 0),
+                };
+                (r, blob, inc, gc)
+            })
+        };
+        let t_snap = self.barrier(0.0);
+
+        // ---- modeled flush duration (deterministic byte counts) ----
+        let mut flush_virtual = 0.0f64;
+        let mut put_times = Vec::with_capacity(snaps.len());
+        for (r, blob, inc, _) in &snaps {
+            let t = self.cfg.cost.hdfs_write_time((blob.len() + inc.len()) as u64, sharers[*r]);
+            flush_virtual = flush_virtual.max(t);
+            put_times.push((*r, t));
         }
-        // ---- failure injection point (mid-checkpoint-write) ----
-        // The kill strikes after (some) workers put their blobs but
-        // before the commit: no meta is written, `cp_last` is not
-        // advanced, the previous checkpoint is not deleted. Recovery
-        // below therefore rolls back to CP[cp_last] — the half-written
-        // CP[step] is never observable.
-        if let Some(kidx) = self.due_kill(step, true) {
-            self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
-            let next = self.perform_failure(step, kidx)?;
-            return Ok(Some(next));
+        flush_virtual += self.cfg.cost.barrier_overhead; // commit marker
+        // Delete the previous checkpoint at commit. Lightweight
+        // algorithms must keep CP[0]: it is the edge source for every
+        // later recovery.
+        let delete_prev = if heavy { true } else { self.cp_last >= 1 };
+        let prev_prefix = cp_prefix(self.cp_last);
+        if delete_prev {
+            let files = self.hdfs.list(&prev_prefix).len() as u64;
+            flush_virtual += self.cfg.cost.hdfs_delete_time(files);
+        }
+        if gc_below.is_some() {
+            // The paper's implementation keeps one log file per
+            // (superstep, destination); we store one indexed file per
+            // superstep, so charge the per-file metadata cost as if
+            // segments were files (same inode workload). GC rides the
+            // overlap window: its files are dead to recovery once the
+            // commit lands.
+            let n_workers = self.ws.topology().n_workers() as u64;
+            let mut gc_t = 0.0f64;
+            for (_, _, _, (bytes, files)) in &snaps {
+                gc_t = gc_t.max(self.cfg.cost.gc_time(*bytes, files * n_workers));
+            }
+            flush_virtual += gc_t;
         }
 
-        // Commit barrier: the previous checkpoint stays valid until every
-        // worker has fully written the new one.
-        self.barrier(self.cfg.cost.barrier_overhead);
+        // A due `Kill::during_cp` resolves at dispatch: the flush will
+        // perform the blob puts but never write the commit marker.
+        let kill_during = self.due_kill(step, true);
+        let committed = kill_during.is_none();
+
+        // ---- dispatch the background flush lane ----
         let g = self.agg_log.get(&step).cloned().unwrap_or_default();
-        let meta = CpMeta {
+        let meta_bytes = CpMeta {
             step,
             agg: g.slots.clone(),
             active_count: g.active_count,
             sent_msgs: g.sent_msgs,
-        };
-        self.hdfs.put(&cp_meta_key(step), &meta.to_bytes())?;
-        // The commit makes the staged E_W increments visible and empties
-        // the local mutation buffers (heavyweight checkpoints discard
-        // them — the full adjacency was just stored).
-        for (r, inc) in ew_incs {
-            if !inc.is_empty() {
-                self.hdfs.append(&ew_key(r), &inc)?;
+        }
+        .to_bytes();
+        let drain_ranks: Vec<usize> = snaps.iter().map(|(r, _, _, _)| *r).collect();
+        let payload: Vec<(usize, Vec<u8>, Vec<u8>)> =
+            snaps.into_iter().map(|(r, blob, inc, _)| (r, blob, inc)).collect();
+        let hdfs = Arc::clone(&self.hdfs);
+        let handle = self.pool.submit(move || -> Result<(u64, f64)> {
+            let t0 = std::time::Instant::now();
+            let mut n = 0u64;
+            for (r, blob, inc) in &payload {
+                n += hdfs.put(&cp_key(step, *r), blob)?;
+                // The staged E_W increment is transmitted with the blob
+                // (and charged to the byte ledger) whether or not the
+                // commit lands; only its *visibility* — the append —
+                // waits for the marker.
+                n += inc.len() as u64;
             }
-            self.workers[r].log.clear_mutations();
-        }
-
-        // Delete the previous checkpoint. Lightweight algorithms must
-        // keep CP[0]: it is the edge source for every later recovery.
-        let delete_prev = if heavy { true } else { self.cp_last >= 1 };
-        if delete_prev {
-            let (_bytes, files) = self.hdfs.delete_prefix(&cp_prefix(self.cp_last));
-            let t = self.cfg.cost.hdfs_delete_time(files);
-            let m = self.master;
-            self.workers[m].clock.advance(t);
-        }
-
-        // Garbage-collect local logs: HWLog deletes logs ≤ step (the
-        // heavyweight checkpoint stores the inbox, so step's messages
-        // are not needed); LWLog keeps step's logs — survivors
-        // regenerate from them at the next failure (§5, Place 1).
-        if self.cfg.ft.log_based() {
-            let below = if self.cfg.ft == FtKind::HwLog { step + 1 } else { step };
-            // The paper's implementation keeps one log file per
-            // (superstep, destination); we store one indexed file per
-            // superstep, so charge the per-file metadata cost as if
-            // segments were files (same inode workload).
-            let n_workers = self.ws.topology().n_workers() as u64;
-            let cost = &self.cfg.cost;
-            let refs = executor::select_workers(&mut self.workers, &alive);
-            let results = self.pool.map(refs, |(_, w)| {
-                let (bytes, files) = w.log.gc_below(below);
-                let file_ops = files * n_workers;
-                let t = cost.gc_time(bytes, file_ops);
-                w.clock.advance(t);
-                PhaseCost { gc_bytes: bytes, ..Default::default() }
-            });
-            for pc in results {
-                pc.merge_into(&mut self.metrics.bytes);
+            if committed {
+                // Commit barrier: every blob is fully (and atomically)
+                // in place before the marker appears; only then do the
+                // staged E_W increments and the previous checkpoint's
+                // deletion become visible.
+                hdfs.put(&cp_meta_key(step), &meta_bytes)?;
+                for (r, _, inc) in &payload {
+                    if !inc.is_empty() {
+                        hdfs.append(&ew_key(*r), inc)?;
+                    }
+                }
+                if delete_prev {
+                    hdfs.delete_prefix(&prev_prefix);
+                }
             }
-        }
-
-        let t1 = self.barrier(0.0);
-        self.metrics.cp_writes.push((step, t1 - t0));
+            Ok((n, t0.elapsed().as_secs_f64() * 1e3))
+        });
+        self.inflight = Some(InflightCp {
+            step,
+            handle,
+            committed,
+            t_snap,
+            flush_virtual,
+            put_times,
+            drain_ranks,
+            gc_below,
+            is_cp0: false,
+            t_encode: t_snap - t0,
+        });
         self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
-        self.cp_last = step;
-        self.cp_last_time = t1;
+
+        // ---- failure injection point (mid-flush) ----
+        // The kill strikes after (some) workers put their blobs but
+        // before the commit: no marker is written, `cp_last` is not
+        // advanced, the previous checkpoint is not deleted, and the
+        // staged E_W increments and local mutation buffers stay exactly
+        // as they were. Recovery therefore rolls back to CP[cp_last] —
+        // the half-written CP[step] is never observable.
+        if let Some(kidx) = kill_during {
+            self.join_inflight_cp()?;
+            let next = self.perform_failure(step, kidx)?;
+            return Ok(Some(next));
+        }
+        if !self.cfg.async_cp {
+            self.join_inflight_cp()?;
+        }
         Ok(None)
+    }
+
+    /// Join the in-flight checkpoint flush, if any. For a committed
+    /// flush this settles the commit: overlap accounting (virtual time
+    /// advances by `max(flush, compute)` — only the part of the flush
+    /// that outlived the interleaved compute is an exposed stall),
+    /// the mutation-buffer drain through the snapshot superstep, the
+    /// local-log GC, and the `cp_last` advance. An aborted flush
+    /// (`Kill::during_cp`) only charges the workers the writes they
+    /// performed and leaves every piece of commit state alone.
+    pub(crate) fn join_inflight_cp(&mut self) -> Result<()> {
+        let Some(inf) = self.inflight.take() else {
+            return Ok(());
+        };
+        let wall = std::time::Instant::now();
+        let (cp_bytes, flush_ms) = match inf.handle.join() {
+            Ok(res) => {
+                res.with_context(|| format!("checkpoint flush for CP[{}]", inf.step))?
+            }
+            Err(p) => bail!(
+                "checkpoint flush lane for CP[{}] panicked: {}",
+                inf.step,
+                executor::panic_message(p.as_ref())
+            ),
+        };
+        self.metrics.bytes.checkpoint_bytes += cp_bytes;
+        self.metrics.flush_wall_ms += flush_ms;
+        if !inf.committed {
+            // Aborted mid-flight: the workers paid for the writes they
+            // performed before dying; nothing commits.
+            for (r, t) in inf.put_times {
+                self.workers[r].clock.advance(t);
+            }
+            self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+            return Ok(());
+        }
+
+        // The commit makes the staged E_W increments visible (the flush
+        // lane appended them before we got here) and empties the local
+        // mutation buffers — only through the snapshot superstep:
+        // mutations buffered while the flush was in flight belong to
+        // the *next* checkpoint.
+        for &r in &inf.drain_ranks {
+            self.workers[r].log.clear_mutations_through(inf.step);
+        }
+        // Physical log GC: priced into `flush_virtual`, performed only
+        // now that the commit is known to have landed.
+        if let Some(below) = inf.gc_below {
+            let refs = executor::select_workers(&mut self.workers, &inf.drain_ranks);
+            let results = self
+                .pool
+                .map_named("checkpoint-gc", Some(inf.drain_ranks.as_slice()), refs, |(_, w)| {
+                    w.log.gc_below(below)
+                });
+            for (bytes, _files) in results {
+                self.metrics.bytes.gc_bytes += bytes;
+            }
+        }
+
+        // Overlap accounting: the flush completed at t_snap + flush;
+        // anything past the engine's current clock is exposed stall.
+        // Clamp both shares into [0, flush]: the raw subtraction
+        // `(t_snap + flush) - t_now` carries f64 rounding residue (an
+        // immediate join has t_now == t_snap, and (a + b) - a need not
+        // equal b), and the split must never report negative time.
+        let t_now = self.max_clock();
+        let t_done = inf.t_snap + inf.flush_virtual;
+        let exposed = (t_done - t_now).clamp(0.0, inf.flush_virtual);
+        let hidden = (inf.flush_virtual - exposed).max(0.0);
+        if exposed > 0.0 {
+            for r in self.ws.alive_ranks() {
+                self.workers[r].clock.sync_to(t_done);
+            }
+        }
+        self.metrics.cp_overlap.push(CpOverlap {
+            step: inf.step,
+            flush: inf.flush_virtual,
+            hidden,
+            exposed,
+        });
+        if inf.is_cp0 {
+            self.metrics.t_cp0 = inf.t_encode + inf.flush_virtual;
+        } else {
+            self.metrics.cp_writes.push((inf.step, inf.t_encode + inf.flush_virtual));
+        }
+        self.cp_last = inf.step;
+        self.cp_last_time = t_done;
+        self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+        Ok(())
     }
 
     /// Record a CpStep-stage metric sample (used by recovery_ops).

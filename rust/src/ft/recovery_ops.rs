@@ -117,6 +117,12 @@ impl<A: App> Engine<A> {
         if self.cfg.ft == FtKind::None {
             bail!("worker failure at superstep {step} with fault tolerance disabled");
         }
+        // Join any in-flight checkpoint flush before touching the worker
+        // set: recovery must observe either a fully-committed CP (the
+        // flush lane finished its puts + marker) or, for a during-cp
+        // kill, an aborted flush whose CP never became visible — never
+        // a torn intermediate state.
+        self.join_inflight_cp()?;
         let kill = self.failure_plan.kills[kidx].clone();
         self.next_kill = kidx + 1;
 
@@ -196,9 +202,9 @@ impl<A: App> Engine<A> {
         let hdfs = Arc::clone(&self.hdfs);
         let cost = &self.cfg.cost;
         let refs = executor::select_workers(&mut self.workers, &loaders);
-        let results = self
-            .pool
-            .map(refs, |(r, w)| load_heavy_cp_worker(w, &hdfs, cost, sharers[r], cp_step));
+        let results = self.pool.map_named("cp-load", Some(loaders.as_slice()), refs, |(r, w)| {
+            load_heavy_cp_worker(w, &hdfs, cost, sharers[r], cp_step)
+        });
         for t in results {
             self.metrics.cp_loads.push(t?);
         }
@@ -220,7 +226,7 @@ impl<A: App> Engine<A> {
             let hdfs = Arc::clone(&self.hdfs);
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &alive);
-            let results = self.pool.map(refs, |(r, w)| {
+            let results = self.pool.map_named("cp-load", Some(alive.as_slice()), refs, |(r, w)| {
                 let reload_edges = respawned.contains(&r) || any_mutation;
                 load_light_cp_worker(w, &hdfs, cost, sharers[r], cp_step, reload_edges)
             });
@@ -261,25 +267,30 @@ impl<A: App> Engine<A> {
             let hdfs = Arc::clone(&self.hdfs);
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &respawned_v);
-            let results = self.pool.map(refs, |(r, w)| -> Result<(f64, u64)> {
-                let t = load_light_cp_worker(w, &hdfs, cost, sharers[r], cp_step, true)?;
-                let mut log_bytes = 0u64;
-                if cp_step > 0 {
-                    // Restore the invariant "every worker holds the logs
-                    // of the checkpointed superstep" (LWLog's GC rule)
-                    // on the fresh local disk: if *another* failure
-                    // strikes later, this worker — then a survivor —
-                    // must be able to regenerate CP[s_last]'s messages
-                    // from a local log like everyone else
-                    // (cascading-failure case).
-                    let data = w.encode_vstate_log();
-                    let n = w.log.write_vstate_log(cp_step, &data)?;
-                    let tl = cost.log_write_time(n) + cost.file_op;
-                    w.clock.advance(tl);
-                    log_bytes = n;
-                }
-                Ok((t, log_bytes))
-            });
+            let results = self.pool.map_named(
+                "cp-load",
+                Some(respawned_v.as_slice()),
+                refs,
+                |(r, w)| -> Result<(f64, u64)> {
+                    let t = load_light_cp_worker(w, &hdfs, cost, sharers[r], cp_step, true)?;
+                    let mut log_bytes = 0u64;
+                    if cp_step > 0 {
+                        // Restore the invariant "every worker holds the
+                        // logs of the checkpointed superstep" (LWLog's
+                        // GC rule) on the fresh local disk: if *another*
+                        // failure strikes later, this worker — then a
+                        // survivor — must be able to regenerate
+                        // CP[s_last]'s messages from a local log like
+                        // everyone else (cascading-failure case).
+                        let data = w.encode_vstate_log();
+                        let n = w.log.write_vstate_log(cp_step, &data)?;
+                        let tl = cost.log_write_time(n) + cost.file_op;
+                        w.clock.advance(tl);
+                        log_bytes = n;
+                    }
+                    Ok((t, log_bytes))
+                },
+            );
             for res in results {
                 let (t, n) = res?;
                 self.metrics.cp_loads.push(t);
@@ -327,44 +338,49 @@ impl<A: App> Engine<A> {
         let cost = &self.cfg.cost;
         type Forwarded = (Vec<(usize, usize, Vec<u8>)>, Option<f64>);
         let refs = executor::select_workers(&mut self.workers, forwarding);
-        let results = self.pool.map(refs, |(r, w)| -> Result<Forwarded> {
-            let use_vstate = ft == FtKind::LwLog && w.log.has_vstate_log(step);
-            if use_vstate {
-                let (bytes, payload) = w.log.read_vstate_log(step)?;
-                let t_load = cost.log_read_time(bytes);
-                let states = Worker::<A>::decode_vstate_log(&payload)?;
-                let n_comp = states.1.iter().filter(|&&c| c).count() as u64;
-                let ob = w.replay_generate(app_ref, step, agg_prev, Some(states));
-                let t = t_load + cost.compute_time(n_comp, ob.raw_count());
-                w.clock.advance(t);
-                let out: Vec<(usize, usize, Vec<u8>)> = dests
-                    .iter()
-                    .filter_map(|&d| ob.batch_for(d).map(|b| (r, d, b)))
-                    .collect();
-                Ok((out, Some(t_load)))
-            } else {
-                // HWLog — or an LWLog masked/mutating superstep.
-                if !w.log.has_msg_log(step) {
-                    bail!("worker {r} has no log for recovery superstep {step}");
-                }
-                let mut t = 0.0;
-                let mut out: Vec<(usize, usize, Vec<u8>)> = Vec::new();
-                for &d in dests {
-                    let (bytes, payload) = w.log.read_msg_log(step, d)?;
-                    if !payload.is_empty() {
-                        t += cost.log_read_time(bytes);
-                        out.push((r, d, payload));
-                    }
-                }
-                let sample = if t > 0.0 {
+        let results = self.pool.map_named(
+            "log-forward",
+            Some(forwarding),
+            refs,
+            |(r, w)| -> Result<Forwarded> {
+                let use_vstate = ft == FtKind::LwLog && w.log.has_vstate_log(step);
+                if use_vstate {
+                    let (bytes, payload) = w.log.read_vstate_log(step)?;
+                    let t_load = cost.log_read_time(bytes);
+                    let states = Worker::<A>::decode_vstate_log(&payload)?;
+                    let n_comp = states.1.iter().filter(|&&c| c).count() as u64;
+                    let ob = w.replay_generate(app_ref, step, agg_prev, Some(states));
+                    let t = t_load + cost.compute_time(n_comp, ob.raw_count());
                     w.clock.advance(t);
-                    Some(t)
+                    let out: Vec<(usize, usize, Vec<u8>)> = dests
+                        .iter()
+                        .filter_map(|&d| ob.batch_for(d).map(|b| (r, d, b)))
+                        .collect();
+                    Ok((out, Some(t_load)))
                 } else {
-                    None
-                };
-                Ok((out, sample))
-            }
-        });
+                    // HWLog — or an LWLog masked/mutating superstep.
+                    if !w.log.has_msg_log(step) {
+                        bail!("worker {r} has no log for recovery superstep {step}");
+                    }
+                    let mut t = 0.0;
+                    let mut out: Vec<(usize, usize, Vec<u8>)> = Vec::new();
+                    for &d in dests {
+                        let (bytes, payload) = w.log.read_msg_log(step, d)?;
+                        if !payload.is_empty() {
+                            t += cost.log_read_time(bytes);
+                            out.push((r, d, payload));
+                        }
+                    }
+                    let sample = if t > 0.0 {
+                        w.clock.advance(t);
+                        Some(t)
+                    } else {
+                        None
+                    };
+                    Ok((out, sample))
+                }
+            },
+        );
         for res in results {
             let (mut out, sample) = res?;
             if let Some(t) = sample {

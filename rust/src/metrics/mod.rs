@@ -79,6 +79,20 @@ impl PhaseWall {
     }
 }
 
+/// Overlap accounting of one background checkpoint flush (the
+/// overlapped-commit pipeline of `ft::checkpoint_ops`): `flush` is the
+/// modeled virtual duration of the HDFS puts + commit marker +
+/// previous-CP delete + log GC, split into `hidden` (ran concurrently
+/// with the following supersteps' compute) and `exposed` (the stall
+/// the engine actually paid at the join). `hidden + exposed == flush`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CpOverlap {
+    pub step: u64,
+    pub flush: f64,
+    pub hidden: f64,
+    pub exposed: f64,
+}
+
 /// All raw samples from one job run.
 #[derive(Debug, Clone, Default)]
 pub struct RunMetrics {
@@ -87,6 +101,14 @@ pub struct RunMetrics {
     pub t_cp0: f64,
     /// (step, duration incl. following GC) per CP[i], i >= 1.
     pub cp_writes: Vec<(u64, f64)>,
+    /// Hidden-vs-exposed split of every *committed* checkpoint flush
+    /// (CP[0] included). Sync mode (`async_cp = false`) records every
+    /// flush as fully exposed.
+    pub cp_overlap: Vec<CpOverlap>,
+    /// Real wall-clock milliseconds the background flush lane spent on
+    /// checkpoint I/O (overlapped with engine work, so *not* part of
+    /// `PhaseWall::checkpoint`, which tracks the synchronous side).
+    pub flush_wall_ms: f64,
     /// Per-worker checkpoint load samples during recovery.
     pub cp_loads: Vec<f64>,
     /// Per (worker, superstep) local log write samples.
@@ -163,6 +185,19 @@ impl RunMetrics {
         avg(self.log_loads.iter().copied())
     }
 
+    /// Total modeled checkpoint-flush time hidden behind compute
+    /// (simulated seconds) — the failure-free saving the overlapped
+    /// commit buys.
+    pub fn cp_hidden(&self) -> f64 {
+        self.cp_overlap.iter().map(|o| o.hidden).sum()
+    }
+
+    /// Total checkpoint-flush time the engine actually stalled for at
+    /// join barriers (simulated seconds).
+    pub fn cp_exposed(&self) -> f64 {
+        self.cp_overlap.iter().map(|o| o.exposed).sum()
+    }
+
     /// Total simulated time of supersteps in `[lo, hi]` of the given
     /// kinds (Table 7 reports window totals, not averages).
     pub fn window_total(&self, lo: u64, hi: u64, kinds: &[StepKind]) -> f64 {
@@ -209,6 +244,19 @@ mod tests {
         assert!(m.t_norm().is_nan());
         assert!(m.t_cp().is_nan());
         assert!(m.t_logload().is_nan());
+    }
+
+    #[test]
+    fn overlap_totals_sum_hidden_and_exposed() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.cp_hidden(), 0.0);
+        m.cp_overlap.push(CpOverlap { step: 0, flush: 4.0, hidden: 4.0, exposed: 0.0 });
+        m.cp_overlap.push(CpOverlap { step: 5, flush: 3.0, hidden: 1.0, exposed: 2.0 });
+        assert_eq!(m.cp_hidden(), 5.0);
+        assert_eq!(m.cp_exposed(), 2.0);
+        for o in &m.cp_overlap {
+            assert!((o.hidden + o.exposed - o.flush).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -26,6 +26,22 @@ pub fn io_row(name: &str, m: &RunMetrics) -> Vec<String> {
     ]
 }
 
+/// Render the overlapped-commit row: total modeled checkpoint-flush
+/// time and its hidden-vs-exposed split (see `RunMetrics::cp_hidden`).
+pub fn overlap_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    vec![
+        name.to_string(),
+        secs(m.cp_hidden() + m.cp_exposed()),
+        secs(m.cp_hidden()),
+        secs(m.cp_exposed()),
+    ]
+}
+
+/// Build the overlapped-commit table header.
+pub fn overlap_table() -> Table {
+    Table::new(vec!["", "CP flush", "hidden", "exposed"])
+}
+
 /// Build the Table 2 header.
 pub fn superstep_table() -> Table {
     Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_last"])
@@ -52,6 +68,16 @@ mod tests {
         assert_eq!(r[3], "-"); // no recovery samples -> NaN -> "-"
         let io = io_row("HWCP", &m);
         assert_eq!(io[1], "46.29 s");
+        m.cp_overlap.push(crate::metrics::CpOverlap {
+            step: 5,
+            flush: 3.0,
+            hidden: 2.0,
+            exposed: 1.0,
+        });
+        let ov = overlap_row("HWCP", &m);
+        assert_eq!(ov[1], "3.00 s");
+        assert_eq!(ov[2], "2.00 s");
+        assert!(overlap_table().render().contains("hidden"));
         let mut t = superstep_table();
         t.row(r);
         assert!(t.render().contains("T_cpstep"));

@@ -55,11 +55,13 @@ pub struct Kill {
     /// Whether the hosting machine is considered crashed (replacements
     /// then avoid it).
     pub machine_fails: bool,
-    /// Fire *during the checkpoint write* of `at_step` (after the
-    /// per-worker blob puts, before the commit) instead of at the
-    /// superstep's communication point. Exercises the commit barrier:
-    /// the half-written CP\[at_step\] must stay invisible and recovery
-    /// must select the previous committed checkpoint.
+    /// Fire *during the checkpoint flush* of `at_step` (after the
+    /// per-worker blob puts, before the commit marker) instead of at
+    /// the superstep's communication point. Exercises the commit
+    /// barrier under the overlapped pipeline: the flush lane never
+    /// writes CP\[at_step\]'s marker, so the half-written checkpoint
+    /// stays invisible and recovery selects the previous committed
+    /// checkpoint.
     pub during_cp: bool,
 }
 
@@ -116,6 +118,16 @@ pub struct EngineConfig {
     /// bit-for-bit identical at any setting (see
     /// `tests/recovery_equivalence.rs`).
     pub threads: usize,
+    /// Overlap checkpoint commits with the next superstep's compute:
+    /// the barrier snapshot stays synchronous (memory-speed encode),
+    /// while the SimHDFS puts, the commit marker and the previous
+    /// checkpoint's deletion run on a background pool lane that the
+    /// engine joins before the next checkpoint or any recovery.
+    /// Checkpoint time is then charged as `max(flush, compute)` rather
+    /// than their sum (`metrics::CpOverlap`). `false` restores the
+    /// stall-the-loop baseline. Results are bit-identical either way
+    /// (see `tests/async_cp.rs`).
+    pub async_cp: bool,
 }
 
 impl EngineConfig {
@@ -130,6 +142,7 @@ impl EngineConfig {
             tag: "test".into(),
             max_supersteps: 10_000,
             threads: 0,
+            async_cp: true,
         }
     }
 }
@@ -177,6 +190,10 @@ pub struct Engine<A: App> {
     /// Persistent worker thread pool, created once and reused by every
     /// superstep pipeline phase across normal execution and recovery.
     pub(crate) pool: WorkerPool,
+    /// The at-most-one in-flight background checkpoint flush
+    /// (`ft::checkpoint_ops`): joined before the next checkpoint, any
+    /// recovery, and job end.
+    pub(crate) inflight: Option<crate::ft::checkpoint_ops::InflightCp>,
 }
 
 impl<A: App> Engine<A> {
@@ -220,6 +237,7 @@ impl<A: App> Engine<A> {
             stage: Stage::Normal,
             master: 0,
             pool,
+            inflight: None,
         })
     }
 
@@ -315,6 +333,9 @@ impl<A: App> Engine<A> {
             self.ensure_no_pending_during_cp_kill(step)?;
             step += 1;
         }
+        // The final checkpoint's flush may still be in flight: join it
+        // so the job's metrics, `cp_last` and the store are final.
+        self.join_inflight_cp()?;
         // Communication kills scheduled past the job's end are tolerated
         // (randomized failure plans rely on it), but a during-cp kill
         // exists only to probe the checkpoint commit barrier — leaving
@@ -391,8 +412,9 @@ impl<A: App> Engine<A> {
 
     /// Does a kill fire at this step and injection point? Communication
     /// kills (`during_cp == false`) fire between the logging and shuffle
-    /// phases; checkpoint kills fire inside `write_checkpoint`, after
-    /// the blob puts but before the commit.
+    /// phases; checkpoint kills resolve at the flush dispatch inside
+    /// `write_checkpoint` — the background lane performs the blob puts
+    /// but never writes the commit marker.
     pub(crate) fn due_kill(&self, step: u64, during_cp: bool) -> Option<usize> {
         let k = self.failure_plan.kills.get(self.next_kill)?;
         (k.at_step == step && k.during_cp == during_cp).then_some(self.next_kill)

@@ -33,8 +33,13 @@
 //!   only the emit half of the vertex program (the read-only
 //!   [`super::app::EmitCtx`] phase) — no message fold, no aggregator
 //!   scratch, no mutation buffer;
-//! * checkpoint encode + `SimHdfs` I/O fan out on the same pool from
-//!   `ft::checkpoint_ops` / `ft::recovery_ops`.
+//! * checkpoint snapshot encoding and recovery loads fan out on the
+//!   same pool from `ft::checkpoint_ops` / `ft::recovery_ops`, while
+//!   the checkpoint **flush lane** — the `SimHdfs` puts, the commit
+//!   marker and the previous checkpoint's deletion — runs as a
+//!   detached [`WorkerPool::submit`] task overlapping the next
+//!   superstep (joined via [`TaskHandle`] before the next checkpoint
+//!   or any recovery).
 //!
 //! ## Determinism
 //!
@@ -58,10 +63,40 @@ use std::thread::JoinHandle;
 /// A unit of work shipped to a pool thread.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Join state of one `run_all` dispatch.
+/// Join state of one `run_all` dispatch. The panic slot keeps the
+/// *lowest-index* panicking task (deterministic across schedules) so
+/// the failure can be attributed to a specific worker/phase.
 struct Joiner {
     remaining: usize,
-    panic: Option<Box<dyn Any + Send>>,
+    panic: Option<(usize, Box<dyn Any + Send>)>,
+}
+
+/// Best-effort stringification of a caught panic payload (the standard
+/// `&str` / `String` payloads; anything else is labeled opaque).
+pub fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Handle to one detached background task (see [`WorkerPool::submit`]):
+/// the checkpoint flush lane of `ft::checkpoint_ops` runs behind one of
+/// these while the engine proceeds with the next superstep.
+pub struct TaskHandle<R> {
+    rx: std::sync::mpsc::Receiver<std::thread::Result<R>>,
+}
+
+impl<R> TaskHandle<R> {
+    /// Block until the task finishes. `Err` carries the panic payload
+    /// (format it with [`panic_message`]) — a background task must
+    /// never abort the engine silently.
+    pub fn join(self) -> std::thread::Result<R> {
+        self.rx.recv().expect("background task delivers exactly one result")
+    }
 }
 
 /// A persistent pool of OS threads executing borrowed per-worker tasks.
@@ -114,30 +149,52 @@ impl WorkerPool {
     /// the caller after the remaining tasks drained (pool threads
     /// survive panics). Must not be called from within a pool task.
     pub fn run_all<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if let Some((_, p)) = self.run_all_catching(tasks) {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// [`WorkerPool::run_all`], but panics are caught (inline execution
+    /// included) and returned as `(task index, payload)` — the
+    /// lowest-index panicking task if several panic — so callers can
+    /// attribute the failure to a worker and phase before re-raising.
+    fn run_all_catching<'env>(
+        &self,
+        tasks: Vec<Box<dyn FnOnce() + Send + 'env>>,
+    ) -> Option<(usize, Box<dyn Any + Send>)> {
         let inline = match &self.tx {
             None => true,
             Some(_) => tasks.len() <= 1,
         };
         if inline {
-            for t in tasks {
-                t();
+            let mut first: Option<(usize, Box<dyn Any + Send>)> = None;
+            for (i, t) in tasks.into_iter().enumerate() {
+                if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(t)) {
+                    if first.is_none() {
+                        first = Some((i, p));
+                    }
+                }
             }
-            return;
+            return first;
         }
         let tx = self.tx.as_ref().expect("pool has threads");
         let joiner = Arc::new((
             Mutex::new(Joiner { remaining: tasks.len(), panic: None }),
             Condvar::new(),
         ));
-        for task in tasks {
+        for (i, task) in tasks.into_iter().enumerate() {
             let j = Arc::clone(&joiner);
             let wrapped: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
                 let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
                 let (lock, cv) = &*j;
                 let mut g = lock.lock().unwrap();
                 if let Err(p) = result {
-                    if g.panic.is_none() {
-                        g.panic = Some(p);
+                    let replace = match &g.panic {
+                        None => true,
+                        Some((k, _)) => i < *k,
+                    };
+                    if replace {
+                        g.panic = Some((i, p));
                     }
                 }
                 g.remaining -= 1;
@@ -159,10 +216,7 @@ impl WorkerPool {
         while g.remaining > 0 {
             g = cv.wait(g).unwrap();
         }
-        if let Some(p) = g.panic.take() {
-            drop(g);
-            std::panic::resume_unwind(p);
-        }
+        g.panic.take()
     }
 
     /// Apply `f` to every item on the pool and return the results **in
@@ -172,18 +226,70 @@ impl WorkerPool {
         T: Send,
         R: Send,
     {
+        self.map_named("pool", None, items, f)
+    }
+
+    /// [`WorkerPool::map`] with failure attribution: `phase` names the
+    /// pipeline phase and `ranks` (parallel to `items`) names each
+    /// task's worker. A panicking task aborts the dispatch with a panic
+    /// naming the phase and worker rank — a bare
+    /// "pool task completed" abort is useless when one vertex program
+    /// out of 120 workers divides by zero.
+    pub fn map_named<T, R>(
+        &self,
+        phase: &str,
+        ranks: Option<&[usize]>,
+        items: Vec<T>,
+        f: impl Fn(T) -> R + Sync,
+    ) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+    {
         let n = items.len();
+        if let Some(rs) = ranks {
+            debug_assert_eq!(rs.len(), n, "ranks must parallel items");
+        }
         let mut results: Vec<Option<R>> = Vec::with_capacity(n);
         results.resize_with(n, || None);
-        {
+        let caught = {
             let f = &f;
             let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
             for (item, slot) in items.into_iter().zip(results.iter_mut()) {
                 tasks.push(Box::new(move || *slot = Some(f(item))));
             }
-            self.run_all(tasks);
+            self.run_all_catching(tasks)
+        };
+        if let Some((i, p)) = caught {
+            let who = match ranks {
+                Some(rs) => format!("worker {}", rs[i]),
+                None => format!("task {i}"),
+            };
+            panic!("{phase} phase unit for {who} panicked: {}", panic_message(p.as_ref()));
         }
         results.into_iter().map(|r| r.expect("pool task completed")).collect()
+    }
+
+    /// Run `f` as a detached background task, returning a handle to
+    /// join later — the checkpoint flush lane. With an inline pool
+    /// (fewer than two threads) the task runs synchronously right here:
+    /// same results, no overlap (the determinism baseline). The task
+    /// must be `'static`: it may not borrow engine state, only own
+    /// `Arc`s and moved buffers.
+    pub fn submit<R: Send + 'static>(
+        &self,
+        f: impl FnOnce() -> R + Send + 'static,
+    ) -> TaskHandle<R> {
+        let (tx, rx) = channel();
+        let job = move || {
+            // A dropped receiver just means nobody joins; don't unwind.
+            let _ = tx.send(std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)));
+        };
+        match &self.tx {
+            None => job(),
+            Some(pool_tx) => pool_tx.send(Box::new(job)).expect("worker pool alive"),
+        }
+        TaskHandle { rx }
     }
 }
 
@@ -244,7 +350,8 @@ pub fn compute_phase<A: App>(
         }
         return Ok(out);
     }
-    let results = pool.map(workers, |(r, w)| {
+    let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
+    let results = pool.map_named("compute", Some(ranks.as_slice()), workers, |(r, w)| {
         match w.compute_superstep(app, step, agg_prev, None) {
             Ok(o) => {
                 let t = cost.compute_time(o.n_computed, o.outbox.raw_count());
@@ -279,18 +386,24 @@ pub fn log_phase<A: App>(
     use_msg_log: bool,
     cost: &CostModel,
 ) -> Result<Vec<PhaseCost>> {
-    let results = pool.map(items, |(w, out)| -> Result<PhaseCost> {
-        let bytes = w.write_step_log(step, out, use_msg_log)?;
-        let t = cost.log_write_time(bytes) + cost.file_op;
-        w.clock.advance(t);
-        if !out.mutations_encoded.is_empty() {
-            let tm = cost.log_write_time(out.mutations_encoded.len() as u64);
-            w.clock.advance(tm);
-            w.log.append_mutations(step, out.mutations_encoded.clone());
-        }
-        w.log.log_partial_agg(step, out.agg.to_bytes());
-        Ok(PhaseCost { log_bytes: bytes, sample: Some(t), ..Default::default() })
-    });
+    let ranks: Vec<usize> = items.iter().map(|(w, _)| w.rank).collect();
+    let results = pool.map_named(
+        "logging",
+        Some(ranks.as_slice()),
+        items,
+        |(w, out)| -> Result<PhaseCost> {
+            let bytes = w.write_step_log(step, out, use_msg_log)?;
+            let t = cost.log_write_time(bytes) + cost.file_op;
+            w.clock.advance(t);
+            if !out.mutations_encoded.is_empty() {
+                let tm = cost.log_write_time(out.mutations_encoded.len() as u64);
+                w.clock.advance(tm);
+                w.log.append_mutations(step, out.mutations_encoded.clone());
+            }
+            w.log.log_partial_agg(step, out.agg.to_bytes());
+            Ok(PhaseCost { log_bytes: bytes, sample: Some(t), ..Default::default() })
+        },
+    );
     results.into_iter().collect()
 }
 
@@ -303,14 +416,20 @@ pub fn deliver_phase<A: App>(
     groups: Vec<(&mut Worker<A>, Vec<&[u8]>)>,
     cost: &CostModel,
 ) -> Result<Vec<PhaseCost>> {
-    let results = pool.map(groups, |(w, batches)| -> Result<PhaseCost> {
-        let counts = w.inbox.ingest_all(batches)?;
-        let mut recv_cpu = 0.0;
-        for n in counts {
-            recv_cpu += cost.recv_time(n);
-        }
-        Ok(PhaseCost { recv_cpu, ..Default::default() })
-    });
+    let ranks: Vec<usize> = groups.iter().map(|(w, _)| w.rank).collect();
+    let results = pool.map_named(
+        "deliver",
+        Some(ranks.as_slice()),
+        groups,
+        |(w, batches)| -> Result<PhaseCost> {
+            let counts = w.inbox.ingest_all(batches)?;
+            let mut recv_cpu = 0.0;
+            for n in counts {
+                recv_cpu += cost.recv_time(n);
+            }
+            Ok(PhaseCost { recv_cpu, ..Default::default() })
+        },
+    );
     results.into_iter().collect()
 }
 
@@ -328,7 +447,8 @@ pub fn replay_phase<A: App>(
     dests: Option<&[usize]>,
     cost: &CostModel,
 ) -> Vec<(usize, usize, Vec<u8>)> {
-    let per_worker = pool.map(workers, |(r, w)| {
+    let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
+    let per_worker = pool.map_named("replay", Some(ranks.as_slice()), workers, |(r, w)| {
         let ob = w.replay_generate(app, step, agg_prev, None);
         let n_comp = w.part.comp.iter().filter(|&&c| c).count() as u64;
         w.clock.advance(cost.compute_time(n_comp, ob.raw_count()));
@@ -411,6 +531,50 @@ mod tests {
         // The pool threads survived and keep serving work.
         let out = pool.map(vec![5usize, 6], |i| i * i);
         assert_eq!(out, vec![25, 36]);
+    }
+
+    #[test]
+    fn submit_runs_detached_and_joins() {
+        for threads in [1usize, 3] {
+            let pool = WorkerPool::new(threads);
+            let h = pool.submit(|| 6 * 7);
+            // The pool keeps serving foreground dispatches while the
+            // background task is outstanding.
+            let out = pool.map(vec![1usize, 2, 3], |i| i + 1);
+            assert_eq!(out, vec![2, 3, 4]);
+            assert_eq!(h.join().unwrap(), 42);
+        }
+    }
+
+    #[test]
+    fn submit_surfaces_panics_at_join() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit(|| -> usize { panic!("flush boom") });
+        let err = h.join().unwrap_err();
+        assert_eq!(panic_message(err.as_ref()), "flush boom");
+        // The pool threads survived and keep serving work.
+        assert_eq!(pool.map(vec![3usize, 4], |i| i * 2), vec![6, 8]);
+    }
+
+    #[test]
+    fn map_named_attributes_panics_to_worker_and_phase() {
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let ranks = vec![7usize, 9, 11];
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.map_named("compute", Some(ranks.as_slice()), vec![0usize, 1, 2], |i| {
+                    if i == 1 {
+                        panic!("vertex exploded");
+                    }
+                    i
+                })
+            }));
+            let p = caught.expect_err("panic must propagate");
+            let msg = panic_message(p.as_ref());
+            assert!(msg.contains("compute phase"), "missing phase: {msg}");
+            assert!(msg.contains("worker 9"), "missing rank: {msg}");
+            assert!(msg.contains("vertex exploded"), "missing payload: {msg}");
+        }
     }
 
     #[test]

@@ -270,6 +270,16 @@ impl CostModel {
         files as f64 * self.file_op + cold / self.disk_delete_bw
     }
 
+    /// In-memory checkpoint snapshot of `bytes` at the barrier:
+    /// encoding vertex states (and staging E_W increments) into flush
+    /// buffers at memory bandwidth. This is the only *synchronous*
+    /// cost of the overlapped checkpoint commit; the HDFS flush itself
+    /// is charged as `max(flush, compute)` at the join
+    /// (`ft::checkpoint_ops`).
+    pub fn snapshot_time(&self, bytes: u64) -> f64 {
+        self.scaled(bytes) * self.profile.checkpoint_mult() / self.mem_bw
+    }
+
     /// HDFS write of `bytes` by one worker: a replication pipeline —
     /// every replica hits a datanode disk, `replication - 1` replicas
     /// traverse the network; the pipeline overlaps, so take the max.
@@ -390,6 +400,17 @@ mod tests {
         assert!(t > 30.0, "t={t}");
         // Reads come from one replica: much cheaper.
         assert!(m.hdfs_read_time(1 << 30, 1) < t / 2.0);
+    }
+
+    #[test]
+    fn snapshot_is_orders_of_magnitude_cheaper_than_the_flush() {
+        // The overlapped commit's premise: the synchronous barrier
+        // snapshot (memory copy) is negligible next to the replicated,
+        // fsynced HDFS write it stages.
+        let m = CostModel::default();
+        let snap = m.snapshot_time(100 << 20);
+        let flush = m.hdfs_write_time(100 << 20, 1);
+        assert!(snap * 50.0 < flush, "snap={snap} flush={flush}");
     }
 
     #[test]

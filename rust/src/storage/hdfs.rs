@@ -40,8 +40,34 @@ impl Blob {
     }
 }
 
+/// Escape a logical key into a flat on-disk file name: `%` escapes
+/// itself, `/` becomes `%2F`. The mapping is injective — under the old
+/// `/` → `__` scheme the distinct keys `cp/1/w0` and `cp__1__w0`
+/// collided on the same disk file and silently clobbered each other.
 fn sanitize(key: &str) -> String {
-    key.replace('/', "__")
+    let mut out = String::with_capacity(key.len());
+    for c in key.chars() {
+        match c {
+            '%' => out.push_str("%25"),
+            '/' => out.push_str("%2F"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Directory-style prefix match: `prefix` selects the blob named
+/// exactly `prefix` and everything under `prefix/`. A raw
+/// `starts_with` would make `delete_prefix("cp/1")` also destroy
+/// `cp/10/...` — garbage-collecting a *live* checkpoint.
+fn key_under(key: &str, prefix: &str) -> bool {
+    if prefix.is_empty() || prefix.ends_with('/') {
+        return key.starts_with(prefix);
+    }
+    match key.strip_prefix(prefix) {
+        None => false,
+        Some(rest) => rest.is_empty() || rest.starts_with('/'),
+    }
 }
 
 impl SimHdfs {
@@ -55,11 +81,18 @@ impl SimHdfs {
     }
 
     /// Create a disk-backed store rooted at a fresh temp directory.
+    /// Roots carry a per-process uniqueness counter on top of the pid
+    /// and tag: two stores with the same tag in one process (common in
+    /// tests) must not share — and cross-delete — a directory.
     pub fn on_disk(tag: &str) -> Result<Self> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static UNIQ: AtomicU64 = AtomicU64::new(0);
+        let n = UNIQ.fetch_add(1, Ordering::Relaxed);
         let root = std::env::temp_dir().join(format!(
-            "lwcp-hdfs-{}-{}",
+            "lwcp-hdfs-{}-{}-{}",
             std::process::id(),
-            tag
+            tag,
+            n
         ));
         std::fs::create_dir_all(&root)?;
         Ok(SimHdfs {
@@ -168,12 +201,14 @@ impl SimHdfs {
         }
     }
 
-    /// Delete every blob whose key starts with `prefix`; returns
-    /// (bytes, files) removed — the engine charges the namenode cost.
+    /// Delete every blob in the directory named by `prefix` (the exact
+    /// key plus everything under `prefix/` — `cp/1` never touches
+    /// `cp/10/...`); returns (bytes, files) removed — the engine
+    /// charges the namenode cost.
     pub fn delete_prefix(&self, prefix: &str) -> (u64, u64) {
         let keys: Vec<String> = {
             let idx = self.index.lock().unwrap();
-            idx.keys().filter(|k| k.starts_with(prefix)).cloned().collect()
+            idx.keys().filter(|k| key_under(k, prefix)).cloned().collect()
         };
         let mut bytes = 0;
         for k in &keys {
@@ -182,13 +217,14 @@ impl SimHdfs {
         (bytes, keys.len() as u64)
     }
 
-    /// Keys under a prefix, sorted.
+    /// Keys in the directory named by `prefix` (same directory-style
+    /// semantics as [`SimHdfs::delete_prefix`]), sorted.
     pub fn list(&self, prefix: &str) -> Vec<String> {
         self.index
             .lock()
             .unwrap()
             .keys()
-            .filter(|k| k.starts_with(prefix))
+            .filter(|k| key_under(k, prefix))
             .cloned()
             .collect()
     }
@@ -265,6 +301,60 @@ mod tests {
             h.put("cp/0/w0", b"z").unwrap();
             assert_eq!(h.list("ew/"), vec!["ew/w0".to_string(), "ew/w1".to_string()]);
         }
+    }
+
+    #[test]
+    fn sanitized_keys_do_not_collide() {
+        // Regression: `/` → `__` mapped `cp/1/w0` and `cp__1__w0` onto
+        // one disk file; the escaping must keep look-alikes distinct on
+        // both backings (and be stable under its own escape character).
+        for h in stores() {
+            h.put("cp/1/w0", b"slash").unwrap();
+            h.put("cp__1__w0", b"underscore").unwrap();
+            h.put("cp%2F1%2Fw0", b"percent").unwrap();
+            assert_eq!(h.get("cp/1/w0").unwrap(), b"slash");
+            assert_eq!(h.get("cp__1__w0").unwrap(), b"underscore");
+            assert_eq!(h.get("cp%2F1%2Fw0").unwrap(), b"percent");
+            assert_eq!(h.total_bytes(), 5 + 10 + 7);
+            // Deleting one leaves the look-alikes intact.
+            assert_eq!(h.delete("cp/1/w0"), 5);
+            assert_eq!(h.get("cp__1__w0").unwrap(), b"underscore");
+            assert_eq!(h.get("cp%2F1%2Fw0").unwrap(), b"percent");
+        }
+    }
+
+    #[test]
+    fn prefix_ops_use_directory_semantics() {
+        // Regression: raw starts_with made delete_prefix("cp/1") also
+        // garbage-collect the live checkpoint under cp/10/.
+        for h in stores() {
+            h.put("cp/1/w0", b"a").unwrap();
+            h.put("cp/10/w0", b"bb").unwrap();
+            h.put("cp/100", b"ccc").unwrap();
+            assert_eq!(h.list("cp/1"), vec!["cp/1/w0".to_string()]);
+            let (bytes, files) = h.delete_prefix("cp/1");
+            assert_eq!((bytes, files), (1, 1));
+            assert!(!h.exists("cp/1/w0"));
+            assert!(h.exists("cp/10/w0"), "cp/10 destroyed by delete_prefix(\"cp/1\")");
+            assert!(h.exists("cp/100"));
+            // An exact-name match still selects the blob itself.
+            assert_eq!(h.delete_prefix("cp/100"), (3, 1));
+            assert!(!h.exists("cp/100"));
+        }
+    }
+
+    #[test]
+    fn same_tag_disk_stores_do_not_share_a_root() {
+        // Regression: roots keyed by (pid, tag) alone made two stores
+        // with one tag share and cross-delete a directory.
+        let a = SimHdfs::on_disk("same").unwrap();
+        let b = SimHdfs::on_disk("same").unwrap();
+        a.put("k", b"aa").unwrap();
+        b.put("k", b"bbb").unwrap();
+        assert_eq!(a.get("k").unwrap(), b"aa");
+        assert_eq!(b.get("k").unwrap(), b"bbb");
+        drop(b); // removes only its own root
+        assert_eq!(a.get("k").unwrap(), b"aa");
     }
 
     #[test]

@@ -178,14 +178,24 @@ impl LocalLogStore {
         self.mutations.iter().map(|(_, b)| b.len() as u64).sum()
     }
 
-    /// Discard the buffer. Called at checkpoint *commit* (the staged
-    /// E_W increment read via [`LocalLogStore::mutations_through`] has
-    /// just been appended on HDFS — an aborted checkpoint must leave
-    /// the buffer intact) and on rollback recovery (the rerun will
-    /// re-buffer the same mutations; keeping them would replay each
-    /// twice).
+    /// Discard the whole buffer. Called on rollback recovery (the
+    /// rerun will re-buffer the same mutations; keeping them would
+    /// replay each twice). Checkpoint commits use
+    /// [`LocalLogStore::clear_mutations_through`] instead.
     pub fn clear_mutations(&mut self) {
         self.mutations.clear();
+    }
+
+    /// Discard only the buffered mutations of supersteps `<= step`.
+    /// Called at checkpoint *commit* (the staged E_W increment read via
+    /// [`LocalLogStore::mutations_through`] has just been appended on
+    /// HDFS — an aborted checkpoint must leave the buffer intact).
+    /// The bound matters under the overlapped commit: by the time
+    /// CP\[i\]'s flush joins, the engine has run supersteps i+1… whose
+    /// fresh mutations are *not* covered by the snapshot and must
+    /// survive the drain.
+    pub fn clear_mutations_through(&mut self, step: u64) {
+        self.mutations.retain(|(s, _)| *s > step);
     }
 
     /// Read mutations buffered since the last checkpoint for supersteps
@@ -211,6 +221,26 @@ impl LocalLogStore {
     }
 
     // ------------------------------------------------------------- GC
+
+    /// What [`LocalLogStore::gc_below`] would remove, without removing
+    /// it: (bytes, files) of all logs for supersteps `< below`. The
+    /// overlapped checkpoint commit prices the GC into the background
+    /// flush's modeled duration at snapshot time, while the physical
+    /// deletion waits for the commit (an aborted checkpoint must leave
+    /// recovery's logs intact).
+    pub fn gc_preview(&self, below: u64) -> (u64, u64) {
+        let mut bytes = 0u64;
+        let mut files = 0u64;
+        for (_, m) in self.msg_meta.range(..below) {
+            bytes += m.total;
+            files += 1;
+        }
+        for (_, n) in self.vstate_meta.range(..below) {
+            bytes += *n;
+            files += 1;
+        }
+        (bytes, files)
+    }
 
     /// Delete all logs for supersteps `< below`. Returns (bytes, files)
     /// removed — the engine charges the cost model's gc_time.
@@ -340,6 +370,36 @@ mod tests {
             s.clear_mutations();
             assert_eq!(s.mutation_bytes(), 0);
             assert!(s.mutations_through(2).is_empty());
+        }
+    }
+
+    #[test]
+    fn gc_preview_matches_gc_below() {
+        for mut s in stores() {
+            for step in 1..=5u64 {
+                s.write_msg_log(step, &[(0, vec![0u8; 10])]).unwrap();
+                s.write_vstate_log(step, &[0u8; 4]).unwrap();
+            }
+            let preview = s.gc_preview(4);
+            assert_eq!(preview, (3 * 14, 6));
+            // Preview is non-destructive…
+            assert!(s.has_msg_log(1));
+            // …and predicts the physical GC exactly.
+            assert_eq!(s.gc_below(4), preview);
+        }
+    }
+
+    #[test]
+    fn clear_mutations_through_keeps_later_supersteps() {
+        for mut s in stores() {
+            s.append_mutations(3, vec![1, 2]);
+            s.append_mutations(4, vec![3]);
+            s.append_mutations(5, vec![4, 5, 6]);
+            // Commit of CP[4]: supersteps ≤ 4 drain, superstep 5's
+            // mutations (buffered while the flush was in flight) stay.
+            s.clear_mutations_through(4);
+            assert_eq!(s.mutations_through(10), vec![(5, vec![4, 5, 6])]);
+            assert_eq!(s.mutation_bytes(), 3);
         }
     }
 

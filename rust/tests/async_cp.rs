@@ -1,0 +1,273 @@
+//! The overlapped checkpoint commit (`ft::checkpoint_ops`): failure-free
+//! overlap accounting, bit-equivalence between the synchronous and
+//! asynchronous modes, and failure injection while a checkpoint flush
+//! is in flight — between the barrier snapshot and the commit marker —
+//! across all four FT algorithms, including the mutating k-core E_W
+//! case.
+
+use lwcp::apps::{KCore, PageRank};
+use lwcp::ft::FtKind;
+use lwcp::graph::{PresetGraph, VertexId};
+use lwcp::metrics::StepKind;
+use lwcp::pregel::{Engine, EngineConfig, FailurePlan, Kill};
+use lwcp::sim::Topology;
+use lwcp::storage::checkpoint::ew_key;
+use lwcp::storage::Backing;
+
+fn cfg(ft: FtKind, cp_every: u64, async_cp: bool, tag: &str) -> EngineConfig {
+    EngineConfig {
+        topo: Topology::new(3, 2),
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+        threads: 0,
+        async_cp,
+    }
+}
+
+fn pagerank(steps: u64) -> PageRank {
+    PageRank { damping: 0.85, supersteps: steps, combiner_enabled: true }
+}
+
+/// Undirected path graph: k=2 peeling cascades one vertex per end per
+/// superstep — edge deletions (E_W traffic) in every superstep.
+fn path_graph(n: usize) -> Vec<Vec<VertexId>> {
+    (0..n)
+        .map(|v| {
+            let mut l = Vec::new();
+            if v > 0 {
+                l.push(v as u32 - 1);
+            }
+            if v + 1 < n {
+                l.push(v as u32 + 1);
+            }
+            l
+        })
+        .collect()
+}
+
+#[test]
+fn overlap_shortens_failure_free_jobs_bit_identically() {
+    // Checkpoint every superstep: the async flush must hide checkpoint
+    // time (shorter simulated job) while producing the identical
+    // result, for every algorithm.
+    let adj = PresetGraph::WebBase.spec(1200, 21).generate();
+    for ft in FtKind::all() {
+        let run = |async_cp: bool| {
+            let tag = format!("ov-{}-{async_cp}", ft.name());
+            let mut eng = Engine::new(pagerank(10), cfg(ft, 1, async_cp, &tag), &adj).unwrap();
+            let m = eng.run().unwrap();
+            (eng.digest(), m)
+        };
+        let (d_sync, m_sync) = run(false);
+        let (d_async, m_async) = run(true);
+        assert_eq!(d_sync, d_async, "{}: overlap changed the result", ft.name());
+        assert!(
+            m_async.final_time < m_sync.final_time,
+            "{}: async {} !< sync {}",
+            ft.name(),
+            m_async.final_time,
+            m_sync.final_time
+        );
+        // Sync mode exposes every flush in full (up to f64 rounding
+        // residue of the clamped split); async hides real time.
+        assert!(
+            m_sync.cp_hidden() < 1e-9,
+            "{}: sync run hid flush time ({})",
+            ft.name(),
+            m_sync.cp_hidden()
+        );
+        assert!(m_async.cp_hidden() > 1e-6, "{}: nothing overlapped", ft.name());
+        for o in &m_async.cp_overlap {
+            assert!(o.flush > 0.0);
+            assert!(
+                (o.hidden + o.exposed - o.flush).abs() < 1e-9,
+                "{}: CP[{}] hidden {} + exposed {} != flush {}",
+                ft.name(),
+                o.step,
+                o.hidden,
+                o.exposed,
+                o.flush
+            );
+        }
+        // The modeled flush cost itself (T_cp, T_cp0) is mode-independent:
+        // overlap changes who waits, not what the write costs.
+        assert!((m_sync.t_cp0 - m_async.t_cp0).abs() < 1e-9);
+        assert_eq!(m_sync.cp_writes.len(), m_async.cp_writes.len());
+        for (a, b) in m_sync.cp_writes.iter().zip(&m_async.cp_writes) {
+            assert_eq!(a.0, b.0, "{}: checkpoint schedules diverged", ft.name());
+            assert!((a.1 - b.1).abs() < 1e-9, "{}: T_cp diverged at CP[{}]", ft.name(), a.0);
+        }
+    }
+}
+
+#[test]
+fn mid_flight_communication_kill_recovers_from_the_inflight_cp() {
+    // The kill fires at superstep 5's communication point while CP[4]'s
+    // flush is still riding the background lane. The engine joins the
+    // flush before recovery, the commit lands, and recovery selects
+    // CP[4] — bit-identically to the failure-free run, in both modes.
+    let adj = PresetGraph::WebBase.spec(1000, 22).generate();
+    for ft in FtKind::all() {
+        let mut base = Engine::new(
+            pagerank(12),
+            cfg(ft, 4, true, &format!("mfb-{}", ft.name())),
+            &adj,
+        )
+        .unwrap();
+        base.run().unwrap();
+        for async_cp in [true, false] {
+            let tag = format!("mf-{}-{async_cp}", ft.name());
+            let mut failed = Engine::new(pagerank(12), cfg(ft, 4, async_cp, &tag), &adj)
+                .unwrap()
+                .with_failures(FailurePlan::kill_n_at(1, 5));
+            let m = failed.run().unwrap();
+            assert_eq!(
+                failed.digest(),
+                base.digest(),
+                "{} async={async_cp}: mid-flight kill corrupted the result",
+                ft.name()
+            );
+            assert!(m.recovery_control > 0.0);
+            let cpsteps: Vec<u64> = m
+                .steps
+                .iter()
+                .filter(|s| s.kind == StepKind::CpStep)
+                .map(|s| s.step)
+                .collect();
+            assert_eq!(
+                cpsteps,
+                vec![4],
+                "{} async={async_cp}: recovery did not select the in-flight CP[4]",
+                ft.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn during_cp_kill_mid_flight_selects_previous_checkpoint() {
+    // The during-cp kill resolves at flush dispatch: the lane performs
+    // the blob puts but never writes CP[8]'s marker, so recovery must
+    // roll back to CP[4] and CP[8] must commit exactly once (after
+    // recovery re-runs it) — under the overlapped pipeline and under
+    // the synchronous baseline alike.
+    let adj = PresetGraph::WebBase.spec(1000, 23).generate();
+    for ft in FtKind::all() {
+        let mut base = Engine::new(
+            pagerank(14),
+            cfg(ft, 4, true, &format!("dcb-{}", ft.name())),
+            &adj,
+        )
+        .unwrap();
+        base.run().unwrap();
+        for async_cp in [true, false] {
+            let plan = FailurePlan {
+                kills: vec![Kill {
+                    at_step: 8,
+                    ranks: vec![1],
+                    machine_fails: false,
+                    during_cp: true,
+                }],
+            };
+            let tag = format!("dc-{}-{async_cp}", ft.name());
+            let mut failed = Engine::new(pagerank(14), cfg(ft, 4, async_cp, &tag), &adj)
+                .unwrap()
+                .with_failures(plan);
+            let m = failed.run().unwrap();
+            assert_eq!(failed.digest(), base.digest(), "{} async={async_cp}", ft.name());
+            let cpsteps: Vec<u64> = m
+                .steps
+                .iter()
+                .filter(|s| s.kind == StepKind::CpStep)
+                .map(|s| s.step)
+                .collect();
+            assert_eq!(cpsteps, vec![4], "{} async={async_cp}: aborted CP[8] was visible", ft.name());
+            let cp8_commits = m.cp_writes.iter().filter(|&&(s, _)| s == 8).count();
+            assert_eq!(cp8_commits, 1, "{} async={async_cp}", ft.name());
+            assert_eq!(failed.cp_last(), 12, "{} async={async_cp}", ft.name());
+        }
+    }
+}
+
+#[test]
+fn kcore_mid_flight_kill_stages_ew_exactly_once() {
+    // The mutating case: CP[3]'s flush carries staged E_W edge-deletion
+    // increments when the kill fires at superstep 4. The join commits
+    // the increments exactly once and drains the buffers only through
+    // superstep 3 — superstep 4's deletions (buffered while the flush
+    // was in flight) must survive into the next checkpoint. A
+    // double-append or over-drain shows up as a corrupted k-core or a
+    // diverged E_W byte count.
+    let adj = path_graph(100);
+    let ew_total = |eng: &Engine<KCore>| -> u64 {
+        (0..6).filter_map(|r| eng.hdfs().size_of(&ew_key(r))).sum()
+    };
+    for ft in [FtKind::LwCp, FtKind::LwLog] {
+        let mut base =
+            Engine::new(KCore { k: 2 }, cfg(ft, 3, true, &format!("kwb-{}", ft.name())), &adj)
+                .unwrap();
+        base.run().unwrap();
+        let base_ew = ew_total(&base);
+        assert!(base_ew > 0, "{}: no E_W traffic in the baseline", ft.name());
+
+        for (label, plan) in [
+            ("comm-kill@4", FailurePlan::kill_n_at(1, 4)),
+            (
+                "during-cp@6",
+                FailurePlan {
+                    kills: vec![Kill {
+                        at_step: 6,
+                        ranks: vec![1],
+                        machine_fails: false,
+                        during_cp: true,
+                    }],
+                },
+            ),
+        ] {
+            let tag = format!("kw-{}-{label}", ft.name());
+            let mut failed = Engine::new(KCore { k: 2 }, cfg(ft, 3, true, &tag), &adj)
+                .unwrap()
+                .with_failures(plan);
+            failed.run().unwrap();
+            assert_eq!(
+                failed.digest(),
+                base.digest(),
+                "{} {label}: k-core corrupted",
+                ft.name()
+            );
+            assert_eq!(
+                ew_total(&failed),
+                base_ew,
+                "{} {label}: E_W increments lost or double-appended",
+                ft.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn mid_flight_kill_is_thread_count_deterministic() {
+    // The join points are control-flow positions, not timing races: an
+    // inline pool (threads=1, flush runs synchronously at dispatch) and
+    // a real pool (flush genuinely overlaps) must produce bit-identical
+    // results around a mid-flight kill.
+    let adj = PresetGraph::WebBase.spec(900, 24).generate();
+    let digest = |threads: usize| {
+        let mut c = cfg(FtKind::LwLog, 3, true, &format!("tdet-{threads}"));
+        c.threads = threads;
+        let mut eng = Engine::new(pagerank(11), c, &adj)
+            .unwrap()
+            .with_failures(FailurePlan::kill_n_at(1, 4));
+        eng.run().unwrap();
+        eng.digest()
+    };
+    let want = digest(1);
+    for threads in [2usize, 0] {
+        assert_eq!(digest(threads), want, "threads={threads}");
+    }
+}

@@ -22,6 +22,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         tag: tag.into(),
         max_supersteps: 10_000,
         threads: 0,
+        async_cp: true,
     }
 }
 

@@ -233,6 +233,7 @@ fn run_new<A: App, F: Fn() -> A>(
         tag: tag.into(),
         max_supersteps: 10_000,
         threads: 0,
+        async_cp: true,
     };
     let mut eng = Engine::new(app_fn(), cfg, adj).expect("engine");
     if let Some(p) = plan {

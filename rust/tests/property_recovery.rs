@@ -70,6 +70,7 @@ fn cfg(case: &Case, tag: &str) -> EngineConfig {
         tag: tag.into(),
         max_supersteps: 10_000,
         threads: 0,
+        async_cp: true,
     }
 }
 
@@ -245,6 +246,7 @@ fn double_failure_same_worker_rank() {
             tag: format!("dbl-{}", ft.name()),
             max_supersteps: 10_000,
             threads: 0,
+            async_cp: true,
         };
         let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
         let mut base = Engine::new(app(), c.clone(), &adj).unwrap();

@@ -107,6 +107,7 @@ fn cfg(tag: &str, ft: FtKind) -> EngineConfig {
         tag: tag.into(),
         max_supersteps: 10_000,
         threads: 0,
+        async_cp: true,
     }
 }
 
