@@ -18,8 +18,13 @@
 //!    compare the synchronous flush (stalls the loop) against the
 //!    background flush lane, in simulated job time and real wall time,
 //!    with the hidden/exposed split.
+//! 7. Two-stage shuffle: wire bytes and deliver wall with and without
+//!    the machine-level combine trees at 1/4/8 workers per machine —
+//!    asserting the ≥2× remote wire-byte reduction at 8, exact parity
+//!    at 1, and bit-identical digests across modes, failure-free and
+//!    through a mid-flight kill.
 //!
-//! Results of sections 4 and 6 are also written to
+//! Results of sections 4, 6 and 7 are also written to
 //! `BENCH_hotpath.json` (machine-readable, consumed by CI). Pass
 //! `--check` for a fast smoke run (small graphs, same assertions) —
 //! the CI invocation.
@@ -29,7 +34,7 @@ use lwcp::bench_support as bs;
 use lwcp::ft::FtKind;
 use lwcp::graph::{Partitioner, PresetGraph};
 use lwcp::pregel::app::{BatchExec, CombineFn};
-use lwcp::pregel::{App, Engine, EngineConfig, Inbox, Outbox, Worker};
+use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan, Inbox, Outbox, Worker};
 use lwcp::sim::Topology;
 use lwcp::storage::Backing;
 use lwcp::util::fmtutil::Table;
@@ -104,6 +109,7 @@ fn main() {
                 max_supersteps: 10_000,
                 threads: 0,
                 async_cp: true,
+                machine_combine: true,
             };
             let mut eng = Engine::new(app, cfg, &adj).expect("engine");
             if use_xla {
@@ -182,6 +188,7 @@ fn main() {
             max_supersteps: 10_000,
             threads,
             async_cp: true,
+            machine_combine: true,
         };
         let mut eng = Engine::new(app, cfg, &adj).expect("engine");
         let m = eng.run().expect("run");
@@ -262,6 +269,7 @@ fn main() {
                 max_supersteps: 10_000,
                 threads: 0,
                 async_cp,
+                machine_combine: true,
             };
             let mut eng = Engine::new(app, cfg, &adj6).expect("engine");
             let m = eng.run().expect("run");
@@ -306,13 +314,125 @@ fn main() {
     }
     t.print();
 
+    // --------------------- 7: machine-level combine-tree shuffle
+    // The same PageRank job at 1/4/8 workers per machine, two-stage
+    // shuffle on vs off. The pre-combine shuffle volume is
+    // mode-invariant; the wire volume (bytes crossing a NIC) must
+    // shrink once several co-located workers target the same remote
+    // machine — and the digest must never move.
+    println!("\n=== Hot path 7 — two-stage shuffle: wire volume vs workers/machine ===");
+    let adj7 = PresetGraph::WebBase.spec(if check { 12_000 } else { 60_000 }, 23).generate();
+    let mut json_mc: Vec<String> = Vec::new();
+    let mut t = Table::new(vec![
+        "workers/machine",
+        "machine-combine",
+        "shuffle MiB",
+        "wire MiB",
+        "shuffle/wire",
+        "deliver ms",
+    ]);
+    let mib = |b: u64| b as f64 / (1 << 20) as f64;
+    for wpm in [1usize, 4, 8] {
+        let mut digest = [0u64; 2];
+        let mut wire = [0u64; 2];
+        for (i, mc) in [false, true].into_iter().enumerate() {
+            let app = PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(2, wpm),
+                cost: Default::default(),
+                ft: FtKind::None,
+                cp_every: 0,
+                cp_every_secs: None,
+                backing: Backing::Memory,
+                tag: format!("hp7-{wpm}-{mc}"),
+                max_supersteps: 10_000,
+                threads: 0,
+                async_cp: true,
+                machine_combine: mc,
+            };
+            let mut eng = Engine::new(app, cfg, &adj7).expect("engine");
+            let m = eng.run().expect("run");
+            digest[i] = eng.digest();
+            wire[i] = m.bytes.wire_bytes;
+            let ratio = m.bytes.shuffle_bytes as f64 / m.bytes.wire_bytes.max(1) as f64;
+            json_mc.push(json_obj(&[
+                ("workers_per_machine", wpm.to_string()),
+                ("machine_combine", mc.to_string()),
+                ("shuffle_bytes", m.bytes.shuffle_bytes.to_string()),
+                ("wire_bytes", m.bytes.wire_bytes.to_string()),
+                ("deliver_wall_ms", format!("{:.3}", m.phase_wall.deliver)),
+                ("digest", json_str(&format!("{:016x}", digest[i]))),
+            ]));
+            t.row(vec![
+                wpm.to_string(),
+                if mc { "on" } else { "off" }.to_string(),
+                format!("{:.2}", mib(m.bytes.shuffle_bytes)),
+                format!("{:.2}", mib(m.bytes.wire_bytes)),
+                format!("{ratio:.2}x"),
+                format!("{:.1}", m.phase_wall.deliver),
+            ]);
+        }
+        assert_eq!(
+            digest[0], digest[1],
+            "wpm={wpm}: machine-combine changed the result"
+        );
+        if wpm == 1 {
+            assert_eq!(
+                wire[0], wire[1],
+                "wpm=1: the two-stage shuffle must be a wire no-op"
+            );
+        }
+        if wpm == 8 {
+            assert!(
+                wire[1] * 2 <= wire[0],
+                "wpm=8: expected >=2x remote wire-byte reduction (off={} on={})",
+                wire[0],
+                wire[1]
+            );
+        }
+    }
+    t.print();
+    // Recovery through the combined shuffle: a mid-flight kill at 8
+    // workers per machine must land on the same digest in both modes.
+    {
+        let mut digests = Vec::new();
+        for mc in [false, true] {
+            let app = PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(2, 8),
+                cost: Default::default(),
+                ft: FtKind::LwCp,
+                cp_every: 3,
+                cp_every_secs: None,
+                backing: Backing::Memory,
+                tag: format!("hp7k-{mc}"),
+                max_supersteps: 10_000,
+                threads: 0,
+                async_cp: true,
+                machine_combine: mc,
+            };
+            let mut eng = Engine::new(app, cfg, &adj7)
+                .expect("engine")
+                .with_failures(FailurePlan::kill_n_at(1, 5));
+            eng.run().expect("run");
+            digests.push(eng.digest());
+        }
+        assert_eq!(
+            digests[0], digests[1],
+            "mid-flight kill: machine-combine modes diverged"
+        );
+        println!("  [PASS] mid-flight kill digest identical across machine-combine modes");
+    }
+
     // ------------------------------------------- machine-readable dump
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"check_mode\": {check},\n  \
          \"pipeline_scaling\": [\n    {}\n  ],\n  \
-         \"overlapped_checkpoint\": [\n    {}\n  ]\n}}\n",
+         \"overlapped_checkpoint\": [\n    {}\n  ],\n  \
+         \"machine_combine\": [\n    {}\n  ]\n}}\n",
         json_pipeline.join(",\n    "),
         json_overlap.join(",\n    "),
+        json_mc.join(",\n    "),
     );
     let path = "BENCH_hotpath.json";
     std::fs::write(path, &json).expect("write BENCH_hotpath.json");

@@ -40,6 +40,9 @@ fn triangle_spec(ds: &bs::Dataset, adj_n: usize, scale: f64, tag: &str) -> JobSp
         max_supersteps: 40,
         threads: 0,
         async_cp: true,
+        // Paper reproduction: the measured system has no machine-level
+        // combine stage (see bench_support::pagerank_spec).
+        machine_combine: false,
     }
 }
 

@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
             max_supersteps: 10_000,
             threads: 0,
             async_cp: true,
+            machine_combine: true,
         };
         let mut eng = Engine::new(HashMax, cfg, &adj)?;
         if let Some(at) = kill {

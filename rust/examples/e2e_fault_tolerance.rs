@@ -119,6 +119,7 @@ fn main() -> anyhow::Result<()> {
         max_supersteps: 100_000,
         threads: 0,
         async_cp: true,
+        machine_combine: true,
     };
     let mut eng = lwcp::pregel::Engine::new(app, cfg, &adj2)?;
     if let Some(e) = exec {

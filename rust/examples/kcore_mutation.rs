@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
             max_supersteps: 100_000,
             threads: 0,
             async_cp: true,
+            machine_combine: true,
         };
         let mut eng = Engine::new(KCore { k: 4 }, cfg, &adj)?;
         if kill {

@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
             max_supersteps: 100_000,
             threads: 0,
             async_cp: true,
+            machine_combine: true,
         };
         let mut eng = Engine::new(TriangleCount { c }, cfg, &adj)?;
         if let Some(at) = kill {

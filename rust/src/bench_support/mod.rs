@@ -92,6 +92,16 @@ pub fn pagerank_spec(ds: &Dataset, data_scale: f64, tag: &str) -> JobSpec {
         max_supersteps: 100_000,
         threads: 0,
         async_cp: true,
+        // The paper's Pregel+ ships each worker's combined batch to the
+        // NIC directly; the machine-level combine tree is this repo's
+        // extension. Table reproductions and calibration therefore run
+        // the single-stage baseline *wire accounting* — the hotpath
+        // bench (§7) and the ablations study the two-stage shuffle
+        // explicitly. (The receiver fold order is engine-wide — the
+        // two-level merge-order contract of `pregel::message` applies
+        // in both modes — so this knob changes modeled costs, never
+        // results.)
+        machine_combine: false,
     }
 }
 

@@ -12,6 +12,8 @@
 //!          [--xla] [--disk] [--profile pregel+|giraph|graphlab|graphx|shen]
 //!          [--threads 0]   (engine pool size; 0 = auto, 1 = sequential)
 //!          [--sync-cp]     (disable the overlapped checkpoint commit)
+//!          [--no-machine-combine]  (disable the two-stage shuffle's
+//!                                   machine-level combine trees)
 //! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
 //! lwcp info
 //! ```
@@ -171,6 +173,7 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         max_supersteps: f.parse_or("max-supersteps", 100_000)?,
         threads: f.parse_or("threads", 0)?,
         async_cp: !f.has("sync-cp"),
+        machine_combine: !f.has("no-machine-combine"),
     })
 }
 
@@ -200,12 +203,16 @@ fn cmd_run(f: &Flags) -> Result<()> {
         ov.row(report::overlap_row(spec.ft.name(), &m));
         ov.print();
     }
+    let mut wt = report::wire_table();
+    wt.row(report::wire_row(spec.ft.name(), &m));
+    wt.print();
     println!(
-        "supersteps={} virtual_time={} wall={:.0} ms shuffled={} cp_bytes={}",
+        "supersteps={} virtual_time={} wall={:.0} ms shuffled={} wire={} cp_bytes={}",
         m.supersteps_run,
         secs(m.final_time),
         m.wall_ms,
         crate::util::fmtutil::bytes(m.bytes.shuffle_bytes),
+        crate::util::fmtutil::bytes(m.bytes.wire_bytes),
         crate::util::fmtutil::bytes(m.bytes.checkpoint_bytes),
     );
     Ok(())
@@ -278,6 +285,9 @@ mod tests {
         assert_eq!(spec.topo.n_workers(), 120);
         assert_eq!(spec.cp_every, 10);
         assert_eq!(spec.ft, FtKind::LwCp);
+        assert!(spec.machine_combine, "two-stage shuffle defaults on");
+        let off = spec_from_flags(&flags("--no-machine-combine")).unwrap();
+        assert!(!off.machine_combine);
     }
 
     #[test]

@@ -89,6 +89,12 @@ pub struct JobSpec {
     /// (see `EngineConfig::async_cp`); `false` = the flush stalls the
     /// superstep loop. Results are identical either way.
     pub async_cp: bool,
+    /// Two-stage shuffle (see `EngineConfig::machine_combine`): merge
+    /// the per-worker batches of co-located workers into one wire batch
+    /// per (machine, machine) pair. `false` = the paper's single-stage
+    /// baseline (CLI `--no-machine-combine`). Results are identical
+    /// either way.
+    pub machine_combine: bool,
 }
 
 impl JobSpec {
@@ -111,6 +117,7 @@ impl JobSpec {
             max_supersteps: 100_000,
             threads: 0,
             async_cp: true,
+            machine_combine: true,
         }
     }
 
@@ -128,6 +135,7 @@ impl JobSpec {
             max_supersteps: self.max_supersteps,
             threads: self.threads,
             async_cp: self.async_cp,
+            machine_combine: self.machine_combine,
         }
     }
 }

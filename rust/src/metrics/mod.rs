@@ -42,7 +42,14 @@ pub struct StepRecord {
 /// Byte-volume statistics (drive the cost model; reported for sanity).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ByteStats {
+    /// Serialized per-worker batch volume entering the shuffle
+    /// (pre-machine-combine: what the compute phases generated).
     pub shuffle_bytes: u64,
+    /// Bytes that actually crossed a machine NIC (post-machine-combine
+    /// when the two-stage shuffle is on; intra-machine traffic never
+    /// counts). `shuffle_bytes / wire_bytes`-style ratios quantify the
+    /// combine-tree win — see `report::wire_row`.
+    pub wire_bytes: u64,
     pub checkpoint_bytes: u64,
     pub log_bytes: u64,
     pub gc_bytes: u64,

@@ -1,7 +1,7 @@
 //! Pretty reporting of run metrics in the paper's table layout.
 
 use super::RunMetrics;
-use crate::util::fmtutil::{secs, Table};
+use crate::util::fmtutil::{bytes, secs, Table};
 
 /// Render the Table-2-style row for one algorithm.
 pub fn superstep_row(name: &str, m: &RunMetrics) -> Vec<String> {
@@ -42,6 +42,29 @@ pub fn overlap_table() -> Table {
     Table::new(vec!["", "CP flush", "hidden", "exposed"])
 }
 
+/// Render the shuffle-volume row: pre-combine batch bytes vs the bytes
+/// that actually crossed a NIC, and their ratio (the machine-level
+/// combine-tree win; 1.00x when the two-stage shuffle is off or the
+/// job never crosses machines).
+pub fn wire_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    let ratio = if m.bytes.wire_bytes > 0 {
+        format!("{:.2}x", m.bytes.shuffle_bytes as f64 / m.bytes.wire_bytes as f64)
+    } else {
+        "-".to_string()
+    };
+    vec![
+        name.to_string(),
+        bytes(m.bytes.shuffle_bytes),
+        bytes(m.bytes.wire_bytes),
+        ratio,
+    ]
+}
+
+/// Build the shuffle-volume table header.
+pub fn wire_table() -> Table {
+    Table::new(vec!["", "shuffle bytes", "wire bytes", "reduction"])
+}
+
 /// Build the Table 2 header.
 pub fn superstep_table() -> Table {
     Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_last"])
@@ -78,6 +101,13 @@ mod tests {
         assert_eq!(ov[1], "3.00 s");
         assert_eq!(ov[2], "2.00 s");
         assert!(overlap_table().render().contains("hidden"));
+        m.bytes.shuffle_bytes = 4096;
+        m.bytes.wire_bytes = 1024;
+        let wr = wire_row("HWCP", &m);
+        assert_eq!(wr[3], "4.00x");
+        m.bytes.wire_bytes = 0;
+        assert_eq!(wire_row("HWCP", &m)[3], "-");
+        assert!(wire_table().render().contains("wire bytes"));
         let mut t = superstep_table();
         t.row(r);
         assert!(t.render().contains("T_cpstep"));

@@ -24,8 +24,8 @@
 
 use super::aggregator::AggState;
 use super::app::{App, BatchExec};
-use super::executor::{self, WorkerPool};
-use super::message::Inbox;
+use super::executor::{self, BatchArena, WorkerPool};
+use super::message;
 use super::worker::{StepOutput, Worker};
 use crate::comm::WorkerSet;
 use crate::ft::FtKind;
@@ -128,6 +128,17 @@ pub struct EngineConfig {
     /// stall-the-loop baseline. Results are bit-identical either way
     /// (see `tests/async_cp.rs`).
     pub async_cp: bool,
+    /// Two-stage shuffle (machine-level combine trees): merge the
+    /// per-worker batches of all workers on one machine that target the
+    /// same remote machine into a single per-(machine, machine) wire
+    /// batch before charging the shared NIC — combiner apps fold
+    /// per-slot accumulators at the sender, direct apps concatenate.
+    /// `false` ships every per-worker batch separately (the paper's
+    /// single-stage baseline; CLI `--no-machine-combine`). Results are
+    /// bit-identical either way — both modes fold under the two-level
+    /// merge-order contract of `pregel::message` (see
+    /// `tests/machine_combine.rs`).
+    pub machine_combine: bool,
 }
 
 impl EngineConfig {
@@ -143,6 +154,7 @@ impl EngineConfig {
             max_supersteps: 10_000,
             threads: 0,
             async_cp: true,
+            machine_combine: true,
         }
     }
 }
@@ -190,6 +202,9 @@ pub struct Engine<A: App> {
     /// Persistent worker thread pool, created once and reused by every
     /// superstep pipeline phase across normal execution and recovery.
     pub(crate) pool: WorkerPool,
+    /// Recycled batch serialization buffers: the shuffle phase takes
+    /// one per outgoing batch, the delivery phase returns them all.
+    pub(crate) arena: BatchArena,
     /// The at-most-one in-flight background checkpoint flush
     /// (`ft::checkpoint_ops`): joined before the next checkpoint, any
     /// recovery, and job end.
@@ -237,6 +252,7 @@ impl<A: App> Engine<A> {
             stage: Stage::Normal,
             master: 0,
             pool,
+            arena: BatchArena::new(),
             inflight: None,
         })
     }
@@ -559,12 +575,21 @@ impl<A: App> Engine<A> {
 
         // ---- shuffle phase ----
         let wall = Instant::now();
+        let n_workers = self.workers.len();
         let mut batches: Vec<(usize, usize, Vec<u8>)> = Vec::new();
         for (r, out, _) in &outputs {
-            for (dst, b) in out.outbox.all_batches() {
+            for dst in 0..n_workers {
                 // Case 2: send only to workers that will compute i+1.
-                if self.workers[dst].s_w <= step {
-                    batches.push((*r, dst, b));
+                if self.workers[dst].s_w > step {
+                    continue;
+                }
+                // Serialize into a recycled buffer (the delivery phase
+                // returns every buffer to the arena).
+                let mut buf = self.arena.take();
+                if out.outbox.batch_for_into(dst, &mut buf) {
+                    batches.push((*r, dst, buf));
+                } else {
+                    self.arena.put(buf);
                 }
             }
         }
@@ -621,13 +646,38 @@ impl<A: App> Engine<A> {
         Ok(None)
     }
 
-    /// Deliver serialized batches: sorted by (dst, src) so receivers fold
-    /// in sender-rank order (bitwise determinism), then all destination
-    /// inboxes ingest concurrently on the pool, with wire/CPU costs
-    /// applied by the master from the returned ledgers.
+    /// Deliver serialized per-worker batches through the shuffle's
+    /// second half: sort into the canonical (dst, src) order, run the
+    /// machine-combine stage if enabled (`EngineConfig::machine_combine`),
+    /// ingest into the destination inboxes on the pool under the
+    /// two-level merge-order contract of `pregel::message`, and charge
+    /// wire/staging/CPU costs. Consumes the batches, recycling their
+    /// buffers into the arena.
     pub(crate) fn deliver(&mut self, batches: &mut Vec<(usize, usize, Vec<u8>)>) -> Result<()> {
         let wall = Instant::now();
         batches.sort_by_key(|(src, dst, _)| (*dst, *src));
+        // Pre-combine shuffle volume (what the workers generated); the
+        // post-combine NIC volume lands in `wire_bytes` below.
+        for (_, _, b) in batches.iter() {
+            self.metrics.bytes.shuffle_bytes += b.len() as u64;
+        }
+        if self.cfg.machine_combine {
+            self.deliver_machine_combined(batches)?;
+        } else {
+            self.deliver_single_stage(batches)?;
+        }
+        for (_, _, b) in batches.drain(..) {
+            self.arena.put(b);
+        }
+        self.metrics.phase_wall.deliver += ms_since(wall);
+        Ok(())
+    }
+
+    /// Single-stage delivery (the paper's baseline): every per-worker
+    /// batch is its own wire transfer; receivers still fold under the
+    /// two-level contract (per-source-machine partials) so results are
+    /// bit-identical to the machine-combined path.
+    fn deliver_single_stage(&mut self, batches: &[(usize, usize, Vec<u8>)]) -> Result<()> {
         let n = self.workers.len();
         let mut sent_remote = vec![0u64; n];
         let mut sent_intra = vec![0u64; n];
@@ -643,25 +693,39 @@ impl<A: App> Engine<A> {
             } else {
                 sent_remote[*src] += len;
                 recv_remote[*dst] += len;
+                self.metrics.bytes.wire_bytes += len;
             }
-            self.metrics.bytes.shuffle_bytes += len;
         }
-        // Group by destination (batches are (dst, src)-sorted, so groups
-        // are contiguous and each group is in sender-rank order), then
+        // Group by destination (contiguous under the (dst, src) sort),
+        // one sub-group per *static* source machine in ascending
+        // machine order — the two-level merge-order contract — then
         // ingest every destination's inbox concurrently.
         {
+            let topo = self.cfg.topo;
             let mut dst_ranks: Vec<usize> = Vec::new();
-            let mut groups: Vec<Vec<&[u8]>> = Vec::new();
-            for (_, dst, b) in batches.iter() {
-                if dst_ranks.last() == Some(dst) {
-                    groups.last_mut().expect("group exists").push(b.as_slice());
-                } else {
-                    dst_ranks.push(*dst);
-                    groups.push(vec![b.as_slice()]);
+            let mut groups: Vec<Vec<Vec<&[u8]>>> = Vec::new();
+            let mut i = 0;
+            while i < batches.len() {
+                let dst = batches[i].1;
+                let mut j = i;
+                while j < batches.len() && batches[j].1 == dst {
+                    j += 1;
                 }
+                // One pass over the destination's batches: ascending src
+                // within the (dst, src)-sorted slice, bucketed by static
+                // machine; the BTreeMap then yields groups in ascending
+                // machine order.
+                let mut by_machine: BTreeMap<usize, Vec<&[u8]>> = BTreeMap::new();
+                for (s, _, b) in &batches[i..j] {
+                    by_machine.entry(topo.machine_of(*s)).or_default().push(b.as_slice());
+                }
+                dst_ranks.push(dst);
+                groups.push(by_machine.into_values().collect());
+                i = j;
             }
             let refs = executor::select_workers(&mut self.workers, &dst_ranks);
-            let mut items: Vec<(&mut Worker<A>, Vec<&[u8]>)> = Vec::with_capacity(refs.len());
+            let mut items: Vec<(&mut Worker<A>, Vec<Vec<&[u8]>>)> =
+                Vec::with_capacity(refs.len());
             for ((wr, w), (gr, g)) in refs.into_iter().zip(dst_ranks.iter().zip(groups)) {
                 debug_assert_eq!(wr, *gr);
                 items.push((w, g));
@@ -690,29 +754,203 @@ impl<A: App> Engine<A> {
             let m = self.ws.machine_of(r);
             let send_t = if sent_remote[r] + sent_intra[r] > 0 {
                 self.cfg.cost.wire_time(sent_remote[r], send_sharers[m], false)
-                    + sent_intra[r] as f64 / self.cfg.cost.mem_bw
+                    + self.cfg.cost.staging_time(sent_intra[r])
             } else {
                 0.0
             };
             let recv_t = if recv_remote[r] + recv_intra[r] > 0 {
                 self.cfg.cost.wire_time(recv_remote[r], recv_sharers[m], false)
-                    + recv_intra[r] as f64 / self.cfg.cost.mem_bw
+                    + self.cfg.cost.staging_time(recv_intra[r])
             } else {
                 0.0
             };
             self.workers[r].clock.advance(send_t.max(recv_t) + recv_cpu[r]);
         }
-        self.metrics.phase_wall.deliver += ms_since(wall);
         Ok(())
     }
 
-    /// Fresh inboxes for every alive worker (recovery drops in-flight
-    /// messages).
+    /// Two-stage delivery: per-worker batches bound for the same remote
+    /// machine merge into one wire batch per (source-machine,
+    /// destination-machine) pair before the NIC is charged; on the
+    /// receive side one ingest per source machine fans out
+    /// intra-machine at memory bandwidth.
+    ///
+    /// Machine grouping uses the *static* topology placement
+    /// (`Topology::machine_of`), never the live one: a worker respawned
+    /// onto another machine keeps its combine group, so recovery
+    /// re-produces bit-identical merged wire batches (the cost model
+    /// then idealizes the displaced member's staging hop as
+    /// intra-machine — see DESIGN.md). Costs: members stage their
+    /// batches to the pair's gateway (lowest sender rank) at `mem_bw`,
+    /// the gateway pays the merge CPU (`CostModel::combine_time`) and
+    /// the merged wire transfer, the receiving gateway (lowest
+    /// destination rank of the pair) pays the inbound wire transfer,
+    /// and each destination pays its section's fan-out at `mem_bw` plus
+    /// ingest CPU.
+    fn deliver_machine_combined(&mut self, batches: &[(usize, usize, Vec<u8>)]) -> Result<()> {
+        let n = self.workers.len();
+        let topo = self.cfg.topo;
+        let mut sent_remote = vec![0u64; n];
+        let mut sent_intra = vec![0u64; n];
+        let mut recv_remote = vec![0u64; n];
+        let mut recv_intra = vec![0u64; n];
+        let mut combine_cpu = vec![0.0f64; n];
+        let mut recv_cpu = vec![0.0f64; n];
+
+        // Stage 1: classify by static machine pair. Intra-machine
+        // batches skip combining — they never touch the NIC.
+        let mut pairs: BTreeMap<(usize, usize), Vec<(usize, usize, &[u8])>> = BTreeMap::new();
+        for (src, dst, b) in batches.iter() {
+            let (sm, dm) = (topo.machine_of(*src), topo.machine_of(*dst));
+            if sm == dm {
+                sent_intra[*src] += b.len() as u64;
+                recv_intra[*dst] += b.len() as u64;
+            } else {
+                pairs.entry((sm, dm)).or_default().push((*src, *dst, b.as_slice()));
+            }
+        }
+        // A pair with a single member ships the per-worker batch
+        // unchanged — framing one batch would only add bytes (and it
+        // already *is* its machine partial).
+        let mut singles: Vec<(usize, usize, usize, &[u8])> = Vec::new(); // (sm, src, dst, bytes)
+        let mut to_merge: Vec<(usize, Vec<(usize, usize, &[u8])>)> = Vec::new(); // (sm, members)
+        for ((sm, _dm), members) in pairs {
+            if members.len() == 1 {
+                let (s, d, b) = members[0];
+                singles.push((sm, s, d, b));
+            } else {
+                to_merge.push((sm, members));
+            }
+        }
+
+        // Stage 2: the machine-combine phase — one pool task per pair.
+        let merges = {
+            let slices: Vec<&[(usize, usize, &[u8])]> =
+                to_merge.iter().map(|(_, m)| m.as_slice()).collect();
+            executor::machine_combine_phase::<A::M>(
+                &self.pool,
+                self.app.combiner(),
+                self.partitioner,
+                slices,
+            )?
+        };
+
+        // Stage 3: cost ledgers for the wire batches.
+        let mut sections: Vec<Vec<(usize, std::ops::Range<usize>)>> =
+            Vec::with_capacity(merges.len());
+        for ((_sm, members), mg) in to_merge.iter().zip(merges.iter()) {
+            let gw_src = members.iter().map(|(s, _, _)| *s).min().expect("pair has members");
+            let gw_dst = members.iter().map(|(_, d, _)| *d).min().expect("pair has members");
+            for (s, _, b) in members {
+                sent_intra[*s] += b.len() as u64; // staging hop to the gateway
+            }
+            combine_cpu[gw_src] += self.cfg.cost.combine_time(mg.in_msgs);
+            sent_remote[gw_src] += mg.data.len() as u64;
+            recv_remote[gw_dst] += mg.data.len() as u64;
+            self.metrics.bytes.wire_bytes += mg.data.len() as u64;
+            let secs = message::split_machine_batch(&mg.data)?;
+            for (dst, range) in &secs {
+                recv_intra[*dst] += range.len() as u64; // receive-side fan-out
+            }
+            sections.push(secs);
+        }
+        for (_, src, dst, b) in &singles {
+            sent_remote[*src] += b.len() as u64;
+            recv_remote[*dst] += b.len() as u64;
+            self.metrics.bytes.wire_bytes += b.len() as u64;
+        }
+
+        // Stage 4: grouped ingest — each destination folds one unit per
+        // source machine in ascending machine order: the intra-machine
+        // per-worker batches as a multi-batch group, each remote
+        // machine's merged section (or lone batch) as a pre-folded
+        // partial.
+        {
+            let mut units: Vec<BTreeMap<usize, Vec<&[u8]>>> =
+                (0..n).map(|_| BTreeMap::new()).collect();
+            for (src, dst, b) in batches.iter() {
+                let sm = topo.machine_of(*src);
+                if sm == topo.machine_of(*dst) {
+                    units[*dst].entry(sm).or_default().push(b.as_slice());
+                }
+            }
+            for (sm, _src, dst, b) in &singles {
+                units[*dst].entry(*sm).or_default().push(*b);
+            }
+            for ((sm, _members), (mg, secs)) in
+                to_merge.iter().zip(merges.iter().zip(sections.iter()))
+            {
+                for (dst, range) in secs {
+                    units[*dst].entry(*sm).or_default().push(&mg.data[range.clone()]);
+                }
+            }
+            let mut dst_ranks: Vec<usize> = Vec::new();
+            let mut groups: Vec<Vec<Vec<&[u8]>>> = Vec::new();
+            for (dst, m) in units.iter().enumerate() {
+                if m.is_empty() {
+                    continue;
+                }
+                dst_ranks.push(dst);
+                groups.push(m.values().cloned().collect());
+            }
+            let refs = executor::select_workers(&mut self.workers, &dst_ranks);
+            let mut items: Vec<(&mut Worker<A>, Vec<Vec<&[u8]>>)> =
+                Vec::with_capacity(refs.len());
+            for ((wr, w), (gr, g)) in refs.into_iter().zip(dst_ranks.iter().zip(groups)) {
+                debug_assert_eq!(wr, *gr);
+                items.push((w, g));
+            }
+            let costs = executor::deliver_phase(&self.pool, items, &self.cfg.cost)?;
+            for (d, pc) in dst_ranks.iter().zip(costs) {
+                recv_cpu[*d] = pc.recv_cpu;
+            }
+        }
+
+        // Stage 5: NIC sharing at machine-pair granularity — only the
+        // gateways touch the NIC — plus staging and combine CPU.
+        let mut send_sharers = vec![0usize; topo.machines];
+        let mut recv_sharers = vec![0usize; topo.machines];
+        for r in 0..n {
+            if sent_remote[r] > 0 {
+                send_sharers[topo.machine_of(r)] += 1;
+            }
+            if recv_remote[r] > 0 {
+                recv_sharers[topo.machine_of(r)] += 1;
+            }
+        }
+        for r in 0..n {
+            if !self.ws.is_alive(r) {
+                continue;
+            }
+            let m = topo.machine_of(r);
+            // Fixed-latency convention matches the single-stage path
+            // (which charges `wire_time` — latency included — to every
+            // communicating worker): a worker that sent or received
+            // anything pays `net_latency` once per direction, so
+            // on-vs-off time comparisons measure the combine tree, not
+            // a latency accounting artifact.
+            let mut send_t = combine_cpu[r] + self.cfg.cost.staging_time(sent_intra[r]);
+            if sent_remote[r] > 0 {
+                send_t += self.cfg.cost.wire_time(sent_remote[r], send_sharers[m], false);
+            } else if sent_intra[r] > 0 {
+                send_t += self.cfg.cost.net_latency;
+            }
+            let mut recv_t = self.cfg.cost.staging_time(recv_intra[r]);
+            if recv_remote[r] > 0 {
+                recv_t += self.cfg.cost.wire_time(recv_remote[r], recv_sharers[m], false);
+            } else if recv_intra[r] > 0 {
+                recv_t += self.cfg.cost.net_latency;
+            }
+            self.workers[r].clock.advance(send_t.max(recv_t) + recv_cpu[r]);
+        }
+        Ok(())
+    }
+
+    /// Reset every alive worker's inbox in place (recovery drops
+    /// in-flight messages; slot allocations are kept).
     pub(crate) fn reset_inboxes(&mut self) {
-        let app = Arc::clone(&self.app);
         for r in self.ws.alive_ranks() {
-            self.workers[r].inbox =
-                Inbox::new(self.workers[r].part.partitioner.slots_of(r), app.combiner());
+            self.workers[r].inbox.reset();
         }
     }
 }

@@ -24,10 +24,14 @@
 //!   log-based algorithms (it is a separate dispatch only because the
 //!   *kind* of log — message vs vertex-state — depends on the global
 //!   LWCP mask, which is known only after every worker computed);
-//! * **deliver** ([`deliver_phase`]) — serialized batches grouped by
-//!   destination rank, each group sorted by sender rank (the bitwise
-//!   determinism contract of `pregel::message`), all destinations'
-//!   inboxes ingesting concurrently;
+//! * **machine-combine** ([`machine_combine_phase`]) — stage one of the
+//!   two-stage shuffle: each (source-machine, destination-machine)
+//!   group of per-worker batches merges into a single wire batch, one
+//!   pool task per machine pair (`pregel::message::merge_machine_batch`);
+//! * **deliver** ([`deliver_phase`]) — each destination ingests one
+//!   group per source machine, groups in ascending machine order and
+//!   sender-rank order within (the two-level merge-order contract of
+//!   `pregel::message`), all destinations' inboxes concurrently;
 //! * **replay** ([`replay_phase`]) — LWCP/LWLog message regeneration
 //!   from vertex states: the recovery-side twin of compute, but it runs
 //!   only the emit half of the vertex program (the read-only
@@ -50,8 +54,10 @@
 //! `EngineConfig::threads` pins the pool size (0 = one per hardware
 //! thread, 1 = run every task inline on the master).
 
-use super::app::{App, BatchExec};
+use super::app::{App, BatchExec, CombineFn};
+use super::message::{merge_machine_batch, MachineMerge};
 use super::worker::{StepOutput, Worker};
+use crate::graph::Partitioner;
 use crate::sim::{CostModel, PhaseCost};
 use crate::util::codec::Codec;
 use anyhow::{Context, Result};
@@ -407,13 +413,36 @@ pub fn log_phase<A: App>(
     results.into_iter().collect()
 }
 
-/// The delivery phase unit: each `(worker, batches)` pair ingests its
-/// batches **in the given order** (callers pass sender-rank order — the
-/// bitwise determinism contract); all destinations run concurrently.
+/// The machine-combine phase unit (stage one of the two-stage shuffle):
+/// merge each (source-machine, destination-machine) group of per-worker
+/// batches into a single wire batch, one pool task per machine pair.
+/// Each `pairs` entry holds that pair's member `(src, dst, batch)`
+/// triples in (dst, src) order. Results come back in input order; the
+/// merge is a pure function of its members, so any thread count
+/// produces identical wire bytes.
+pub fn machine_combine_phase<M: Codec + Clone + Send + Sync>(
+    pool: &WorkerPool,
+    combine: Option<CombineFn<M>>,
+    part: Partitioner,
+    pairs: Vec<&[(usize, usize, &[u8])]>,
+) -> Result<Vec<MachineMerge>> {
+    let results = pool.map_named("machine-combine", None, pairs, |members| {
+        merge_machine_batch::<M>(combine, &part, members)
+    });
+    results.into_iter().collect()
+}
+
+/// The delivery phase unit: each `(worker, units)` pair ingests its
+/// units **in the given order** — one unit per source machine,
+/// ascending machine id, batches inside a unit in ascending sender
+/// rank (the two-level merge-order contract of `pregel::message`) —
+/// and all destinations run concurrently. A unit with several batches
+/// folds into a per-machine partial first (`Inbox::ingest_groups`); a
+/// pre-merged machine-batch section arrives as a one-batch unit.
 /// Returns each destination's receive-CPU ledger, in input order.
 pub fn deliver_phase<A: App>(
     pool: &WorkerPool,
-    groups: Vec<(&mut Worker<A>, Vec<&[u8]>)>,
+    groups: Vec<(&mut Worker<A>, Vec<Vec<&[u8]>>)>,
     cost: &CostModel,
 ) -> Result<Vec<PhaseCost>> {
     let ranks: Vec<usize> = groups.iter().map(|(w, _)| w.rank).collect();
@@ -421,8 +450,8 @@ pub fn deliver_phase<A: App>(
         "deliver",
         Some(ranks.as_slice()),
         groups,
-        |(w, batches)| -> Result<PhaseCost> {
-            let counts = w.inbox.ingest_all(batches)?;
+        |(w, units)| -> Result<PhaseCost> {
+            let counts = w.inbox.ingest_groups(&units)?;
             let mut recv_cpu = 0.0;
             for n in counts {
                 recv_cpu += cost.recv_time(n);
@@ -431,6 +460,43 @@ pub fn deliver_phase<A: App>(
         },
     );
     results.into_iter().collect()
+}
+
+/// Recycled `Vec<u8>` serialization buffers for the shuffle phase: the
+/// engine takes one buffer per outgoing batch
+/// ([`super::message::Outbox::batch_for_into`]) and returns every
+/// buffer after delivery, so steady-state supersteps allocate no fresh
+/// batch buffers at all.
+#[derive(Default)]
+pub struct BatchArena {
+    free: Vec<Vec<u8>>,
+}
+
+impl BatchArena {
+    /// Retention cap: pathological fan-outs must not pin memory forever.
+    const MAX_POOLED: usize = 4096;
+
+    pub fn new() -> Self {
+        BatchArena { free: Vec::new() }
+    }
+
+    /// An empty buffer, recycled when one is available.
+    pub fn take(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer for reuse (cleared, capacity kept).
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < Self::MAX_POOLED {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// Buffers currently pooled (tests).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
 }
 
 /// The replay phase unit (LWCP/LWLog recovery): regenerate the selected
@@ -575,6 +641,51 @@ mod tests {
             assert!(msg.contains("worker 9"), "missing rank: {msg}");
             assert!(msg.contains("vertex exploded"), "missing payload: {msg}");
         }
+    }
+
+    #[test]
+    fn batch_arena_recycles_buffers() {
+        let mut a = BatchArena::new();
+        let mut b = a.take();
+        assert!(b.is_empty());
+        b.extend_from_slice(&[1, 2, 3]);
+        let cap = b.capacity();
+        a.put(b);
+        assert_eq!(a.pooled(), 1);
+        let b2 = a.take();
+        assert!(b2.is_empty(), "recycled buffer must come back cleared");
+        assert_eq!(b2.capacity(), cap, "recycled buffer keeps its allocation");
+        assert_eq!(a.pooled(), 0);
+    }
+
+    #[test]
+    fn machine_combine_phase_is_pool_size_invariant() {
+        use crate::pregel::message::split_machine_batch;
+        use crate::pregel::Outbox;
+        let part = Partitioner::new(4, 16);
+        let sum: CombineFn<f32> = |a, b| *a += *b;
+        let mk = |vals: &[(u32, f32)]| {
+            let mut ob = Outbox::new(part, Some(sum));
+            for &(to, v) in vals {
+                ob.send(to, v);
+            }
+            ob
+        };
+        let b0 = mk(&[(1, 0.25), (5, 0.5)]).batch_for(1).unwrap();
+        let b1 = mk(&[(1, 0.125)]).batch_for(1).unwrap();
+        let members = vec![(0usize, 1usize, b0.as_slice()), (2, 1, b1.as_slice())];
+        let run = |threads: usize| {
+            let pool = WorkerPool::new(threads);
+            machine_combine_phase::<f32>(&pool, Some(sum), part, vec![members.as_slice()])
+                .unwrap()
+                .remove(0)
+        };
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a.data, b.data, "merge bytes differ across pool sizes");
+        assert_eq!(a.in_msgs, 3);
+        assert_eq!(a.out_msgs, 2);
+        assert_eq!(split_machine_batch(&a.data).unwrap().len(), 1);
     }
 
     #[test]

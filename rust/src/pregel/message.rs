@@ -1,16 +1,37 @@
 //! Message plumbing: per-destination outgoing queues with sender-side
-//! combining, and the receiver-side inbox.
+//! combining, the machine-level merge codec of the two-stage shuffle,
+//! and the receiver-side inbox.
 //!
-//! Determinism contract (the recovery-equivalence property tests depend
-//! on it): a combined batch enumerates destination slots in ascending
-//! order; the receiver folds batches in **sender-rank order**; and
-//! non-combined messages keep generation order. A recovered run then
-//! reproduces the failure-free run bit-for-bit, f32 sums included.
+//! ## Merge-order contract (bitwise determinism)
+//!
+//! The recovery-equivalence property tests — and the `machine_combine`
+//! on-vs-off golden tests — depend on every f32 fold happening in one
+//! canonical order, independent of thread count, of failures, and of
+//! whether the machine-combine stage ran. That order is a **two-level
+//! machine-major fold**:
+//!
+//! * a combined batch enumerates destination slots in ascending order;
+//! * per destination slot, the batches of the senders hosted on one
+//!   (static) machine fold into a *per-machine partial* in ascending
+//!   sender-rank order;
+//! * the partials then fold in ascending source-machine order.
+//!
+//! With the machine-combine stage on, the per-machine partial is
+//! computed at the sender side ([`merge_machine_batch`]) and ships as
+//! one wire batch per (source-machine, destination-machine) pair; with
+//! it off, the receiver computes the same partial locally
+//! ([`Inbox::ingest_groups`]). Either way the chain of `combine()`
+//! calls per slot is identical, so results match bit for bit. Machine
+//! grouping uses the *static* topology placement (`rank % machines`),
+//! never the live placement — a worker respawned onto another machine
+//! keeps its group, so recovery reproduces the exact same merge tree.
+//! Non-combined (direct) messages keep generation order: ascending
+//! (source machine, sender rank), concatenation within a group.
 
 use super::app::CombineFn;
 use crate::graph::{Partitioner, VertexId};
 use crate::util::codec::{Codec, Reader};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Outgoing messages of one worker for one superstep.
 pub enum Outbox<M> {
@@ -60,6 +81,10 @@ impl<M: Codec + Clone> Outbox<M> {
                 let (rank, slot) = part.locate(to);
                 let acc = &mut accs[rank];
                 if acc.is_empty() {
+                    // One zero-fill per destination per superstep: the
+                    // O(slots) resize happens on the first message to
+                    // `rank` only; later sends index straight in. (A
+                    // destination nobody messages never allocates.)
                     acc.resize(part.slots_of(rank), None);
                 }
                 match &mut acc[slot] {
@@ -81,46 +106,59 @@ impl<M: Codec + Clone> Outbox<M> {
         }
     }
 
-    /// Serialize the batch for destination `rank`; `None` if no message
-    /// targets that worker. Format: `u32 count, (u32 slot|vid, M)*`.
-    pub fn batch_for(&self, rank: usize) -> Option<Vec<u8>> {
+    /// Serialize the batch for destination `rank` into `buf` (cleared
+    /// first); returns false if no message targets that worker. Format:
+    /// `u32 count, (u32 slot, M)*`, slots ascending for combined
+    /// batches, generation order for direct ones. Callers recycle `buf`
+    /// across supersteps (`executor::BatchArena`) so steady-state
+    /// shuffles allocate no fresh serialization buffers.
+    pub fn batch_for_into(&self, rank: usize, buf: &mut Vec<u8>) -> bool {
+        buf.clear();
         match self {
             Outbox::Combined { accs, .. } => {
                 let acc = &accs[rank];
                 if acc.is_empty() {
-                    return None;
+                    return false;
                 }
                 let count = acc.iter().filter(|m| m.is_some()).count() as u32;
                 if count == 0 {
-                    return None;
+                    return false;
                 }
                 // Pre-size: count (4) + per message slot u32 + payload.
-                let mut buf =
-                    Vec::with_capacity(4 + count as usize * (4 + std::mem::size_of::<M>()));
-                count.encode(&mut buf);
+                buf.reserve(4 + count as usize * (4 + std::mem::size_of::<M>()));
+                count.encode(buf);
                 for (slot, m) in acc.iter().enumerate() {
                     if let Some(m) = m {
-                        (slot as u32).encode(&mut buf);
-                        m.encode(&mut buf);
+                        (slot as u32).encode(buf);
+                        m.encode(buf);
                     }
                 }
-                Some(buf)
+                true
             }
             Outbox::Direct { queues, part, .. } => {
                 let q = &queues[rank];
                 if q.is_empty() {
-                    return None;
+                    return false;
                 }
-                // Pre-size like the Combined arm: count (4) + per
-                // message slot u32 + payload.
-                let mut buf = Vec::with_capacity(4 + q.len() * (4 + std::mem::size_of::<M>()));
-                (q.len() as u32).encode(&mut buf);
+                buf.reserve(4 + q.len() * (4 + std::mem::size_of::<M>()));
+                (q.len() as u32).encode(buf);
                 for (to, m) in q {
-                    (part.slot_of(*to) as u32).encode(&mut buf);
-                    m.encode(&mut buf);
+                    (part.slot_of(*to) as u32).encode(buf);
+                    m.encode(buf);
                 }
-                Some(buf)
+                true
             }
+        }
+    }
+
+    /// [`Outbox::batch_for_into`] into a fresh buffer; `None` if no
+    /// message targets that worker.
+    pub fn batch_for(&self, rank: usize) -> Option<Vec<u8>> {
+        let mut buf = Vec::new();
+        if self.batch_for_into(rank, &mut buf) {
+            Some(buf)
+        } else {
+            None
         }
     }
 
@@ -133,6 +171,171 @@ impl<M: Codec + Clone> Outbox<M> {
             .filter_map(|r| self.batch_for(r).map(|b| (r, b)))
             .collect()
     }
+}
+
+// ------------------------------------------------------------------
+// The machine-level merge codec (stage one of the two-stage shuffle)
+// ------------------------------------------------------------------
+
+/// Outcome of merging one (source-machine, destination-machine) group
+/// of per-worker batches into a single wire batch.
+pub struct MachineMerge {
+    /// The encoded machine batch:
+    /// `u32 n_sections, (u32 dst_rank, u32 byte_len, section)*`,
+    /// sections in ascending destination rank, each section a
+    /// per-worker-format batch (`u32 count, (u32 slot, M)*`).
+    pub data: Vec<u8>,
+    /// Messages entering the merge (sum of member batch counts).
+    pub in_msgs: u64,
+    /// Messages surviving it (sum of section counts) — the wire win.
+    pub out_msgs: u64,
+}
+
+/// Merge the per-worker batches of one machine pair into one wire
+/// batch. `members` are `(src_rank, dst_rank, batch)` triples and must
+/// be grouped by destination rank (contiguous, ascending) with
+/// ascending sender rank inside each destination group — the
+/// (dst, src) order the delivery phase sorts into. For combiner apps
+/// each destination's per-slot accumulators fold in that sender order
+/// (producing the per-machine partial of the module's merge-order
+/// contract); without a combiner the batches concatenate in the same
+/// order. A destination with a single sender keeps its batch verbatim.
+pub fn merge_machine_batch<M: Codec + Clone>(
+    combine: Option<CombineFn<M>>,
+    part: &Partitioner,
+    members: &[(usize, usize, &[u8])],
+) -> Result<MachineMerge> {
+    debug_assert!(
+        members.windows(2).all(|w| (w[0].1, w[0].0) < (w[1].1, w[1].0)),
+        "members must be sorted by (dst, src)"
+    );
+    let mut n_sections = 0u32;
+    let mut prev = None;
+    for (_, d, _) in members {
+        if prev != Some(*d) {
+            n_sections += 1;
+            prev = Some(*d);
+        }
+    }
+    let mut data = Vec::new();
+    n_sections.encode(&mut data);
+    let mut in_msgs = 0u64;
+    let mut out_msgs = 0u64;
+    // One fold scratch for the whole pair, cleared slot-by-slot while
+    // encoding each section (no per-destination zero-fill churn).
+    let mut acc: Vec<Option<M>> = Vec::new();
+    let mut i = 0;
+    while i < members.len() {
+        let dst = members[i].1;
+        let mut j = i;
+        while j < members.len() && members[j].1 == dst {
+            j += 1;
+        }
+        (dst as u32).encode(&mut data);
+        let len_pos = data.len();
+        0u32.encode(&mut data); // byte_len, patched below
+        let sec_start = data.len();
+        if j - i == 1 {
+            // Single sender: its batch already is the machine partial.
+            let b = members[i].2;
+            let n = u32::decode(&mut Reader::new(b))? as u64;
+            in_msgs += n;
+            out_msgs += n;
+            data.extend_from_slice(b);
+        } else if let Some(combine) = combine {
+            let n_slots = part.slots_of(dst);
+            if acc.len() < n_slots {
+                acc.resize(n_slots, None);
+            }
+            for (_, _, b) in &members[i..j] {
+                in_msgs += fold_combined(combine, &mut acc[..n_slots], b)?;
+            }
+            let count = acc[..n_slots].iter().filter(|m| m.is_some()).count() as u32;
+            out_msgs += count as u64;
+            data.reserve(4 + count as usize * (4 + std::mem::size_of::<M>()));
+            count.encode(&mut data);
+            for (slot, m) in acc[..n_slots].iter_mut().enumerate() {
+                if let Some(m) = m.take() {
+                    (slot as u32).encode(&mut data);
+                    m.encode(&mut data);
+                }
+            }
+        } else {
+            // Direct: one count header, payloads concatenated in
+            // sender-rank order (the codec's u32 is fixed 4-byte LE, so
+            // stripping each member's header is pure byte slicing).
+            let mut total = 0u64;
+            for (_, _, b) in &members[i..j] {
+                total += u32::decode(&mut Reader::new(b))? as u64;
+            }
+            in_msgs += total;
+            out_msgs += total;
+            (total as u32).encode(&mut data);
+            for (_, _, b) in &members[i..j] {
+                data.extend_from_slice(&b[4..]);
+            }
+        }
+        let sec_len = (data.len() - sec_start) as u32;
+        data[len_pos..len_pos + 4].copy_from_slice(&sec_len.to_le_bytes());
+        i = j;
+    }
+    Ok(MachineMerge { data, in_msgs, out_msgs })
+}
+
+/// Split a machine batch into its per-destination sections, returned as
+/// `(dst_rank, byte range into data)` in encoded (ascending-dst) order.
+/// The inverse of [`merge_machine_batch`]'s framing: each range is a
+/// per-worker-format batch ready for [`Inbox::ingest`].
+pub fn split_machine_batch(data: &[u8]) -> Result<Vec<(usize, std::ops::Range<usize>)>> {
+    let mut r = Reader::new(data);
+    let n = u32::decode(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let dst = u32::decode(&mut r)? as usize;
+        let len = u32::decode(&mut r)? as usize;
+        let start = data.len() - r.remaining();
+        r.take(len)?;
+        out.push((dst, start..start + len));
+    }
+    if !r.is_empty() {
+        bail!("machine batch: {} trailing bytes", r.remaining());
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------------
+// The inbox
+// ------------------------------------------------------------------
+
+/// Fold one serialized per-worker batch (`u32 count, (u32 slot, M)*`)
+/// into `slots` via `combine`. Returns the batch's message count.
+fn fold_combined<M: Codec + Clone>(
+    combine: CombineFn<M>,
+    slots: &mut [Option<M>],
+    batch: &[u8],
+) -> Result<u64> {
+    let mut r = Reader::new(batch);
+    let n = u32::decode(&mut r)? as u64;
+    for _ in 0..n {
+        let slot = u32::decode(&mut r)? as usize;
+        let m = M::decode(&mut r)?;
+        match &mut slots[slot] {
+            Some(cur) => combine(cur, &m),
+            e @ None => *e = Some(m),
+        }
+    }
+    Ok(n)
+}
+
+/// Append one serialized batch's messages to list slots, in batch order.
+fn push_lists<M: Codec + Clone>(slots: &mut [Vec<M>], batch: &[u8]) -> Result<u64> {
+    let mut r = Reader::new(batch);
+    let n = u32::decode(&mut r)? as u64;
+    for _ in 0..n {
+        let slot = u32::decode(&mut r)? as usize;
+        slots[slot].push(M::decode(&mut r)?);
+    }
+    Ok(n)
 }
 
 /// Incoming messages of one worker for one superstep, indexed by local
@@ -157,48 +360,131 @@ impl<M: Codec + Clone> Inbox<M> {
         }
     }
 
-    /// Fold one serialized batch in. Callers must ingest batches in
-    /// sender-rank order (see module docs).
-    pub fn ingest(&mut self, batch: &[u8]) -> Result<u64> {
-        let mut r = Reader::new(batch);
-        let n = u32::decode(&mut r)? as u64;
+    /// Clear all messages in place, keeping the slot allocations (list
+    /// capacities included) for the next superstep — the recycled twin
+    /// of [`Inbox::new`] (satellite of the two-stage-shuffle PR: no
+    /// fresh slot vectors per superstep).
+    pub fn reset(&mut self) {
         match self {
-            Inbox::Combined { combine, slots, count } => {
-                for _ in 0..n {
-                    let slot = u32::decode(&mut r)? as usize;
-                    let m = M::decode(&mut r)?;
-                    match &mut slots[slot] {
-                        Some(cur) => combine(cur, &m),
-                        e @ None => *e = Some(m),
-                    }
+            Inbox::Combined { slots, count, .. } => {
+                for s in slots.iter_mut() {
+                    *s = None;
                 }
-                *count += n;
+                *count = 0;
             }
             Inbox::Lists { slots, count } => {
-                for _ in 0..n {
-                    let slot = u32::decode(&mut r)? as usize;
-                    slots[slot].push(M::decode(&mut r)?);
+                for l in slots.iter_mut() {
+                    l.clear();
                 }
-                *count += n;
+                *count = 0;
             }
         }
-        Ok(n)
     }
 
-    /// Fold several serialized batches in, **in the order given** — the
-    /// delivery phase passes each destination's batches in sender-rank
-    /// order (see module docs), one destination per pool task. Returns
-    /// the per-batch message counts (receiver-side cost accounting).
+    /// Fold one serialized batch in, as one logical sender (a per-worker
+    /// batch or a pre-merged per-machine partial — see the module's
+    /// merge-order contract for who may call this directly).
+    pub fn ingest(&mut self, batch: &[u8]) -> Result<u64> {
+        match self {
+            Inbox::Combined { combine, slots, count } => {
+                let n = fold_combined(*combine, slots, batch)?;
+                *count += n;
+                Ok(n)
+            }
+            Inbox::Lists { slots, count } => {
+                let n = push_lists(slots, batch)?;
+                *count += n;
+                Ok(n)
+            }
+        }
+    }
+
+    /// Fold several serialized batches in, **in the order given**, each
+    /// as its own logical sender. Returns the per-batch message counts
+    /// (receiver-side cost accounting).
     pub fn ingest_all<'a, I>(&mut self, batches: I) -> Result<Vec<u64>>
     where
         I: IntoIterator<Item = &'a [u8]>,
     {
         let it = batches.into_iter();
-        let mut counts = Vec::with_capacity(it.size_hint().0);
+        let (lo, hi) = it.size_hint();
+        let mut counts = Vec::with_capacity(hi.unwrap_or(lo));
         for b in it {
             counts.push(self.ingest(b)?);
         }
         Ok(counts)
+    }
+
+    /// Fold one source-machine *group* of batches in (ascending sender
+    /// rank) as ONE logical sender: the group folds into a per-slot
+    /// partial first, and the partial then combines into the slot —
+    /// bit-identical to ingesting the sender-side pre-merged batch of
+    /// the same group ([`merge_machine_batch`]). For list inboxes
+    /// grouping is plain concatenation. Returns the group's message
+    /// count.
+    pub fn ingest_group(&mut self, batches: &[&[u8]]) -> Result<u64> {
+        let mut scratch = Vec::new();
+        self.ingest_group_with(&mut scratch, batches)
+    }
+
+    /// [`Inbox::ingest_group`] over several groups, **in the order
+    /// given** — the delivery phase passes one group per source machine
+    /// in ascending machine order (the second fold level of the
+    /// contract). The partial scratch is shared across groups. Returns
+    /// the per-group message counts.
+    pub fn ingest_groups(&mut self, groups: &[Vec<&[u8]>]) -> Result<Vec<u64>> {
+        let mut scratch = Vec::new();
+        let mut counts = Vec::with_capacity(groups.len());
+        for g in groups {
+            counts.push(self.ingest_group_with(&mut scratch, g)?);
+        }
+        Ok(counts)
+    }
+
+    /// One group fold, with a caller-provided (reused) partial scratch.
+    /// The scratch is returned all-`None` (entries are `take()`n while
+    /// applied), so callers share one allocation across groups.
+    fn ingest_group_with(
+        &mut self,
+        scratch: &mut Vec<Option<M>>,
+        batches: &[&[u8]],
+    ) -> Result<u64> {
+        match self {
+            Inbox::Combined { combine, slots, count } => {
+                let n = if batches.len() == 1 {
+                    // A lone sender is its own partial: fold straight
+                    // into the slots (same combine() chain).
+                    fold_combined(*combine, slots, batches[0])?
+                } else {
+                    if scratch.len() < slots.len() {
+                        scratch.resize(slots.len(), None);
+                    }
+                    let mut n = 0u64;
+                    for b in batches {
+                        n += fold_combined(*combine, scratch, b)?;
+                    }
+                    for (slot, p) in scratch.iter_mut().enumerate() {
+                        if let Some(p) = p.take() {
+                            match &mut slots[slot] {
+                                Some(cur) => combine(cur, &p),
+                                e @ None => *e = Some(p),
+                            }
+                        }
+                    }
+                    n
+                };
+                *count += n;
+                Ok(n)
+            }
+            Inbox::Lists { slots, count } => {
+                let mut n = 0u64;
+                for b in batches {
+                    n += push_lists(slots, b)?;
+                }
+                *count += n;
+                Ok(n)
+            }
+        }
     }
 
     /// Does `slot` have any message?
@@ -373,5 +659,152 @@ mod tests {
         assert_eq!(batches.len(), 2);
         assert_eq!(batches[0].0, 0);
         assert_eq!(batches[1].0, 2);
+    }
+
+    #[test]
+    fn batch_for_into_reuses_the_buffer() {
+        let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob.send(1, 2.0); // rank 1, slot 0
+        let mut buf = Vec::new();
+        assert!(ob.batch_for_into(1, &mut buf));
+        assert_eq!(Some(buf.clone()), ob.batch_for(1));
+        let cap = buf.capacity();
+        assert!(!ob.batch_for_into(0, &mut buf), "rank 0 got nothing");
+        assert!(buf.is_empty());
+        assert!(ob.batch_for_into(1, &mut buf));
+        assert_eq!(buf.capacity(), cap, "refill must not reallocate");
+    }
+
+    #[test]
+    fn inbox_reset_clears_but_keeps_shape() {
+        let mut cb = Inbox::new(3, Some(sum as CombineFn<f32>));
+        let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob.send(3, 4.0); // rank 0, slot 1
+        cb.ingest(&ob.batch_for(0).unwrap()).unwrap();
+        assert!(cb.has(1));
+        cb.reset();
+        assert!(!cb.has(1));
+        assert_eq!(cb.count(), 0);
+        assert_eq!(cb.msgs(2).len(), 0); // shape intact: slot 2 addressable
+
+        let mut ls = Inbox::<u32>::new(2, None);
+        let mut ob = Outbox::<u32>::new(Partitioner::new(1, 2), None);
+        ob.send(1, 7);
+        ls.ingest(&ob.batch_for(0).unwrap()).unwrap();
+        ls.reset();
+        assert!(!ls.has(1));
+        assert_eq!(ls.count(), 0);
+    }
+
+    /// The heart of the contract: sender-side machine merging and the
+    /// receiver-side group fold produce bit-identical slots.
+    #[test]
+    fn machine_merge_matches_receiver_group_fold() {
+        let mk = |vals: &[(VertexId, f32)]| {
+            let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+            for &(to, v) in vals {
+                ob.send(to, v);
+            }
+            ob
+        };
+        // Two senders of one machine, overlapping slots on rank 1.
+        let b0 = mk(&[(1, 0.1), (4, 0.7), (7, 0.3)]).batch_for(1).unwrap();
+        let b1 = mk(&[(1, 0.2), (4, 0.05)]).batch_for(1).unwrap();
+        let members = [(0usize, 1usize, b0.as_slice()), (2, 1, b1.as_slice())];
+        let mg = merge_machine_batch(Some(sum as CombineFn<f32>), &part(), &members).unwrap();
+        assert_eq!(mg.in_msgs, 5);
+        assert_eq!(mg.out_msgs, 3); // slots 0,1,2 of rank 1
+        let secs = split_machine_batch(&mg.data).unwrap();
+        assert_eq!(secs.len(), 1);
+        assert_eq!(secs[0].0, 1);
+
+        let mut merged = Inbox::new(3, Some(sum as CombineFn<f32>));
+        merged.ingest(&mg.data[secs[0].1.clone()]).unwrap();
+        let mut grouped = Inbox::new(3, Some(sum as CombineFn<f32>));
+        grouped.ingest_group(&[&b0, &b1]).unwrap();
+        for slot in 0..3 {
+            let a: Vec<u32> = merged.msgs(slot).iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = grouped.msgs(slot).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn machine_merge_direct_concatenates_in_sender_order() {
+        let mut ob0 = Outbox::<u32>::new(part(), None);
+        ob0.send(2, 10); // rank 2, slot 0
+        let mut ob1 = Outbox::<u32>::new(part(), None);
+        ob1.send(2, 20);
+        ob1.send(8, 30); // rank 2, slot 2
+        let b0 = ob0.batch_for(2).unwrap();
+        let b1 = ob1.batch_for(2).unwrap();
+        let members = [(0usize, 2usize, b0.as_slice()), (1, 2, b1.as_slice())];
+        let mg = merge_machine_batch::<u32>(None, &part(), &members).unwrap();
+        assert_eq!((mg.in_msgs, mg.out_msgs), (3, 3));
+        let secs = split_machine_batch(&mg.data).unwrap();
+        let mut inbox = Inbox::<u32>::new(3, None);
+        inbox.ingest(&mg.data[secs[0].1.clone()]).unwrap();
+        assert_eq!(inbox.msgs(0), &[10, 20]); // sender order preserved
+        assert_eq!(inbox.msgs(2), &[30]);
+    }
+
+    #[test]
+    fn machine_merge_emits_one_section_per_destination() {
+        let mut ob0 = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob0.send(1, 1.0); // rank 1
+        ob0.send(2, 2.0); // rank 2
+        let mut ob1 = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob1.send(1, 3.0); // rank 1
+        let b0r1 = ob0.batch_for(1).unwrap();
+        let b0r2 = ob0.batch_for(2).unwrap();
+        let b1r1 = ob1.batch_for(1).unwrap();
+        // (dst, src) order: (1,0), (1,1), (2,0).
+        let members = [
+            (0usize, 1usize, b0r1.as_slice()),
+            (1, 1, b1r1.as_slice()),
+            (0, 2, b0r2.as_slice()),
+        ];
+        let mg = merge_machine_batch(Some(sum as CombineFn<f32>), &part(), &members).unwrap();
+        let secs = split_machine_batch(&mg.data).unwrap();
+        assert_eq!(secs.len(), 2);
+        assert_eq!(secs[0].0, 1);
+        assert_eq!(secs[1].0, 2);
+        assert_eq!(mg.in_msgs, 3);
+        assert_eq!(mg.out_msgs, 2); // rank 1 slot 0 combined across senders
+    }
+
+    /// Single-element groups must fold through the exact same chain as
+    /// plain ingest (they are their own partial).
+    #[test]
+    fn singleton_group_equals_plain_ingest() {
+        let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob.send(0, 0.1);
+        ob.send(3, 0.2);
+        let b = ob.batch_for(0).unwrap();
+        let mut a = Inbox::new(3, Some(sum as CombineFn<f32>));
+        a.ingest(&b).unwrap();
+        let mut g = Inbox::new(3, Some(sum as CombineFn<f32>));
+        g.ingest_group(&[&b]).unwrap();
+        for slot in 0..3 {
+            let x: Vec<u32> = a.msgs(slot).iter().map(|m| m.to_bits()).collect();
+            let y: Vec<u32> = g.msgs(slot).iter().map(|m| m.to_bits()).collect();
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn split_rejects_corrupt_framing() {
+        let mut data = Vec::new();
+        2u32.encode(&mut data); // claims 2 sections, provides none
+        assert!(split_machine_batch(&data).is_err());
+        let mut ob = Outbox::new(part(), Some(sum as CombineFn<f32>));
+        ob.send(1, 1.0);
+        let b = ob.batch_for(1).unwrap();
+        let members = [(0usize, 1usize, b.as_slice())];
+        let mg = merge_machine_batch(Some(sum as CombineFn<f32>), &part(), &members).unwrap();
+        let mut trailing = mg.data.clone();
+        trailing.push(0xee);
+        assert!(split_machine_batch(&trailing).is_err());
+        assert!(split_machine_batch(&mg.data).is_ok());
     }
 }

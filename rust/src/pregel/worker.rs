@@ -30,6 +30,10 @@ pub struct Worker<A: App> {
     pub part: Partition<A::V>,
     /// Messages to be consumed by the *next* compute phase.
     pub inbox: Inbox<A::M>,
+    /// The inbox consumed by the *current* compute phase, kept around so
+    /// its slot allocations are recycled: each superstep swaps the pair
+    /// and resets in place instead of allocating a fresh `Inbox`.
+    pub(crate) inbox_spare: Inbox<A::M>,
     pub log: LocalLogStore,
     pub clock: Clock,
     /// Partially-committed superstep s(W).
@@ -47,10 +51,12 @@ impl<A: App> Worker<A> {
     ) -> Result<Self> {
         let part = Partition::build(rank, partitioner, global_adj, app);
         let inbox = Inbox::new(part.n_slots(), app.combiner());
+        let inbox_spare = Inbox::new(part.n_slots(), app.combiner());
         Ok(Worker {
             rank,
             part,
             inbox,
+            inbox_spare,
             log: LocalLogStore::new(backing, tag, rank)?,
             clock: Clock::new(),
             s_w: 0,
@@ -76,10 +82,12 @@ impl<A: App> Worker<A> {
             adj: Default::default(),
         };
         let inbox = Inbox::new(partitioner.slots_of(rank), app.combiner());
+        let inbox_spare = Inbox::new(partitioner.slots_of(rank), app.combiner());
         Ok(Worker {
             rank,
             part,
             inbox,
+            inbox_spare,
             log: LocalLogStore::new(backing, tag, rank)?,
             clock: Clock::new(),
             s_w: 0,
@@ -102,12 +110,14 @@ impl<A: App> Worker<A> {
         agg_prev: &[f64],
         exec: Option<&dyn BatchExec>,
     ) -> Result<StepOutput<A::M>> {
-        // Swap in a fresh, correctly-sized inbox: the shuffle phase of
-        // this same superstep will deliver next-superstep messages into it.
-        let inbox = std::mem::replace(
-            &mut self.inbox,
-            Inbox::new(self.part.n_slots(), app.combiner()),
-        );
+        // Rotate the inbox pair: the spare (fully consumed one superstep
+        // ago) is reset *in place* — keeping its slot allocations — and
+        // becomes the receive inbox the shuffle phase of this same
+        // superstep delivers next-superstep messages into, while the
+        // inbox holding this superstep's messages is consumed below.
+        std::mem::swap(&mut self.inbox, &mut self.inbox_spare);
+        self.inbox.reset();
+        let inbox = &self.inbox_spare;
         let mut out = Outbox::new(self.part.partitioner, app.combiner());
         let mut agg = AggState::new(app.agg_slots());
         let mut mutations: Vec<Mutation> = Vec::new();
@@ -125,7 +135,7 @@ impl<A: App> Worker<A> {
             );
             // Batch path: the app performs the whole partition update
             // (incl. comp/active bookkeeping) through the XLA executor.
-            app.xla_superstep(exec, superstep, &mut self.part, &inbox, &mut out, &mut agg.slots)?;
+            app.xla_superstep(exec, superstep, &mut self.part, inbox, &mut out, &mut agg.slots)?;
             n_computed = self.part.comp.iter().filter(|&&c| c).count() as u64;
         } else {
             let n_vertices = self.part.partitioner.n_vertices;

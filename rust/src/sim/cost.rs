@@ -144,6 +144,10 @@ pub struct CostModel {
     pub per_msg_send: f64,
     /// Per-message cost at the receiver (deliver into inbox).
     pub per_msg_recv: f64,
+    /// Per-input-message cost of the machine-level combine stage of the
+    /// two-stage shuffle (decode + fold/concatenate + re-encode at the
+    /// gateway worker). Charged so the wire-volume win is not free CPU.
+    pub per_msg_combine: f64,
     /// Per-vertex cost on the XLA batch path (amortized SIMD update).
     pub per_vertex_batch: f64,
     /// Fixed cost per XLA executable launch.
@@ -186,6 +190,7 @@ impl Default for CostModel {
             per_vertex: 30.0e-9,
             per_msg_send: 60.0e-9,
             per_msg_recv: 40.0e-9,
+            per_msg_combine: 25.0e-9,
             per_vertex_batch: 6.0e-9,
             xla_launch: 50.0e-6,
             barrier_overhead: 5.0e-3,
@@ -236,6 +241,20 @@ impl CostModel {
     /// CPU time to ingest `n_msgs` received messages.
     pub fn recv_time(&self, n_msgs: u64) -> f64 {
         self.profile.compute_mult() * self.scaled(n_msgs) * self.per_msg_recv
+    }
+
+    /// CPU time of the machine-combine stage folding `n_msgs` input
+    /// messages into merged per-machine wire batches (charged to the
+    /// pair's gateway worker).
+    pub fn combine_time(&self, n_msgs: u64) -> f64 {
+        self.profile.compute_mult() * self.scaled(n_msgs) * self.per_msg_combine
+    }
+
+    /// Intra-machine staging of `bytes` over shared memory — the
+    /// member-batch → gateway hop and the merged-section fan-out of the
+    /// two-stage shuffle, and intra-machine message delivery generally.
+    pub fn staging_time(&self, bytes: u64) -> f64 {
+        self.scaled(bytes) / self.mem_bw
     }
 
     /// Wire time to move `bytes` from one worker to another, given how
@@ -420,6 +439,20 @@ mod tests {
         assert!(hot < 0.01, "hot={hot}");
         let cold = m.gc_time(2_000_000_000, 1200); // 2 GB message logs
         assert!(cold > 25.0, "cold={cold}");
+    }
+
+    #[test]
+    fn combine_stage_is_cheaper_than_the_wire_it_saves() {
+        // The premise of the two-stage shuffle: folding a message at
+        // the gateway costs far less than shipping its ~8 encoded bytes
+        // over a NIC shared by 8 workers.
+        let m = CostModel::default();
+        let msgs = 1_000_000u64;
+        let combine = m.combine_time(msgs);
+        let wire = m.wire_time(msgs * 8, 8, false);
+        assert!(combine * 10.0 < wire, "combine={combine} wire={wire}");
+        // And the staging hop is memory-speed, not wire-speed.
+        assert!(m.staging_time(msgs * 8) * 50.0 < wire);
     }
 
     #[test]

@@ -26,6 +26,7 @@ fn cfg(ft: FtKind, cp_every: u64, async_cp: bool, tag: &str) -> EngineConfig {
         max_supersteps: 10_000,
         threads: 0,
         async_cp,
+        machine_combine: true,
     }
 }
 

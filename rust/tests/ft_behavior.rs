@@ -23,6 +23,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         max_supersteps: 10_000,
         threads: 0,
         async_cp: true,
+        machine_combine: true,
     }
 }
 

@@ -6,9 +6,12 @@
 //! below, copied from the seed sources) and drives them through a
 //! minimal sequential reference interpreter that reproduces the
 //! engine's superstep semantics exactly — same `Outbox`/`Inbox`
-//! plumbing, same sender-side combining, same (dst, src)-ordered
-//! delivery, same rank-ordered aggregator merge, same halt conditions —
-//! so every f32/f64 operation happens in the identical order.
+//! plumbing, same sender-side combining, same two-level machine-major
+//! delivery order (the merge-order contract of `pregel::message`:
+//! per-source-machine partials in ascending machine order, ascending
+//! sender rank within a machine), same rank-ordered aggregator merge,
+//! same halt conditions — so every f32/f64 operation happens in the
+//! identical order.
 //!
 //! Each migrated app must then produce **bit-identical** final state
 //! digests (vertex values + active flags) and identical sent-message
@@ -178,13 +181,25 @@ fn run_legacy<L: LegacyApp>(app: &L, global_adj: &[Vec<VertexId>]) -> (u64, u64)
             total_msgs += out.raw_count();
             outboxes.push(out);
         }
-        // Delivery: (dst, src)-sorted, each destination folding batches
-        // in sender-rank order — the bitwise-determinism contract.
+        // Delivery: the engine's two-level merge-order contract
+        // (pregel::message) — each destination folds one partial per
+        // source machine, machines ascending, senders ascending within
+        // a machine. The test topology is 3 machines × 2 workers, so
+        // machine(r) = r % 3 (static round-robin placement).
+        const N_MACHINES: usize = 3;
         for (dst, inbox) in inboxes.iter_mut().enumerate() {
-            for ob in outboxes.iter() {
-                if let Some(b) = ob.batch_for(dst) {
-                    inbox.ingest(&b).expect("legacy ingest");
+            for m in 0..N_MACHINES {
+                let group: Vec<Vec<u8>> = outboxes
+                    .iter()
+                    .enumerate()
+                    .filter(|(r, _)| r % N_MACHINES == m)
+                    .filter_map(|(_, ob)| ob.batch_for(dst))
+                    .collect();
+                if group.is_empty() {
+                    continue;
                 }
+                let refs: Vec<&[u8]> = group.iter().map(Vec::as_slice).collect();
+                inbox.ingest_group(&refs).expect("legacy ingest");
             }
         }
         if global.job_done() || app.halt_on(&global) || step >= max_steps {
@@ -234,6 +249,7 @@ fn run_new<A: App, F: Fn() -> A>(
         max_supersteps: 10_000,
         threads: 0,
         async_cp: true,
+        machine_combine: true,
     };
     let mut eng = Engine::new(app_fn(), cfg, adj).expect("engine");
     if let Some(p) = plan {

@@ -1,0 +1,248 @@
+//! The two-stage (machine-level combine-tree) shuffle: golden
+//! on-vs-off equivalence for every app, wire-volume accounting, thread
+//! determinism, and recovery through the machine-combined delivery
+//! path.
+//!
+//! The engine's merge-order contract (`pregel::message`) makes both
+//! modes fold every f32 in the identical order, so `machine_combine`
+//! may only change *where* the per-machine partial is computed — never
+//! a single result bit. These tests pin that, plus the volume claim
+//! the whole stage exists for: fewer bytes on the shared NIC.
+
+use lwcp::apps::*;
+use lwcp::ft::FtKind;
+use lwcp::graph::{generate, PresetGraph, VertexId};
+use lwcp::metrics::RunMetrics;
+use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan};
+use lwcp::sim::Topology;
+use lwcp::storage::Backing;
+
+fn cfg(
+    topo: Topology,
+    ft: FtKind,
+    cp_every: u64,
+    machine_combine: bool,
+    tag: &str,
+) -> EngineConfig {
+    EngineConfig {
+        topo,
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+        threads: 0,
+        async_cp: true,
+        machine_combine,
+    }
+}
+
+fn run<A: App>(
+    app: A,
+    adj: &[Vec<VertexId>],
+    c: EngineConfig,
+    plan: Option<FailurePlan>,
+) -> (u64, RunMetrics) {
+    let mut eng = Engine::new(app, c, adj).expect("engine");
+    if let Some(p) = plan {
+        eng = eng.with_failures(p);
+    }
+    let m = eng.run().expect("run");
+    (eng.digest(), m)
+}
+
+/// On-vs-off golden: identical digests on two topologies (round-robin
+/// placement interleaves ranks across machines, so the grouping is
+/// non-trivial in both).
+fn assert_on_off_equal<A: App, F: Fn() -> A>(app_fn: F, adj: &[Vec<VertexId>], label: &str) {
+    for topo in [Topology::new(3, 2), Topology::new(2, 3)] {
+        let tag = format!("mc-{label}-{}x{}", topo.machines, topo.workers_per_machine);
+        let (on, m_on) =
+            run(app_fn(), adj, cfg(topo, FtKind::None, 0, true, &format!("{tag}-on")), None);
+        let (off, m_off) =
+            run(app_fn(), adj, cfg(topo, FtKind::None, 0, false, &format!("{tag}-off")), None);
+        assert_eq!(on, off, "{label}: machine-combine changed the result on {topo:?}");
+        // The pre-combine shuffle volume is mode-invariant by
+        // definition; only the wire volume may shrink.
+        assert_eq!(
+            m_on.bytes.shuffle_bytes, m_off.bytes.shuffle_bytes,
+            "{label}: pre-combine volume must not depend on the mode"
+        );
+        assert!(
+            m_on.bytes.wire_bytes <= m_off.bytes.wire_bytes,
+            "{label}: machine-combine increased wire bytes ({} > {})",
+            m_on.bytes.wire_bytes,
+            m_off.bytes.wire_bytes
+        );
+    }
+}
+
+#[test]
+fn all_seven_apps_bit_identical_on_vs_off() {
+    let web = PresetGraph::WebBase.spec(600, 42).generate();
+    assert_on_off_equal(
+        || PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true },
+        &web,
+        "pagerank",
+    );
+    assert_on_off_equal(|| HashMinCc, &generate::erdos_renyi(500, 700, false, 5), "cc");
+    assert_on_off_equal(|| Sssp { source: 0 }, &generate::erdos_renyi(400, 1600, false, 6), "sssp");
+    assert_on_off_equal(
+        || TriangleCount { c: 1 },
+        &generate::erdos_renyi(150, 1200, false, 7),
+        "triangle",
+    );
+    assert_on_off_equal(|| PointerJump, &generate::erdos_renyi(300, 450, false, 8), "pointerjump");
+    assert_on_off_equal(|| BipartiteMatching, &generate::erdos_renyi(200, 500, false, 9), "bm");
+    // k-core peels a path graph: edge deletions every superstep.
+    let path: Vec<Vec<VertexId>> = (0..120usize)
+        .map(|v| {
+            let mut l = Vec::new();
+            if v > 0 {
+                l.push(v as u32 - 1);
+            }
+            if v + 1 < 120 {
+                l.push(v as u32 + 1);
+            }
+            l
+        })
+        .collect();
+    assert_on_off_equal(|| KCore { k: 2 }, &path, "kcore");
+}
+
+#[test]
+fn combiner_app_cuts_remote_wire_volume() {
+    let adj = PresetGraph::WebBase.spec(2_000, 11).generate();
+    let topo = Topology::new(2, 4); // 8 workers sharing 2 NICs
+    let app = || PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+    let (d_on, m_on) = run(app(), &adj, cfg(topo, FtKind::None, 0, true, "mc-wire-on"), None);
+    let (d_off, m_off) = run(app(), &adj, cfg(topo, FtKind::None, 0, false, "mc-wire-off"), None);
+    assert_eq!(d_on, d_off);
+    assert!(
+        m_on.bytes.wire_bytes < m_off.bytes.wire_bytes,
+        "4 co-located senders per machine must dedup accumulators on the wire \
+         (on={}, off={})",
+        m_on.bytes.wire_bytes,
+        m_off.bytes.wire_bytes
+    );
+    // And the job's simulated time improves (the NIC is the shuffle
+    // bottleneck in the cost model).
+    assert!(
+        m_on.final_time <= m_off.final_time,
+        "machine-combine slowed the simulated job: {} > {}",
+        m_on.final_time,
+        m_off.final_time
+    );
+}
+
+#[test]
+fn one_worker_per_machine_is_a_no_op() {
+    // With a single worker per machine there is nothing to merge: the
+    // two-stage shuffle must produce the exact same wire volume and
+    // result as the single-stage baseline.
+    let adj = PresetGraph::WebBase.spec(1_500, 13).generate();
+    let topo = Topology::new(4, 1);
+    let app = || PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+    let (d_on, m_on) = run(app(), &adj, cfg(topo, FtKind::None, 0, true, "mc-one-on"), None);
+    let (d_off, m_off) = run(app(), &adj, cfg(topo, FtKind::None, 0, false, "mc-one-off"), None);
+    assert_eq!(d_on, d_off);
+    assert_eq!(
+        m_on.bytes.wire_bytes, m_off.bytes.wire_bytes,
+        "singleton machine pairs must ship batches unframed"
+    );
+}
+
+#[test]
+fn pagerank_f32_thread_count_invariant_with_machine_combine() {
+    let adj = PresetGraph::WebBase.spec(500, 42).generate();
+    let app = || PageRank { damping: 0.85, supersteps: 13, combiner_enabled: true };
+    for plan in [None, Some(FailurePlan::kill_n_at(1, 8))] {
+        let digest_at = |threads: usize| {
+            let mut c = cfg(Topology::new(3, 2), FtKind::LwCp, 4, true, &format!("mct{threads}"));
+            c.threads = threads;
+            run(app(), &adj, c, plan.clone()).0
+        };
+        let want = digest_at(1);
+        for threads in [2usize, 4, 0] {
+            assert_eq!(
+                digest_at(threads),
+                want,
+                "digest differs at threads={threads} (failure: {})",
+                plan.is_some()
+            );
+        }
+    }
+}
+
+/// Mid-flight kills through the machine-combined shuffle, for all four
+/// FT algorithms: the recovered digest must equal both the combined and
+/// the single-stage failure-free digests. For HwLog this additionally
+/// proves the log/replay layer stores *pre-machine-combine* per-worker
+/// batches: replayed messages funnel through the same merge stage and
+/// reproduce the same wire batches.
+#[test]
+fn mid_flight_kill_recovers_identically_in_both_modes() {
+    let adj = PresetGraph::WebBase.spec(500, 21).generate();
+    let topo = Topology::new(2, 3);
+    let app = || PageRank { damping: 0.85, supersteps: 14, combiner_enabled: true };
+    for ft in FtKind::all() {
+        let (want, _) = run(
+            app(),
+            &adj,
+            cfg(topo, ft, 4, false, &format!("mck-{}-ref", ft.name())),
+            None,
+        );
+        for mc in [false, true] {
+            let (got, m) = run(
+                app(),
+                &adj,
+                cfg(topo, ft, 4, mc, &format!("mck-{}-{mc}", ft.name())),
+                Some(FailurePlan::kill_n_at(1, 9)),
+            );
+            assert!(m.recovery_control > 0.0, "{}: no recovery happened", ft.name());
+            assert_eq!(
+                got,
+                want,
+                "{} machine_combine={mc}: recovered digest diverged",
+                ft.name()
+            );
+        }
+    }
+}
+
+/// The HwLog message log is written before the machine-combine stage:
+/// its volume must not depend on the mode.
+#[test]
+fn hwlog_logs_pre_combine_batches() {
+    let adj = PresetGraph::WebBase.spec(600, 33).generate();
+    let topo = Topology::new(2, 3);
+    let app = || PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true };
+    let (_, m_on) = run(app(), &adj, cfg(topo, FtKind::HwLog, 4, true, "mclog-on"), None);
+    let (_, m_off) = run(app(), &adj, cfg(topo, FtKind::HwLog, 4, false, "mclog-off"), None);
+    assert_eq!(
+        m_on.bytes.log_bytes, m_off.bytes.log_bytes,
+        "message logs must hold per-worker batches, not merged wire batches"
+    );
+}
+
+/// Triangle counting has no combiner: merged machine batches are pure
+/// concatenations, and list-inbox message order must survive the
+/// two-stage path (golden equivalence under failures too).
+#[test]
+fn direct_messages_survive_concatenating_merge_under_failures() {
+    let adj = generate::erdos_renyi(150, 1200, false, 7);
+    let topo = Topology::new(2, 3);
+    let app = || TriangleCount { c: 1 };
+    let (want, _) = run(app(), &adj, cfg(topo, FtKind::None, 0, false, "mcd-ref"), None);
+    for ft in [FtKind::LwCp, FtKind::HwLog] {
+        let (got, _) = run(
+            app(),
+            &adj,
+            cfg(topo, ft, 3, true, &format!("mcd-{}", ft.name())),
+            Some(FailurePlan::kill_n_at(1, 5)),
+        );
+        assert_eq!(got, want, "{}: direct-path merge diverged", ft.name());
+    }
+}

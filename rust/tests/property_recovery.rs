@@ -71,6 +71,7 @@ fn cfg(case: &Case, tag: &str) -> EngineConfig {
         max_supersteps: 10_000,
         threads: 0,
         async_cp: true,
+        machine_combine: true,
     }
 }
 
@@ -247,6 +248,7 @@ fn double_failure_same_worker_rank() {
             max_supersteps: 10_000,
             threads: 0,
             async_cp: true,
+            machine_combine: true,
         };
         let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
         let mut base = Engine::new(app(), c.clone(), &adj).unwrap();

@@ -25,6 +25,10 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         max_supersteps: 10_000,
         threads: 0,
         async_cp: true,
+        // The default two-stage shuffle: every equivalence sweep in
+        // this file runs through the machine-combined delivery path
+        // (see tests/machine_combine.rs for the on-vs-off goldens).
+        machine_combine: true,
     }
 }
 
@@ -381,6 +385,44 @@ fn triangle_digest_identical_across_thread_counts() {
             let got = digest_with_threads(app, &adj, FtKind::HwLog, 3, threads, plan.clone(), "tdet");
             assert_eq!(got, want, "triangle digest differs at threads={threads}");
         }
+    }
+}
+
+// ------------------------------------------------- two-stage shuffle
+
+/// The machine-combined shuffle must be invisible to recovery: a run
+/// with cascading failures through the two-stage delivery path equals
+/// the single-stage failure-free run bit for bit (the merge trees are
+/// keyed by static placement, so respawns cannot reshape them).
+#[test]
+fn machine_combine_modes_agree_under_cascading_failures() {
+    let adj = webbase(400);
+    let plan = FailurePlan {
+        kills: vec![
+            Kill { at_step: 11, ranks: vec![2], machine_fails: false, during_cp: false },
+            Kill { at_step: 8, ranks: vec![3], machine_fails: false, during_cp: false },
+        ],
+    };
+    let app = || PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true };
+    for ft in [FtKind::LwCp, FtKind::HwLog] {
+        let mut digests = Vec::new();
+        for mc in [false, true] {
+            for with_failures in [false, true] {
+                let mut c = cfg(ft, 5, &format!("mc2-{}-{mc}-{with_failures}", ft.name()));
+                c.machine_combine = mc;
+                let mut eng = Engine::new(app(), c, &adj).expect("engine");
+                if with_failures {
+                    eng = eng.with_failures(plan.clone());
+                }
+                eng.run().expect("run");
+                digests.push(eng.digest());
+            }
+        }
+        assert!(
+            digests.windows(2).all(|w| w[0] == w[1]),
+            "{}: digests diverge across machine-combine × failure modes: {digests:?}",
+            ft.name()
+        );
     }
 }
 

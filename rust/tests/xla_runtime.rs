@@ -108,6 +108,7 @@ fn cfg(tag: &str, ft: FtKind) -> EngineConfig {
         max_supersteps: 10_000,
         threads: 0,
         async_cp: true,
+        machine_combine: true,
     }
 }
 
