@@ -23,8 +23,13 @@
 //!    asserting the ≥2× remote wire-byte reduction at 8, exact parity
 //!    at 1, and bit-identical digests across modes, failure-free and
 //!    through a mid-flight kill.
+//! 8. Out-of-core paged partition store: the same PageRank job fully
+//!    in-memory vs under `--memory-budget` at half and an eighth of
+//!    the measured working set — asserting bit-identical digests,
+//!    recorded page faults, and a resident-byte peak bounded by the
+//!    budget (plus the pinned-page slack).
 //!
-//! Results of sections 4, 6 and 7 are also written to
+//! Results of sections 4, 6, 7 and 8 are also written to
 //! `BENCH_hotpath.json` (machine-readable, consumed by CI). Pass
 //! `--check` for a fast smoke run (small graphs, same assertions) —
 //! the CI invocation.
@@ -110,6 +115,7 @@ fn main() {
                 threads: 0,
                 async_cp: true,
                 machine_combine: true,
+                pager: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj).expect("engine");
             if use_xla {
@@ -189,6 +195,7 @@ fn main() {
             threads,
             async_cp: true,
             machine_combine: true,
+            pager: Default::default(),
         };
         let mut eng = Engine::new(app, cfg, &adj).expect("engine");
         let m = eng.run().expect("run");
@@ -270,6 +277,7 @@ fn main() {
                 threads: 0,
                 async_cp,
                 machine_combine: true,
+                pager: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj6).expect("engine");
             let m = eng.run().expect("run");
@@ -349,6 +357,7 @@ fn main() {
                 threads: 0,
                 async_cp: true,
                 machine_combine: mc,
+                pager: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj7).expect("engine");
             let m = eng.run().expect("run");
@@ -410,6 +419,7 @@ fn main() {
                 threads: 0,
                 async_cp: true,
                 machine_combine: mc,
+                pager: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj7)
                 .expect("engine")
@@ -424,15 +434,111 @@ fn main() {
         println!("  [PASS] mid-flight kill digest identical across machine-combine modes");
     }
 
+    // ---------------------- 8: out-of-core paged partition store
+    // PageRank with LWCP checkpoints, in-memory vs --memory-budget at
+    // half and an eighth of the measured working set. The digest must
+    // never move (the pager's determinism contract, failure-free here;
+    // the mid-flight-kill goldens live in tests/paged_store.rs), every
+    // budgeted run must fault, and the resident peak must respect the
+    // budget up to the documented pinned-page slack.
+    println!("\n=== Hot path 8 — out-of-core paged store: in-memory vs --memory-budget ===");
+    let adj8 = PresetGraph::WebBase.spec(if check { 10_000 } else { 60_000 }, 29).generate();
+    let mut json_pager: Vec<String> = Vec::new();
+    {
+        let mut t = Table::new(vec![
+            "budget",
+            "resident peak",
+            "faults",
+            "page-in MiB",
+            "write-back MiB",
+            "virtual s",
+            "wall ms",
+        ]);
+        let run8 = |budget: Option<u64>, tag: &str| {
+            let app = PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(2, 2),
+                cost: Default::default(),
+                ft: FtKind::LwCp,
+                cp_every: 3,
+                cp_every_secs: None,
+                backing: Backing::Memory,
+                tag: tag.into(),
+                max_supersteps: 10_000,
+                threads: 0,
+                async_cp: true,
+                machine_combine: true,
+                pager: lwcp::storage::PagerConfig {
+                    memory_budget: budget,
+                    page_slots: 256,
+                },
+            };
+            let mut eng = Engine::new(app, cfg, &adj8).expect("engine");
+            let m = eng.run().expect("run");
+            (eng.digest(), m)
+        };
+        let (base_digest, base_m) = run8(None, "hp8-inmem");
+        let ws = base_m.pager.resident_peak.max(1);
+        let mut rows = vec![(None, base_digest, base_m)];
+        for denom in [2u64, 8] {
+            let budget = (ws / denom).max(1024);
+            let tag = format!("hp8-b{denom}");
+            let (d, m) = run8(Some(budget), &tag);
+            assert_eq!(
+                d, base_digest,
+                "budget={budget}: paged store changed the result digest"
+            );
+            assert!(m.pager.faults > 0, "budget={budget}: no page faults recorded");
+            // Pinned-page slack: one value page + one edge page per
+            // store may ride above the budget; bound it generously by
+            // a quarter of the working set.
+            assert!(
+                m.pager.resident_peak <= budget + ws / 4 + 4096,
+                "budget={budget}: resident peak {} exceeded budget + slack",
+                m.pager.resident_peak
+            );
+            rows.push((Some(budget), d, m));
+        }
+        for (budget, digest, m) in &rows {
+            let label = match budget {
+                None => "in-memory".to_string(),
+                Some(b) => format!("{b}"),
+            };
+            json_pager.push(json_obj(&[
+                ("budget_bytes", budget.map_or("null".into(), |b| b.to_string())),
+                ("resident_peak", m.pager.resident_peak.to_string()),
+                ("faults", m.pager.faults.to_string()),
+                ("page_in_bytes", m.pager.page_in_bytes.to_string()),
+                ("page_out_bytes", m.pager.page_out_bytes.to_string()),
+                ("virtual_s", format!("{:.6}", m.final_time)),
+                ("wall_ms", format!("{:.3}", m.wall_ms)),
+                ("digest", json_str(&format!("{digest:016x}"))),
+            ]));
+            t.row(vec![
+                label,
+                format!("{:.2}", mib(m.pager.resident_peak)),
+                m.pager.faults.to_string(),
+                format!("{:.2}", mib(m.pager.page_in_bytes)),
+                format!("{:.2}", mib(m.pager.page_out_bytes)),
+                format!("{:.3}", m.final_time),
+                format!("{:.1}", m.wall_ms),
+            ]);
+        }
+        t.print();
+        println!("  [PASS] digest parity + bounded resident bytes across budgets");
+    }
+
     // ------------------------------------------- machine-readable dump
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"check_mode\": {check},\n  \
          \"pipeline_scaling\": [\n    {}\n  ],\n  \
          \"overlapped_checkpoint\": [\n    {}\n  ],\n  \
-         \"machine_combine\": [\n    {}\n  ]\n}}\n",
+         \"machine_combine\": [\n    {}\n  ],\n  \
+         \"paged_store\": [\n    {}\n  ]\n}}\n",
         json_pipeline.join(",\n    "),
         json_overlap.join(",\n    "),
         json_mc.join(",\n    "),
+        json_pager.join(",\n    "),
     );
     let path = "BENCH_hotpath.json";
     std::fs::write(path, &json).expect("write BENCH_hotpath.json");
@@ -451,8 +557,8 @@ fn bench_replay_row<A: App>(name: &str, adj: &[Vec<u32>], app: A) -> Vec<String>
     let part = Partitioner::new(1, adj.len());
     let agg_prev = vec![0.0f64; app.agg_slots()];
     let fresh = |tag: &str| {
-        let mut w =
-            Worker::new(0, part, adj, &app, Backing::Memory, tag).expect("worker");
+        let mut w = Worker::new(0, part, adj, &app, Default::default(), Backing::Memory, tag)
+            .expect("worker");
         w.compute_superstep(&app, 1, &agg_prev, None).expect("superstep 1");
         w
     };

@@ -158,7 +158,7 @@ mod tests {
             Engine::new(BipartiteMatching, EngineConfig::small_test(FtKind::None), adj)
                 .unwrap();
         eng.run().unwrap();
-        (0..adj.len() as u32).map(|v| *eng.value_of(v)).collect()
+        (0..adj.len() as u32).map(|v| eng.value_of(v)).collect()
     }
 
     /// Matching validity: symmetric, cross-side, along real edges.

@@ -105,7 +105,7 @@ mod tests {
         eng.run().unwrap();
         let oracle = kcore_oracle(&adj, k);
         for v in 0..80u32 {
-            let (removed, _) = *eng.value_of(v);
+            let (removed, _) = eng.value_of(v);
             assert_eq!(!removed, oracle[v as usize], "vertex {v}");
         }
     }
@@ -117,7 +117,7 @@ mod tests {
             Engine::new(KCore { k: 1 }, EngineConfig::small_test(FtKind::None), &adj).unwrap();
         eng.run().unwrap();
         for v in 0..40u32 {
-            let (removed, _) = *eng.value_of(v);
+            let (removed, _) = eng.value_of(v);
             assert_eq!(removed, adj[v as usize].is_empty(), "vertex {v}");
         }
     }

@@ -101,30 +101,45 @@ impl App for PageRank {
     ) -> Result<()> {
         let n = part.n_slots();
         if superstep > 1 {
+            // Gather page-by-page through the partition store (a paged
+            // partition faults each page in exactly once per pass).
             let mut old = vec![0f32; n];
             let mut msg = vec![0f32; n];
             let mut deg = vec![0f32; n];
-            for slot in 0..n {
-                old[slot] = part.values[slot];
-                msg[slot] = inbox.msgs(slot).first().copied().unwrap_or(0.0);
-                deg[slot] = part.adj.degree(slot) as f32;
+            for p in 0..part.n_pages() {
+                let (vp, ep) = part.page_pair(p);
+                for off in 0..vp.values.len() {
+                    let slot = vp.base + off;
+                    old[slot] = vp.values[off];
+                    msg[slot] = inbox.msgs(slot).first().copied().unwrap_or(0.0);
+                    deg[slot] = ep.adj.degree(off) as f32;
+                }
             }
             let outs = exec.run("pagerank_step", &[&old, &msg, &deg])?;
             let (new, delta_sum) = (&outs[0], outs[2][0]);
-            part.values.copy_from_slice(&new[..n]);
+            for p in 0..part.n_pages() {
+                let vp = part.value_page(p);
+                let a = vp.base;
+                let b = a + vp.values.len();
+                vp.values.copy_from_slice(&new[a..b]);
+                *vp.dirty = true;
+            }
             agg[0] += delta_sum as f64;
         }
         // Message generation stays scalar (graph-topology work): send
         // value/deg — computed exactly like the scalar path and the
         // LWCP replay path, so all three produce bit-identical messages.
-        for slot in 0..n {
-            part.comp[slot] = true;
-            part.active[slot] = true;
-            let neighbors = part.adj.neighbors(slot);
-            if !neighbors.is_empty() {
-                let share = part.values[slot] / neighbors.len() as f32;
-                for &to in neighbors {
-                    out.send(to, share);
+        for p in 0..part.n_pages() {
+            let (vp, ep) = part.page_pair(p);
+            for off in 0..vp.values.len() {
+                vp.comp[off] = true;
+                vp.active[off] = true;
+                let neighbors = ep.adj.neighbors(off);
+                if !neighbors.is_empty() {
+                    let share = vp.values[off] / neighbors.len() as f32;
+                    for &to in neighbors {
+                        out.send(to, share);
+                    }
                 }
             }
         }
@@ -172,7 +187,7 @@ mod tests {
         eng.run().unwrap();
         let oracle = pagerank_oracle(&adj, 0.85, 12);
         for v in 0..60u32 {
-            let got = *eng.value_of(v);
+            let got = eng.value_of(v);
             let want = oracle[v as usize];
             assert!(
                 (got - want).abs() <= 1e-4 * want.abs().max(1.0),

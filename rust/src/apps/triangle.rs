@@ -207,7 +207,7 @@ mod tests {
         count
     }
 
-    fn total_count<A: crate::pregel::App<V = TriValue>>(eng: &Engine<A>) -> u64 {
+    fn total_count<A: crate::pregel::App<V = TriValue>>(eng: &mut Engine<A>) -> u64 {
         (0..eng.values().len() as u32).map(|v| eng.value_of(v).count).sum()
     }
 
@@ -223,7 +223,7 @@ mod tests {
         )
         .unwrap();
         eng.run().unwrap();
-        assert_eq!(total_count(&eng), want);
+        assert_eq!(total_count(&mut eng), want);
     }
 
     #[test]
@@ -239,7 +239,7 @@ mod tests {
             )
             .unwrap();
             let m = eng.run().unwrap();
-            assert_eq!(total_count(&eng), want, "c={c}");
+            assert_eq!(total_count(&mut eng), want, "c={c}");
             rounds.push(m.supersteps_run);
         }
         assert!(rounds[0] > rounds[2], "smaller C must take more rounds: {rounds:?}");

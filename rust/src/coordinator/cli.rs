@@ -14,6 +14,10 @@
 //!          [--sync-cp]     (disable the overlapped checkpoint commit)
 //!          [--no-machine-combine]  (disable the two-stage shuffle's
 //!                                   machine-level combine trees)
+//!          [--memory-budget 64m]   (out-of-core partitions: per-worker
+//!                                   resident budget in bytes, with k/m/g
+//!                                   suffixes; unset = fully in-memory)
+//!          [--page-slots 4096]     (vertex slots per partition page)
 //! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
 //! lwcp info
 //! ```
@@ -25,7 +29,7 @@ use crate::metrics::report;
 use crate::pregel::{FailurePlan, Kill};
 use crate::runtime::XlaRegistry;
 use crate::sim::{SystemProfile, Topology};
-use crate::storage::Backing;
+use crate::storage::{Backing, PagerConfig};
 use crate::util::fmtutil::secs;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -103,6 +107,26 @@ fn parse_profile(s: &str) -> Result<SystemProfile> {
     })
 }
 
+/// Parse a byte count with optional k/m/g suffix ("64m" → 64 MiB).
+fn parse_byte_size(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = t.strip_suffix('g') {
+        (d, 1u64 << 30)
+    } else if let Some(d) = t.strip_suffix('m') {
+        (d, 1u64 << 20)
+    } else if let Some(d) = t.strip_suffix('k') {
+        (d, 1u64 << 10)
+    } else {
+        (t.as_str(), 1u64)
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|e| anyhow::anyhow!("byte size {s}: {e}"))?;
+    n.checked_mul(mult)
+        .with_context(|| format!("byte size {s} overflows u64"))
+}
+
 fn parse_preset(s: &str) -> Result<PresetGraph> {
     Ok(match s.to_ascii_lowercase().as_str() {
         "webuk" | "webuk-s" => PresetGraph::WebUk,
@@ -174,6 +198,10 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         threads: f.parse_or("threads", 0)?,
         async_cp: !f.has("sync-cp"),
         machine_combine: !f.has("no-machine-combine"),
+        pager: PagerConfig {
+            memory_budget: f.get("memory-budget").map(parse_byte_size).transpose()?,
+            page_slots: f.parse_or("page-slots", PagerConfig::default().page_slots)?,
+        },
     })
 }
 
@@ -206,14 +234,22 @@ fn cmd_run(f: &Flags) -> Result<()> {
     let mut wt = report::wire_table();
     wt.row(report::wire_row(spec.ft.name(), &m));
     wt.print();
+    if m.pager.faults > 0 {
+        let mut pt = report::pager_table();
+        pt.row(report::pager_row(spec.ft.name(), &m));
+        pt.print();
+    }
     println!(
-        "supersteps={} virtual_time={} wall={:.0} ms shuffled={} wire={} cp_bytes={}",
+        "supersteps={} virtual_time={} wall={:.0} ms shuffled={} wire={} cp_bytes={} \
+         resident_peak={} faults={}",
         m.supersteps_run,
         secs(m.final_time),
         m.wall_ms,
         crate::util::fmtutil::bytes(m.bytes.shuffle_bytes),
         crate::util::fmtutil::bytes(m.bytes.wire_bytes),
         crate::util::fmtutil::bytes(m.bytes.checkpoint_bytes),
+        crate::util::fmtutil::bytes(m.pager.resident_peak),
+        m.pager.faults,
     );
     Ok(())
 }
@@ -286,8 +322,31 @@ mod tests {
         assert_eq!(spec.cp_every, 10);
         assert_eq!(spec.ft, FtKind::LwCp);
         assert!(spec.machine_combine, "two-stage shuffle defaults on");
+        assert_eq!(spec.pager.memory_budget, None, "in-memory store by default");
         let off = spec_from_flags(&flags("--no-machine-combine")).unwrap();
         assert!(!off.machine_combine);
+    }
+
+    #[test]
+    fn memory_budget_flag_selects_the_paged_store() {
+        let spec =
+            spec_from_flags(&flags("--memory-budget 64m --page-slots 512")).unwrap();
+        assert_eq!(spec.pager.memory_budget, Some(64 << 20));
+        assert_eq!(spec.pager.page_slots, 512);
+        assert!(spec_from_flags(&flags("--memory-budget lots")).is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_suffixes() {
+        assert_eq!(parse_byte_size("4096").unwrap(), 4096);
+        assert_eq!(parse_byte_size("8k").unwrap(), 8 << 10);
+        assert_eq!(parse_byte_size("64M").unwrap(), 64 << 20);
+        assert_eq!(parse_byte_size("2g").unwrap(), 2 << 30);
+        assert!(parse_byte_size("").is_err());
+        assert!(parse_byte_size("-5m").is_err());
+        // Overflow must error, not wrap to a tiny bogus budget (the
+        // count itself parses as u64; the suffix multiply overflows).
+        assert!(parse_byte_size("18446744073709551615g").is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::metrics::RunMetrics;
 use crate::pregel::{App, Engine, EngineConfig, FailurePlan};
 use crate::runtime::XlaRegistry;
 use crate::sim::{CostModel, SystemProfile, Topology};
-use crate::storage::Backing;
+use crate::storage::{Backing, PagerConfig};
 use anyhow::{Context, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -95,6 +95,11 @@ pub struct JobSpec {
     /// baseline (CLI `--no-machine-combine`). Results are identical
     /// either way.
     pub machine_combine: bool,
+    /// Out-of-core partition store (see `EngineConfig::pager`): a
+    /// `--memory-budget` spills cold partition pages to per-worker
+    /// files; unset keeps partitions fully in memory. Results are
+    /// identical either way.
+    pub pager: PagerConfig,
 }
 
 impl JobSpec {
@@ -118,6 +123,7 @@ impl JobSpec {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            pager: PagerConfig::default(),
         }
     }
 
@@ -136,6 +142,7 @@ impl JobSpec {
             threads: self.threads,
             async_cp: self.async_cp,
             machine_combine: self.machine_combine,
+            pager: self.pager,
         }
     }
 }

@@ -35,7 +35,7 @@ use crate::metrics::{CpOverlap, StepKind};
 use crate::pregel::app::App;
 use crate::pregel::engine::Engine;
 use crate::pregel::executor::{self, TaskHandle};
-use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, Cp0, CpMeta, HwCp};
+use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, CpMeta};
 use crate::util::codec::Codec;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -87,13 +87,13 @@ impl<A: App> Engine<A> {
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &alive);
             self.pool.map_named("cp0-snapshot", Some(alive.as_slice()), refs, |(r, w)| {
-                let cp0 = Cp0 {
-                    values: w.part.values.clone(),
-                    active: w.part.active.clone(),
-                    adj: w.part.adj.clone(),
-                };
-                let blob = cp0.to_bytes();
+                // Stream the `Cp0` codec bytes page-by-page straight
+                // from the partition store — no state/adjacency clone;
+                // a paged store blits cold pages from its spill file.
+                let mut blob = Vec::new();
+                w.part.encode_cp0_into(&mut blob);
                 w.clock.advance(cost.snapshot_time(blob.len() as u64));
+                w.settle_page_io(cost);
                 (r, blob)
             })
         };
@@ -241,16 +241,17 @@ impl<A: App> Engine<A> {
             let cost = &self.cfg.cost;
             let refs = executor::select_workers(&mut self.workers, &alive);
             self.pool.map_named("checkpoint-snapshot", Some(alive.as_slice()), refs, |(r, w)| {
-                let blob = if heavy {
-                    HwCp {
-                        states: w.part.states(),
-                        adj: w.part.adj.clone(),
-                        inbox: w.inbox.snapshot(),
-                    }
-                    .to_bytes()
-                } else {
-                    w.part.states().to_bytes()
-                };
+                // Encode straight from the partition store into the
+                // snapshot blob (the `HwCp`/`LwCp` codec streams, byte
+                // for byte) — the old path cloned the full state triple
+                // and adjacency first, doubling the barrier's memory
+                // traffic.
+                let mut blob = Vec::new();
+                w.part.encode_states_into(&mut blob);
+                if heavy {
+                    w.part.encode_adj_into(&mut blob);
+                    w.inbox.encode_snapshot_into(&mut blob);
+                }
                 let mut inc = Vec::new();
                 if !heavy {
                     for (_, seg) in w.log.mutations_through(step) {
@@ -258,6 +259,7 @@ impl<A: App> Engine<A> {
                     }
                 }
                 w.clock.advance(cost.snapshot_time((blob.len() + inc.len()) as u64));
+                w.settle_page_io(cost);
                 let gc = match gc_below {
                     Some(below) => w.log.gc_preview(below),
                     None => (0, 0),

@@ -47,17 +47,17 @@ fn load_heavy_cp_worker<A: App>(
     w.clock.advance(t);
     if cp_step == 0 {
         let cp0 = Cp0::<A::V>::from_bytes(&blob)?;
-        w.part.values = cp0.values;
-        w.part.active = cp0.active;
-        w.part.comp = vec![false; w.part.n_slots()];
-        w.part.adj = cp0.adj;
+        w.part.restore_cp0(cp0.values, cp0.active, &cp0.adj);
         // No messages exist before superstep 1.
     } else {
         let cp = HwCp::<A::V, A::M>::from_bytes(&blob)?;
         w.part.restore_states(cp.states);
-        w.part.adj = cp.adj;
+        w.part.restore_adjacency(&cp.adj);
         w.inbox.restore(cp.inbox)?;
     }
+    // A paged partition re-spills the restored pages (write-backs at
+    // disk bandwidth).
+    w.settle_page_io(cost);
     w.log.clear_mutations();
     w.s_w = cp_step;
     Ok(t)
@@ -90,7 +90,7 @@ fn load_light_cp_worker<A: App>(
         let cp0_blob = hdfs.get(&cp_key(0, rank))?;
         t += cost.hdfs_read_time(cp0_blob.len() as u64, sharers);
         let cp0 = Cp0::<A::V>::from_bytes(&cp0_blob)?;
-        w.part.adj = cp0.adj;
+        w.part.restore_adjacency(&cp0.adj);
         // Replay the incremental mutation log E_W in append order.
         if hdfs.exists(&ew_key(rank)) {
             let ew = hdfs.get(&ew_key(rank))?;
@@ -99,7 +99,7 @@ fn load_light_cp_worker<A: App>(
             while !rd.is_empty() {
                 let m = crate::graph::Mutation::decode(&mut rd)?;
                 let slot = w.part.partitioner.slot_of(m.src());
-                w.part.adj.apply(slot, &m);
+                w.part.apply_mutation(slot, &m);
             }
         }
     }
@@ -107,6 +107,8 @@ fn load_light_cp_worker<A: App>(
     w.log.clear_mutations();
     w.s_w = cp_step;
     w.clock.advance(t);
+    // Restored pages of a paged partition re-spill at disk bandwidth.
+    w.settle_page_io(cost);
     Ok(t)
 }
 
@@ -153,6 +155,7 @@ impl<A: App> Engine<A> {
                 rank,
                 self.partitioner,
                 self.app.as_ref(),
+                self.cfg.pager,
                 self.cfg.backing,
                 &tag,
             )?;
@@ -286,6 +289,7 @@ impl<A: App> Engine<A> {
                         let n = w.log.write_vstate_log(cp_step, &data)?;
                         let tl = cost.log_write_time(n) + cost.file_op;
                         w.clock.advance(tl);
+                        w.settle_page_io(cost);
                         log_bytes = n;
                     }
                     Ok((t, log_bytes))
@@ -352,6 +356,9 @@ impl<A: App> Engine<A> {
                     let ob = w.replay_generate(app_ref, step, agg_prev, Some(states));
                     let t = t_load + cost.compute_time(n_comp, ob.raw_count());
                     w.clock.advance(t);
+                    // State-substituted replay pins only edge pages;
+                    // settle their faults.
+                    w.settle_page_io(cost);
                     let out: Vec<(usize, usize, Vec<u8>)> = dests
                         .iter()
                         .filter_map(|&d| ob.batch_for(d).map(|b| (r, d, b)))

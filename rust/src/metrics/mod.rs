@@ -86,6 +86,25 @@ impl PhaseWall {
     }
 }
 
+/// Out-of-core partition store totals (`storage::pager`), summed over
+/// the job's live workers at the end of the run. All byte figures are
+/// *encoded* page bytes — the volumes the spill files actually moved —
+/// and `resident_peak` is the worst per-worker peak of modeled
+/// resident partition bytes (what `--memory-budget` bounds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PagerTotals {
+    /// Pages faulted in from spill files.
+    pub faults: u64,
+    /// Bytes read from spill files (faults + cold checkpoint streams).
+    pub page_in_bytes: u64,
+    /// Dirty pages written back on eviction (or re-spilled on restore).
+    pub writebacks: u64,
+    /// Bytes written back to spill files.
+    pub page_out_bytes: u64,
+    /// Max over workers of peak resident partition bytes.
+    pub resident_peak: u64,
+}
+
 /// Overlap accounting of one background checkpoint flush (the
 /// overlapped-commit pipeline of `ft::checkpoint_ops`): `flush` is the
 /// modeled virtual duration of the HDFS puts + commit marker +
@@ -125,6 +144,10 @@ pub struct RunMetrics {
     /// Control-plane time of recovery rounds (revoke/shrink/spawn/merge).
     pub recovery_control: f64,
     pub bytes: ByteStats,
+    /// Out-of-core partition store totals (zero faults/write-backs
+    /// when no `--memory-budget` is set; `resident_peak` is reported
+    /// for the in-memory store too).
+    pub pager: PagerTotals,
     /// Final virtual time at job end.
     pub final_time: f64,
     /// Number of supersteps executed (incl. recovery reruns).

@@ -65,6 +65,26 @@ pub fn wire_table() -> Table {
     Table::new(vec!["", "shuffle bytes", "wire bytes", "reduction"])
 }
 
+/// Render the out-of-core memory-pressure row: worst per-worker
+/// resident peak, page-fault count, and spill-file traffic (all zero
+/// faults when the partitions are fully in-memory — the resident peak
+/// is still reported so memory pressure is visible next to `wire=`).
+pub fn pager_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    vec![
+        name.to_string(),
+        bytes(m.pager.resident_peak),
+        m.pager.faults.to_string(),
+        bytes(m.pager.page_in_bytes),
+        m.pager.writebacks.to_string(),
+        bytes(m.pager.page_out_bytes),
+    ]
+}
+
+/// Build the out-of-core memory-pressure table header.
+pub fn pager_table() -> Table {
+    Table::new(vec!["", "resident peak", "faults", "page-in", "writebacks", "write-back"])
+}
+
 /// Build the Table 2 header.
 pub fn superstep_table() -> Table {
     Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_last"])
@@ -108,6 +128,11 @@ mod tests {
         m.bytes.wire_bytes = 0;
         assert_eq!(wire_row("HWCP", &m)[3], "-");
         assert!(wire_table().render().contains("wire bytes"));
+        m.pager.resident_peak = 2048;
+        m.pager.faults = 7;
+        let pr = pager_row("HWCP", &m);
+        assert_eq!(pr[2], "7");
+        assert!(pager_table().render().contains("resident peak"));
         let mut t = superstep_table();
         t.row(r);
         assert!(t.render().contains("T_cpstep"));

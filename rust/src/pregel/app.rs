@@ -42,6 +42,12 @@ use crate::graph::{Adjacency, Mutation, VertexId};
 use crate::util::codec::Codec;
 use anyhow::Result;
 
+// The contexts below are **page-local**: the executor pins one page of
+// the out-of-core partition store (`storage::pager`) and hands each
+// vertex a view of that page's slices — `off` indexes within the page,
+// never the whole partition. UDF-visible semantics are unchanged; the
+// dirty flags tell the page cache which pages need write-back.
+
 /// Sender-side message combiner (fold `m` into `acc`).
 pub type CombineFn<M> = fn(&mut M, &M);
 
@@ -51,8 +57,9 @@ pub type CombineFn<M> = fn(&mut M, &M);
 /// [`App::respond`] hook serves message-dependent (LWCP-masked)
 /// supersteps.
 pub trait App: Send + Sync + 'static {
-    /// Vertex value type a(v).
-    type V: Clone + Codec + Send + Sync + std::fmt::Debug;
+    /// Vertex value type a(v). (`'static`: values live inside the
+    /// boxed partition store of `storage::pager`.)
+    type V: Clone + Codec + Send + Sync + std::fmt::Debug + 'static;
     /// Message type.
     type M: Clone + Codec + Send + Sync + std::fmt::Debug;
 
@@ -185,12 +192,19 @@ fn agg_prev_checked(agg_prev: &[f64], slot: usize) -> f64 {
 /// context with write access to the vertex (Equation (2) of the paper).
 /// It deliberately cannot send messages: message generation lives in
 /// [`App::emit`] / [`App::respond`] via [`EmitCtx`].
+///
+/// The slices are the pinned page's slot-major views; `off` is the
+/// vertex's slot within the page.
 pub struct UpdateCtx<'a, V> {
     pub(crate) id: VertexId,
-    pub(crate) slot: usize,
+    pub(crate) off: usize,
     pub(crate) superstep: u64,
     pub(crate) n_vertices: usize,
-    pub(crate) part: &'a mut Partition<V>,
+    pub(crate) values: &'a mut [V],
+    pub(crate) active: &'a mut [bool],
+    pub(crate) adj: &'a mut Adjacency,
+    pub(crate) vals_dirty: &'a mut bool,
+    pub(crate) adj_dirty: &'a mut bool,
     pub(crate) agg: &'a mut [f64],
     pub(crate) agg_prev: &'a [f64],
     pub(crate) mutations: &'a mut Vec<Mutation>,
@@ -214,39 +228,42 @@ impl<'a, V: Clone> UpdateCtx<'a, V> {
 
     /// Current vertex value a(v).
     pub fn value(&self) -> &V {
-        &self.part.values[self.slot]
+        &self.values[self.off]
     }
 
     /// Update a(v).
     pub fn set_value(&mut self, v: V) {
-        self.part.values[self.slot] = v;
+        self.values[self.off] = v;
+        *self.vals_dirty = true;
     }
 
     /// Γ(v): this vertex's (out-)neighbors.
     pub fn neighbors(&self) -> &[VertexId] {
-        self.part.adj.neighbors(self.slot)
+        self.adj.neighbors(self.off)
     }
 
     /// |Γ(v)|.
     pub fn degree(&self) -> usize {
-        self.part.adj.degree(self.slot)
+        self.adj.degree(self.off)
     }
 
     /// Deactivate this vertex (it reactivates on message receipt).
     pub fn vote_to_halt(&mut self) {
-        self.part.active[self.slot] = false;
+        self.active[self.off] = false;
     }
 
     /// Add an out-edge v→`dst` (applied immediately; logged for
     /// incremental checkpointing).
     pub fn add_edge(&mut self, dst: VertexId) {
-        self.part.adj.add_edge(self.slot, dst);
+        self.adj.add_edge(self.off, dst);
+        *self.adj_dirty = true;
         self.mutations.push(Mutation::AddEdge { src: self.id, dst });
     }
 
     /// Delete the out-edge v→`dst`.
     pub fn del_edge(&mut self, dst: VertexId) {
-        self.part.adj.del_edge(self.slot, dst);
+        self.adj.del_edge(self.off, dst);
+        *self.adj_dirty = true;
         self.mutations.push(Mutation::DelEdge { src: self.id, dst });
     }
 
@@ -279,7 +296,8 @@ impl<'a, V: Clone> UpdateCtx<'a, V> {
 /// come back untouched — no runtime replay flag needed.
 pub struct EmitCtx<'a, V, M: Codec + Clone> {
     pub(crate) id: VertexId,
-    pub(crate) slot: usize,
+    /// Slot within the pinned page (`values`/`adj` are page-local).
+    pub(crate) off: usize,
     pub(crate) superstep: u64,
     pub(crate) n_vertices: usize,
     pub(crate) values: &'a [V],
@@ -311,19 +329,19 @@ impl<'a, V: Clone, M: Codec + Clone> EmitCtx<'a, V, M> {
     /// The `'a` lifetime outlives the `&self` borrow, so the value can
     /// be held across [`EmitCtx::send`] calls.
     pub fn value(&self) -> &'a V {
-        &self.values[self.slot]
+        &self.values[self.off]
     }
 
     /// Γ(v): this vertex's (out-)neighbors. Borrows for `'a` (not from
     /// `&self`), so iterating neighbors while sending compiles without
     /// an intermediate copy.
     pub fn neighbors(&self) -> &'a [VertexId] {
-        self.adj.neighbors(self.slot)
+        self.adj.neighbors(self.off)
     }
 
     /// |Γ(v)|.
     pub fn degree(&self) -> usize {
-        self.adj.degree(self.slot)
+        self.adj.degree(self.off)
     }
 
     /// Global aggregator value of the previous superstep. Debug builds
@@ -341,7 +359,7 @@ impl<'a, V: Clone, M: Codec + Clone> EmitCtx<'a, V, M> {
     pub fn send_all(&mut self, m: M) {
         let adj = self.adj;
         let out = &mut *self.out;
-        for &to in adj.neighbors(self.slot) {
+        for &to in adj.neighbors(self.off) {
             out.send(to, m.clone());
         }
     }
@@ -352,30 +370,42 @@ mod tests {
     use super::*;
     use crate::graph::Partitioner;
 
-    fn tiny_partition() -> Partition<f32> {
-        let part = Partitioner::new(1, 2);
-        Partition {
-            rank: 0,
-            partitioner: part,
+    /// A hand-rolled one-page partition: the ctx types take plain
+    /// page-local slices, so tests need no store behind them.
+    struct TinyPage {
+        values: Vec<f32>,
+        active: Vec<bool>,
+        adj: Adjacency,
+        vals_dirty: bool,
+        adj_dirty: bool,
+    }
+
+    fn tiny_page() -> TinyPage {
+        TinyPage {
             values: vec![1.0, 2.0],
             active: vec![true, true],
-            comp: vec![false, false],
             adj: Adjacency::from_lists(&[vec![1], vec![0]]),
+            vals_dirty: false,
+            adj_dirty: false,
         }
     }
 
     #[test]
     fn update_ctx_reads_and_writes_state() {
-        let mut p = tiny_partition();
+        let mut p = tiny_page();
         let mut agg = vec![0.0f64];
         let agg_prev = vec![0.5f64];
         let mut muts = Vec::new();
         let mut ctx = UpdateCtx {
             id: 0,
-            slot: 0,
+            off: 0,
             superstep: 3,
             n_vertices: 2,
-            part: &mut p,
+            values: &mut p.values,
+            active: &mut p.active,
+            adj: &mut p.adj,
+            vals_dirty: &mut p.vals_dirty,
+            adj_dirty: &mut p.adj_dirty,
             agg: &mut agg,
             agg_prev: &agg_prev,
             mutations: &mut muts,
@@ -385,21 +415,26 @@ mod tests {
         ctx.set_value(9.0);
         ctx.aggregate(0, 2.0);
         ctx.vote_to_halt();
+        ctx.add_edge(7);
         assert_eq!(*ctx.value(), 9.0);
         drop(ctx);
         assert_eq!(p.values[0], 9.0);
         assert!(!p.active[0]);
         assert_eq!(agg[0], 2.0);
+        assert!(p.vals_dirty, "set_value must mark the value page dirty");
+        assert!(p.adj_dirty, "add_edge must mark the edge page dirty");
+        assert_eq!(muts.len(), 1);
     }
 
     #[test]
     fn emit_ctx_neighbors_outlive_the_send_borrow() {
-        let p = tiny_partition();
-        let mut out = Outbox::<f32>::new(p.partitioner, None);
+        let p = tiny_page();
+        let part = Partitioner::new(1, 2);
+        let mut out = Outbox::<f32>::new(part, None);
         let agg_prev: Vec<f64> = vec![0.0];
         let mut ctx = EmitCtx {
             id: 0,
-            slot: 0,
+            off: 0,
             superstep: 3,
             n_vertices: 2,
             values: &p.values,
@@ -421,16 +456,20 @@ mod tests {
     #[cfg(debug_assertions)]
     #[should_panic(expected = "aggregator slot")]
     fn update_ctx_agg_prev_panics_on_bad_slot_in_debug() {
-        let mut p = tiny_partition();
+        let mut p = tiny_page();
         let mut agg = vec![0.0f64];
         let agg_prev = vec![0.0f64]; // one declared slot
         let mut muts = Vec::new();
         let ctx = UpdateCtx {
             id: 0,
-            slot: 0,
+            off: 0,
             superstep: 1,
             n_vertices: 2,
-            part: &mut p,
+            values: &mut p.values,
+            active: &mut p.active,
+            adj: &mut p.adj,
+            vals_dirty: &mut p.vals_dirty,
+            adj_dirty: &mut p.adj_dirty,
             agg: &mut agg,
             agg_prev: &agg_prev,
             mutations: &mut muts,
@@ -442,12 +481,13 @@ mod tests {
     #[cfg(debug_assertions)]
     #[should_panic(expected = "aggregator slot")]
     fn emit_ctx_agg_prev_panics_on_bad_slot_in_debug() {
-        let p = tiny_partition();
-        let mut out = Outbox::<f32>::new(p.partitioner, None);
+        let p = tiny_page();
+        let part = Partitioner::new(1, 2);
+        let mut out = Outbox::<f32>::new(part, None);
         let agg_prev: Vec<f64> = vec![0.0];
         let ctx = EmitCtx {
             id: 0,
-            slot: 0,
+            off: 0,
             superstep: 1,
             n_vertices: 2,
             values: &p.values,

@@ -139,6 +139,13 @@ pub struct EngineConfig {
     /// merge-order contract of `pregel::message` (see
     /// `tests/machine_combine.rs`).
     pub machine_combine: bool,
+    /// Out-of-core partition store (`storage::pager`): no budget keeps
+    /// the fully in-memory layout; `--memory-budget` selects the paged
+    /// store that spills cold value/adjacency pages to per-worker
+    /// files, bounding resident partition bytes per worker. Results
+    /// are bit-identical either way (see `tests/paged_store.rs`); only
+    /// the cost model sees the page faults.
+    pub pager: crate::storage::pager::PagerConfig,
 }
 
 impl EngineConfig {
@@ -155,6 +162,7 @@ impl EngineConfig {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            pager: Default::default(),
         }
     }
 }
@@ -222,7 +230,15 @@ impl<A: App> Engine<A> {
         });
         let mut workers = Vec::with_capacity(n_workers);
         for rank in 0..n_workers {
-            workers.push(Worker::new(rank, partitioner, global_adj, &app, cfg.backing, &cfg.tag)?);
+            workers.push(Worker::new(
+                rank,
+                partitioner,
+                global_adj,
+                &app,
+                cfg.pager,
+                cfg.backing,
+                &cfg.tag,
+            )?);
         }
         let ws = WorkerSet::new(cfg.topo);
         let pool_threads = match cfg.threads {
@@ -352,6 +368,18 @@ impl<A: App> Engine<A> {
         // The final checkpoint's flush may still be in flight: join it
         // so the job's metrics, `cp_last` and the store are final.
         self.join_inflight_cp()?;
+        // Out-of-core partition accounting: job-lifetime fault totals
+        // and the worst per-worker resident peak (live workers only —
+        // a respawned worker restarts its ledger with its fresh store).
+        for w in &self.workers {
+            let io = w.part.pager_totals();
+            self.metrics.pager.faults += io.faults;
+            self.metrics.pager.page_in_bytes += io.in_bytes;
+            self.metrics.pager.writebacks += io.writebacks;
+            self.metrics.pager.page_out_bytes += io.out_bytes;
+            self.metrics.pager.resident_peak =
+                self.metrics.pager.resident_peak.max(w.part.resident_peak());
+        }
         // Communication kills scheduled past the job's end are tolerated
         // (randomized failure plans rely on it), but a during-cp kill
         // exists only to probe the checkpoint commit barrier — leaving
@@ -369,17 +397,15 @@ impl<A: App> Engine<A> {
         Ok(self.metrics.clone())
     }
 
-    /// Stable digest of all final vertex values (rank order).
-    pub fn digest(&self) -> u64 {
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for w in &self.workers {
-            let d = w.part.digest();
-            for b in d.to_le_bytes() {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x1000_0000_01b3);
-            }
+    /// Stable digest of all final vertex values (rank order). `&mut`
+    /// because a paged partition may stream cold pages from its spill
+    /// file (an uncharged observer read).
+    pub fn digest(&mut self) -> u64 {
+        let mut h = crate::util::codec::Fnv64::new();
+        for w in &mut self.workers {
+            h.update(&w.part.digest().to_le_bytes());
         }
-        h
+        h.finish()
     }
 
     /// Collected global aggregator of a fully-committed superstep.
@@ -387,17 +413,19 @@ impl<A: App> Engine<A> {
         self.agg_log.get(&step)
     }
 
-    /// Read one vertex's current value (tests/examples).
-    pub fn value_of(&self, v: VertexId) -> &A::V {
+    /// Read one vertex's current value (tests/examples). `&mut`
+    /// because a paged partition may fault the slot's page in.
+    pub fn value_of(&mut self, v: VertexId) -> A::V {
         let r = self.partitioner.rank_of(v);
-        &self.workers[r].part.values[self.partitioner.slot_of(v)]
+        let slot = self.partitioner.slot_of(v);
+        self.workers[r].part.value(slot)
     }
 
     /// Iterate all (id, value) pairs in id order (result dump).
-    pub fn values(&self) -> Vec<(VertexId, A::V)> {
+    pub fn values(&mut self) -> Vec<(VertexId, A::V)> {
         let mut out = Vec::with_capacity(self.partitioner.n_vertices);
         for v in 0..self.partitioner.n_vertices as u32 {
-            out.push((v, self.value_of(v).clone()));
+            out.push((v, self.value_of(v)));
         }
         out
     }

@@ -351,6 +351,7 @@ pub fn compute_phase<A: App>(
                 .with_context(|| format!("compute on worker {r} superstep {step}"))?;
             let t = cost.batch_compute_time(w.part.n_slots() as u64, o.outbox.raw_count());
             w.clock.advance(t);
+            w.settle_page_io(cost);
             let pc = PhaseCost { messages_sent: o.outbox.raw_count(), ..Default::default() };
             out.push((r, o, pc));
         }
@@ -362,6 +363,9 @@ pub fn compute_phase<A: App>(
             Ok(o) => {
                 let t = cost.compute_time(o.n_computed, o.outbox.raw_count());
                 w.clock.advance(t);
+                // Out-of-core partitions: faults/write-backs of the
+                // page scan, at disk bandwidth.
+                w.settle_page_io(cost);
                 let pc = PhaseCost { messages_sent: o.outbox.raw_count(), ..Default::default() };
                 Ok((r, o, pc))
             }
@@ -401,6 +405,9 @@ pub fn log_phase<A: App>(
             let bytes = w.write_step_log(step, out, use_msg_log)?;
             let t = cost.log_write_time(bytes) + cost.file_op;
             w.clock.advance(t);
+            // The vertex-state log streams from the partition store:
+            // cold pages were read from the spill file.
+            w.settle_page_io(cost);
             if !out.mutations_encoded.is_empty() {
                 let tm = cost.log_write_time(out.mutations_encoded.len() as u64);
                 w.clock.advance(tm);
@@ -516,8 +523,9 @@ pub fn replay_phase<A: App>(
     let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
     let per_worker = pool.map_named("replay", Some(ranks.as_slice()), workers, |(r, w)| {
         let ob = w.replay_generate(app, step, agg_prev, None);
-        let n_comp = w.part.comp.iter().filter(|&&c| c).count() as u64;
+        let n_comp = w.part.comp_count();
         w.clock.advance(cost.compute_time(n_comp, ob.raw_count()));
+        w.settle_page_io(cost);
         match dests {
             None => ob
                 .all_batches()

@@ -512,6 +512,23 @@ impl<M: Codec + Clone> Inbox<M> {
         }
     }
 
+    /// Append the `InboxSnapshot` codec bytes of this inbox's current
+    /// contents — byte-identical to `self.snapshot().encode(buf)` but
+    /// without cloning the message slots first (the heavyweight
+    /// checkpoint's snapshot path).
+    pub fn encode_snapshot_into(&self, buf: &mut Vec<u8>) {
+        match self {
+            Inbox::Combined { slots, .. } => {
+                0u8.encode(buf);
+                slots.encode(buf);
+            }
+            Inbox::Lists { slots, .. } => {
+                1u8.encode(buf);
+                slots.encode(buf);
+            }
+        }
+    }
+
     /// Snapshot for heavyweight checkpoints.
     pub fn snapshot(&self) -> crate::storage::checkpoint::InboxSnapshot<M> {
         match self {

@@ -1,32 +1,55 @@
-//! A worker's vertex partition: values, flags, and adjacency.
+//! A worker's vertex partition: values, flags, and adjacency — served
+//! through the out-of-core page store (`storage::pager`).
+//!
+//! The partition no longer owns flat vectors; it owns a
+//! [`ValueStore`] and an [`EdgeStore`] (in-memory or paged, chosen by
+//! [`PagerConfig::memory_budget`]) plus the worker's shared
+//! [`MemGauge`]. All hot-loop access is **page-granular**: the
+//! executor pins one page pair at a time ([`Partition::page_pair`])
+//! and scans its slots with plain slice indexing, so the per-vertex
+//! path stays branch-light regardless of which store backs it.
+//!
+//! Every partition-wide byte stream (digest, checkpoint blobs, vertex
+//! state logs) walks pages in slot-major order and is byte-identical
+//! across the two stores — the pager's determinism contract.
 
-use crate::graph::{Adjacency, Partitioner, VertexId};
-use crate::storage::checkpoint::VertexStates;
-use crate::util::codec::Codec;
+use crate::graph::{Adjacency, Mutation, Partitioner, VertexId};
+use crate::storage::checkpoint::{pack_bools, VertexStates};
+use crate::storage::pager::{
+    EdgePageMut, EdgeStore, InMemEdges, InMemValues, MemGauge, PageIo, PagedEdges, PagedValues,
+    PagerConfig, ValuePageMut, ValueStore,
+};
+use crate::storage::Backing;
+use crate::util::codec::{Codec, Fnv64};
+use anyhow::Result;
+use std::ops::Range;
 
 /// The vertex data owned by one worker: `state(v) = (a(v), Γ(v),
 /// active(v))` for every v with `hash(v) = rank`, plus the per-superstep
 /// `comp(v)` flag the paper adds for LWCP message regeneration.
-#[derive(Debug, Clone)]
 pub struct Partition<V> {
     pub rank: usize,
     pub partitioner: Partitioner,
-    pub values: Vec<V>,
-    pub active: Vec<bool>,
-    /// Did compute() run on this vertex in the current superstep?
-    pub comp: Vec<bool>,
-    pub adj: Adjacency,
+    pub(crate) values: Box<dyn ValueStore<V>>,
+    pub(crate) edges: Box<dyn EdgeStore>,
+    /// Shared budget/fault gauge of both stores.
+    pub(crate) mem: MemGauge,
 }
 
-impl<V: Clone + Codec> Partition<V> {
+impl<V: Clone + Codec + Send + Sync + 'static> Partition<V> {
     /// Build worker `rank`'s partition from the global adjacency, using
-    /// an init function for vertex values.
+    /// an init function for vertex values. `pager` selects the store:
+    /// no budget → the fully in-memory layout, a budget → the paged
+    /// store spilling to a per-worker file under `backing`.
     pub fn build<A>(
         rank: usize,
         partitioner: Partitioner,
         global_adj: &[Vec<VertexId>],
         app: &A,
-    ) -> Self
+        pager: PagerConfig,
+        backing: Backing,
+        tag: &str,
+    ) -> Result<Self>
     where
         A: super::App<V = V>,
     {
@@ -41,14 +64,68 @@ impl<V: Clone + Codec> Partition<V> {
             active.push(app.initially_active(id));
             lists.push(adj.clone());
         }
-        Partition {
+        let comp = vec![false; n_slots];
+        Self::from_parts(rank, partitioner, values, active, comp, &lists, pager, backing, tag)
+    }
+
+    /// Build from explicit state vectors and per-slot neighbor lists.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        rank: usize,
+        partitioner: Partitioner,
+        values: Vec<V>,
+        active: Vec<bool>,
+        comp: Vec<bool>,
+        lists: &[Vec<VertexId>],
+        pager: PagerConfig,
+        backing: Backing,
+        tag: &str,
+    ) -> Result<Self> {
+        let mut mem = MemGauge::new(pager.memory_budget);
+        let paged = pager.memory_budget.is_some();
+        let values_store: Box<dyn ValueStore<V>> = if paged {
+            Box::new(PagedValues::build(
+                values,
+                active,
+                comp,
+                pager.page_slots,
+                backing,
+                tag,
+                rank,
+                &mut mem,
+            )?)
+        } else {
+            Box::new(InMemValues::build(values, active, comp, pager.page_slots, &mut mem))
+        };
+        let edges_store: Box<dyn EdgeStore> = if paged {
+            Box::new(PagedEdges::build(lists, pager.page_slots, backing, tag, rank, &mut mem)?)
+        } else {
+            Box::new(InMemEdges::build(lists, pager.page_slots, &mut mem))
+        };
+        Ok(Partition { rank, partitioner, values: values_store, edges: edges_store, mem })
+    }
+
+    /// An empty placeholder partition (a just-spawned replacement
+    /// worker); the restore calls of `ft::recovery_ops` reshape the
+    /// stores to their real slot count.
+    pub fn placeholder(
+        rank: usize,
+        partitioner: Partitioner,
+        pager: PagerConfig,
+        backing: Backing,
+        tag: &str,
+    ) -> Result<Self> {
+        Self::from_parts(
             rank,
             partitioner,
-            values,
-            active,
-            comp: vec![false; n_slots],
-            adj: Adjacency::from_lists(&lists),
-        }
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            &[],
+            pager,
+            backing,
+            tag,
+        )
     }
 
     /// Slot count (derived from the partitioner, so a just-spawned
@@ -62,18 +139,103 @@ impl<V: Clone + Codec> Partition<V> {
         self.partitioner.id_of(self.rank, slot)
     }
 
-    /// Number of currently active vertices.
-    pub fn active_count(&self) -> u64 {
-        self.active.iter().filter(|&&a| a).count() as u64
+    /// Number of pages currently backing the value store (0 for a
+    /// placeholder awaiting restore; edges page in lockstep).
+    pub fn n_pages(&self) -> usize {
+        self.values.n_pages()
     }
 
-    /// Snapshot the lightweight state triple (values, active, comp).
-    pub fn states(&self) -> VertexStates<V> {
-        VertexStates {
-            values: self.values.clone(),
-            active: self.active.clone(),
-            comp: self.comp.clone(),
+    /// Slot range of page `p`.
+    pub fn page_range(&self, p: usize) -> Range<usize> {
+        self.values.page_range(p)
+    }
+
+    /// Pin page `p` of both stores for the hot loop.
+    pub fn page_pair(&mut self, p: usize) -> (ValuePageMut<'_, V>, EdgePageMut<'_>) {
+        let Partition { values, edges, mem, .. } = self;
+        let vp = values.page(p, &mut *mem);
+        let ep = edges.page(p, &mut *mem);
+        (vp, ep)
+    }
+
+    /// Pin only the value page (XLA batch write-back).
+    pub fn value_page(&mut self, p: usize) -> ValuePageMut<'_, V> {
+        let Partition { values, mem, .. } = self;
+        values.page(p, &mut *mem)
+    }
+
+    /// Pin only the edge page (state-substituted replay, E_W replay).
+    pub fn edge_page(&mut self, p: usize) -> EdgePageMut<'_> {
+        let Partition { edges, mem, .. } = self;
+        edges.page(p, &mut *mem)
+    }
+
+    /// Number of currently active vertices.
+    pub fn active_count(&self) -> u64 {
+        self.values.active_count()
+    }
+
+    /// Number of vertices whose comp(v) flag is set.
+    pub fn comp_count(&self) -> u64 {
+        self.values.comp_count()
+    }
+
+    /// Read one slot's value (cold path: result dumps, tests).
+    pub fn value(&mut self, slot: usize) -> V {
+        let Partition { values, mem, .. } = self;
+        values.value(slot, &mut *mem)
+    }
+
+    /// Apply an edge mutation to `slot` (E_W replay during recovery).
+    pub fn apply_mutation(&mut self, slot: usize, m: &Mutation) {
+        let page_slots = self.values.page_slots();
+        let ep = self.edge_page(slot / page_slots);
+        ep.adj.apply(slot % page_slots, m);
+        *ep.dirty = true;
+    }
+
+    /// Append the `VertexStates` codec stream (values, packed active,
+    /// packed comp) straight from the store — the checkpoint snapshot
+    /// path, with no intermediate clone of the state triple.
+    pub fn encode_states_into(&mut self, buf: &mut Vec<u8>) {
+        self.encode_values_vec_into(buf);
+        let (active, comp) = self.values.flags();
+        pack_bools(active, buf);
+        pack_bools(comp, buf);
+    }
+
+    /// Append the `Cp0` codec stream (values, packed active, adjacency).
+    pub fn encode_cp0_into(&mut self, buf: &mut Vec<u8>) {
+        self.encode_values_vec_into(buf);
+        {
+            let (active, _) = self.values.flags();
+            pack_bools(active, buf);
         }
+        self.encode_adj_into(buf);
+    }
+
+    /// Append the partition-wide `Adjacency` codec stream.
+    pub fn encode_adj_into(&mut self, buf: &mut Vec<u8>) {
+        let Partition { edges, mem, .. } = self;
+        edges.encode_into(&mut *mem, buf);
+    }
+
+    /// Append the vertex-state-log stream: `Vec<V>` codec bytes of the
+    /// values, then `Vec<bool>` codec bytes of comp(v) (LWLog §5).
+    pub fn encode_vstate_log_into(&mut self, buf: &mut Vec<u8>) {
+        self.encode_values_vec_into(buf);
+        let (_, comp) = self.values.flags();
+        (comp.len() as u32).encode(buf);
+        for &c in comp {
+            buf.push(c as u8);
+        }
+    }
+
+    /// The `Vec<V>` codec stream (u32 count + slot-major values).
+    fn encode_values_vec_into(&mut self, buf: &mut Vec<u8>) {
+        let Partition { values, mem, .. } = self;
+        (values.n_slots() as u32).encode(buf);
+        values.encode_values_into(&mut *mem, buf);
     }
 
     /// Restore the lightweight state triple.
@@ -83,24 +245,85 @@ impl<V: Clone + Codec> Partition<V> {
             self.partitioner.slots_of(self.rank),
             "state size mismatch"
         );
-        self.values = s.values;
-        self.active = s.active;
-        self.comp = s.comp;
+        let Partition { values, mem, .. } = self;
+        values.restore(&mut *mem, s.values, s.active, s.comp);
     }
 
-    /// Stable digest of the vertex values (equivalence testing).
-    pub fn digest(&self) -> u64 {
-        // FNV-1a over the encoded values + active flags.
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        let mut buf = Vec::new();
-        self.values.encode(&mut buf);
-        self.active.encode(&mut buf);
-        for b in buf {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
+    /// Restore the full CP\[0\] content (values, active, edges); comp
+    /// is cleared — no vertex has computed at superstep 0.
+    pub fn restore_cp0(&mut self, values: Vec<V>, active: Vec<bool>, adj: &Adjacency) {
+        let comp = vec![false; values.len()];
+        {
+            let Partition { values: vs, mem, .. } = self;
+            vs.restore(&mut *mem, values, active, comp);
         }
-        h
+        self.restore_adjacency(adj);
     }
+
+    /// Replace the adjacency from a partition-wide `Adjacency`.
+    pub fn restore_adjacency(&mut self, adj: &Adjacency) {
+        let Partition { edges, mem, .. } = self;
+        edges.restore(&mut *mem, adj);
+    }
+
+    /// Stable digest of the vertex values (equivalence testing):
+    /// FNV-1a over the `Vec<V>` + `Vec<bool>` codec streams, computed
+    /// page by page — no partition-sized buffer is materialized. This
+    /// is an **observer** read: cold pages stream from the spill file
+    /// without being cached, the LRU state is untouched, and nothing
+    /// lands in the fault/write-back ledger (a digest is
+    /// instrumentation, not modeled work).
+    pub fn digest(&mut self) -> u64 {
+        let mut h = Fnv64::new();
+        let n = self.values.n_slots();
+        h.update(&(n as u32).to_le_bytes());
+        self.values.visit_value_pages(&mut |bytes| h.update(bytes));
+        h.update(&(n as u32).to_le_bytes());
+        let (active, _) = self.values.flags();
+        for &a in active {
+            h.update(&[a as u8]);
+        }
+        h.finish()
+    }
+
+    /// Drain the pending page-fault/write-back ledger (the executor
+    /// settles it into the worker's virtual clock after each phase).
+    pub fn take_io(&mut self) -> PageIo {
+        self.mem.take_pending()
+    }
+
+    /// Job-lifetime fault/write-back totals of this worker's stores.
+    pub fn pager_totals(&self) -> PageIo {
+        self.mem.totals()
+    }
+
+    /// Currently-resident modeled bytes.
+    pub fn resident_bytes(&self) -> u64 {
+        self.mem.resident()
+    }
+
+    /// Peak of [`Partition::resident_bytes`] over the partition's life.
+    pub fn resident_peak(&self) -> u64 {
+        self.mem.peak()
+    }
+}
+
+/// Stable digest of a raw (values, active) pair — the same FNV stream
+/// as [`Partition::digest`], for reference interpreters and tests that
+/// hold plain vectors rather than a store-backed partition.
+pub fn digest_parts<V: Codec>(values: &[V], active: &[bool]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(&(values.len() as u32).to_le_bytes());
+    let mut scratch = Vec::new();
+    for v in values {
+        v.encode(&mut scratch);
+    }
+    h.update(&scratch);
+    h.update(&(active.len() as u32).to_le_bytes());
+    for &a in active {
+        h.update(&[a as u8]);
+    }
+    h.finish()
 }
 
 #[cfg(test)]
@@ -123,40 +346,117 @@ mod tests {
         vec![vec![1, 2], vec![2], vec![0], vec![], vec![0, 1, 2]]
     }
 
+    fn build(rank: usize, pager: PagerConfig) -> Partition<f32> {
+        let p = Partitioner::new(2, 5);
+        Partition::build(rank, p, &global(), &Dummy, pager, Backing::Memory, "part-test")
+            .unwrap()
+    }
+
+    fn pagers() -> [PagerConfig; 3] {
+        [
+            PagerConfig::default(),
+            PagerConfig { memory_budget: Some(16), page_slots: 2 },
+            PagerConfig { memory_budget: Some(1 << 20), page_slots: 1 },
+        ]
+    }
+
     #[test]
     fn build_assigns_hashed_vertices() {
-        let p = Partitioner::new(2, 5);
-        let part = Partition::build(0, p, &global(), &Dummy);
-        // Rank 0 owns ids 0, 2, 4.
-        assert_eq!(part.n_slots(), 3);
-        assert_eq!(part.id_of(0), 0);
-        assert_eq!(part.id_of(2), 4);
-        assert_eq!(part.values, vec![1.0, 2.5, 5.5]);
-        assert_eq!(part.adj.neighbors(2), &[0, 1, 2]);
-        assert_eq!(part.active_count(), 3);
+        for pager in pagers() {
+            let mut part = build(0, pager);
+            // Rank 0 owns ids 0, 2, 4.
+            assert_eq!(part.n_slots(), 3);
+            assert_eq!(part.id_of(0), 0);
+            assert_eq!(part.id_of(2), 4);
+            assert_eq!(part.value(0), 1.0);
+            assert_eq!(part.value(1), 2.5);
+            assert_eq!(part.value(2), 5.5);
+            assert_eq!(part.active_count(), 3);
+            let page_slots = pager.page_slots;
+            let p = 2 / page_slots;
+            let ep = part.edge_page(p);
+            assert_eq!(ep.adj.neighbors(2 - ep.base), &[0, 1, 2]);
+        }
     }
 
     #[test]
-    fn states_roundtrip() {
+    fn states_roundtrip_across_stores() {
         let p = Partitioner::new(2, 5);
-        let mut part = Partition::build(1, p, &global(), &Dummy);
-        part.active[0] = false;
-        part.comp[1] = true;
-        let s = part.states();
-        let mut other = Partition::build(1, p, &global(), &Dummy);
-        other.restore_states(s);
-        assert_eq!(other.values, part.values);
-        assert_eq!(other.active, part.active);
-        assert_eq!(other.comp, part.comp);
-        assert_eq!(other.digest(), part.digest());
+        for pager in pagers() {
+            let mut part = build(1, pager);
+            {
+                let (vp, _) = part.page_pair(0);
+                vp.active[0] = false;
+                if vp.comp.len() > 1 {
+                    vp.comp[1] = true;
+                }
+            }
+            let mut blob = Vec::new();
+            part.encode_states_into(&mut blob);
+            let s = VertexStates::<f32>::from_bytes(&blob).unwrap();
+            let mut other = Partition::<f32>::placeholder(
+                1,
+                p,
+                pager,
+                Backing::Memory,
+                "part-test-o",
+            )
+            .unwrap();
+            other.restore_states(s);
+            assert_eq!(other.digest(), part.digest());
+        }
     }
 
     #[test]
-    fn digest_tracks_values() {
-        let p = Partitioner::new(2, 5);
-        let mut part = Partition::build(0, p, &global(), &Dummy);
-        let d0 = part.digest();
-        part.values[1] = 99.0;
-        assert_ne!(part.digest(), d0);
+    fn digest_tracks_values_and_matches_digest_parts() {
+        for pager in pagers() {
+            let mut part = build(0, pager);
+            let d0 = part.digest();
+            assert_eq!(d0, digest_parts(&[1.0f32, 2.5, 5.5], &[true, true, true]));
+            {
+                let vp = part.value_page(1usize.min(part.n_pages() - 1));
+                vp.values[0] = 99.0;
+                *vp.dirty = true;
+            }
+            assert_ne!(part.digest(), d0);
+        }
+    }
+
+    #[test]
+    fn encoded_blobs_are_identical_across_stores() {
+        let mut inmem = build(0, PagerConfig::default());
+        let mut paged = build(0, PagerConfig { memory_budget: Some(8), page_slots: 1 });
+        for which in 0..3 {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            match which {
+                0 => {
+                    inmem.encode_states_into(&mut a);
+                    paged.encode_states_into(&mut b);
+                }
+                1 => {
+                    inmem.encode_cp0_into(&mut a);
+                    paged.encode_cp0_into(&mut b);
+                }
+                _ => {
+                    inmem.encode_vstate_log_into(&mut a);
+                    paged.encode_vstate_log_into(&mut b);
+                }
+            }
+            assert_eq!(a, b, "stream {which} diverged between stores");
+        }
+        assert_eq!(inmem.digest(), paged.digest());
+        assert!(paged.pager_totals().in_bytes > 0, "paged store never touched its spill");
+    }
+
+    #[test]
+    fn mutations_apply_through_the_page_store() {
+        for pager in pagers() {
+            let mut part = build(0, pager);
+            part.apply_mutation(0, &Mutation::AddEdge { src: 0, dst: 4 });
+            part.apply_mutation(0, &Mutation::DelEdge { src: 0, dst: 1 });
+            let ep = part.edge_page(0);
+            assert_eq!(ep.adj.neighbors(0), &[2, 4]);
+        }
     }
 }

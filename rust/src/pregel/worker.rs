@@ -6,7 +6,8 @@ use super::app::{App, BatchExec, EmitCtx, UpdateCtx};
 use super::message::{Inbox, Outbox};
 use super::partition::Partition;
 use crate::graph::{Mutation, Partitioner, VertexId};
-use crate::sim::Clock;
+use crate::sim::{Clock, CostModel};
+use crate::storage::pager::PagerConfig;
 use crate::storage::{Backing, LocalLogStore};
 use crate::util::codec::Codec;
 use anyhow::Result;
@@ -46,10 +47,11 @@ impl<A: App> Worker<A> {
         partitioner: Partitioner,
         global_adj: &[Vec<VertexId>],
         app: &A,
+        pager: PagerConfig,
         backing: Backing,
         tag: &str,
     ) -> Result<Self> {
-        let part = Partition::build(rank, partitioner, global_adj, app);
+        let part = Partition::build(rank, partitioner, global_adj, app, pager, backing, tag)?;
         let inbox = Inbox::new(part.n_slots(), app.combiner());
         let inbox_spare = Inbox::new(part.n_slots(), app.combiner());
         Ok(Worker {
@@ -65,22 +67,16 @@ impl<A: App> Worker<A> {
 
     /// A freshly-spawned replacement worker: empty partition (filled by
     /// `new_worker_recovery` from the latest checkpoint), fresh local
-    /// log store (the dead worker's local disk is gone).
+    /// log store and spill files (the dead worker's local disk is gone).
     pub fn placeholder(
         rank: usize,
         partitioner: Partitioner,
         app: &A,
+        pager: PagerConfig,
         backing: Backing,
         tag: &str,
     ) -> Result<Self> {
-        let part = Partition {
-            rank,
-            partitioner,
-            values: Vec::new(),
-            active: Vec::new(),
-            comp: Vec::new(),
-            adj: Default::default(),
-        };
+        let part = Partition::placeholder(rank, partitioner, pager, backing, tag)?;
         let inbox = Inbox::new(partitioner.slots_of(rank), app.combiner());
         let inbox_spare = Inbox::new(partitioner.slots_of(rank), app.combiner());
         Ok(Worker {
@@ -99,10 +95,24 @@ impl<A: App> Worker<A> {
         Inbox::new(self.part.n_slots(), app.combiner())
     }
 
+    /// Settle the partition store's pending page-fault/write-back
+    /// ledger into this worker's virtual clock (reads at disk read
+    /// bandwidth, write-backs at disk write bandwidth). Called by
+    /// every pipeline phase that touched the partition.
+    pub fn settle_page_io(&mut self, cost: &CostModel) {
+        let io = self.part.take_io();
+        if !io.is_zero() {
+            self.clock
+                .advance(cost.page_in_time(io.in_bytes) + cost.page_out_time(io.out_bytes));
+        }
+    }
+
     /// Run the compute phase of `superstep`: run the two-phase vertex
     /// program — [`App::update`] then [`App::emit`] (or [`App::respond`]
     /// on responding supersteps) — on every active-or-messaged vertex,
-    /// consuming the current inbox.
+    /// consuming the current inbox. The scan is page-granular: one page
+    /// pair of the partition store is pinned at a time and its slots
+    /// scanned with plain slice indexing.
     pub fn compute_superstep(
         &mut self,
         app: &A,
@@ -136,52 +146,69 @@ impl<A: App> Worker<A> {
             // Batch path: the app performs the whole partition update
             // (incl. comp/active bookkeeping) through the XLA executor.
             app.xla_superstep(exec, superstep, &mut self.part, inbox, &mut out, &mut agg.slots)?;
-            n_computed = self.part.comp.iter().filter(|&&c| c).count() as u64;
+            n_computed = self.part.comp_count();
         } else {
-            let n_vertices = self.part.partitioner.n_vertices;
-            for slot in 0..self.part.n_slots() {
-                let has_msg = inbox.has(slot);
-                if !self.part.active[slot] && !has_msg {
-                    self.part.comp[slot] = false;
-                    continue;
-                }
-                // A halted vertex is reactivated by incoming messages.
-                self.part.active[slot] = true;
-                self.part.comp[slot] = true;
-                n_computed += 1;
-                let id = self.part.id_of(slot);
-                let msgs: &[A::M] = inbox.msgs(slot);
-                // Phase 1 — Equation (2): fold messages into state.
-                app.update(
-                    &mut UpdateCtx {
+            let rank = self.rank;
+            let partitioner = self.part.partitioner;
+            let n_vertices = partitioner.n_vertices;
+            for p in 0..self.part.n_pages() {
+                let (vp, ep) = self.part.page_pair(p);
+                let base = vp.base;
+                let values = vp.values;
+                let active = vp.active;
+                let comp = vp.comp;
+                let vals_dirty = vp.dirty;
+                let adj = ep.adj;
+                let adj_dirty = ep.dirty;
+                for off in 0..values.len() {
+                    let slot = base + off;
+                    let has_msg = inbox.has(slot);
+                    if !active[off] && !has_msg {
+                        comp[off] = false;
+                        continue;
+                    }
+                    // A halted vertex is reactivated by incoming messages.
+                    active[off] = true;
+                    comp[off] = true;
+                    n_computed += 1;
+                    let id = partitioner.id_of(rank, slot);
+                    let msgs: &[A::M] = inbox.msgs(slot);
+                    // Phase 1 — Equation (2): fold messages into state.
+                    app.update(
+                        &mut UpdateCtx {
+                            id,
+                            off,
+                            superstep,
+                            n_vertices,
+                            values: &mut values[..],
+                            active: &mut active[..],
+                            adj: &mut *adj,
+                            vals_dirty: &mut *vals_dirty,
+                            adj_dirty: &mut *adj_dirty,
+                            agg: &mut agg.slots,
+                            agg_prev,
+                            mutations: &mut mutations,
+                        },
+                        msgs,
+                    );
+                    // Phase 2 — Equation (3): generate messages through the
+                    // read-only state view (or the respond hook, which may
+                    // read the messages, on LWCP-masked supersteps).
+                    let mut ectx = EmitCtx {
                         id,
-                        slot,
+                        off,
                         superstep,
                         n_vertices,
-                        part: &mut self.part,
-                        agg: &mut agg.slots,
+                        values: &values[..],
+                        adj: &*adj,
                         agg_prev,
-                        mutations: &mut mutations,
-                    },
-                    msgs,
-                );
-                // Phase 2 — Equation (3): generate messages through the
-                // read-only state view (or the respond hook, which may
-                // read the messages, on LWCP-masked supersteps).
-                let mut ectx = EmitCtx {
-                    id,
-                    slot,
-                    superstep,
-                    n_vertices,
-                    values: &self.part.values,
-                    adj: &self.part.adj,
-                    agg_prev,
-                    out: &mut out,
-                };
-                if responding {
-                    app.respond(&mut ectx, msgs);
-                } else {
-                    app.emit(&mut ectx);
+                        out: &mut out,
+                    };
+                    if responding {
+                        app.respond(&mut ectx, msgs);
+                    } else {
+                        app.emit(&mut ectx);
+                    }
                 }
             }
         }
@@ -232,7 +259,9 @@ impl<A: App> Worker<A> {
     ///
     /// `states` optionally substitutes (values, comp) — used when the
     /// states come from a local log and must not clobber the worker's
-    /// live (newer) state.
+    /// live (newer) state. With substituted states only the *edge*
+    /// pages are pinned; the store's value pages stay untouched (no
+    /// spurious faults on the survivors' live partitions).
     pub fn replay_generate(
         &mut self,
         app: &A,
@@ -246,47 +275,66 @@ impl<A: App> Worker<A> {
             !app.responds_at(superstep),
             "replay of responding superstep {superstep} (masked supersteps use message logs)"
         );
-        // Temporarily swap in the logged states if provided.
-        let saved = states.map(|(vals, comp)| {
-            (
-                std::mem::replace(&mut self.part.values, vals),
-                std::mem::replace(&mut self.part.comp, comp),
-            )
-        });
-
         let mut out = Outbox::new(self.part.partitioner, app.combiner());
-        let n_vertices = self.part.partitioner.n_vertices;
-        for slot in 0..self.part.n_slots() {
-            if !self.part.comp[slot] {
-                continue;
+        let rank = self.rank;
+        let partitioner = self.part.partitioner;
+        let n_vertices = partitioner.n_vertices;
+        for p in 0..self.part.n_pages() {
+            let range = self.part.page_range(p);
+            if let Some((vals, comp)) = &states {
+                let ep = self.part.edge_page(p);
+                let adj = &*ep.adj;
+                let vals = &vals[range.clone()];
+                let comp = &comp[range.clone()];
+                for off in 0..vals.len() {
+                    if !comp[off] {
+                        continue;
+                    }
+                    let mut ctx = EmitCtx {
+                        id: partitioner.id_of(rank, range.start + off),
+                        off,
+                        superstep,
+                        n_vertices,
+                        values: vals,
+                        adj,
+                        agg_prev,
+                        out: &mut out,
+                    };
+                    app.emit(&mut ctx);
+                }
+            } else {
+                let (vp, ep) = self.part.page_pair(p);
+                let vals = &vp.values[..];
+                let comp = &vp.comp[..];
+                let adj = &*ep.adj;
+                for off in 0..vals.len() {
+                    if !comp[off] {
+                        continue;
+                    }
+                    let mut ctx = EmitCtx {
+                        id: partitioner.id_of(rank, range.start + off),
+                        off,
+                        superstep,
+                        n_vertices,
+                        values: vals,
+                        adj,
+                        agg_prev,
+                        out: &mut out,
+                    };
+                    app.emit(&mut ctx);
+                }
             }
-            let mut ctx = EmitCtx {
-                id: self.part.id_of(slot),
-                slot,
-                superstep,
-                n_vertices,
-                values: &self.part.values,
-                adj: &self.part.adj,
-                agg_prev,
-                out: &mut out,
-            };
-            app.emit(&mut ctx);
-        }
-
-        if let Some((vals, comp)) = saved {
-            self.part.values = vals;
-            self.part.comp = comp;
         }
         out
     }
 
     /// Encode this worker's (comp(v), a(v)) pairs for the LWLog
-    /// vertex-state log. Unlike a checkpoint, active(v) is not stored:
-    /// logged states only feed message regeneration (§5).
-    pub fn encode_vstate_log(&self) -> Vec<u8> {
+    /// vertex-state log, streamed page by page from the partition
+    /// store. Unlike a checkpoint, active(v) is not stored: logged
+    /// states only feed message regeneration (§5).
+    pub fn encode_vstate_log(&mut self) -> Vec<u8> {
         let mut buf = Vec::new();
-        self.part.values.encode(&mut buf);
-        self.part.comp.encode(&mut buf);
+        self.part.encode_vstate_log_into(&mut buf);
         buf
     }
 

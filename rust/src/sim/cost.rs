@@ -274,6 +274,19 @@ impl CostModel {
         self.scaled(bytes) / self.disk_write_bw
     }
 
+    /// Out-of-core partition store: page-fault reads from the
+    /// per-worker spill file (sequential local disk — the pager's
+    /// slot-major scans are sequential by construction).
+    pub fn page_in_time(&self, bytes: u64) -> f64 {
+        self.scaled(bytes) / self.disk_read_bw
+    }
+
+    /// Out-of-core partition store: dirty-page write-backs to the
+    /// per-worker spill file.
+    pub fn page_out_time(&self, bytes: u64) -> f64 {
+        self.scaled(bytes) / self.disk_write_bw
+    }
+
     /// Local log read of `bytes`.
     pub fn log_read_time(&self, bytes: u64) -> f64 {
         self.scaled(bytes) / self.disk_read_bw

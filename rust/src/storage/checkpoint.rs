@@ -68,7 +68,9 @@ impl<V: Codec> Codec for VertexStates<V> {
 
 /// Bit-packed bool vectors — flags must not bloat the lightweight
 /// checkpoint (1 bit/vertex, as a real implementation would store them).
-fn pack_bools(bs: &[bool], buf: &mut Vec<u8>) {
+/// `pub(crate)` so the partition store can stream checkpoint blobs
+/// without materializing a `VertexStates` clone first.
+pub(crate) fn pack_bools(bs: &[bool], buf: &mut Vec<u8>) {
     (bs.len() as u32).encode(buf);
     let mut byte = 0u8;
     for (i, &b) in bs.iter().enumerate() {

@@ -8,6 +8,11 @@
 //!   mutation requests. **Lost when the worker's machine dies** — the
 //!   engine drops the store of a killed worker, which is exactly why
 //!   log-based recovery still needs checkpoints.
+//! * [`pager`] — the out-of-core partition store: vertex values and
+//!   CSR adjacency behind page-granular [`pager::ValueStore`] /
+//!   [`pager::EdgeStore`] traits, with a fully-resident layout and a
+//!   budgeted paged layout that spills cold pages to per-worker spill
+//!   files (also lost with the machine; rebuilt by recovery).
 //!
 //! Both stores can be file-backed (benches/examples — real bytes on a
 //! real filesystem) or memory-backed (unit/property tests — same code
@@ -17,9 +22,11 @@
 pub mod checkpoint;
 pub mod hdfs;
 pub mod locallog;
+pub mod pager;
 
 pub use hdfs::SimHdfs;
 pub use locallog::LocalLogStore;
+pub use pager::{EdgeStore, MemGauge, PageIo, PagerConfig, ValueStore};
 
 /// Backing medium for a store.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,0 +1,1171 @@
+//! Out-of-core paged partition store: spillable vertex values and CSR
+//! adjacency behind a budgeted page cache.
+//!
+//! The engine's `Partition` holds `state(v) = (a(v), Γ(v), active(v),
+//! comp(v))` for every owned vertex. At WebUK/Twitter scale that no
+//! longer fits in one box's RAM, so both halves of the partition go
+//! behind **page-granular store traits** with two implementations each:
+//!
+//! * [`InMemValues`] / [`InMemEdges`] — the fully-resident layout
+//!   (flat vectors, per-page CSR chunks), selected when no
+//!   `--memory-budget` is configured. Zero behavioral change from the
+//!   pre-pager engine.
+//! * [`PagedValues`] / [`PagedEdges`] — fixed-size pages
+//!   (`PagerConfig::page_slots` slots each) that **spill cold pages to
+//!   a per-worker on-disk file** ([`SpillFile`]) and keep only a
+//!   budgeted set resident, with LRU eviction and dirty-page
+//!   write-back.
+//!
+//! ## Determinism contract
+//!
+//! The page layout is **slot-major**: page `p` holds slots
+//! `[p·S, (p+1)·S)` in slot order, and a page's spill image is exactly
+//! the [`Codec`] stream of those slots. Every partition-wide byte
+//! stream — `Partition::digest`, checkpoint blobs, vertex-state logs —
+//! is produced by walking pages in order, so it is **byte-identical**
+//! to the in-memory layout's encoding regardless of budget, page size,
+//! or eviction history (asserted by `tests/paged_store.rs` down to the
+//! HDFS checkpoint blobs). Eviction affects only *cost*: page-fault
+//! reads and write-backs are charged at local-disk bandwidth
+//! (`CostModel::page_in_time` / `page_out_time`) and reported through
+//! `RunMetrics::pager`.
+//!
+//! ## Budget accounting
+//!
+//! One [`MemGauge`] per worker is shared by both stores: resident bytes
+//! are the encoded page sizes (plus the bit-packed flag vectors, which
+//! are tiny — 2 bits/vertex — and never spill). On a fault the
+//! requesting store evicts its own least-recently-used pages until the
+//! *shared* gauge is back under budget; the page being pinned is exempt
+//! (pinning is borrow-based: a page view's `&mut` borrow makes eviction
+//! unreachable while it lives). The gauge also accumulates the fault /
+//! write-back ledger ([`PageIo`]) that the executor settles into each
+//! worker's virtual clock after every phase.
+
+use super::Backing;
+use crate::graph::{Adjacency, VertexId};
+use crate::util::codec::{Codec, Reader};
+use anyhow::{Context, Result};
+use std::ops::Range;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Out-of-core configuration of one job's partitions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PagerConfig {
+    /// Per-worker resident budget in bytes. `None` selects the fully
+    /// in-memory store; `Some(b)` selects the paged store, which keeps
+    /// at most ~`b` encoded bytes of pages resident (the currently
+    /// pinned page of each store is exempt, so the hard bound is
+    /// `b + one value page + one edge page`).
+    pub memory_budget: Option<u64>,
+    /// Vertex slots per page (values and adjacency page in lockstep).
+    pub page_slots: usize,
+}
+
+impl Default for PagerConfig {
+    fn default() -> Self {
+        PagerConfig { memory_budget: None, page_slots: 4096 }
+    }
+}
+
+impl PagerConfig {
+    /// A paged configuration with the given budget (bytes).
+    pub fn budgeted(bytes: u64) -> Self {
+        PagerConfig { memory_budget: Some(bytes), ..Default::default() }
+    }
+}
+
+/// Page fault / write-back ledger (bytes are *encoded* page bytes, the
+/// same volumes a real spill file would move).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PageIo {
+    /// Pages brought resident from the spill file.
+    pub faults: u64,
+    /// Bytes read from the spill file (faults + cold checkpoint
+    /// streaming, which reads spilled pages without caching them).
+    pub in_bytes: u64,
+    /// Dirty pages written back on eviction (or re-spilled on restore).
+    pub writebacks: u64,
+    /// Bytes written back to the spill file.
+    pub out_bytes: u64,
+}
+
+impl PageIo {
+    pub fn is_zero(&self) -> bool {
+        self.faults == 0 && self.in_bytes == 0 && self.writebacks == 0 && self.out_bytes == 0
+    }
+}
+
+/// Shared per-worker memory gauge: the budget, the live resident-byte
+/// count (and its peak), the LRU clock, and the pending/total
+/// [`PageIo`] ledgers. Both of a partition's stores charge against one
+/// gauge, so the budget bounds their *sum*.
+#[derive(Debug, Default)]
+pub struct MemGauge {
+    budget: Option<u64>,
+    resident: u64,
+    peak: u64,
+    tick: u64,
+    /// Ledger since the last [`MemGauge::take_pending`] (settled into
+    /// the worker's virtual clock after each pipeline phase).
+    pending: PageIo,
+    /// Monotonic job-lifetime ledger (reported via `RunMetrics::pager`).
+    total: PageIo,
+}
+
+impl MemGauge {
+    pub fn new(budget: Option<u64>) -> Self {
+        MemGauge { budget, ..Default::default() }
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Currently-resident modeled bytes across both stores.
+    pub fn resident(&self) -> u64 {
+        self.resident
+    }
+
+    /// Peak of [`MemGauge::resident`] over the gauge's lifetime.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// The job-lifetime fault/write-back ledger.
+    pub fn totals(&self) -> PageIo {
+        self.total
+    }
+
+    /// Drain the pending ledger (per-phase virtual-clock settlement).
+    pub fn take_pending(&mut self) -> PageIo {
+        std::mem::take(&mut self.pending)
+    }
+
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn add_resident(&mut self, bytes: u64) {
+        self.resident += bytes;
+        if self.resident > self.peak {
+            self.peak = self.resident;
+        }
+    }
+
+    fn sub_resident(&mut self, bytes: u64) {
+        self.resident = self.resident.saturating_sub(bytes);
+    }
+
+    fn over_budget(&self) -> bool {
+        matches!(self.budget, Some(b) if self.resident > b)
+    }
+
+    fn note_fault(&mut self, bytes: u64) {
+        self.pending.faults += 1;
+        self.pending.in_bytes += bytes;
+        self.total.faults += 1;
+        self.total.in_bytes += bytes;
+    }
+
+    /// A cold read that does not cache the page (checkpoint streaming).
+    fn note_read(&mut self, bytes: u64) {
+        self.pending.in_bytes += bytes;
+        self.total.in_bytes += bytes;
+    }
+
+    fn note_writeback(&mut self, bytes: u64) {
+        self.pending.writebacks += 1;
+        self.pending.out_bytes += bytes;
+        self.total.writebacks += 1;
+        self.total.out_bytes += bytes;
+    }
+}
+
+/// One pinned page of vertex state, slot-major: `values[i]` is slot
+/// `base + i`. The flag slices alias the store's always-resident flag
+/// vectors; `dirty` must be set by anyone who writes `values` (flags
+/// never spill, so flag writes need no mark).
+pub struct ValuePageMut<'a, V> {
+    pub base: usize,
+    pub values: &'a mut [V],
+    pub active: &'a mut [bool],
+    pub comp: &'a mut [bool],
+    pub dirty: &'a mut bool,
+}
+
+/// One pinned page of adjacency: `adj` is a page-local [`Adjacency`]
+/// whose slot `i` is partition slot `base + i`. `dirty` must be set by
+/// anyone who mutates `adj`.
+pub struct EdgePageMut<'a> {
+    pub base: usize,
+    pub adj: &'a mut Adjacency,
+    pub dirty: &'a mut bool,
+}
+
+/// Vertex values plus the (always-resident) active/comp flag vectors,
+/// accessed page by page.
+pub trait ValueStore<V>: Send {
+    fn n_slots(&self) -> usize;
+    fn page_slots(&self) -> usize;
+    fn n_pages(&self) -> usize;
+
+    /// Pin page `p` resident and hand out its slot-major view. May
+    /// fault the page in and evict others (recorded in `mem`).
+    fn page<'s>(&'s mut self, p: usize, mem: &mut MemGauge) -> ValuePageMut<'s, V>;
+
+    /// Random single-slot read (cold paths: result dumps, tests).
+    fn value(&mut self, slot: usize, mem: &mut MemGauge) -> V;
+
+    /// The (active, comp) flag slices — resident in every impl.
+    fn flags(&self) -> (&[bool], &[bool]);
+
+    fn active_count(&self) -> u64;
+    fn comp_count(&self) -> u64;
+
+    /// Append the slot-major value stream (the per-slot [`Codec`]
+    /// bytes of every slot, in order, **without** a count prefix).
+    /// Cold pages stream straight from the spill file without being
+    /// cached (their read is recorded in `mem`).
+    fn encode_values_into(&mut self, mem: &mut MemGauge, buf: &mut Vec<u8>);
+
+    /// Visit the same slot-major value stream page by page as an
+    /// **observer**: cold pages are neither cached nor ledgered, the
+    /// LRU state is untouched, and nothing is charged (digests —
+    /// equivalence instrumentation, not modeled work).
+    fn visit_value_pages(&mut self, visit: &mut dyn FnMut(&[u8]));
+
+    /// Replace the whole store contents (recovery restore; also
+    /// reshapes a placeholder store to its real slot count).
+    fn restore(&mut self, mem: &mut MemGauge, values: Vec<V>, active: Vec<bool>, comp: Vec<bool>);
+
+    /// Slot range of page `p`.
+    fn page_range(&self, p: usize) -> Range<usize> {
+        let a = p * self.page_slots();
+        a..(a + self.page_slots()).min(self.n_slots())
+    }
+}
+
+/// Γ(v) for every owned vertex, accessed page by page.
+pub trait EdgeStore: Send {
+    fn n_slots(&self) -> usize;
+    fn page_slots(&self) -> usize;
+    fn n_pages(&self) -> usize;
+
+    /// Pin page `p` resident and hand out its page-local adjacency.
+    fn page<'s>(&'s mut self, p: usize, mem: &mut MemGauge) -> EdgePageMut<'s>;
+
+    /// Append the partition-wide [`Adjacency`] codec stream (`u32`
+    /// slot count, then per-slot `u32` len + targets). Byte-identical
+    /// to `Adjacency::encode` over the whole partition.
+    fn encode_into(&mut self, mem: &mut MemGauge, buf: &mut Vec<u8>);
+
+    /// Replace the whole store from a partition-wide adjacency.
+    fn restore(&mut self, mem: &mut MemGauge, adj: &Adjacency);
+}
+
+/// Modeled resident bytes of the bit-packed flag vectors (a real
+/// implementation stores 2 bits per vertex).
+fn flag_bytes(n: usize) -> u64 {
+    2 * (n as u64).div_ceil(8)
+}
+
+/// Encoded byte length of a value slice, measured chunk-wise so no
+/// partition-sized buffer is materialized.
+fn encoded_len_of<V: Codec>(vals: &[V]) -> u64 {
+    let mut total = 0u64;
+    let mut scratch = Vec::new();
+    for chunk in vals.chunks(4096) {
+        scratch.clear();
+        for v in chunk {
+            v.encode(&mut scratch);
+        }
+        total += scratch.len() as u64;
+    }
+    total
+}
+
+// ===================================================================
+// Spill file
+// ===================================================================
+
+/// Per-process uniqueness for spill file names (same-tag engines in one
+/// process must not collide — mirrors `SimHdfs::on_disk`).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+enum SpillBacking {
+    /// Simulated disk: per-page byte images in memory (tests; the cost
+    /// model still charges disk bandwidth for every read/write).
+    Mem(Vec<Option<Vec<u8>>>),
+    /// One real append-log file per store, with a page table of
+    /// (offset, len). Rewritten pages append; old extents are dead
+    /// space (the file is a process-lifetime temp).
+    Disk { path: PathBuf, file: std::fs::File, table: Vec<Option<(u64, u64)>>, end: u64 },
+}
+
+/// A worker-local spill file holding the cold pages of one store.
+pub struct SpillFile {
+    b: SpillBacking,
+}
+
+impl SpillFile {
+    pub fn new(backing: Backing, tag: &str, rank: usize, kind: &str) -> Result<Self> {
+        Ok(SpillFile {
+            b: match backing {
+                Backing::Memory => SpillBacking::Mem(Vec::new()),
+                Backing::Disk => {
+                    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+                    let path = std::env::temp_dir().join(format!(
+                        "lwcp-pager-{}-{seq}-{tag}-w{rank}.{kind}",
+                        std::process::id()
+                    ));
+                    let file = std::fs::OpenOptions::new()
+                        .create(true)
+                        .truncate(true)
+                        .read(true)
+                        .write(true)
+                        .open(&path)
+                        .with_context(|| format!("creating spill file {}", path.display()))?;
+                    SpillBacking::Disk { path, file, table: Vec::new(), end: 0 }
+                }
+            },
+        })
+    }
+
+    /// Reset the page table to exactly `n` unspilled pages (restore
+    /// reshapes; the disk variant leaves old extents as dead space).
+    fn reset_pages(&mut self, n: usize) {
+        match &mut self.b {
+            SpillBacking::Mem(v) => {
+                v.clear();
+                v.resize(n, None);
+            }
+            SpillBacking::Disk { table, .. } => {
+                table.clear();
+                table.resize(n, None);
+            }
+        }
+    }
+
+    fn write(&mut self, p: usize, bytes: &[u8]) -> Result<()> {
+        match &mut self.b {
+            SpillBacking::Mem(v) => {
+                v[p] = Some(bytes.to_vec());
+                Ok(())
+            }
+            SpillBacking::Disk { file, table, end, .. } => {
+                use std::io::{Seek, SeekFrom, Write};
+                file.seek(SeekFrom::Start(*end))?;
+                file.write_all(bytes)?;
+                table[p] = Some((*end, bytes.len() as u64));
+                *end += bytes.len() as u64;
+                Ok(())
+            }
+        }
+    }
+
+    fn read(&mut self, p: usize) -> Result<Vec<u8>> {
+        match &mut self.b {
+            SpillBacking::Mem(v) => v[p].clone().context("page was never spilled"),
+            SpillBacking::Disk { file, table, .. } => {
+                use std::io::{Read, Seek, SeekFrom};
+                let (off, len) = table[p].context("page was never spilled")?;
+                file.seek(SeekFrom::Start(off))?;
+                let mut buf = vec![0u8; len as usize];
+                file.read_exact(&mut buf)?;
+                Ok(buf)
+            }
+        }
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        if let SpillBacking::Disk { path, .. } = &self.b {
+            std::fs::remove_file(path).ok();
+        }
+    }
+}
+
+/// Per-page cache bookkeeping (LRU stamp from the shared gauge clock;
+/// `weight` is the charged resident size — the encoded bytes at the
+/// last spill/fault, refreshed on write-back).
+#[derive(Debug, Clone, Copy, Default)]
+struct PageMeta {
+    weight: u64,
+    stamp: u64,
+    dirty: bool,
+}
+
+// ===================================================================
+// In-memory implementations (no budget: the pre-pager layout)
+// ===================================================================
+
+/// Fully-resident value store: flat vectors, pages are subslices.
+pub struct InMemValues<V> {
+    page_slots: usize,
+    values: Vec<V>,
+    active: Vec<bool>,
+    comp: Vec<bool>,
+    /// Dirty-flag sink for the page view (nothing ever spills).
+    dirty_sink: bool,
+    /// Resident bytes charged to the gauge (measured at build/restore).
+    charged: u64,
+}
+
+impl<V: Codec + Clone + Send + Sync> InMemValues<V> {
+    pub fn build(
+        values: Vec<V>,
+        active: Vec<bool>,
+        comp: Vec<bool>,
+        page_slots: usize,
+        mem: &mut MemGauge,
+    ) -> Self {
+        let mut s = InMemValues {
+            page_slots: page_slots.max(1),
+            values,
+            active,
+            comp,
+            dirty_sink: false,
+            charged: 0,
+        };
+        s.recharge(mem);
+        s
+    }
+
+    fn recharge(&mut self, mem: &mut MemGauge) {
+        mem.sub_resident(self.charged);
+        self.charged = encoded_len_of(&self.values) + flag_bytes(self.values.len());
+        mem.add_resident(self.charged);
+    }
+}
+
+impl<V: Codec + Clone + Send + Sync> ValueStore<V> for InMemValues<V> {
+    fn n_slots(&self) -> usize {
+        self.values.len()
+    }
+
+    fn page_slots(&self) -> usize {
+        self.page_slots
+    }
+
+    fn n_pages(&self) -> usize {
+        self.values.len().div_ceil(self.page_slots)
+    }
+
+    fn page<'s>(&'s mut self, p: usize, _mem: &mut MemGauge) -> ValuePageMut<'s, V> {
+        let a = p * self.page_slots;
+        let b = (a + self.page_slots).min(self.values.len());
+        ValuePageMut {
+            base: a,
+            values: &mut self.values[a..b],
+            active: &mut self.active[a..b],
+            comp: &mut self.comp[a..b],
+            dirty: &mut self.dirty_sink,
+        }
+    }
+
+    fn value(&mut self, slot: usize, _mem: &mut MemGauge) -> V {
+        self.values[slot].clone()
+    }
+
+    fn flags(&self) -> (&[bool], &[bool]) {
+        (&self.active, &self.comp)
+    }
+
+    fn active_count(&self) -> u64 {
+        self.active.iter().filter(|&&a| a).count() as u64
+    }
+
+    fn comp_count(&self) -> u64 {
+        self.comp.iter().filter(|&&c| c).count() as u64
+    }
+
+    fn encode_values_into(&mut self, _mem: &mut MemGauge, buf: &mut Vec<u8>) {
+        for v in &self.values {
+            v.encode(buf);
+        }
+    }
+
+    fn visit_value_pages(&mut self, visit: &mut dyn FnMut(&[u8])) {
+        let mut scratch = Vec::new();
+        for chunk in self.values.chunks(self.page_slots) {
+            scratch.clear();
+            for v in chunk {
+                v.encode(&mut scratch);
+            }
+            visit(&scratch);
+        }
+    }
+
+    fn restore(
+        &mut self,
+        mem: &mut MemGauge,
+        values: Vec<V>,
+        active: Vec<bool>,
+        comp: Vec<bool>,
+    ) {
+        self.values = values;
+        self.active = active;
+        self.comp = comp;
+        self.recharge(mem);
+    }
+}
+
+/// Fully-resident edge store: one CSR [`Adjacency`] chunk per page.
+pub struct InMemEdges {
+    page_slots: usize,
+    n_slots: usize,
+    pages: Vec<Adjacency>,
+    dirty_sink: bool,
+    charged: u64,
+}
+
+impl InMemEdges {
+    pub fn build(lists: &[Vec<VertexId>], page_slots: usize, mem: &mut MemGauge) -> Self {
+        let page_slots = page_slots.max(1);
+        let pages: Vec<Adjacency> =
+            lists.chunks(page_slots).map(Adjacency::from_lists).collect();
+        let mut s = InMemEdges {
+            page_slots,
+            n_slots: lists.len(),
+            pages,
+            dirty_sink: false,
+            charged: 0,
+        };
+        s.recharge(mem);
+        s
+    }
+
+    fn recharge(&mut self, mem: &mut MemGauge) {
+        mem.sub_resident(self.charged);
+        self.charged = self.pages.iter().map(Adjacency::encoded_size).sum();
+        mem.add_resident(self.charged);
+    }
+}
+
+impl EdgeStore for InMemEdges {
+    fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn page_slots(&self) -> usize {
+        self.page_slots
+    }
+
+    fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    fn page<'s>(&'s mut self, p: usize, _mem: &mut MemGauge) -> EdgePageMut<'s> {
+        EdgePageMut {
+            base: p * self.page_slots,
+            adj: &mut self.pages[p],
+            dirty: &mut self.dirty_sink,
+        }
+    }
+
+    fn encode_into(&mut self, _mem: &mut MemGauge, buf: &mut Vec<u8>) {
+        (self.n_slots as u32).encode(buf);
+        for page in &self.pages {
+            for s in 0..page.n_slots() {
+                let nb = page.neighbors(s);
+                (nb.len() as u32).encode(buf);
+                for t in nb {
+                    t.encode(buf);
+                }
+            }
+        }
+    }
+
+    fn restore(&mut self, mem: &mut MemGauge, adj: &Adjacency) {
+        let n = adj.n_slots();
+        self.n_slots = n;
+        self.pages.clear();
+        let mut slot = 0;
+        while slot < n {
+            let end = (slot + self.page_slots).min(n);
+            let lists: Vec<Vec<VertexId>> =
+                (slot..end).map(|s| adj.neighbors(s).to_vec()).collect();
+            self.pages.push(Adjacency::from_lists(&lists));
+            slot = end;
+        }
+        self.recharge(mem);
+    }
+}
+
+// ===================================================================
+// Paged implementations (budgeted: spill to the per-worker file)
+// ===================================================================
+
+/// Budgeted value store: slot-major pages spilled to a [`SpillFile`],
+/// flags resident, LRU eviction against the shared gauge.
+pub struct PagedValues<V> {
+    n_slots: usize,
+    page_slots: usize,
+    resident: Vec<Option<Vec<V>>>,
+    meta: Vec<PageMeta>,
+    active: Vec<bool>,
+    comp: Vec<bool>,
+    spill: SpillFile,
+    flag_charge: u64,
+}
+
+impl<V: Codec + Clone + Send + Sync> PagedValues<V> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        values: Vec<V>,
+        active: Vec<bool>,
+        comp: Vec<bool>,
+        page_slots: usize,
+        backing: Backing,
+        tag: &str,
+        rank: usize,
+        mem: &mut MemGauge,
+    ) -> Result<Self> {
+        let mut s = PagedValues {
+            n_slots: 0,
+            page_slots: page_slots.max(1),
+            resident: Vec::new(),
+            meta: Vec::new(),
+            active: Vec::new(),
+            comp: Vec::new(),
+            spill: SpillFile::new(backing, tag, rank, "vals")?,
+            flag_charge: 0,
+        };
+        // Build-time spills model graph loading, which the engine does
+        // not charge — only post-load faults/write-backs are ledgered.
+        s.reload(mem, values, active, comp, false);
+        Ok(s)
+    }
+
+    fn page_len(&self, p: usize) -> usize {
+        let a = p * self.page_slots;
+        (a + self.page_slots).min(self.n_slots) - a
+    }
+
+    /// Replace all contents, repage, and spill every page (cold cache).
+    fn reload(
+        &mut self,
+        mem: &mut MemGauge,
+        values: Vec<V>,
+        active: Vec<bool>,
+        comp: Vec<bool>,
+        charge: bool,
+    ) {
+        for (pg, m) in self.resident.iter_mut().zip(self.meta.iter()) {
+            if pg.take().is_some() {
+                mem.sub_resident(m.weight);
+            }
+        }
+        mem.sub_resident(self.flag_charge);
+        let n = values.len();
+        self.n_slots = n;
+        let n_pages = n.div_ceil(self.page_slots);
+        self.resident = (0..n_pages).map(|_| None).collect();
+        self.meta = vec![PageMeta::default(); n_pages];
+        self.spill.reset_pages(n_pages);
+        let mut buf = Vec::new();
+        for p in 0..n_pages {
+            let a = p * self.page_slots;
+            let b = (a + self.page_slots).min(n);
+            buf.clear();
+            for v in &values[a..b] {
+                v.encode(&mut buf);
+            }
+            self.spill.write(p, &buf).expect("pager: value spill write");
+            self.meta[p].weight = buf.len() as u64;
+            if charge {
+                mem.note_writeback(buf.len() as u64);
+            }
+        }
+        self.active = active;
+        self.comp = comp;
+        self.flag_charge = flag_bytes(n);
+        mem.add_resident(self.flag_charge);
+    }
+
+    fn fault_in(&mut self, p: usize, mem: &mut MemGauge) {
+        if self.resident[p].is_none() {
+            let bytes = self.spill.read(p).expect("pager: value spill read");
+            let len = self.page_len(p);
+            let mut r = Reader::new(&bytes);
+            let mut vals = Vec::with_capacity(len);
+            for _ in 0..len {
+                vals.push(V::decode(&mut r).expect("pager: value page decode"));
+            }
+            debug_assert!(r.is_empty(), "pager: trailing bytes in value page");
+            mem.note_fault(bytes.len() as u64);
+            mem.add_resident(self.meta[p].weight);
+            self.resident[p] = Some(vals);
+        }
+        self.meta[p].stamp = mem.touch();
+        self.evict_over_budget(mem, p);
+    }
+
+    fn evict_over_budget(&mut self, mem: &mut MemGauge, keep: usize) {
+        while mem.over_budget() {
+            let mut victim: Option<usize> = None;
+            for (q, pg) in self.resident.iter().enumerate() {
+                if q == keep || pg.is_none() {
+                    continue;
+                }
+                let older = match victim {
+                    None => true,
+                    Some(v) => self.meta[q].stamp < self.meta[v].stamp,
+                };
+                if older {
+                    victim = Some(q);
+                }
+            }
+            let Some(q) = victim else { break };
+            self.evict(q, mem);
+        }
+    }
+
+    fn evict(&mut self, q: usize, mem: &mut MemGauge) {
+        let Some(vals) = self.resident[q].take() else { return };
+        mem.sub_resident(self.meta[q].weight);
+        if self.meta[q].dirty {
+            let mut buf = Vec::new();
+            for v in &vals {
+                v.encode(&mut buf);
+            }
+            self.spill.write(q, &buf).expect("pager: value spill write");
+            mem.note_writeback(buf.len() as u64);
+            self.meta[q].weight = buf.len() as u64;
+            self.meta[q].dirty = false;
+        }
+    }
+}
+
+impl<V: Codec + Clone + Send + Sync> ValueStore<V> for PagedValues<V> {
+    fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn page_slots(&self) -> usize {
+        self.page_slots
+    }
+
+    fn n_pages(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn page<'s>(&'s mut self, p: usize, mem: &mut MemGauge) -> ValuePageMut<'s, V> {
+        self.fault_in(p, mem);
+        let a = p * self.page_slots;
+        let b = (a + self.page_slots).min(self.n_slots);
+        let meta = &mut self.meta[p];
+        ValuePageMut {
+            base: a,
+            values: self.resident[p].as_mut().expect("pinned page resident").as_mut_slice(),
+            active: &mut self.active[a..b],
+            comp: &mut self.comp[a..b],
+            dirty: &mut meta.dirty,
+        }
+    }
+
+    fn value(&mut self, slot: usize, mem: &mut MemGauge) -> V {
+        let p = slot / self.page_slots;
+        self.fault_in(p, mem);
+        self.resident[p].as_ref().expect("pinned page resident")[slot % self.page_slots].clone()
+    }
+
+    fn flags(&self) -> (&[bool], &[bool]) {
+        (&self.active, &self.comp)
+    }
+
+    fn active_count(&self) -> u64 {
+        self.active.iter().filter(|&&a| a).count() as u64
+    }
+
+    fn comp_count(&self) -> u64 {
+        self.comp.iter().filter(|&&c| c).count() as u64
+    }
+
+    fn encode_values_into(&mut self, mem: &mut MemGauge, buf: &mut Vec<u8>) {
+        for p in 0..self.resident.len() {
+            match &self.resident[p] {
+                Some(vals) => {
+                    for v in vals {
+                        v.encode(buf);
+                    }
+                }
+                None => {
+                    // A cold page's spill image *is* its slot stream:
+                    // blit it without decoding or caching.
+                    let bytes = self.spill.read(p).expect("pager: value spill read");
+                    mem.note_read(bytes.len() as u64);
+                    buf.extend_from_slice(&bytes);
+                }
+            }
+        }
+    }
+
+    fn visit_value_pages(&mut self, visit: &mut dyn FnMut(&[u8])) {
+        let mut scratch = Vec::new();
+        for p in 0..self.resident.len() {
+            match &self.resident[p] {
+                Some(vals) => {
+                    scratch.clear();
+                    for v in vals {
+                        v.encode(&mut scratch);
+                    }
+                    visit(&scratch);
+                }
+                None => {
+                    let bytes = self.spill.read(p).expect("pager: value spill read");
+                    visit(&bytes);
+                }
+            }
+        }
+    }
+
+    fn restore(
+        &mut self,
+        mem: &mut MemGauge,
+        values: Vec<V>,
+        active: Vec<bool>,
+        comp: Vec<bool>,
+    ) {
+        self.reload(mem, values, active, comp, true);
+    }
+}
+
+/// Budgeted edge store: page-local CSR [`Adjacency`] chunks spilled via
+/// their codec image.
+pub struct PagedEdges {
+    n_slots: usize,
+    page_slots: usize,
+    resident: Vec<Option<Adjacency>>,
+    meta: Vec<PageMeta>,
+    spill: SpillFile,
+}
+
+impl PagedEdges {
+    pub fn build(
+        lists: &[Vec<VertexId>],
+        page_slots: usize,
+        backing: Backing,
+        tag: &str,
+        rank: usize,
+        mem: &mut MemGauge,
+    ) -> Result<Self> {
+        let mut s = PagedEdges {
+            n_slots: 0,
+            page_slots: page_slots.max(1),
+            resident: Vec::new(),
+            meta: Vec::new(),
+            spill: SpillFile::new(backing, tag, rank, "adj")?,
+        };
+        s.reload_pages(mem, lists.len(), |slot| lists[slot].as_slice(), false);
+        Ok(s)
+    }
+
+    /// Repage from a slot-indexed neighbor source and spill every page.
+    fn reload_pages<'a, F>(&mut self, mem: &mut MemGauge, n: usize, neighbors: F, charge: bool)
+    where
+        F: Fn(usize) -> &'a [VertexId],
+    {
+        for (pg, m) in self.resident.iter_mut().zip(self.meta.iter()) {
+            if pg.take().is_some() {
+                mem.sub_resident(m.weight);
+            }
+        }
+        self.n_slots = n;
+        let n_pages = n.div_ceil(self.page_slots);
+        self.resident = (0..n_pages).map(|_| None).collect();
+        self.meta = vec![PageMeta::default(); n_pages];
+        self.spill.reset_pages(n_pages);
+        for p in 0..n_pages {
+            let a = p * self.page_slots;
+            let b = (a + self.page_slots).min(n);
+            let lists: Vec<Vec<VertexId>> = (a..b).map(|s| neighbors(s).to_vec()).collect();
+            let bytes = Adjacency::from_lists(&lists).to_bytes();
+            self.spill.write(p, &bytes).expect("pager: edge spill write");
+            self.meta[p].weight = bytes.len() as u64;
+            if charge {
+                mem.note_writeback(bytes.len() as u64);
+            }
+        }
+    }
+
+    fn fault_in(&mut self, p: usize, mem: &mut MemGauge) {
+        if self.resident[p].is_none() {
+            let bytes = self.spill.read(p).expect("pager: edge spill read");
+            let adj = Adjacency::from_bytes(&bytes).expect("pager: edge page decode");
+            mem.note_fault(bytes.len() as u64);
+            mem.add_resident(self.meta[p].weight);
+            self.resident[p] = Some(adj);
+        }
+        self.meta[p].stamp = mem.touch();
+        self.evict_over_budget(mem, p);
+    }
+
+    fn evict_over_budget(&mut self, mem: &mut MemGauge, keep: usize) {
+        while mem.over_budget() {
+            let mut victim: Option<usize> = None;
+            for (q, pg) in self.resident.iter().enumerate() {
+                if q == keep || pg.is_none() {
+                    continue;
+                }
+                let older = match victim {
+                    None => true,
+                    Some(v) => self.meta[q].stamp < self.meta[v].stamp,
+                };
+                if older {
+                    victim = Some(q);
+                }
+            }
+            let Some(q) = victim else { break };
+            self.evict(q, mem);
+        }
+    }
+
+    fn evict(&mut self, q: usize, mem: &mut MemGauge) {
+        let Some(adj) = self.resident[q].take() else { return };
+        mem.sub_resident(self.meta[q].weight);
+        if self.meta[q].dirty {
+            let bytes = adj.to_bytes();
+            self.spill.write(q, &bytes).expect("pager: edge spill write");
+            mem.note_writeback(bytes.len() as u64);
+            self.meta[q].weight = bytes.len() as u64;
+            self.meta[q].dirty = false;
+        }
+    }
+}
+
+impl EdgeStore for PagedEdges {
+    fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn page_slots(&self) -> usize {
+        self.page_slots
+    }
+
+    fn n_pages(&self) -> usize {
+        self.resident.len()
+    }
+
+    fn page<'s>(&'s mut self, p: usize, mem: &mut MemGauge) -> EdgePageMut<'s> {
+        self.fault_in(p, mem);
+        let meta = &mut self.meta[p];
+        EdgePageMut {
+            base: p * self.page_slots,
+            adj: self.resident[p].as_mut().expect("pinned page resident"),
+            dirty: &mut meta.dirty,
+        }
+    }
+
+    fn encode_into(&mut self, mem: &mut MemGauge, buf: &mut Vec<u8>) {
+        (self.n_slots as u32).encode(buf);
+        for p in 0..self.resident.len() {
+            match &self.resident[p] {
+                Some(adj) => {
+                    for s in 0..adj.n_slots() {
+                        let nb = adj.neighbors(s);
+                        (nb.len() as u32).encode(buf);
+                        for t in nb {
+                            t.encode(buf);
+                        }
+                    }
+                }
+                None => {
+                    // The page image is `u32 local-slot count` + the
+                    // per-slot stream; strip the local count and blit.
+                    let bytes = self.spill.read(p).expect("pager: edge spill read");
+                    mem.note_read(bytes.len() as u64);
+                    buf.extend_from_slice(&bytes[4..]);
+                }
+            }
+        }
+    }
+
+    fn restore(&mut self, mem: &mut MemGauge, adj: &Adjacency) {
+        self.reload_pages(mem, adj.n_slots(), |slot| adj.neighbors(slot), true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vals(n: usize) -> (Vec<f32>, Vec<bool>, Vec<bool>) {
+        (
+            (0..n).map(|i| i as f32 * 0.5).collect(),
+            (0..n).map(|i| i % 3 != 0).collect(),
+            vec![false; n],
+        )
+    }
+
+    fn lists(n: usize) -> Vec<Vec<VertexId>> {
+        (0..n).map(|i| (0..(i % 5) as u32).collect()).collect()
+    }
+
+    fn paged_values(
+        n: usize,
+        page_slots: usize,
+        budget: u64,
+        backing: Backing,
+    ) -> (PagedValues<f32>, MemGauge) {
+        let mut mem = MemGauge::new(Some(budget));
+        let (v, a, c) = vals(n);
+        let s = PagedValues::build(v, a, c, page_slots, backing, "pager-test", 0, &mut mem)
+            .unwrap();
+        (s, mem)
+    }
+
+    #[test]
+    fn paged_values_roundtrip_reads_through_faults() {
+        for backing in [Backing::Memory, Backing::Disk] {
+            let (mut s, mut mem) = paged_values(100, 8, 64, backing);
+            for slot in 0..100 {
+                assert_eq!(s.value(slot, &mut mem), slot as f32 * 0.5, "slot {slot}");
+            }
+            assert!(mem.totals().faults > 0, "no faults under a 64-byte budget");
+        }
+    }
+
+    #[test]
+    fn budget_bounds_resident_bytes() {
+        let (mut s, mut mem) = paged_values(1000, 16, 256, Backing::Memory);
+        for p in 0..s.n_pages() {
+            let pg = s.page(p, &mut mem);
+            pg.values[0] += 1.0;
+            *pg.dirty = true;
+        }
+        // 16 f32 slots = 64 bytes/page; budget 256 = 4 pages. The flag
+        // charge plus the pinned page ride on top.
+        let slack = flag_bytes(1000) + 64;
+        assert!(
+            mem.peak() <= 256 + slack,
+            "peak {} exceeds budget 256 + slack {slack}",
+            mem.peak()
+        );
+        assert!(mem.totals().writebacks > 0, "dirty pages never wrote back");
+    }
+
+    #[test]
+    fn dirty_writeback_survives_eviction() {
+        for backing in [Backing::Memory, Backing::Disk] {
+            let (mut s, mut mem) = paged_values(64, 8, 48, backing);
+            {
+                let pg = s.page(3, &mut mem);
+                pg.values[5] = 99.0;
+                *pg.dirty = true;
+            }
+            // Touch every other page to force page 3 out and back.
+            for p in 0..s.n_pages() {
+                if p != 3 {
+                    let _ = s.page(p, &mut mem);
+                }
+            }
+            assert_eq!(s.value(3 * 8 + 5, &mut mem), 99.0);
+        }
+    }
+
+    #[test]
+    fn value_stream_is_identical_across_stores_and_eviction() {
+        let n = 300;
+        let (v, a, c) = vals(n);
+        let mut mem_i = MemGauge::new(None);
+        let mut inmem = InMemValues::build(v.clone(), a.clone(), c.clone(), 32, &mut mem_i);
+        let (mut paged, mut mem_p) = paged_values(n, 32, 128, Backing::Memory);
+        // Pin a page so the paged stream mixes resident + cold pages.
+        {
+            let pg = paged.page(2, &mut mem_p);
+            assert_eq!(pg.base, 64);
+        }
+        let mut b1 = Vec::new();
+        inmem.encode_values_into(&mut mem_i, &mut b1);
+        let mut b2 = Vec::new();
+        paged.encode_values_into(&mut mem_p, &mut b2);
+        assert_eq!(b1, b2, "slot-major streams diverged");
+        // And both equal the plain Vec body (sans count prefix).
+        let mut plain = Vec::new();
+        for x in &v {
+            x.encode(&mut plain);
+        }
+        assert_eq!(b1, plain);
+    }
+
+    #[test]
+    fn edge_stream_matches_partition_wide_adjacency() {
+        let ls = lists(77);
+        let whole = Adjacency::from_lists(&ls);
+        let mut mem_i = MemGauge::new(None);
+        let mut inmem = InMemEdges::build(&ls, 10, &mut mem_i);
+        let mut mem_p = MemGauge::new(Some(64));
+        let mut paged =
+            PagedEdges::build(&ls, 10, Backing::Memory, "pager-test-e", 0, &mut mem_p).unwrap();
+        let want = whole.to_bytes();
+        let mut b1 = Vec::new();
+        inmem.encode_into(&mut mem_i, &mut b1);
+        let mut b2 = Vec::new();
+        paged.encode_into(&mut mem_p, &mut b2);
+        assert_eq!(b1, want, "in-memory edge stream diverged");
+        assert_eq!(b2, want, "paged edge stream diverged");
+    }
+
+    #[test]
+    fn edge_mutations_survive_eviction() {
+        let ls = lists(40);
+        let mut mem = MemGauge::new(Some(32));
+        let mut s = PagedEdges::build(&ls, 4, Backing::Memory, "pager-test-m", 1, &mut mem)
+            .unwrap();
+        {
+            let pg = s.page(2, &mut mem);
+            pg.adj.add_edge(1, 777);
+            *pg.dirty = true;
+        }
+        for p in 0..s.n_pages() {
+            if p != 2 {
+                let _ = s.page(p, &mut mem);
+            }
+        }
+        let pg = s.page(2, &mut mem);
+        assert!(pg.adj.neighbors(1).contains(&777), "mutation lost across eviction");
+    }
+
+    #[test]
+    fn restore_reshapes_a_placeholder_store() {
+        let mut mem = MemGauge::new(Some(128));
+        let mut s: PagedValues<f32> = PagedValues::build(
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            8,
+            Backing::Memory,
+            "pager-test-r",
+            2,
+            &mut mem,
+        )
+        .unwrap();
+        assert_eq!(s.n_pages(), 0);
+        let (v, a, c) = vals(50);
+        s.restore(&mut mem, v.clone(), a, c);
+        assert_eq!(s.n_slots(), 50);
+        assert!(mem.totals().writebacks > 0, "restore must charge spill writes");
+        for slot in [0usize, 17, 49] {
+            assert_eq!(s.value(slot, &mut mem), v[slot]);
+        }
+    }
+
+    #[test]
+    fn gauge_peak_tracks_high_water_mark() {
+        let mut g = MemGauge::new(Some(100));
+        g.add_resident(60);
+        g.add_resident(60);
+        assert_eq!(g.peak(), 120);
+        g.sub_resident(100);
+        assert_eq!(g.resident(), 20);
+        assert_eq!(g.peak(), 120);
+        assert!(!g.over_budget());
+        let pend = g.take_pending();
+        assert!(pend.is_zero());
+    }
+}

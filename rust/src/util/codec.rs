@@ -9,6 +9,38 @@
 
 use anyhow::{bail, Result};
 
+/// Incremental FNV-1a (64-bit) over a byte stream — the streaming twin
+/// of the digest loops that previously materialized a full encode
+/// buffer just to hash it. Feeding the same bytes in any chunking
+/// yields the same digest.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    h: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64 { h: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Cursor over a borrowed byte buffer.
 pub struct Reader<'a> {
     buf: &'a [u8],

@@ -5,5 +5,5 @@ pub mod codec;
 pub mod fmtutil;
 pub mod rng;
 
-pub use codec::{Codec, Reader};
+pub use codec::{Codec, Fnv64, Reader};
 pub use rng::Rng;

@@ -24,6 +24,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        pager: Default::default(),
     }
 }
 
@@ -306,4 +307,45 @@ fn kill_all_but_one_worker_still_recovers() {
     // Kill 5 of 6 workers (rank 0 survives to be elected master).
     let catastrophic = digest(FailurePlan::kill_n_at(5, 9), "all-f");
     assert_eq!(base, catastrophic);
+}
+
+#[test]
+fn paged_mode_preserves_checkpoint_lifecycle_and_sizes() {
+    // The checkpoint protocol is store-agnostic: under a paged
+    // partition store (budget far below the working set), CP[0]
+    // survives as the LWCP edge source, intermediate checkpoints are
+    // GC'd, and every blob is byte-for-byte what the in-memory store
+    // writes (slot-major layout contract).
+    use lwcp::storage::PagerConfig;
+    let adj = PresetGraph::WebBase.spec(1500, 3).generate();
+    let run = |pager: PagerConfig, tag: &str| {
+        let mut c = cfg(FtKind::LwCp, 10, tag);
+        c.pager = pager;
+        let mut eng = Engine::new(pagerank(25), c, &adj).unwrap();
+        eng.run().unwrap();
+        eng
+    };
+    let inmem = run(PagerConfig::default(), "pgcp-m");
+    let paged = run(
+        PagerConfig { memory_budget: Some(4 * 1024), page_slots: 64 },
+        "pgcp-p",
+    );
+    // Lifecycle, as in the in-memory tests above.
+    assert!(paged.hdfs().exists(&cp_key(0, 0)), "CP[0] was deleted in paged mode");
+    assert!(paged.hdfs().list(&cp_prefix(10)).is_empty(), "CP[10] not GC'd in paged mode");
+    assert!(!paged.hdfs().list(&cp_prefix(20)).is_empty(), "CP[20] missing in paged mode");
+    assert_eq!(paged.cp_last(), 20);
+    // Byte-identical blobs.
+    let mut keys = inmem.hdfs().list("cp/");
+    keys.sort();
+    let mut pkeys = paged.hdfs().list("cp/");
+    pkeys.sort();
+    assert_eq!(keys, pkeys, "checkpoint key sets differ");
+    for k in &keys {
+        assert_eq!(
+            inmem.hdfs().get(k).unwrap(),
+            paged.hdfs().get(k).unwrap(),
+            "checkpoint blob {k} differs between stores"
+        );
+    }
 }

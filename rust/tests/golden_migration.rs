@@ -25,10 +25,11 @@ use lwcp::apps::*;
 use lwcp::ft::FtKind;
 use lwcp::graph::{generate, Adjacency, Partitioner, PresetGraph, VertexId};
 use lwcp::pregel::app::CombineFn;
-use lwcp::pregel::{AggState, App, Engine, EngineConfig, FailurePlan, Inbox, Outbox, Partition};
+use lwcp::pregel::partition::digest_parts;
+use lwcp::pregel::{AggState, App, Engine, EngineConfig, FailurePlan, Inbox, Outbox};
 use lwcp::sim::Topology;
 use lwcp::storage::Backing;
-use lwcp::util::codec::Codec;
+use lwcp::util::codec::{Codec, Fnv64};
 
 /// Six workers on three machines — the standard test topology.
 const N_WORKERS: usize = 6;
@@ -208,24 +209,13 @@ fn run_legacy<L: LegacyApp>(app: &L, global_adj: &[Vec<VertexId>]) -> (u64, u64)
         step += 1;
     }
     // Digest exactly like Engine::digest: FNV over per-rank partition
-    // digests (values + active flags), rank ascending.
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    // digests (values + active flags), rank ascending — via the raw
+    // `digest_parts` twin of the store-backed `Partition::digest`.
+    let mut h = Fnv64::new();
     for rank in 0..N_WORKERS {
-        let p = Partition {
-            rank,
-            partitioner: part,
-            values: values[rank].clone(),
-            active: active[rank].clone(),
-            comp: vec![false; part.slots_of(rank)],
-            adj: adjs[rank].clone(),
-        };
-        let d = p.digest();
-        for b in d.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
+        h.update(&digest_parts(&values[rank], &active[rank]).to_le_bytes());
     }
-    (h, total_msgs)
+    (h.finish(), total_msgs)
 }
 
 /// Run the migrated app on the real engine. Returns (digest, messages
@@ -250,6 +240,7 @@ fn run_new<A: App, F: Fn() -> A>(
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        pager: Default::default(),
     };
     let mut eng = Engine::new(app_fn(), cfg, adj).expect("engine");
     if let Some(p) = plan {

@@ -1,0 +1,368 @@
+//! Out-of-core paged partition store: bit-identity and budget
+//! behavior (`storage::pager`).
+//!
+//! The pager's determinism contract: a run whose partitions spill cold
+//! pages to disk under a `--memory-budget` produces **bit-for-bit**
+//! the same per-worker digests, checkpoint blobs, and final results as
+//! the fully in-memory store — failure-free and through mid-flight
+//! kills under every fault-tolerance algorithm — while keeping each
+//! worker's resident partition bytes bounded by the budget (plus the
+//! pinned-page slack).
+
+use lwcp::apps::*;
+use lwcp::ft::FtKind;
+use lwcp::graph::{PresetGraph, VertexId};
+use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan};
+use lwcp::sim::Topology;
+use lwcp::storage::{Backing, PagerConfig};
+
+/// A paged configuration whose budget is far below the working set of
+/// the test graphs (forces steady-state eviction) with small pages so
+/// even tiny partitions span many pages.
+fn tight_pager() -> PagerConfig {
+    PagerConfig { memory_budget: Some(2 * 1024), page_slots: 32 }
+}
+
+fn cfg(ft: FtKind, cp_every: u64, pager: PagerConfig, backing: Backing, tag: &str) -> EngineConfig {
+    EngineConfig {
+        topo: Topology::new(3, 2),
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+        threads: 0,
+        async_cp: true,
+        machine_combine: true,
+        pager,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run<A: App, F: Fn() -> A>(
+    app_fn: &F,
+    adj: &[Vec<VertexId>],
+    ft: FtKind,
+    cp_every: u64,
+    pager: PagerConfig,
+    backing: Backing,
+    plan: Option<FailurePlan>,
+    tag: &str,
+) -> (u64, lwcp::metrics::RunMetrics) {
+    let mut eng =
+        Engine::new(app_fn(), cfg(ft, cp_every, pager, backing, tag), adj).expect("engine");
+    if let Some(p) = plan {
+        eng = eng.with_failures(p);
+    }
+    let m = eng.run().expect("run");
+    (eng.digest(), m)
+}
+
+fn webbase(n: usize, seed: u64) -> Vec<Vec<VertexId>> {
+    PresetGraph::WebBase.spec(n, seed).generate()
+}
+
+/// Failure-free digest parity for one app: paged == in-memory, and the
+/// paged run actually exercised the spill path.
+fn assert_parity<A: App, F: Fn() -> A>(app_fn: F, adj: &[Vec<VertexId>], label: &str) {
+    let (want, _) = run(
+        &app_fn,
+        adj,
+        FtKind::None,
+        0,
+        PagerConfig::default(),
+        Backing::Memory,
+        None,
+        &format!("pg-{label}-m"),
+    );
+    let (got, m) = run(
+        &app_fn,
+        adj,
+        FtKind::None,
+        0,
+        tight_pager(),
+        Backing::Memory,
+        None,
+        &format!("pg-{label}-p"),
+    );
+    assert_eq!(got, want, "{label}: paged store changed the result");
+    assert!(m.pager.faults > 0, "{label}: paged run never faulted a page");
+}
+
+// ---------------------------------------------------- bit-identity
+
+#[test]
+fn all_seven_apps_bit_identical_failure_free() {
+    let adj = webbase(600, 42);
+    assert_parity(
+        || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true },
+        &adj,
+        "pagerank",
+    );
+    assert_parity(|| HashMinCc, &adj, "cc");
+    assert_parity(|| Sssp { source: 0 }, &adj, "sssp");
+    assert_parity(|| TriangleCount { c: 2 }, &adj, "triangle");
+    assert_parity(|| KCore { k: 3 }, &adj, "kcore");
+    assert_parity(|| PointerJump, &adj, "pointerjump");
+    assert_parity(|| BipartiteMatching, &adj, "bipartite");
+}
+
+#[test]
+fn paged_recovery_matches_in_memory_across_all_ft_algorithms() {
+    // Mid-flight kills under all four FT algorithms, in paged mode:
+    // the recovered digest must equal the in-memory failure-free one.
+    let adj = webbase(500, 7);
+    let app = || PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true };
+    let (want, _) = run(
+        &app,
+        &adj,
+        FtKind::None,
+        0,
+        PagerConfig::default(),
+        Backing::Memory,
+        None,
+        "pgr-base",
+    );
+    for ft in FtKind::all() {
+        let (got, m) = run(
+            &app,
+            &adj,
+            ft,
+            5,
+            tight_pager(),
+            Backing::Memory,
+            Some(FailurePlan::kill_n_at(1, 11)),
+            &format!("pgr-{}", ft.name()),
+        );
+        assert_eq!(got, want, "{}: paged recovery diverged", ft.name());
+        assert!(m.recovery_control > 0.0, "{}: kill never fired", ft.name());
+        assert!(m.pager.faults > 0, "{}: paged run never faulted", ft.name());
+    }
+}
+
+#[test]
+fn paged_recovery_with_mutating_topology() {
+    // k-core mutates edges: dirty edge pages must write back, survive
+    // eviction, and the E_W replay must land on paged partitions.
+    let adj = webbase(400, 13);
+    let app = || KCore { k: 3 };
+    let (want, _) = run(
+        &app,
+        &adj,
+        FtKind::None,
+        0,
+        PagerConfig::default(),
+        Backing::Memory,
+        None,
+        "pgk-base",
+    );
+    for ft in FtKind::all() {
+        let (got, m) = run(
+            &app,
+            &adj,
+            ft,
+            3,
+            tight_pager(),
+            Backing::Memory,
+            Some(FailurePlan::kill_n_at(1, 5)),
+            &format!("pgk-{}", ft.name()),
+        );
+        assert_eq!(got, want, "{}: paged k-core recovery diverged", ft.name());
+        assert!(m.recovery_control > 0.0, "{}: kill never fired", ft.name());
+    }
+}
+
+#[test]
+fn checkpoint_blobs_byte_identical_across_stores() {
+    // Stronger than digest parity: the bytes on (Sim)HDFS — CP[0] and
+    // the live CP[i] of every worker — must be identical whether the
+    // partitions were in-memory or paged (slot-major layout contract).
+    let adj = webbase(500, 3);
+    for ft in [FtKind::LwCp, FtKind::HwCp] {
+        let engines: Vec<Engine<PageRank>> = [
+            (PagerConfig::default(), format!("pgb-{}-m", ft.name())),
+            (tight_pager(), format!("pgb-{}-p", ft.name())),
+        ]
+        .into_iter()
+        .map(|(pager, tag)| {
+            let app = PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
+            let mut eng =
+                Engine::new(app, cfg(ft, 5, pager, Backing::Memory, &tag), &adj).expect("engine");
+            eng.run().expect("run");
+            eng
+        })
+        .collect();
+        let (inmem, paged) = (&engines[0], &engines[1]);
+        let mut keys = inmem.hdfs().list("cp/");
+        keys.sort();
+        let mut paged_keys = paged.hdfs().list("cp/");
+        paged_keys.sort();
+        assert_eq!(keys, paged_keys, "{}: checkpoint key sets differ", ft.name());
+        assert!(!keys.is_empty(), "{}: no checkpoints written", ft.name());
+        for k in &keys {
+            let a = inmem.hdfs().get(k).expect("in-memory blob");
+            let b = paged.hdfs().get(k).expect("paged blob");
+            assert_eq!(a, b, "{}: checkpoint blob {k} differs between stores", ft.name());
+        }
+    }
+}
+
+// ---------------------------------------------------- budget bounds
+
+#[test]
+fn budget_below_working_set_bounds_resident_bytes() {
+    let adj = webbase(2000, 21);
+    let app = || PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true };
+    // Measure the working set with the in-memory store.
+    let (want, base) = run(
+        &app,
+        &adj,
+        FtKind::LwCp,
+        4,
+        PagerConfig::default(),
+        Backing::Memory,
+        None,
+        "pgw-base",
+    );
+    let ws = base.pager.resident_peak;
+    assert!(ws > 0, "in-memory resident peak must be reported");
+    let budget = ws / 4;
+    let pager = PagerConfig { memory_budget: Some(budget), page_slots: 64 };
+    let (got, m) = run(
+        &app,
+        &adj,
+        FtKind::LwCp,
+        4,
+        pager,
+        Backing::Memory,
+        None,
+        "pgw-paged",
+    );
+    assert_eq!(got, want, "budgeted run changed the result");
+    assert!(m.pager.faults > 0 && m.pager.writebacks > 0, "no spill traffic: {:?}", m.pager);
+    // The budget bounds the steady state; the pinned value+edge page
+    // of the scan may ride above it. A quarter of the working set is a
+    // generous bound for that slack at 64-slot pages.
+    assert!(
+        m.pager.resident_peak <= budget + ws / 4 + 4096,
+        "resident peak {} not bounded by budget {budget} (working set {ws})",
+        m.pager.resident_peak
+    );
+    assert!(
+        m.pager.resident_peak < ws,
+        "paged peak {} should be below the in-memory working set {ws}",
+        m.pager.resident_peak
+    );
+    // Page I/O must show up in the virtual clock: the paged run can
+    // not be faster than the in-memory one.
+    assert!(
+        m.final_time >= base.final_time,
+        "paged run {} finished before the in-memory run {} — page faults uncharged",
+        m.final_time,
+        base.final_time
+    );
+}
+
+#[test]
+fn disk_backed_spill_files_roundtrip() {
+    // Same contract with real spill files on disk (Backing::Disk also
+    // moves the local logs and SimHdfs to the filesystem).
+    let adj = webbase(300, 5);
+    let app = || PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true };
+    let (want, _) = run(
+        &app,
+        &adj,
+        FtKind::LwCp,
+        3,
+        PagerConfig::default(),
+        Backing::Memory,
+        None,
+        "pgd-base",
+    );
+    let (got, m) = run(
+        &app,
+        &adj,
+        FtKind::LwCp,
+        3,
+        tight_pager(),
+        Backing::Disk,
+        Some(FailurePlan::kill_n_at(1, 5)),
+        "pgd-disk",
+    );
+    assert_eq!(got, want, "disk-backed paged run diverged");
+    assert!(m.pager.faults > 0);
+}
+
+#[test]
+fn thread_count_does_not_change_paged_results() {
+    // The per-worker page caches are driven only by their own worker's
+    // deterministic scans: any pool size yields identical digests and
+    // identical fault counts.
+    let adj = webbase(400, 17);
+    let mut got: Vec<(u64, u64)> = Vec::new();
+    for threads in [1usize, 2, 0] {
+        let mut c = cfg(
+            FtKind::LwCp,
+            4,
+            tight_pager(),
+            Backing::Memory,
+            &format!("pgt-{threads}"),
+        );
+        c.threads = threads;
+        let app = PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
+        let mut eng = Engine::new(app, c, &adj)
+            .expect("engine")
+            .with_failures(FailurePlan::kill_n_at(1, 7));
+        let m = eng.run().expect("run");
+        got.push((eng.digest(), m.pager.faults));
+    }
+    assert_eq!(got[0], got[1], "threads=1 vs threads=2 diverged");
+    assert_eq!(got[0], got[2], "threads=1 vs threads=auto diverged");
+}
+
+#[test]
+fn all_seven_apps_bit_identical_under_mid_flight_kills() {
+    // Every app, paged mode, LWCP δ=2 with a kill at superstep 3 (early
+    // enough that even the fast-converging apps are still running):
+    // the recovered digest must equal the in-memory failure-free one.
+    // (The per-FT-algorithm kill sweeps above cover HWCP/HWLog/LWLog.)
+    let adj = webbase(600, 42);
+    fn case<A: App, F: Fn() -> A>(app_fn: F, adj: &[Vec<VertexId>], label: &str) {
+        let (want, _) = run(
+            &app_fn,
+            adj,
+            FtKind::None,
+            0,
+            PagerConfig::default(),
+            Backing::Memory,
+            None,
+            &format!("pgkill-{label}-m"),
+        );
+        let (got, m) = run(
+            &app_fn,
+            adj,
+            FtKind::LwCp,
+            2,
+            tight_pager(),
+            Backing::Memory,
+            Some(FailurePlan::kill_n_at(1, 3)),
+            &format!("pgkill-{label}-p"),
+        );
+        assert_eq!(got, want, "{label}: paged mid-flight-kill run diverged");
+        assert!(m.recovery_control > 0.0, "{label}: kill never fired");
+        assert!(m.pager.faults > 0, "{label}: paged run never faulted");
+    }
+    case(
+        || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true },
+        &adj,
+        "pagerank",
+    );
+    case(|| HashMinCc, &adj, "cc");
+    case(|| Sssp { source: 0 }, &adj, "sssp");
+    case(|| TriangleCount { c: 2 }, &adj, "triangle");
+    case(|| KCore { k: 3 }, &adj, "kcore");
+    case(|| PointerJump, &adj, "pointerjump");
+    case(|| BipartiteMatching, &adj, "bipartite");
+}

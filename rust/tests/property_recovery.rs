@@ -72,6 +72,7 @@ fn cfg(case: &Case, tag: &str) -> EngineConfig {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        pager: Default::default(),
     }
 }
 
@@ -249,6 +250,7 @@ fn double_failure_same_worker_rank() {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            pager: Default::default(),
         };
         let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
         let mut base = Engine::new(app(), c.clone(), &adj).unwrap();

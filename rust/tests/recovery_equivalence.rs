@@ -29,6 +29,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         // this file runs through the machine-combined delivery path
         // (see tests/machine_combine.rs for the on-vs-off goldens).
         machine_combine: true,
+        pager: Default::default(),
     }
 }
 
@@ -441,4 +442,34 @@ fn disk_backed_run_is_equivalent_to_memory() {
         eng.digest()
     };
     assert_eq!(run(Backing::Memory), run(Backing::Disk));
+}
+
+// ------------------------------------------------------------ paged mode
+
+/// The equivalence invariant holds with the out-of-core paged
+/// partition store: a budgeted run that suffers a mid-flight kill
+/// converges to the in-memory failure-free digest, for every FT
+/// algorithm (the deeper paged-vs-in-memory goldens — checkpoint-blob
+/// bytes, budget bounds, all seven apps — live in
+/// `tests/paged_store.rs`).
+#[test]
+fn paged_store_recovers_identically_across_algorithms() {
+    use lwcp::storage::PagerConfig;
+    let adj = webbase(500);
+    let app = || PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true };
+    let mut base =
+        Engine::new(app(), cfg(FtKind::None, 0, "pgeq-base"), &adj).expect("baseline");
+    base.run().expect("baseline run");
+    let want = base.digest();
+    for ft in FtKind::all() {
+        let mut c = cfg(ft, 5, &format!("pgeq-{}", ft.name()));
+        c.pager = PagerConfig { memory_budget: Some(2 * 1024), page_slots: 32 };
+        let mut eng = Engine::new(app(), c, &adj)
+            .expect("paged engine")
+            .with_failures(FailurePlan::kill_n_at(1, 11));
+        let m = eng.run().expect("paged recovery run");
+        assert_eq!(eng.digest(), want, "{}: paged recovery diverged", ft.name());
+        assert!(m.recovery_control > 0.0, "{}: kill never fired", ft.name());
+        assert!(m.pager.faults > 0, "{}: paged run never faulted", ft.name());
+    }
 }

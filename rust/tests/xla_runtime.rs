@@ -109,6 +109,7 @@ fn cfg(tag: &str, ft: FtKind) -> EngineConfig {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        pager: Default::default(),
     }
 }
 
@@ -129,7 +130,7 @@ fn xla_engine_matches_scalar_engine() {
     // paths); the rank fold itself may differ by float fusion, so
     // compare with a tight tolerance rather than bitwise.
     for v in 0..800u32 {
-        let (a, b) = (*scalar.value_of(v), *xla.value_of(v));
+        let (a, b) = (scalar.value_of(v), xla.value_of(v));
         assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0), "v={v}: scalar {a} vs xla {b}");
     }
 }
