@@ -43,6 +43,7 @@ fn triangle_spec(ds: &bs::Dataset, adj_n: usize, scale: f64, tag: &str) -> JobSp
         // Paper reproduction: the measured system has no machine-level
         // combine stage (see bench_support::pagerank_spec).
         machine_combine: false,
+        simd: true,
         pager: Default::default(),
     }
 }

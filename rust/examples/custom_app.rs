@@ -86,6 +86,7 @@ fn main() -> anyhow::Result<()> {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            simd: true,
             pager: Default::default(),
         };
         let mut eng = Engine::new(HashMax, cfg, &adj)?;

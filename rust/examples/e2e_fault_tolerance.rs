@@ -120,6 +120,7 @@ fn main() -> anyhow::Result<()> {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     };
     let mut eng = lwcp::pregel::Engine::new(app, cfg, &adj2)?;

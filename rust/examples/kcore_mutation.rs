@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            simd: true,
             pager: Default::default(),
         };
         let mut eng = Engine::new(KCore { k: 4 }, cfg, &adj)?;

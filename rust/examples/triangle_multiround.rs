@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            simd: true,
             pager: Default::default(),
         };
         let mut eng = Engine::new(TriangleCount { c }, cfg, &adj)?;

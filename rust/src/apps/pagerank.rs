@@ -10,9 +10,14 @@
 //! The numeric update is also available as an XLA batch path
 //! ([`App::xla_superstep`]): the whole partition's fold runs through the
 //! AOT-compiled `pagerank_step` artifact (JAX/Pallas, Layer 1/2), with
-//! message values computed from the kernel's `contrib` output.
+//! message values computed from the kernel's `contrib` output. The
+//! default compute core, though, is the vectorized page-scan kernel
+//! ([`App::page_scan`] → `kernels::pagerank_page_fold`): the rank-sum
+//! fold and the elementwise damping update run lane-chunked over each
+//! pinned page, bit-identical to the per-vertex path (`--no-simd`).
 
-use crate::pregel::app::{App, BatchExec, CombineFn, EmitCtx, UpdateCtx};
+use crate::pregel::app::{App, BatchExec, CombineFn, EmitCtx, PageScanCtx, UpdateCtx};
+use crate::pregel::kernels::{self, KernelMode};
 use crate::pregel::message::{Inbox, Outbox};
 use crate::pregel::partition::Partition;
 use crate::graph::VertexId;
@@ -63,8 +68,10 @@ impl App for PageRank {
         // Equation (2): fold messages into the state.
         if ctx.superstep() > 1 {
             // With the combiner there is at most one (pre-summed)
-            // message; without it this folds the full list.
-            let sum: f32 = msgs.iter().sum();
+            // message; without it this folds the full list — through
+            // the canonical lane-tree so the page-scan kernel path is
+            // bit-identical (same fold, page-granular).
+            let sum = kernels::sum_f32(msgs);
             let old = *ctx.value();
             let new = (1.0 - self.damping) + self.damping * sum;
             ctx.set_value(new);
@@ -144,6 +151,35 @@ impl App for PageRank {
             }
         }
         Ok(())
+    }
+
+    fn supports_page_scan(&self) -> bool {
+        true
+    }
+
+    fn page_scan(&self, mode: KernelMode, ctx: &mut PageScanCtx<'_, f32>, inbox: &Inbox<f32>) {
+        // Superstep 1 only distributes: update() is a no-op there.
+        if ctx.superstep <= 1 {
+            return;
+        }
+        if !ctx.comp.iter().any(|&c| c) {
+            return;
+        }
+        // Gather the per-slot message sums (scalar: a slot's messages
+        // live behind the inbox), through the same canonical lane-tree
+        // fold update() uses, then run the vectorized elementwise
+        // damping update with the page's L1 delta as an f64 lane-tree.
+        let n = ctx.values.len();
+        let mut msg_sum = vec![0.0f32; n];
+        for (off, s) in msg_sum.iter_mut().enumerate() {
+            if ctx.comp[off] {
+                *s = kernels::sum_f32(inbox.msgs(ctx.base + off));
+            }
+        }
+        let delta = kernels::pagerank_page_fold(mode, self.damping, &msg_sum, ctx.comp, ctx.values);
+        *ctx.vals_dirty = true;
+        ctx.agg[0] += delta;
+        // Always-active: no halt votes.
     }
 }
 

@@ -4,7 +4,9 @@
 //! identical messages from state alone.
 
 use crate::graph::VertexId;
-use crate::pregel::app::{App, CombineFn, EmitCtx, UpdateCtx};
+use crate::pregel::app::{App, CombineFn, EmitCtx, PageScanCtx, UpdateCtx};
+use crate::pregel::kernels::{self, KernelMode};
+use crate::pregel::message::Inbox;
 
 /// Value = (distance, changed flag).
 pub type SsspValue = (f32, bool);
@@ -50,10 +52,12 @@ impl App for Sssp {
 
     fn update(&self, ctx: &mut UpdateCtx<'_, SsspValue>, msgs: &[f32]) {
         // Equation (2): relax — the changed flag lives in the value so
-        // emit can decide to propagate from state alone.
+        // emit can decide to propagate from state alone. The min fold
+        // goes through the canonical lane-tree kernel (min is exact,
+        // so this is bitwise the old sequential fold).
         if ctx.superstep() > 1 {
             let (cur, _) = *ctx.value();
-            let best = msgs.iter().copied().fold(f32::INFINITY, f32::min);
+            let best = kernels::min_f32(msgs);
             if best < cur {
                 ctx.set_value((best, true));
             } else {
@@ -70,6 +74,41 @@ impl App for Sssp {
             let id = ctx.id();
             for &to in ctx.neighbors() {
                 ctx.send(to, dist + edge_weight(id, to));
+            }
+        }
+    }
+
+    fn supports_page_scan(&self) -> bool {
+        true
+    }
+
+    fn page_scan(
+        &self,
+        mode: KernelMode,
+        ctx: &mut PageScanCtx<'_, SsspValue>,
+        inbox: &Inbox<f32>,
+    ) {
+        let n = ctx.values.len();
+        let mut any = false;
+        if ctx.superstep > 1 {
+            // Gather the per-slot incoming minima (the same canonical
+            // lane-tree min update() folds), then relax the whole page.
+            let mut msg_min = vec![f32::INFINITY; n];
+            for (off, m) in msg_min.iter_mut().enumerate() {
+                if ctx.comp[off] {
+                    *m = kernels::min_f32(inbox.msgs(ctx.base + off));
+                    any = true;
+                }
+            }
+            if any {
+                kernels::sssp_page_relax(mode, &msg_min, ctx.comp, ctx.values);
+                *ctx.vals_dirty = true;
+            }
+        }
+        // update() votes to halt unconditionally — superstep 1 included.
+        for off in 0..n {
+            if ctx.comp[off] {
+                ctx.active[off] = false;
             }
         }
     }

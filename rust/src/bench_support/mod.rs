@@ -102,6 +102,7 @@ pub fn pagerank_spec(ds: &Dataset, data_scale: f64, tag: &str) -> JobSpec {
         // in both modes — so this knob changes modeled costs, never
         // results.)
         machine_combine: false,
+        simd: true,
         pager: Default::default(),
     }
 }

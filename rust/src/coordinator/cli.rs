@@ -14,6 +14,8 @@
 //!          [--sync-cp]     (disable the overlapped checkpoint commit)
 //!          [--no-machine-combine]  (disable the two-stage shuffle's
 //!                                   machine-level combine trees)
+//!          [--no-simd]     (disable the lane-chunked page-scan compute
+//!                           core; results are bit-identical either way)
 //!          [--memory-budget 64m]   (out-of-core partitions: per-worker
 //!                                   resident budget in bytes, with k/m/g
 //!                                   suffixes; unset = fully in-memory)
@@ -198,6 +200,7 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         threads: f.parse_or("threads", 0)?,
         async_cp: !f.has("sync-cp"),
         machine_combine: !f.has("no-machine-combine"),
+        simd: !f.has("no-simd"),
         pager: PagerConfig {
             memory_budget: f.get("memory-budget").map(parse_byte_size).transpose()?,
             page_slots: f.parse_or("page-slots", PagerConfig::default().page_slots)?,
@@ -240,11 +243,12 @@ fn cmd_run(f: &Flags) -> Result<()> {
         pt.print();
     }
     println!(
-        "supersteps={} virtual_time={} wall={:.0} ms shuffled={} wire={} cp_bytes={} \
-         resident_peak={} faults={}",
+        "supersteps={} virtual_time={} wall={:.0} ms kernels={} shuffled={} wire={} \
+         cp_bytes={} resident_peak={} faults={}",
         m.supersteps_run,
         secs(m.final_time),
         m.wall_ms,
+        if spec.simd { "simd" } else { "scalar" },
         crate::util::fmtutil::bytes(m.bytes.shuffle_bytes),
         crate::util::fmtutil::bytes(m.bytes.wire_bytes),
         crate::util::fmtutil::bytes(m.bytes.checkpoint_bytes),
@@ -322,9 +326,13 @@ mod tests {
         assert_eq!(spec.cp_every, 10);
         assert_eq!(spec.ft, FtKind::LwCp);
         assert!(spec.machine_combine, "two-stage shuffle defaults on");
+        assert!(spec.simd, "page-scan kernels default on");
         assert_eq!(spec.pager.memory_budget, None, "in-memory store by default");
         let off = spec_from_flags(&flags("--no-machine-combine")).unwrap();
         assert!(!off.machine_combine);
+        let scalar = spec_from_flags(&flags("--no-simd")).unwrap();
+        assert!(!scalar.simd, "--no-simd selects the per-vertex core");
+        assert!(scalar.machine_combine, "--no-simd leaves the shuffle alone");
     }
 
     #[test]

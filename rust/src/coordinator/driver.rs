@@ -100,6 +100,12 @@ pub struct JobSpec {
     /// files; unset keeps partitions fully in memory. Results are
     /// identical either way.
     pub pager: PagerConfig,
+    /// Lane-chunked page-scan compute core (see `EngineConfig::simd`):
+    /// SIMD-shaped fold kernels for the scalar hot paths. `false` = the
+    /// per-vertex interpreter core (CLI `--no-simd`). Results are
+    /// bit-identical either way; only the cost model's kernel-throughput
+    /// term differs.
+    pub simd: bool,
 }
 
 impl JobSpec {
@@ -124,6 +130,7 @@ impl JobSpec {
             async_cp: true,
             machine_combine: true,
             pager: PagerConfig::default(),
+            simd: true,
         }
     }
 
@@ -143,6 +150,7 @@ impl JobSpec {
             async_cp: self.async_cp,
             machine_combine: self.machine_combine,
             pager: self.pager,
+            simd: self.simd,
         }
     }
 }

@@ -36,6 +36,7 @@
 //! and LWLog falls back to message logging for it. There is no manual
 //! mask to forget — implementing the hook *is* the mask.
 
+use super::kernels::KernelMode;
 use super::message::Outbox;
 use super::partition::Partition;
 use crate::graph::{Adjacency, Mutation, VertexId};
@@ -150,16 +151,51 @@ pub trait App: Send + Sync + 'static {
     ) -> Result<()> {
         anyhow::bail!("app does not implement an XLA batch path")
     }
+
+    /// Does this app provide a vectorized page-scan kernel for its
+    /// update fold (`pregel::kernels`)? When true (and the engine's
+    /// `simd` knob is on, and the superstep is not a responding one),
+    /// the worker runs [`App::page_scan`] once per pinned page instead
+    /// of [`App::update`] once per vertex. `emit` stays per-vertex
+    /// (graph-topology work), and recovery replay is untouched.
+    fn supports_page_scan(&self) -> bool {
+        false
+    }
+
+    /// The page-scan update: fold one pinned page's incoming messages
+    /// into its values/flags/aggregates in a single pass, using the
+    /// lane-tree kernels of `pregel::kernels`. **Must be bit-identical
+    /// to running [`App::update`] slot by slot** for every `comp` slot
+    /// of the page — the engine's `--no-simd` knob asserts exactly that
+    /// (`tests/kernel_parity.rs`). Only called when
+    /// [`App::supports_page_scan`] returns true.
+    ///
+    /// The default body panics, mirroring [`App::respond`]: reaching it
+    /// means the app declared a kernel without implementing the hook.
+    fn page_scan(
+        &self,
+        _mode: KernelMode,
+        _ctx: &mut PageScanCtx<'_, Self::V>,
+        _inbox: &super::Inbox<Self::M>,
+    ) {
+        unimplemented!(
+            "supports_page_scan() declared a kernel but page_scan() is not implemented"
+        )
+    }
 }
 
 /// Executes an AOT-compiled numeric function over f32 arrays.
 /// Implemented by [`crate::runtime::XlaRegistry`]; the `NoXla` stub
 /// rejects every call (scalar-only engines).
 ///
-/// Deliberately NOT `Send`/`Sync`: the underlying PJRT handles are raw
-/// pointers and the engine drives workers from one thread (worker-level
-/// parallelism happens at the scalar compute phase, not inside PJRT).
-pub trait BatchExec {
+/// `Send + Sync` is part of the contract: `executor::compute_phase`
+/// dispatches batch compute through `WorkerPool::map_named` like every
+/// other phase unit, so the executor is shared across pool threads. The
+/// PJRT implementation satisfies the bound with a **thread-local client
+/// pool** (each pool thread lazily opens its own CPU client and
+/// executable cache — see `runtime::registry`) rather than locking one
+/// shared set of raw PJRT handles across threads.
+pub trait BatchExec: Send + Sync {
     /// Run `fn_name` (padding inputs to the registry's size buckets)
     /// and return its output arrays truncated back to the input length.
     fn run(&self, fn_name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
@@ -363,6 +399,42 @@ impl<'a, V: Clone, M: Codec + Clone> EmitCtx<'a, V, M> {
             out.send(to, m.clone());
         }
     }
+}
+
+/// Page-granular **state-fold** view handed to [`App::page_scan`]: one
+/// whole pinned page of the partition store at a time, instead of the
+/// per-vertex [`UpdateCtx`]. The slices are the page's slot-major
+/// views; element `i` is partition slot `base + i`.
+///
+/// Unlike `UpdateCtx` this is a raw page interface — the kernel writes
+/// the slices directly, so the invariants `set_value`/`vote_to_halt`
+/// enforce become the kernel's responsibility: anyone writing `values`
+/// must set `*vals_dirty` (the page-cache write-back contract), and
+/// halt votes are plain `active[i] = false` writes. `comp` is the
+/// bookkeeping scan's run mask (read-only): a kernel may only touch
+/// slots with `comp[i] == true`, exactly the slots the per-vertex path
+/// would have run `update` on. There is deliberately no adjacency or
+/// mutation access — an app whose update mutates topology keeps the
+/// per-vertex path.
+pub struct PageScanCtx<'a, V> {
+    /// Current superstep number (1-based).
+    pub superstep: u64,
+    /// Partition slot of page element 0.
+    pub base: usize,
+    /// |V| of the whole graph.
+    pub n_vertices: usize,
+    /// The page's vertex values, slot-major.
+    pub values: &'a mut [V],
+    /// Active flags (write `false` to vote a slot to halt).
+    pub active: &'a mut [bool],
+    /// Run mask: which slots compute this superstep.
+    pub comp: &'a [bool],
+    /// Must be set by any kernel that writes `values`.
+    pub vals_dirty: &'a mut bool,
+    /// Aggregator scratch (fold page totals in).
+    pub agg: &'a mut [f64],
+    /// Global aggregator values of the previous superstep.
+    pub agg_prev: &'a [f64],
 }
 
 #[cfg(test)]

@@ -139,6 +139,15 @@ pub struct EngineConfig {
     /// merge-order contract of `pregel::message` (see
     /// `tests/machine_combine.rs`).
     pub machine_combine: bool,
+    /// Vectorized page-scan compute core (`pregel::kernels`): apps that
+    /// implement [`super::app::App::page_scan`] fold each pinned page
+    /// through explicit lane-tree SIMD kernels instead of the
+    /// per-vertex loop. `false` (CLI `--no-simd`) keeps the legacy
+    /// per-vertex path. Results are bit-identical either way — the
+    /// per-slot message folds use the same canonical lane-tree helpers
+    /// in both modes (see `tests/kernel_parity.rs`); only the cost
+    /// model's kernel-throughput term sees the difference.
+    pub simd: bool,
     /// Out-of-core partition store (`storage::pager`): no budget keeps
     /// the fully in-memory layout; `--memory-budget` selects the paged
     /// store that spills cold value/adjacency pages to per-worker
@@ -162,6 +171,7 @@ impl EngineConfig {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            simd: true,
             pager: Default::default(),
         }
     }
@@ -532,6 +542,7 @@ impl<A: App> Engine<A> {
                 refs,
                 app.as_ref(),
                 exec.as_deref(),
+                super::kernels::KernelMode::from_simd_flag(self.cfg.simd),
                 step,
                 &agg_prev,
                 &self.cfg.cost,

@@ -55,6 +55,7 @@
 //! thread, 1 = run every task inline on the master).
 
 use super::app::{App, BatchExec, CombineFn};
+use super::kernels::KernelMode;
 use super::message::{merge_machine_batch, MachineMerge};
 use super::worker::{StepOutput, Worker};
 use crate::graph::Partitioner;
@@ -330,38 +331,40 @@ pub fn select_workers<'a, A: App>(
 /// selected worker, charge each worker's own clock, and return the
 /// outputs with their cost ledgers, in rank order.
 ///
-/// The XLA batch path stays sequential — PJRT handles are not `Sync`;
-/// worker-level parallelism applies to the scalar path (and to every
-/// other phase either way).
+/// Every update core — the XLA batch path, the page-scan kernel path,
+/// and the per-vertex scalar path — dispatches through
+/// [`WorkerPool::map_named`] like the other phase units: `BatchExec` is
+/// a `Send + Sync` contract (the PJRT implementation keeps per-thread
+/// clients — see `runtime::registry`), so batch compute fans out across
+/// workers too instead of serializing on the master. Each worker is
+/// charged the cost branch of the core it actually ran.
 pub fn compute_phase<A: App>(
     pool: &WorkerPool,
     workers: Vec<(usize, &mut Worker<A>)>,
     app: &A,
     exec: Option<&dyn BatchExec>,
+    kern: KernelMode,
     step: u64,
     agg_prev: &[f64],
     cost: &CostModel,
 ) -> Result<Vec<(usize, StepOutput<A::M>, PhaseCost)>> {
+    // Mirror Worker::compute_superstep's core choice exactly, so every
+    // worker's clock is charged for the path it took.
     let use_xla = exec.is_some() && app.supports_xla();
-    if use_xla {
-        let mut out = Vec::with_capacity(workers.len());
-        for (r, w) in workers {
-            let o = w
-                .compute_superstep(app, step, agg_prev, exec)
-                .with_context(|| format!("compute on worker {r} superstep {step}"))?;
-            let t = cost.batch_compute_time(w.part.n_slots() as u64, o.outbox.raw_count());
-            w.clock.advance(t);
-            w.settle_page_io(cost);
-            let pc = PhaseCost { messages_sent: o.outbox.raw_count(), ..Default::default() };
-            out.push((r, o, pc));
-        }
-        return Ok(out);
-    }
+    let use_kernels =
+        !use_xla && kern.enabled() && app.supports_page_scan() && !app.responds_at(step);
     let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
     let results = pool.map_named("compute", Some(ranks.as_slice()), workers, |(r, w)| {
-        match w.compute_superstep(app, step, agg_prev, None) {
+        let n_slots = w.part.n_slots() as u64;
+        match w.compute_superstep(app, step, agg_prev, exec, kern) {
             Ok(o) => {
-                let t = cost.compute_time(o.n_computed, o.outbox.raw_count());
+                let t = if use_xla {
+                    cost.batch_compute_time(n_slots, o.outbox.raw_count())
+                } else if use_kernels {
+                    cost.kernel_compute_time(o.n_computed, o.outbox.raw_count())
+                } else {
+                    cost.compute_time(o.n_computed, o.outbox.raw_count())
+                };
                 w.clock.advance(t);
                 // Out-of-core partitions: faults/write-backs of the
                 // page scan, at disk bandwidth.

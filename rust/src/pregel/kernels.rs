@@ -1,0 +1,463 @@
+//! Lane-chunked SIMD page-scan kernels for the scalar hot paths.
+//!
+//! After the out-of-core PR every hot loop is a page-granular slice
+//! scan, and after the two-phase-trait PR `emit` is side-effect-free —
+//! exactly the shape a vectorized kernel can exploit. This module holds
+//! the numeric cores of that shape: the PageRank rank-sum fold, the
+//! SSSP/min-step relaxation scan, and the combiner accumulator merges
+//! used by `machine_combine_phase` and `Inbox::ingest_group(s)`.
+//!
+//! ## The lane-tree reduction contract
+//!
+//! Every float reduction in this module is a **fixed-width lane-tree**:
+//! element `i` folds into lane `i % LANES` (in ascending `i` within the
+//! lane), and the [`LANES`] partials reduce pairwise —
+//! `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. Both the [`KernelMode::Simd`]
+//! fast path (lane-chunked loops shaped for the autovectorizer) and the
+//! [`KernelMode::Scalar`] fallback (element-at-a-time) compute exactly
+//! this arithmetic, so the two are **bit-identical on every platform**
+//! — there is no "fast but different" mode. The engine-level knob
+//! (`EngineConfig::simd`, CLI `--no-simd`) selects between the kernels
+//! and the legacy per-vertex loops; digests are bit-identical either
+//! way (see `tests/kernel_parity.rs`), because the per-slot message
+//! folds go through the same canonical helpers ([`sum_f32`] /
+//! [`min_f32`]) in every mode, and the only fold whose order differs —
+//! the PageRank L1-delta *aggregate* (an f64 monitoring value, never
+//! read back by the vertex program) — is documented in DESIGN.md §5.
+//!
+//! The slot-merge helpers ([`merge_option_slots`], [`count_some`]) do
+//! not reorder any per-slot combine chain — the two-level machine-major
+//! merge-order contract of `pregel::message` is untouched, and wire
+//! bytes are unchanged — so they run unconditionally, not behind the
+//! knob.
+
+/// Fixed kernel lane width: 8 × f32 is one AVX2 vector (and one TPU VPU
+/// sublane row), wide enough to break loop-carried float dependencies
+/// on every target we care about. The lane-tree *contract* bakes this
+/// number in — changing it changes every float fold's bit pattern, so
+/// it is a cross-version constant, not a tuning knob.
+pub const LANES: usize = 8;
+
+// The pairwise tree helpers below hardcode the 8-lane shape.
+const _: () = assert!(LANES == 8);
+
+/// Which compute core the engine's page scan runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// The legacy per-vertex loops (CLI `--no-simd`): no page-scan
+    /// kernels at all.
+    Off,
+    /// Element-at-a-time fallback computing the *same* fixed-width
+    /// lane-tree arithmetic as [`KernelMode::Simd`] — bit-identical on
+    /// every platform, used where the chunked loops don't pay off.
+    Scalar,
+    /// Lane-chunked loops shaped for the autovectorizer (the default).
+    Simd,
+}
+
+impl KernelMode {
+    /// Engine knob mapping: `EngineConfig::simd` on → the vectorized
+    /// kernels, off → the legacy per-vertex path.
+    pub fn from_simd_flag(simd: bool) -> KernelMode {
+        if simd {
+            KernelMode::Simd
+        } else {
+            KernelMode::Off
+        }
+    }
+
+    /// Does this mode run the page-scan kernels at all?
+    pub fn enabled(self) -> bool {
+        !matches!(self, KernelMode::Off)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::Off => "off",
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+        }
+    }
+}
+
+#[inline(always)]
+fn tree_f32(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+#[inline(always)]
+fn tree_f64(l: &[f64; LANES]) -> f64 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Canonical lane-tree f32 sum — the PageRank rank-sum fold. This is
+/// the *one* fold order used by every mode (the per-vertex path's
+/// multi-message fold included), so the engine knob cannot change
+/// digests. Empty input sums to 0.0.
+pub fn sum_f32(xs: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for c in it.by_ref() {
+        for j in 0..LANES {
+            lanes[j] += c[j];
+        }
+    }
+    for (j, &x) in it.remainder().iter().enumerate() {
+        lanes[j] += x;
+    }
+    tree_f32(&lanes)
+}
+
+/// Element-at-a-time fallback of [`sum_f32`]: same lane assignment
+/// (`i % LANES`), same per-lane fold order, same pairwise tree —
+/// bit-identical by construction (asserted in the tests below).
+pub fn sum_f32_scalar(xs: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    for (i, &x) in xs.iter().enumerate() {
+        lanes[i % LANES] += x;
+    }
+    tree_f32(&lanes)
+}
+
+/// Canonical lane-tree f32 min — the SSSP relaxation fold. Min is exact
+/// (no rounding), so this is bitwise equal to a sequential fold for any
+/// NaN-free input; the lane shape exists for the vectorizer, not for
+/// the contract. Empty input is `f32::INFINITY` (the fold identity).
+pub fn min_f32(xs: &[f32]) -> f32 {
+    let mut lanes = [f32::INFINITY; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for c in it.by_ref() {
+        for j in 0..LANES {
+            lanes[j] = lanes[j].min(c[j]);
+        }
+    }
+    for (j, &x) in it.remainder().iter().enumerate() {
+        lanes[j] = lanes[j].min(x);
+    }
+    ((lanes[0].min(lanes[1])).min(lanes[2].min(lanes[3])))
+        .min((lanes[4].min(lanes[5])).min(lanes[6].min(lanes[7])))
+}
+
+/// Element-at-a-time fallback of [`min_f32`].
+pub fn min_f32_scalar(xs: &[f32]) -> f32 {
+    let mut lanes = [f32::INFINITY; LANES];
+    for (i, &x) in xs.iter().enumerate() {
+        lanes[i % LANES] = lanes[i % LANES].min(x);
+    }
+    ((lanes[0].min(lanes[1])).min(lanes[2].min(lanes[3])))
+        .min((lanes[4].min(lanes[5])).min(lanes[6].min(lanes[7])))
+}
+
+/// The PageRank page fold: for every `comp` slot,
+/// `new = (1 - damping) + damping * msg_sum[i]` replaces `values[i]`,
+/// and the page's L1 delta `Σ |new - old|` comes back as an f64
+/// lane-tree (this aggregate's fold order is the one float-order change
+/// of the kernel path — DESIGN.md §5). Non-`comp` slots are untouched
+/// and contribute exactly `+0.0` per lane.
+///
+/// `Scalar` and `Simd` are bit-identical: same lane assignment, same
+/// per-lane order, same tree. `Off` is mapped to `Scalar` (the worker
+/// never dispatches a page scan in `Off` mode).
+pub fn pagerank_page_fold(
+    mode: KernelMode,
+    damping: f32,
+    msg_sum: &[f32],
+    comp: &[bool],
+    values: &mut [f32],
+) -> f64 {
+    let n = values.len();
+    debug_assert_eq!(msg_sum.len(), n);
+    debug_assert_eq!(comp.len(), n);
+    let base = 1.0 - damping;
+    let mut acc = [0.0f64; LANES];
+    match mode {
+        KernelMode::Simd => {
+            let mut i = 0;
+            while i + LANES <= n {
+                for j in 0..LANES {
+                    let k = i + j;
+                    let run = comp[k];
+                    let old = values[k];
+                    let new = base + damping * msg_sum[k];
+                    values[k] = if run { new } else { old };
+                    acc[j] += if run { (new - old).abs() as f64 } else { 0.0 };
+                }
+                i += LANES;
+            }
+            while i < n {
+                let j = i % LANES;
+                let run = comp[i];
+                let old = values[i];
+                let new = base + damping * msg_sum[i];
+                values[i] = if run { new } else { old };
+                acc[j] += if run { (new - old).abs() as f64 } else { 0.0 };
+                i += 1;
+            }
+        }
+        KernelMode::Scalar | KernelMode::Off => {
+            for i in 0..n {
+                let j = i % LANES;
+                let run = comp[i];
+                let old = values[i];
+                let new = base + damping * msg_sum[i];
+                values[i] = if run { new } else { old };
+                acc[j] += if run { (new - old).abs() as f64 } else { 0.0 };
+            }
+        }
+    }
+    tree_f64(&acc)
+}
+
+/// The SSSP/min-step page relaxation: for every `comp` slot, compare
+/// the combined incoming minimum against the current distance and write
+/// `(min, true)` on improvement, `(cur, false)` otherwise — exactly
+/// [`crate::apps::Sssp`]'s per-vertex relax. No float fold happens here
+/// (min is exact), so `Scalar`/`Simd` differ only in loop shape.
+pub fn sssp_page_relax(
+    mode: KernelMode,
+    msg_min: &[f32],
+    comp: &[bool],
+    values: &mut [(f32, bool)],
+) {
+    let n = values.len();
+    debug_assert_eq!(msg_min.len(), n);
+    debug_assert_eq!(comp.len(), n);
+    #[inline(always)]
+    fn relax(cur: (f32, bool), m: f32, run: bool) -> (f32, bool) {
+        if !run {
+            return cur;
+        }
+        if m < cur.0 {
+            (m, true)
+        } else {
+            (cur.0, false)
+        }
+    }
+    match mode {
+        KernelMode::Simd => {
+            let mut i = 0;
+            while i + LANES <= n {
+                for j in 0..LANES {
+                    let k = i + j;
+                    values[k] = relax(values[k], msg_min[k], comp[k]);
+                }
+                i += LANES;
+            }
+            while i < n {
+                values[i] = relax(values[i], msg_min[i], comp[i]);
+                i += 1;
+            }
+        }
+        KernelMode::Scalar | KernelMode::Off => {
+            for i in 0..n {
+                values[i] = relax(values[i], msg_min[i], comp[i]);
+            }
+        }
+    }
+}
+
+/// The combiner accumulator merge of `Inbox::ingest_group(s)`: fold a
+/// per-machine partial (`partial`) into the inbox slots, taking each
+/// `Some` entry and combining it into (or moving it to) the same slot.
+/// Lane-chunked strides for locality; the per-slot `combine()` chain —
+/// what the merge-order contract of `pregel::message` pins — is
+/// untouched, slots are independent, and ascending-slot traversal is
+/// preserved, so this runs unconditionally (no knob) and wire bytes
+/// are unchanged. `partial` comes back all-`None`.
+pub fn merge_option_slots<M, F: Fn(&mut M, &M)>(
+    combine: F,
+    slots: &mut [Option<M>],
+    partial: &mut [Option<M>],
+) {
+    let n = slots.len().min(partial.len());
+    let mut i = 0;
+    while i < n {
+        let end = (i + LANES).min(n);
+        for k in i..end {
+            if let Some(p) = partial[k].take() {
+                match &mut slots[k] {
+                    Some(cur) => combine(cur, &p),
+                    e @ None => *e = Some(p),
+                }
+            }
+        }
+        i = end;
+    }
+}
+
+/// Lane-chunked occupancy count of a combined accumulator (the count
+/// header pass of `merge_machine_batch`). Integer counting — exact in
+/// any order.
+pub fn count_some<M>(slots: &[Option<M>]) -> usize {
+    let mut lanes = [0usize; LANES];
+    let mut it = slots.chunks_exact(LANES);
+    for c in it.by_ref() {
+        for j in 0..LANES {
+            lanes[j] += c[j].is_some() as usize;
+        }
+    }
+    for (j, s) in it.remainder().iter().enumerate() {
+        lanes[j] += s.is_some() as usize;
+    }
+    lanes.iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random f32s (no external rand crate).
+    fn noise(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s % 10_000) as f32) / 100.0 + 0.01
+            })
+            .collect()
+    }
+
+    /// The lane-tail lengths the parity sweeps must cover: empty, 1,
+    /// lane−1, lane, lane+1, odd, and a couple of multi-chunk sizes.
+    const SIZES: [usize; 10] = [0, 1, 7, 8, 9, 15, 16, 17, 31, 1000];
+
+    #[test]
+    fn sum_fast_and_fallback_are_bit_identical() {
+        for (i, &n) in SIZES.iter().enumerate() {
+            let xs = noise(n, i as u64 + 1);
+            assert_eq!(
+                sum_f32(&xs).to_bits(),
+                sum_f32_scalar(&xs).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn min_fast_and_fallback_are_bit_identical_and_exact() {
+        for (i, &n) in SIZES.iter().enumerate() {
+            let xs = noise(n, i as u64 + 77);
+            assert_eq!(min_f32(&xs).to_bits(), min_f32_scalar(&xs).to_bits(), "n={n}");
+            let seq = xs.iter().copied().fold(f32::INFINITY, f32::min);
+            assert_eq!(min_f32(&xs).to_bits(), seq.to_bits(), "min must be order-free, n={n}");
+        }
+        assert!(min_f32(&[]).is_infinite());
+        assert_eq!(sum_f32(&[]), 0.0);
+    }
+
+    #[test]
+    fn sum_matches_an_explicit_lane_tree() {
+        // Pin the contract itself, not just fast==fallback: element i
+        // goes to lane i % LANES, lanes reduce pairwise.
+        let xs = noise(21, 5);
+        let mut lanes = [0.0f32; LANES];
+        for (i, &x) in xs.iter().enumerate() {
+            lanes[i % LANES] += x;
+        }
+        let want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+        assert_eq!(sum_f32(&xs).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn pagerank_fold_modes_are_bit_identical() {
+        for (i, &n) in SIZES.iter().enumerate() {
+            let msg = noise(n, i as u64 + 3);
+            // A lane-tail-unfriendly comp mask: every third slot idle.
+            let comp: Vec<bool> = (0..n).map(|k| k % 3 != 2).collect();
+            let mut va = noise(n, i as u64 + 9);
+            let mut vb = va.clone();
+            let da = pagerank_page_fold(KernelMode::Simd, 0.85, &msg, &comp, &mut va);
+            let db = pagerank_page_fold(KernelMode::Scalar, 0.85, &msg, &comp, &mut vb);
+            assert_eq!(da.to_bits(), db.to_bits(), "delta bits, n={n}");
+            for k in 0..n {
+                assert_eq!(va[k].to_bits(), vb[k].to_bits(), "value[{k}], n={n}");
+            }
+            // Idle slots untouched, run slots replaced.
+            let orig = noise(n, i as u64 + 9);
+            for k in 0..n {
+                if !comp[k] {
+                    assert_eq!(va[k].to_bits(), orig[k].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pagerank_fold_values_match_per_vertex_semantics() {
+        // The per-slot *values* (not the f64 delta aggregate) must be
+        // bitwise what the per-vertex update computes.
+        let n = 23;
+        let msg = noise(n, 40);
+        let comp = vec![true; n];
+        let mut v = noise(n, 41);
+        let per_vertex: Vec<f32> =
+            v.iter().zip(&msg).map(|(_, &m)| (1.0 - 0.85f32) + 0.85 * m).collect();
+        pagerank_page_fold(KernelMode::Simd, 0.85, &msg, &comp, &mut v);
+        for k in 0..n {
+            assert_eq!(v[k].to_bits(), per_vertex[k].to_bits(), "value[{k}]");
+        }
+    }
+
+    #[test]
+    fn sssp_relax_modes_are_bit_identical() {
+        for (i, &n) in SIZES.iter().enumerate() {
+            let m = noise(n, i as u64 + 13);
+            let comp: Vec<bool> = (0..n).map(|k| k % 5 != 0).collect();
+            let base: Vec<(f32, bool)> =
+                noise(n, i as u64 + 21).iter().map(|&d| (d, d > 50.0)).collect();
+            let mut va = base.clone();
+            let mut vb = base.clone();
+            sssp_page_relax(KernelMode::Simd, &m, &comp, &mut va);
+            sssp_page_relax(KernelMode::Scalar, &m, &comp, &mut vb);
+            assert_eq!(va, vb, "n={n}");
+            for k in 0..n {
+                if !comp[k] {
+                    assert_eq!(va[k], base[k], "idle slot touched, n={n}");
+                } else if m[k] < base[k].0 {
+                    assert_eq!(va[k], (m[k], true));
+                } else {
+                    assert_eq!(va[k], (base[k].0, false));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_option_slots_matches_the_reference_loop() {
+        let combine = |acc: &mut f32, m: &f32| *acc += *m;
+        for &n in &SIZES {
+            let mk = |seed: u64| -> Vec<Option<f32>> {
+                noise(n, seed)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(k, x)| ((k as u64 + seed) % 3 != 0).then_some(x))
+                    .collect()
+            };
+            let mut slots = mk(2);
+            let mut partial = mk(5);
+            let mut want = slots.clone();
+            for (slot, p) in mk(5).iter_mut().enumerate() {
+                if let Some(p) = p.take() {
+                    match &mut want[slot] {
+                        Some(cur) => combine(cur, &p),
+                        e @ None => *e = Some(p),
+                    }
+                }
+            }
+            merge_option_slots(combine, &mut slots, &mut partial);
+            assert_eq!(slots, want, "n={n}");
+            assert!(partial.iter().all(Option::is_none), "partial must come back drained");
+        }
+    }
+
+    #[test]
+    fn count_some_matches_filter_count() {
+        for &n in &SIZES {
+            let slots: Vec<Option<u8>> = (0..n).map(|k| (k % 7 != 3).then_some(1u8)).collect();
+            assert_eq!(count_some(&slots), slots.iter().filter(|s| s.is_some()).count());
+        }
+    }
+}

@@ -27,8 +27,19 @@
 //! keeps its group, so recovery reproduces the exact same merge tree.
 //! Non-combined (direct) messages keep generation order: ascending
 //! (source machine, sender rank), concatenation within a group.
+//!
+//! The accumulator **scans** of both stages — applying a drained
+//! partial to the inbox slots and counting occupied slots before
+//! encoding — run through the lane-chunked kernels of
+//! `pregel::kernels` ([`crate::pregel::kernels::merge_option_slots`],
+//! [`crate::pregel::kernels::count_some`]). Those kernels stride
+//! across *slots*, never within a slot's combine chain, so the
+//! contract above (and every wire byte) is unchanged; they are always
+//! on, independent of the engine's `simd` knob, which governs only the
+//! page-scan compute core.
 
 use super::app::CombineFn;
+use super::kernels;
 use crate::graph::{Partitioner, VertexId};
 use crate::util::codec::{Codec, Reader};
 use anyhow::{bail, Result};
@@ -250,7 +261,7 @@ pub fn merge_machine_batch<M: Codec + Clone>(
             for (_, _, b) in &members[i..j] {
                 in_msgs += fold_combined(combine, &mut acc[..n_slots], b)?;
             }
-            let count = acc[..n_slots].iter().filter(|m| m.is_some()).count() as u32;
+            let count = kernels::count_some(&acc[..n_slots]) as u32;
             out_msgs += count as u64;
             data.reserve(4 + count as usize * (4 + std::mem::size_of::<M>()));
             count.encode(&mut data);
@@ -463,14 +474,10 @@ impl<M: Codec + Clone> Inbox<M> {
                     for b in batches {
                         n += fold_combined(*combine, scratch, b)?;
                     }
-                    for (slot, p) in scratch.iter_mut().enumerate() {
-                        if let Some(p) = p.take() {
-                            match &mut slots[slot] {
-                                Some(cur) => combine(cur, &p),
-                                e @ None => *e = Some(p),
-                            }
-                        }
-                    }
+                    // Apply the drained partial slot by slot — the
+                    // second fold level of the merge-order contract,
+                    // lane-chunked across independent slots.
+                    kernels::merge_option_slots(*combine, slots, scratch);
                     n
                 };
                 *count += n;

@@ -24,14 +24,16 @@ pub mod aggregator;
 pub mod app;
 pub mod engine;
 pub mod executor;
+pub mod kernels;
 pub mod message;
 pub mod partition;
 pub mod worker;
 
 pub use aggregator::AggState;
-pub use app::{App, BatchExec, EmitCtx, NoXla, UpdateCtx};
+pub use app::{App, BatchExec, EmitCtx, NoXla, PageScanCtx, UpdateCtx};
 pub use engine::{Engine, EngineConfig, FailurePlan, Kill};
 pub use executor::WorkerPool;
+pub use kernels::{KernelMode, LANES};
 pub use message::{Inbox, Outbox};
 pub use partition::Partition;
 pub use worker::Worker;

@@ -2,7 +2,8 @@
 //! and per-superstep state s(W).
 
 use super::aggregator::AggState;
-use super::app::{App, BatchExec, EmitCtx, UpdateCtx};
+use super::app::{App, BatchExec, EmitCtx, PageScanCtx, UpdateCtx};
+use super::kernels::KernelMode;
 use super::message::{Inbox, Outbox};
 use super::partition::Partition;
 use crate::graph::{Mutation, Partitioner, VertexId};
@@ -113,12 +114,20 @@ impl<A: App> Worker<A> {
     /// consuming the current inbox. The scan is page-granular: one page
     /// pair of the partition store is pinned at a time and its slots
     /// scanned with plain slice indexing.
+    ///
+    /// Three update cores share the scan, picked per superstep: the XLA
+    /// batch path (`exec` + [`App::supports_xla`]), the vectorized
+    /// page-scan kernels (`kern` enabled + [`App::supports_page_scan`],
+    /// never on responding supersteps), and the per-vertex loop. All
+    /// three produce bit-identical values, flags, and messages; `emit`
+    /// is per-vertex in every core.
     pub fn compute_superstep(
         &mut self,
         app: &A,
         superstep: u64,
         agg_prev: &[f64],
         exec: Option<&dyn BatchExec>,
+        kern: KernelMode,
     ) -> Result<StepOutput<A::M>> {
         // Rotate the inbox pair: the spare (fully consumed one superstep
         // ago) is reset *in place* — keeping its slot allocations — and
@@ -147,6 +156,69 @@ impl<A: App> Worker<A> {
             // (incl. comp/active bookkeeping) through the XLA executor.
             app.xla_superstep(exec, superstep, &mut self.part, inbox, &mut out, &mut agg.slots)?;
             n_computed = self.part.comp_count();
+        } else if kern.enabled() && app.supports_page_scan() && !responding {
+            // Page-scan kernel path: the bookkeeping scan (run mask,
+            // reactivation, compute count) is app-independent and runs
+            // here; the app's kernel then folds the whole page at once
+            // — bit-identical to running update() slot by slot — and
+            // emit stays per-vertex over the run mask. Two passes are
+            // equivalent to the interleaved per-vertex loop because
+            // update only ever writes its own slot and emit only reads
+            // its own slot, and message order (ascending slot) is
+            // preserved.
+            let rank = self.rank;
+            let partitioner = self.part.partitioner;
+            let n_vertices = partitioner.n_vertices;
+            for p in 0..self.part.n_pages() {
+                let (vp, ep) = self.part.page_pair(p);
+                let base = vp.base;
+                let values = vp.values;
+                let active = vp.active;
+                let comp = vp.comp;
+                let vals_dirty = vp.dirty;
+                let adj = ep.adj;
+                for off in 0..values.len() {
+                    let run = active[off] || inbox.has(base + off);
+                    comp[off] = run;
+                    if run {
+                        // A halted vertex is reactivated by incoming
+                        // messages (the kernel may vote it back down).
+                        active[off] = true;
+                        n_computed += 1;
+                    }
+                }
+                app.page_scan(
+                    kern,
+                    &mut PageScanCtx {
+                        superstep,
+                        base,
+                        n_vertices,
+                        values: &mut values[..],
+                        active: &mut active[..],
+                        comp: &comp[..],
+                        vals_dirty: &mut *vals_dirty,
+                        agg: &mut agg.slots,
+                        agg_prev,
+                    },
+                    inbox,
+                );
+                for off in 0..values.len() {
+                    if !comp[off] {
+                        continue;
+                    }
+                    let mut ectx = EmitCtx {
+                        id: partitioner.id_of(rank, base + off),
+                        off,
+                        superstep,
+                        n_vertices,
+                        values: &values[..],
+                        adj: &*adj,
+                        agg_prev,
+                        out: &mut out,
+                    };
+                    app.emit(&mut ectx);
+                }
+            }
         } else {
             let rank = self.rank;
             let partitioner = self.part.partitioner;

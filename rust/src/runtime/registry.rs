@@ -6,17 +6,23 @@
 //! function-specific *inert* values (chosen so padded slots contribute
 //! nothing to reductions) and outputs are truncated back.
 //!
-//! Executables are compiled lazily on first use and cached; the PJRT
-//! client is shared. All methods are thread-safe (a mutex guards the
-//! cache; PJRT execution itself is serialized per executable, which is
-//! fine — the simulated cluster's workers execute sequentially and the
-//! real-time hot path is measured in the `hotpath` bench).
+//! `BatchExec` is a `Send + Sync` contract (the compute phase dispatches
+//! batch work through `WorkerPool::map_named` like every other phase
+//! unit), but PJRT client handles are not `Sync`. The registry therefore
+//! keeps a **thread-local client pool**: each pool thread lazily creates
+//! its own `PjRtClient` and compiles executables into a thread-local
+//! cache keyed by (registry id, function, bucket). The shared registry
+//! itself holds only immutable manifest metadata, so it is `Send + Sync`
+//! without any locking; per-thread compilation is the (bounded,
+//! one-time) price for lock-free execution on the hot path.
 
 use crate::pregel::app::BatchExec;
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 struct ArtifactInfo {
     bucket: usize,
@@ -25,12 +31,30 @@ struct ArtifactInfo {
 }
 
 /// Registry of AOT-compiled numeric functions.
+///
+/// Holds immutable manifest metadata only; PJRT clients and compiled
+/// executables live in thread-local pools (see module docs), so the
+/// registry is `Send + Sync` by construction.
 pub struct XlaRegistry {
-    client: xla::PjRtClient,
+    /// Distinguishes this registry in the thread-local executable cache
+    /// (two registries loaded from different artifact dirs must not
+    /// share compiled entries).
+    id: u64,
     /// (fn, bucket) -> artifact metadata; buckets ascending per fn.
     artifacts: HashMap<String, Vec<ArtifactInfo>>,
-    /// Compiled executables, keyed by (fn, bucket).
-    compiled: Mutex<HashMap<(String, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+static NEXT_REGISTRY_ID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Per-thread PJRT client, created on first batch call from this
+    /// thread. PJRT handles are not `Sync`; one client per pool thread
+    /// sidesteps the restriction without serializing execution.
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+    /// Per-thread compiled-executable cache, keyed by
+    /// (registry id, fn name, bucket).
+    static COMPILED: RefCell<HashMap<(u64, String, usize), Arc<xla::PjRtLoadedExecutable>>> =
+        RefCell::new(HashMap::new());
 }
 
 /// Inert padding values per function input (see module docs): padded
@@ -54,11 +78,14 @@ fn padding_for(fn_name: &str, n_inputs: usize) -> Result<Vec<f32>> {
 
 impl XlaRegistry {
     /// Load the manifest from an artifacts directory.
+    ///
+    /// Cheap: only metadata is parsed here. PJRT clients are created
+    /// lazily, per thread, on the first `run` call (so a client-creation
+    /// failure surfaces from `run`, not `load`).
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut artifacts: HashMap<String, Vec<ArtifactInfo>> = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
             let parts: Vec<&str> = line.split_whitespace().collect();
@@ -81,7 +108,8 @@ impl XlaRegistry {
         if artifacts.is_empty() {
             bail!("empty manifest at {}", manifest.display());
         }
-        Ok(XlaRegistry { client, artifacts, compiled: Mutex::new(HashMap::new()) })
+        let id = NEXT_REGISTRY_ID.fetch_add(1, Ordering::Relaxed);
+        Ok(XlaRegistry { id, artifacts })
     }
 
     /// Default artifacts directory: `$LWCP_ARTIFACTS` or `./artifacts`.
@@ -117,25 +145,32 @@ impl XlaRegistry {
                 infos.last().map(|i| i.bucket).unwrap_or(0)))
     }
 
+    /// Compile (or fetch from this thread's cache) the executable for
+    /// `fn_name` at `info.bucket`, using this thread's PJRT client.
     fn executable(
         &self,
         fn_name: &str,
         info: &ArtifactInfo,
-    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        let key = (fn_name.to_string(), info.bucket);
-        let mut cache = self.compiled.lock().unwrap();
-        if let Some(e) = cache.get(&key) {
-            return Ok(e.clone());
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = (self.id, fn_name.to_string(), info.bucket);
+        if let Some(e) = COMPILED.with(|c| c.borrow().get(&key).cloned()) {
+            return Ok(e);
         }
-        let proto = xla::HloModuleProto::from_text_file(&info.file)
-            .with_context(|| format!("parsing {}", info.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {fn_name}/{}", info.bucket))?;
-        let exe = std::sync::Arc::new(exe);
-        cache.insert(key, exe.clone());
+        let exe = CLIENT.with(|slot| -> Result<Arc<xla::PjRtLoadedExecutable>> {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(xla::PjRtClient::cpu().context("creating PJRT CPU client")?);
+            }
+            let client = slot.as_ref().unwrap();
+            let proto = xla::HloModuleProto::from_text_file(&info.file)
+                .with_context(|| format!("parsing {}", info.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {fn_name}/{}", info.bucket))?;
+            Ok(Arc::new(exe))
+        })?;
+        COMPILED.with(|c| c.borrow_mut().insert(key, exe.clone()));
         Ok(exe)
     }
 }

@@ -2,8 +2,10 @@
 //!
 //! Mirrors the API surface of the PJRT-backed `registry::XlaRegistry`
 //! exactly, but `load()`/`load_default()` always fail, so the engine's
-//! scalar path is used everywhere. This keeps the default build free of
-//! the external `xla` crate (see `runtime/mod.rs`).
+//! page-scan/per-vertex cores are used everywhere. This keeps the
+//! default build free of the external `xla` crate (see
+//! `runtime/mod.rs`). The stub is trivially `Send + Sync`, matching the
+//! real registry's thread-local-client-pool contract.
 
 use crate::pregel::app::BatchExec;
 use anyhow::{bail, Result};

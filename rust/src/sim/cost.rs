@@ -152,6 +152,15 @@ pub struct CostModel {
     pub per_vertex_batch: f64,
     /// Fixed cost per XLA executable launch.
     pub xla_launch: f64,
+    /// Throughput multiplier of the vectorized page-scan kernels
+    /// (`pregel::kernels`) over the per-vertex scalar update: the
+    /// kernel path divides `per_vertex` by this. The default of 1.0
+    /// charges the kernel path exactly like the scalar path, so the
+    /// calibration bands of `tests/calibration.rs` — fit against the
+    /// paper's testbed, whose timings bake in whatever vectorization
+    /// Pregel+'s compiler did — are unchanged; raise it to study the
+    /// measured ratio (hotpath bench section 9).
+    pub kernel_speedup: f64,
     // --- control ---
     /// Barrier / collective sync overhead per superstep.
     pub barrier_overhead: f64,
@@ -193,6 +202,7 @@ impl Default for CostModel {
             per_msg_combine: 25.0e-9,
             per_vertex_batch: 6.0e-9,
             xla_launch: 50.0e-6,
+            kernel_speedup: 1.0,
             barrier_overhead: 5.0e-3,
             spawn_cost: 2.0,
             shrink_cost: 0.5,
@@ -226,6 +236,18 @@ impl CostModel {
     pub fn compute_time(&self, n_vertices: u64, n_msgs: u64) -> f64 {
         self.profile.compute_mult()
             * (self.scaled(n_vertices) * self.per_vertex
+                + self.scaled(n_msgs) * self.per_msg_send)
+    }
+
+    /// CPU time for the page-scan kernel path over `n_vertices`
+    /// computed slots plus scalar message generation for `n_msgs` (the
+    /// emit half stays per-vertex). With the default
+    /// `kernel_speedup = 1.0` this is identical to
+    /// [`CostModel::compute_time`], keeping virtual-time tables
+    /// calibrated while the kernel mode is the engine default.
+    pub fn kernel_compute_time(&self, n_vertices: u64, n_msgs: u64) -> f64 {
+        self.profile.compute_mult()
+            * (self.scaled(n_vertices) * self.per_vertex / self.kernel_speedup
                 + self.scaled(n_msgs) * self.per_msg_send)
     }
 
@@ -483,6 +505,20 @@ mod tests {
         let base = CostModel::default().compute_time(1000, 1000);
         let giraph = CostModel::with_profile(SystemProfile::GiraphLike).compute_time(1000, 1000);
         assert!((giraph / base - 5.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kernel_cost_is_calibration_neutral_by_default() {
+        // The knob's contract: at the default speedup the kernel path
+        // charges exactly like the scalar path (so enabling kernels by
+        // default cannot move the calibration bands), and a raised
+        // speedup only discounts the per-vertex term, never the
+        // message-generation term (emit stays per-vertex).
+        let m = CostModel::default();
+        assert_eq!(m.kernel_compute_time(5000, 9000), m.compute_time(5000, 9000));
+        let fast = CostModel { kernel_speedup: 2.0, ..Default::default() };
+        assert!(fast.kernel_compute_time(5000, 0) < fast.compute_time(5000, 0));
+        assert_eq!(fast.kernel_compute_time(0, 9000), fast.compute_time(0, 9000));
     }
 
     #[test]

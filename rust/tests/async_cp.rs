@@ -27,6 +27,7 @@ fn cfg(ft: FtKind, cp_every: u64, async_cp: bool, tag: &str) -> EngineConfig {
         threads: 0,
         async_cp,
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     }
 }

@@ -24,6 +24,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     }
 }

@@ -19,6 +19,17 @@
 //! digest again when a worker is killed and recovered mid-job. Any
 //! semantic drift introduced by splitting `compute` into
 //! `update`/`emit`/`respond` fails here, bit for bit.
+//!
+//! **Float fold order** (updated with the page-scan kernel PR, as the
+//! merge-order PRs did before it): the engine's per-slot message folds
+//! now run through the canonical lane-tree reductions in
+//! `pregel::kernels` (`sum_f32`/`min_f32`), in every compute core. The
+//! legacy programs below fold through the same helpers so the
+//! reference stays the engine's bit-exact twin. For the combined
+//! (≤1-message) lists these goldens exercise, the lane-tree value is
+//! identical to the seed's sequential fold — `min` is exact, and a
+//! one-element lane-tree sum is `0.0 + m`, the seed's `iter().sum()`
+//! — so the legacy twins remain faithful to the seed sources too.
 
 use lwcp::apps::sssp::edge_weight;
 use lwcp::apps::*;
@@ -240,6 +251,7 @@ fn run_new<A: App, F: Fn() -> A>(
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     };
     let mut eng = Engine::new(app_fn(), cfg, adj).expect("engine");
@@ -322,7 +334,8 @@ impl LegacyApp for LegacyPageRank {
     }
     fn compute(&self, ctx: &mut LegacyCtx<'_, f32, f32>, msgs: &[f32]) {
         if ctx.superstep() > 1 {
-            let sum: f32 = msgs.iter().sum();
+            // The canonical lane-tree fold (see the module docs).
+            let sum = lwcp::pregel::kernels::sum_f32(msgs);
             let old = *ctx.value();
             let new = (1.0 - self.damping) + self.damping * sum;
             ctx.set_value(new);
@@ -365,7 +378,9 @@ impl LegacyApp for LegacySssp {
     fn compute(&self, ctx: &mut LegacyCtx<'_, (f32, bool), f32>, msgs: &[f32]) {
         if ctx.superstep() > 1 {
             let (cur, _) = *ctx.value();
-            let best = msgs.iter().copied().fold(f32::INFINITY, f32::min);
+            // The canonical lane-tree fold (min is exact, so this is
+            // also bitwise the seed's sequential fold).
+            let best = lwcp::pregel::kernels::min_f32(msgs);
             if best < cur {
                 ctx.set_value((best, true));
             } else {

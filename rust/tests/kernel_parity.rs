@@ -1,0 +1,241 @@
+//! Lane-tail goldens for the vectorized page-scan compute core.
+//!
+//! The kernel contract (`pregel::kernels`, DESIGN.md §5): the
+//! lane-chunked fast path and its scalar fallback run the *same*
+//! fixed-width lane-tree reduction, and both must be bit-identical to
+//! the per-vertex interpreter (`--no-simd`). The seams where that
+//! breaks in practice are the **tails**: pages and partitions whose
+//! slot counts are not multiples of the lane width (`LANES` = 8), where
+//! a chunked loop's remainder handling can silently fold in a different
+//! order. These tests sweep page sizes of 1, `LANES`−1, `LANES`+1 and
+//! an odd multi-lane size, with vertex counts chosen so per-worker slot
+//! counts are lane non-multiples too — asserting kernel-on vs
+//! kernel-off digest parity for all seven apps, failure-free and
+//! through mid-flight kills.
+
+use lwcp::apps::*;
+use lwcp::ft::FtKind;
+use lwcp::graph::{generate, PresetGraph, VertexId};
+use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan, LANES};
+use lwcp::sim::Topology;
+use lwcp::storage::{Backing, PagerConfig};
+
+fn cfg(simd: bool, page_slots: usize, ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
+    EngineConfig {
+        topo: Topology::new(3, 2), // 6 workers on 3 machines
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+        threads: 0,
+        async_cp: true,
+        machine_combine: true,
+        simd,
+        pager: PagerConfig { memory_budget: None, page_slots },
+    }
+}
+
+/// Digest of one run at the given kernel mode / page size.
+fn digest<A: App, F: Fn() -> A>(
+    app_fn: &F,
+    adj: &[Vec<VertexId>],
+    simd: bool,
+    page_slots: usize,
+    ft: FtKind,
+    cp_every: u64,
+    plan: Option<FailurePlan>,
+    label: &str,
+) -> u64 {
+    let c = cfg(simd, page_slots, ft, cp_every, &format!("{label}-p{page_slots}-s{simd}"));
+    let mut eng = Engine::new(app_fn(), c, adj).expect("engine");
+    let killed = plan.is_some();
+    if let Some(p) = plan {
+        eng = eng.with_failures(p);
+    }
+    let m = eng.run().expect("run");
+    if killed {
+        assert!(m.recovery_control > 0.0, "{label}: the kill never fired");
+    }
+    eng.digest()
+}
+
+/// Kernel-on must equal kernel-off bit for bit, at every page size in
+/// the lane-tail sweep, failure-free and through a mid-flight kill.
+fn assert_kernel_parity<A: App, F: Fn() -> A>(
+    app_fn: F,
+    adj: &[Vec<VertexId>],
+    page_sizes: &[usize],
+    kill_at: u64,
+    label: &str,
+) {
+    for &ps in page_sizes {
+        for plan in [None, Some(FailurePlan::kill_n_at(1, kill_at))] {
+            let killed = plan.is_some();
+            let off = digest(&app_fn, adj, false, ps, FtKind::LwCp, 4, plan.clone(), label);
+            let on = digest(&app_fn, adj, true, ps, FtKind::LwCp, 4, plan, label);
+            assert_eq!(
+                on, off,
+                "{label}: kernels changed the digest at page_slots={ps} (kill: {killed})"
+            );
+        }
+    }
+}
+
+/// The full lane-tail page-size sweep: single-slot pages, one short of
+/// a lane, one past a lane, and an odd multi-lane page.
+fn tail_sizes() -> [usize; 4] {
+    [1, LANES - 1, LANES + 1, 4 * LANES + 1]
+}
+
+// ----------------------------------------------------- kernel-equipped apps
+
+#[test]
+fn pagerank_lane_tails_bit_identical() {
+    // 393 vertices over 6 workers → 65/66-slot partitions (65 % 8 = 1,
+    // 66 % 8 = 2): every worker ends in a lane tail.
+    let adj = PresetGraph::WebBase.spec(393, 42).generate();
+    assert_kernel_parity(
+        || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true },
+        &adj,
+        &tail_sizes(),
+        8,
+        "pr-tail",
+    );
+}
+
+#[test]
+fn pagerank_no_combiner_folds_full_message_lists() {
+    // Without the sender-side combiner a slot folds its whole message
+    // list — the rank-sum gather actually runs over len > 1 slices, so
+    // the lane-tree *within* a slot is exercised, not just across slots.
+    let adj = PresetGraph::WebBase.spec(250, 17).generate();
+    assert_kernel_parity(
+        || PageRank { damping: 0.85, supersteps: 10, combiner_enabled: false },
+        &adj,
+        &[LANES - 1, LANES + 1],
+        6,
+        "pr-nocomb",
+    );
+}
+
+#[test]
+fn sssp_lane_tails_bit_identical() {
+    let adj = generate::erdos_renyi(401, 1600, false, 6);
+    assert_kernel_parity(|| Sssp { source: 0 }, &adj, &tail_sizes(), 4, "sssp-tail");
+}
+
+/// Tiny graphs: whole partitions smaller than one lane, down to a
+/// single-vertex single-worker job.
+#[test]
+fn kernel_apps_sub_lane_partitions() {
+    let run = |n: usize, topo: Topology, simd: bool, ps: usize, tag: &str| -> (u64, u64) {
+        // A directed ring keeps every vertex busy at any n ≥ 1.
+        let adj: Vec<Vec<VertexId>> = (0..n).map(|v| vec![((v + 1) % n) as u32]).collect();
+        let mut c = cfg(simd, ps, FtKind::None, 0, tag);
+        c.topo = topo;
+        let mut pr = Engine::new(
+            PageRank { damping: 0.85, supersteps: 8, combiner_enabled: true },
+            c.clone(),
+            &adj,
+        )
+        .expect("pr engine");
+        pr.run().expect("pr run");
+        let mut sp = Engine::new(Sssp { source: 0 }, c, &adj).expect("sssp engine");
+        sp.run().expect("sssp run");
+        (pr.digest(), sp.digest())
+    };
+    // n = 1 on one worker; lane-straddling n on the 6-worker topology
+    // (n = 7 → slot counts {2,1,1,1,1,1}: every partition sub-lane).
+    let cases = [
+        (1usize, Topology::new(1, 1)),
+        (LANES - 1, Topology::new(3, 2)),
+        (LANES + 1, Topology::new(3, 2)),
+        (2 * LANES + 3, Topology::new(3, 2)),
+    ];
+    for (n, topo) in cases {
+        for ps in [1usize, LANES - 1, LANES + 1] {
+            let tag = format!("tiny-{n}-{ps}");
+            let off = run(n, topo, false, ps, &format!("{tag}-off"));
+            let on = run(n, topo, true, ps, &format!("{tag}-on"));
+            assert_eq!(on, off, "n={n} page_slots={ps}: kernel digest moved");
+        }
+    }
+}
+
+// ------------------------------------------- interpreter apps (knob inert)
+
+/// The remaining five apps have no page-scan kernel: the simd knob must
+/// be perfectly inert for them — same digest, failure-free and killed —
+/// at an odd page size (the message-layer accumulator kernels run
+/// unconditionally underneath all of them).
+#[test]
+fn non_kernel_apps_are_knob_inert() {
+    let odd = [LANES + 1];
+    assert_kernel_parity(
+        || HashMinCc,
+        &generate::erdos_renyi(500, 700, false, 5),
+        &odd,
+        5,
+        "cc-inert",
+    );
+    assert_kernel_parity(
+        || TriangleCount { c: 1 },
+        &generate::erdos_renyi(150, 1200, false, 7),
+        &odd,
+        5,
+        "tri-inert",
+    );
+    assert_kernel_parity(
+        || PointerJump,
+        &generate::erdos_renyi(300, 450, false, 8),
+        &odd,
+        7,
+        "pj-inert",
+    );
+    assert_kernel_parity(
+        || BipartiteMatching,
+        &generate::erdos_renyi(200, 500, false, 9),
+        &odd,
+        6,
+        "bm-inert",
+    );
+    // k-core peels a path graph: edge deletions every superstep.
+    let path: Vec<Vec<VertexId>> = (0..121usize)
+        .map(|v| {
+            let mut l = Vec::new();
+            if v > 0 {
+                l.push(v as u32 - 1);
+            }
+            if v + 1 < 121 {
+                l.push(v as u32 + 1);
+            }
+            l
+        })
+        .collect();
+    assert_kernel_parity(|| KCore { k: 2 }, &path, &odd, 10, "kcore-inert");
+}
+
+// --------------------------------------------------- paged + kernels
+
+/// Kernels over the *spilling* page store: odd pages that actually
+/// fault in and out under a tiny budget must produce the same digest
+/// as the per-vertex interpreter fully in memory.
+#[test]
+fn kernels_on_spilling_odd_pages_match_in_memory_interpreter() {
+    let adj = PresetGraph::WebBase.spec(393, 42).generate();
+    let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
+    let want = digest(&app, &adj, false, 4096, FtKind::None, 0, None, "pgk-base");
+    for &ps in &[LANES - 1, LANES + 1] {
+        let mut c = cfg(true, ps, FtKind::LwCp, 4, &format!("pgk-{ps}"));
+        c.pager = PagerConfig { memory_budget: Some(2 * 1024), page_slots: ps };
+        let mut eng = Engine::new(app(), c, &adj)
+            .expect("paged engine")
+            .with_failures(FailurePlan::kill_n_at(1, 8));
+        let m = eng.run().expect("paged kernel run");
+        assert_eq!(eng.digest(), want, "page_slots={ps}: paged kernel run diverged");
+        assert!(m.pager.faults > 0, "page_slots={ps}: the budget never spilled");
+    }
+}

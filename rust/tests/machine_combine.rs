@@ -36,6 +36,7 @@ fn cfg(
         threads: 0,
         async_cp: true,
         machine_combine,
+        simd: true,
         pager: Default::default(),
     }
 }

@@ -36,6 +36,7 @@ fn cfg(ft: FtKind, cp_every: u64, pager: PagerConfig, backing: Backing, tag: &st
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        simd: true,
         pager,
     }
 }

@@ -72,6 +72,7 @@ fn cfg(case: &Case, tag: &str) -> EngineConfig {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     }
 }
@@ -250,6 +251,7 @@ fn double_failure_same_worker_rank() {
             threads: 0,
             async_cp: true,
             machine_combine: true,
+            simd: true,
             pager: Default::default(),
         };
         let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };

@@ -29,6 +29,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         // this file runs through the machine-combined delivery path
         // (see tests/machine_combine.rs for the on-vs-off goldens).
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     }
 }
@@ -322,18 +323,22 @@ fn kcore_failure_right_after_checkpoint() {
 // ------------------------------------------------- parallel determinism
 
 /// Digest of a run with a pinned engine-pool size (1 = fully inline,
-/// N = N pool threads, 0 = auto).
+/// N = N pool threads, 0 = auto) and a pinned compute core (`simd` =
+/// the lane-chunked page-scan kernels, `!simd` = `--no-simd`, the
+/// per-vertex interpreter).
 fn digest_with_threads<A: App, F: Fn() -> A>(
     app_fn: F,
     adj: &[Vec<VertexId>],
     ft: FtKind,
     cp_every: u64,
     threads: usize,
+    simd: bool,
     plan: Option<FailurePlan>,
     label: &str,
 ) -> u64 {
-    let mut c = cfg(ft, cp_every, &format!("{label}-t{threads}"));
+    let mut c = cfg(ft, cp_every, &format!("{label}-t{threads}-s{simd}"));
     c.threads = threads;
+    c.simd = simd;
     let mut eng = Engine::new(app_fn(), c, adj).expect("build engine");
     if let Some(p) = plan {
         eng = eng.with_failures(p);
@@ -345,33 +350,58 @@ fn digest_with_threads<A: App, F: Fn() -> A>(
 /// The executor contract: the parallel pipeline (compute fan-out,
 /// parallel shuffle delivery, parallel checkpoint/log I/O) reproduces
 /// the single-thread run bit-for-bit — f32 PageRank sums included —
-/// with and without an injected failure.
+/// with and without an injected failure, and regardless of whether the
+/// lane-chunked page-scan kernels or the per-vertex interpreter
+/// (`--no-simd`) run the compute phase.
 #[test]
-fn pagerank_f32_digest_identical_across_thread_counts() {
+fn pagerank_f32_digest_identical_across_thread_counts_and_simd_modes() {
     let adj = webbase(500);
     let app = || PageRank { damping: 0.85, supersteps: 13, combiner_enabled: true };
     for plan in [None, Some(FailurePlan::kill_n_at(1, 8))] {
-        let want = digest_with_threads(app, &adj, FtKind::LwCp, 4, 1, plan.clone(), "pdet");
-        for threads in [2usize, 4, 0] {
-            let got = digest_with_threads(app, &adj, FtKind::LwCp, 4, threads, plan.clone(), "pdet");
-            assert_eq!(
-                got, want,
-                "pagerank digest differs at threads={threads} (failure: {})",
-                plan.is_some()
-            );
+        // Reference: fully sequential, per-vertex interpreter.
+        let want = digest_with_threads(app, &adj, FtKind::LwCp, 4, 1, false, plan.clone(), "pdet");
+        for simd in [false, true] {
+            for threads in [1usize, 2, 4, 0] {
+                let got = digest_with_threads(
+                    app,
+                    &adj,
+                    FtKind::LwCp,
+                    4,
+                    threads,
+                    simd,
+                    plan.clone(),
+                    "pdet",
+                );
+                assert_eq!(
+                    got, want,
+                    "pagerank digest differs at threads={threads} simd={simd} (failure: {})",
+                    plan.is_some()
+                );
+            }
         }
     }
 }
 
 #[test]
-fn sssp_digest_identical_across_thread_counts() {
+fn sssp_digest_identical_across_thread_counts_and_simd_modes() {
     let adj = generate::erdos_renyi(400, 1600, false, 31);
     let app = || Sssp { source: 0 };
     for plan in [None, Some(FailurePlan::kill_n_at(2, 4))] {
-        let want = digest_with_threads(app, &adj, FtKind::LwLog, 3, 1, plan.clone(), "sdet");
-        for threads in [3usize, 0] {
-            let got = digest_with_threads(app, &adj, FtKind::LwLog, 3, threads, plan.clone(), "sdet");
-            assert_eq!(got, want, "sssp digest differs at threads={threads}");
+        let want = digest_with_threads(app, &adj, FtKind::LwLog, 3, 1, false, plan.clone(), "sdet");
+        for simd in [false, true] {
+            for threads in [3usize, 0] {
+                let got = digest_with_threads(
+                    app,
+                    &adj,
+                    FtKind::LwLog,
+                    3,
+                    threads,
+                    simd,
+                    plan.clone(),
+                    "sdet",
+                );
+                assert_eq!(got, want, "sssp digest differs at threads={threads} simd={simd}");
+            }
         }
     }
 }
@@ -381,9 +411,10 @@ fn triangle_digest_identical_across_thread_counts() {
     let adj = generate::erdos_renyi(150, 1200, false, 32);
     let app = || TriangleCount { c: 1 };
     for plan in [None, Some(FailurePlan::kill_n_at(1, 5))] {
-        let want = digest_with_threads(app, &adj, FtKind::HwLog, 3, 1, plan.clone(), "tdet");
+        let want = digest_with_threads(app, &adj, FtKind::HwLog, 3, 1, true, plan.clone(), "tdet");
         for threads in [2usize, 0] {
-            let got = digest_with_threads(app, &adj, FtKind::HwLog, 3, threads, plan.clone(), "tdet");
+            let got =
+                digest_with_threads(app, &adj, FtKind::HwLog, 3, threads, true, plan.clone(), "tdet");
             assert_eq!(got, want, "triangle digest differs at threads={threads}");
         }
     }
@@ -424,6 +455,61 @@ fn machine_combine_modes_agree_under_cascading_failures() {
             "{}: digests diverge across machine-combine × failure modes: {digests:?}",
             ft.name()
         );
+    }
+}
+
+// ---------------------------------------------------- page-scan kernels
+
+/// The vectorized page-scan core must be invisible to recovery: runs
+/// with cascading failures under the lane-chunked kernels equal the
+/// per-vertex (`--no-simd`) failure-free run bit for bit. Kernel-equipped
+/// apps (PageRank, SSSP) fold every f32 through the same canonical
+/// lane-tree in both modes, so replay from a checkpoint regenerates
+/// identical messages whichever core computed the checkpointed state.
+#[test]
+fn simd_modes_agree_under_cascading_kills() {
+    let web = webbase(400);
+    let er = generate::erdos_renyi(400, 1600, false, 6);
+    let plan = FailurePlan {
+        kills: vec![
+            Kill { at_step: 11, ranks: vec![2], machine_fails: false, during_cp: false },
+            Kill { at_step: 8, ranks: vec![3], machine_fails: false, during_cp: false },
+        ],
+    };
+    for ft in [FtKind::LwCp, FtKind::HwLog] {
+        let pr = || PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true };
+        let sp = || Sssp { source: 0 };
+        for (label, adj) in [("pr", &web), ("sssp", &er)] {
+            let mut digests = Vec::new();
+            for simd in [false, true] {
+                for with_failures in [false, true] {
+                    let mut c =
+                        cfg(ft, 5, &format!("simdk-{label}-{}-{simd}-{with_failures}", ft.name()));
+                    c.simd = simd;
+                    let d = if label == "pr" {
+                        let mut eng = Engine::new(pr(), c, adj).expect("engine");
+                        if with_failures {
+                            eng = eng.with_failures(plan.clone());
+                        }
+                        eng.run().expect("run");
+                        eng.digest()
+                    } else {
+                        let mut eng = Engine::new(sp(), c, adj).expect("engine");
+                        if with_failures {
+                            eng = eng.with_failures(plan.clone());
+                        }
+                        eng.run().expect("run");
+                        eng.digest()
+                    };
+                    digests.push(d);
+                }
+            }
+            assert!(
+                digests.windows(2).all(|w| w[0] == w[1]),
+                "{} {label}: digests diverge across simd × failure modes: {digests:?}",
+                ft.name()
+            );
+        }
     }
 }
 

@@ -109,6 +109,7 @@ fn cfg(tag: &str, ft: FtKind) -> EngineConfig {
         threads: 0,
         async_cp: true,
         machine_combine: true,
+        simd: true,
         pager: Default::default(),
     }
 }
