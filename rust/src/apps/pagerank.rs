@@ -91,6 +91,16 @@ impl App for PageRank {
         }
     }
 
+    fn value_from_external(&self, payload: f64, _current: &f32) -> f32 {
+        // External set/insert replaces the rank outright (pure, so the
+        // recovery re-apply reproduces it bit-identically).
+        payload as f32
+    }
+
+    fn serve_score(&self, value: &f32) -> Option<f64> {
+        Some(*value as f64) // top-k by rank
+    }
+
     fn supports_xla(&self) -> bool {
         // The artifact bakes d = 0.85 and the batch path reads the
         // combined per-slot message sum.

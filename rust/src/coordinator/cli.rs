@@ -20,6 +20,21 @@
 //!                                   resident budget in bytes, with k/m/g
 //!                                   suffixes; unset = fully in-memory)
 //!          [--page-slots 4096]     (vertex slots per partition page)
+//!          [--ingest-file PATH]    (external update journal: delta file
+//!                                   of add/del/set/insert records applied
+//!                                   at superstep barriers; see
+//!                                   `ingest::parse_delta_text` for the
+//!                                   format, `@barrier N` to pace groups)
+//!          [--ingest-at N]         (shift every delta group's not-before
+//!                                   barrier by +N)
+//!          [--query STEP:VERTEX]...  (bounded-staleness point read at a
+//!                                     barrier, answered from the latest
+//!                                     committed checkpoint)
+//!          [--top-k STEP:K]...       (top-k read by App::serve_score)
+//! lwcp serve  (same flags as run; requires at least one --query/--top-k,
+//!              prints one `serve query=… staleness=…` line per answer;
+//!              [--staleness-bound N] fails the run if an answer is
+//!              staler than N supersteps or no checkpoint was committed)
 //! lwcp gen --out PATH [--graph webbase] [--n 10000] [--seed 1]
 //! lwcp info
 //! ```
@@ -27,6 +42,7 @@
 use super::driver::{run_job, AppSpec, GraphSource, JobSpec};
 use crate::ft::FtKind;
 use crate::graph::{generate, loader, PresetGraph};
+use crate::ingest::{self, ProbeKind, ServeProbe};
 use crate::metrics::report;
 use crate::pregel::{FailurePlan, Kill};
 use crate::runtime::XlaRegistry;
@@ -180,6 +196,35 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
             during_cp: f.has("kill-during-cp"),
         });
     }
+    let mut ingest_segments = Vec::new();
+    if let Some(path) = f.get("ingest-file") {
+        ingest_segments = ingest::parse_delta_file(std::path::Path::new(path))?;
+        let shift: u64 = f.parse_or("ingest-at", 0)?;
+        if shift > 0 {
+            for (not_before, _) in &mut ingest_segments {
+                *not_before += shift;
+            }
+        }
+    }
+    let mut probes = Vec::new();
+    for q in f.get_all("query") {
+        let (step, vid) = q
+            .split_once(':')
+            .with_context(|| format!("--query {q}: expected STEP:VERTEX"))?;
+        probes.push(ServeProbe {
+            at_step: step.parse()?,
+            kind: ProbeKind::Point(vid.parse()?),
+        });
+    }
+    for q in f.get_all("top-k") {
+        let (step, k) = q
+            .split_once(':')
+            .with_context(|| format!("--top-k {q}: expected STEP:K"))?;
+        probes.push(ServeProbe {
+            at_step: step.parse()?,
+            kind: ProbeKind::TopK(k.parse()?),
+        });
+    }
     Ok(JobSpec {
         app,
         graph,
@@ -205,6 +250,8 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
             memory_budget: f.get("memory-budget").map(parse_byte_size).transpose()?,
             page_slots: f.parse_or("page-slots", PagerConfig::default().page_slots)?,
         },
+        ingest: ingest_segments,
+        probes,
     })
 }
 
@@ -242,6 +289,12 @@ fn cmd_run(f: &Flags) -> Result<()> {
         pt.row(report::pager_row(spec.ft.name(), &m));
         pt.print();
     }
+    if m.ingest != Default::default() {
+        let mut it = report::ingest_table();
+        it.row(report::ingest_row(spec.ft.name(), &m));
+        it.print();
+    }
+    print_serve_samples(&m);
     println!(
         "supersteps={} virtual_time={} wall={:.0} ms kernels={} shuffled={} wire={} \
          cp_bytes={} resident_peak={} faults={}",
@@ -255,6 +308,81 @@ fn cmd_run(f: &Flags) -> Result<()> {
         crate::util::fmtutil::bytes(m.pager.resident_peak),
         m.pager.faults,
     );
+    Ok(())
+}
+
+/// One `serve query=…` line per answered probe (stable, greppable —
+/// the CI smoke test and scripts key on `staleness=`).
+fn print_serve_samples(m: &crate::metrics::RunMetrics) {
+    if m.serve.samples.is_empty() {
+        return;
+    }
+    let mut st = report::serve_table();
+    for row in report::serve_rows(m) {
+        st.row(row);
+    }
+    st.print();
+    for s in &m.serve.samples {
+        println!(
+            "serve query={} head={} committed={} staleness={} result=\"{}\"",
+            s.query,
+            s.at_step,
+            s.committed_step.map_or("-".to_string(), |c| c.to_string()),
+            s.staleness.map_or("-".to_string(), |x| x.to_string()),
+            s.result,
+        );
+    }
+}
+
+/// The online-serving lane: a normal run whose answers are the product.
+/// Queries are answered at their barrier from the latest *committed*
+/// checkpoint (bounded staleness, never in-flight state); the optional
+/// `--staleness-bound N` turns the bound into an exit code.
+fn cmd_serve(f: &Flags) -> Result<()> {
+    let spec = spec_from_flags(f)?;
+    if spec.probes.is_empty() {
+        bail!("serve mode needs at least one --query STEP:VERTEX or --top-k STEP:K");
+    }
+    if spec.ft == FtKind::None {
+        bail!("serve mode reads committed checkpoints: pick --ft lwcp|hwcp|lwlog|hwlog");
+    }
+    eprintln!(
+        "lwcp serve: app={} ft={} workers={} queries={} ingest_groups={}",
+        spec.app.name(),
+        spec.ft.name(),
+        spec.topo.n_workers(),
+        spec.probes.len(),
+        spec.ingest.len(),
+    );
+    let m = run_job(&spec, None)?;
+    if m.ingest != Default::default() {
+        let mut it = report::ingest_table();
+        it.row(report::ingest_row(spec.ft.name(), &m));
+        it.print();
+    }
+    print_serve_samples(&m);
+    if let Some(bound) = f.get("staleness-bound") {
+        let bound: u64 = bound
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--staleness-bound {bound}: {e}"))?;
+        for s in &m.serve.samples {
+            match s.staleness {
+                Some(st) if st <= bound => {}
+                Some(st) => bail!(
+                    "serve: query {} staleness {st} exceeds bound {bound}",
+                    s.query
+                ),
+                None => bail!(
+                    "serve: query {} had no committed snapshot to answer from",
+                    s.query
+                ),
+            }
+        }
+        println!(
+            "serve: {} queries within staleness bound {bound}",
+            m.serve.samples.len()
+        );
+    }
     Ok(())
 }
 
@@ -288,15 +416,16 @@ fn cmd_info() -> Result<()> {
 pub fn main_with_args(args: &[String]) -> Result<()> {
     let Some(cmd) = args.first() else {
         cmd_info()?;
-        println!("\nusage: lwcp <run|gen|info> [flags]  (see coordinator/cli.rs)");
+        println!("\nusage: lwcp <run|serve|gen|info> [flags]  (see coordinator/cli.rs)");
         return Ok(());
     };
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
         "gen" => cmd_gen(&flags),
         "info" => cmd_info(),
-        other => bail!("unknown command {other} (run|gen|info)"),
+        other => bail!("unknown command {other} (run|serve|gen|info)"),
     }
 }
 
@@ -377,5 +506,33 @@ mod tests {
         assert!(spec_from_flags(&flags("--app bogus")).is_err());
         assert!(spec_from_flags(&flags("--kill badformat")).is_err());
         assert!(Flags::parse(&["notaflag".to_string()]).is_err());
+        assert!(spec_from_flags(&flags("--query badformat")).is_err());
+        assert!(spec_from_flags(&flags("--top-k 10")).is_err());
+    }
+
+    #[test]
+    fn serve_probes_parse_from_flags() {
+        let spec =
+            spec_from_flags(&flags("--query 10:3 --query 20:5 --top-k 30:4")).unwrap();
+        assert_eq!(spec.probes.len(), 3);
+        assert_eq!(spec.probes[0].at_step, 10);
+        assert!(matches!(spec.probes[0].kind, ProbeKind::Point(3)));
+        assert!(matches!(spec.probes[2].kind, ProbeKind::TopK(4)));
+    }
+
+    #[test]
+    fn ingest_file_flag_loads_and_shifts_delta_groups() {
+        let p = std::env::temp_dir().join(format!("lwcp-cli-delta-{}.txt", std::process::id()));
+        std::fs::write(&p, "add 1 2\n@barrier 6\ndel 1 2\nset 3 0.5\n").unwrap();
+        let spec = spec_from_flags(&flags(&format!(
+            "--ingest-file {} --ingest-at 2",
+            p.display()
+        )))
+        .unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(spec.ingest.len(), 2);
+        assert_eq!(spec.ingest[0].0, 3, "group 1 not-before 1, shifted +2");
+        assert_eq!(spec.ingest[1].0, 8, "@barrier 6, shifted +2");
+        assert_eq!(spec.ingest[1].1.len(), 2);
     }
 }

@@ -5,6 +5,7 @@
 use crate::apps::*;
 use crate::ft::FtKind;
 use crate::graph::{generate, loader, PresetGraph, VertexId};
+use crate::ingest::{JournalRecord, ServeProbe};
 use crate::metrics::RunMetrics;
 use crate::pregel::{App, Engine, EngineConfig, FailurePlan};
 use crate::runtime::XlaRegistry;
@@ -106,6 +107,14 @@ pub struct JobSpec {
     /// bit-identical either way; only the cost model's kernel-throughput
     /// term differs.
     pub simd: bool,
+    /// External ingest journal segments staged before the run (CLI
+    /// `--ingest-file`): each `(not_before, records)` group becomes one
+    /// committed segment, drained at superstep barriers (`crate::ingest`).
+    pub ingest: Vec<(u64, Vec<JournalRecord>)>,
+    /// Online-serving probes (CLI `--query`/`--top-k`): bounded-staleness
+    /// reads answered at their barrier from the latest committed
+    /// checkpoint.
+    pub probes: Vec<ServeProbe>,
 }
 
 impl JobSpec {
@@ -131,6 +140,8 @@ impl JobSpec {
             machine_combine: true,
             pager: PagerConfig::default(),
             simd: true,
+            ingest: Vec::new(),
+            probes: Vec::new(),
         }
     }
 
@@ -161,10 +172,13 @@ fn run_app<A: App>(
     adj: &[Vec<VertexId>],
     exec: Option<Arc<XlaRegistry>>,
 ) -> Result<RunMetrics> {
-    let mut engine = Engine::new(app, spec.config(), adj)?.with_failures(spec.plan.clone());
+    let mut engine = Engine::new(app, spec.config(), adj)?
+        .with_failures(spec.plan.clone())
+        .with_probes(spec.probes.clone());
     if let Some(exec) = exec {
         engine = engine.with_exec(exec);
     }
+    engine.stage_journal(&spec.ingest)?;
     engine.run()
 }
 

@@ -465,6 +465,10 @@ impl<A: App> Engine<A> {
         }
         self.cp_last = inf.step;
         self.cp_last_time = t_done;
+        // Recorded ingest batches below the committed frontier can
+        // never be replayed again (recovery resumes at cp_last + 1 and
+        // re-seeds only barrier cp_last's batch) — prune them.
+        self.ingest_log.retain(|&b, _| b >= inf.step);
         self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
         Ok(())
     }

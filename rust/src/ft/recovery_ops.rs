@@ -174,6 +174,14 @@ impl<A: App> Engine<A> {
             FtKind::LwLog => self.recover_lwlog(&outcome)?,
         }
 
+        // Re-seed the external ingest batch of barrier cp_last: it
+        // buffers under E_W key cp_last+1, so no committed checkpoint
+        // carries it yet — every worker rolled back to cp_last (CP
+        // loaders cleared the mutation buffers, so the re-append is
+        // exactly-once; log-kind survivors ahead of cp_last are skipped
+        // because their state and buffers already contain it).
+        self.reapply_ingest_after_rollback()?;
+
         let t1 = self.barrier(0.0);
         self.record_cpstep(t1 - t_base);
         self.metrics.recovery_control += outcome.control_time;

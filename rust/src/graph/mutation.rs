@@ -6,6 +6,12 @@
 //! written the buffered requests are appended to the worker's HDFS edge
 //! log `E_W` and the local buffer is cleared. Recovery rebuilds Γ(v) by
 //! loading CP[0] and replaying E_W in order.
+//!
+//! Mutations have two sources: vertex programs (via `UpdateCtx`) and the
+//! external ingest journal (`ingest::JournalRecord` edge records applied
+//! at superstep barriers). Both funnel through this codec and the same
+//! E_W path, so a checkpoint subsumes external deltas for free and
+//! recovery replays them bit-identically.
 
 use super::VertexId;
 use crate::util::codec::{Codec, Reader};
@@ -22,6 +28,12 @@ impl Mutation {
     pub fn src(&self) -> VertexId {
         match self {
             Mutation::AddEdge { src, .. } | Mutation::DelEdge { src, .. } => *src,
+        }
+    }
+
+    pub fn dst(&self) -> VertexId {
+        match self {
+            Mutation::AddEdge { dst, .. } | Mutation::DelEdge { dst, .. } => *dst,
         }
     }
 }

@@ -1,0 +1,501 @@
+//! External ingest journal + online serving lane.
+//!
+//! Production graphs mutate continuously, but until now mutations could
+//! only originate *inside* vertex programs. This module promotes the
+//! paper's own recovery primitive — the incremental edge log E_W
+//! replayed over CP\[0\] — into a first-class external write path:
+//!
+//! * **Journal** ([`JournalRecord`], [`JournalWriter`]): an appendable,
+//!   durably-stored log of edge/vertex updates living in the same
+//!   SimHDFS namespace as the checkpoints, under `journal/`. Segments
+//!   commit atomically with the CP marker protocol — the record blob is
+//!   put first, the small meta marker second, and a segment without its
+//!   marker does not exist. Each segment carries a `not_before` barrier
+//!   so a delta file can pace its updates across the run.
+//! * **Barrier application** (`Engine::apply_ingest_at`, built on
+//!   [`crate::pregel::executor::ingest_apply_phase`]): at each superstep
+//!   barrier the master drains newly-committed segments in sequence
+//!   order, routes records to their owning workers by the static
+//!   placement (`Partitioner::rank_of`), and applies them through the
+//!   existing `Mutation`/E_W path — the worker's local mutation buffer
+//!   is keyed to the *next* superstep, so the next committed checkpoint
+//!   subsumes external deltas and recovery replays them bit-identically.
+//!   Touched vertices (plus their in-neighbors, per
+//!   [`crate::pregel::app::App::on_external_update`]) are delta-
+//!   reactivated so only affected state recomputes.
+//! * **Serving** ([`ServeProbe`], `Engine::serve_query`): vertex-value
+//!   reads answered from the latest *committed* checkpoint — never from
+//!   in-flight state — with per-query staleness (supersteps behind the
+//!   barrier head) reported in `metrics::ServeMetrics`.
+//!
+//! Determinism: the batch applied at barrier `s` is recorded in the
+//! engine's ingest log; during recovery re-execution the recorded batch
+//! is re-applied at the same barrier (fresh segments are only drained in
+//! the `Normal` stage), so an N-thread run with kills reproduces the
+//! failure-free digest bit for bit.
+
+use crate::graph::VertexId;
+use crate::storage::SimHdfs;
+use crate::util::codec::{Codec, Reader};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// SimHDFS namespace of the journal (beside `cp/` and `ew/`).
+pub const JOURNAL_PREFIX: &str = "journal/";
+
+/// Key of segment `seq`'s record blob.
+pub fn segment_key(seq: u64) -> String {
+    format!("journal/{seq:06}/data")
+}
+
+/// Key of segment `seq`'s commit marker (the segment exists iff this
+/// key does — same atomicity rule as the CP meta marker).
+pub fn segment_meta_key(seq: u64) -> String {
+    format!("journal/{seq:06}/meta")
+}
+
+/// One external graph update. Edge records are owned by `src`'s worker
+/// (they mutate `src`'s adjacency list); vertex records by `id`'s
+/// worker. Vertex payloads travel as `f64` so the journal format stays
+/// app-agnostic — [`crate::pregel::app::App::value_from_external`]
+/// converts to the app's value type at apply time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JournalRecord {
+    AddEdge { src: VertexId, dst: VertexId },
+    DelEdge { src: VertexId, dst: VertexId },
+    SetVertex { id: VertexId, value: f64 },
+    /// Same apply semantics as `SetVertex` (the vertex universe is
+    /// fixed at load time); kept distinct so a real system's allocate
+    /// path round-trips through the journal format.
+    InsertVertex { id: VertexId, value: f64 },
+}
+
+impl JournalRecord {
+    /// The vertex whose owning worker applies this record.
+    pub fn owner(&self) -> VertexId {
+        match *self {
+            JournalRecord::AddEdge { src, .. } | JournalRecord::DelEdge { src, .. } => src,
+            JournalRecord::SetVertex { id, .. } | JournalRecord::InsertVertex { id, .. } => id,
+        }
+    }
+
+    /// Vertices named by the record (reactivation seeds).
+    pub fn touched(&self) -> (VertexId, Option<VertexId>) {
+        match *self {
+            JournalRecord::AddEdge { src, dst } | JournalRecord::DelEdge { src, dst } => {
+                (src, Some(dst))
+            }
+            JournalRecord::SetVertex { id, .. } | JournalRecord::InsertVertex { id, .. } => {
+                (id, None)
+            }
+        }
+    }
+
+    /// Does the record mutate topology (and therefore flow into E_W)?
+    pub fn is_edge(&self) -> bool {
+        matches!(self, JournalRecord::AddEdge { .. } | JournalRecord::DelEdge { .. })
+    }
+
+    /// Are all referenced vertices inside the fixed universe `n`?
+    pub fn in_universe(&self, n: usize) -> bool {
+        let (a, b) = self.touched();
+        (a as usize) < n && b.map_or(true, |v| (v as usize) < n)
+    }
+}
+
+impl Codec for JournalRecord {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match *self {
+            JournalRecord::AddEdge { src, dst } => {
+                1u8.encode(buf);
+                src.encode(buf);
+                dst.encode(buf);
+            }
+            JournalRecord::DelEdge { src, dst } => {
+                2u8.encode(buf);
+                src.encode(buf);
+                dst.encode(buf);
+            }
+            JournalRecord::SetVertex { id, value } => {
+                3u8.encode(buf);
+                id.encode(buf);
+                value.encode(buf);
+            }
+            JournalRecord::InsertVertex { id, value } => {
+                4u8.encode(buf);
+                id.encode(buf);
+                value.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        let tag = u8::decode(r)?;
+        Ok(match tag {
+            1 => JournalRecord::AddEdge { src: VertexId::decode(r)?, dst: VertexId::decode(r)? },
+            2 => JournalRecord::DelEdge { src: VertexId::decode(r)?, dst: VertexId::decode(r)? },
+            3 => JournalRecord::SetVertex { id: VertexId::decode(r)?, value: f64::decode(r)? },
+            4 => JournalRecord::InsertVertex { id: VertexId::decode(r)?, value: f64::decode(r)? },
+            t => bail!("unknown journal record tag {t}"),
+        })
+    }
+}
+
+/// Committed-segment metadata (the commit marker's content).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentMeta {
+    pub seq: u64,
+    /// Earliest superstep barrier allowed to apply this segment. The
+    /// journal is totally ordered: a segment also never applies before
+    /// its predecessors, whatever its own `not_before` says.
+    pub not_before: u64,
+    pub n_records: u64,
+    /// Encoded size of the record blob (read-cost accounting).
+    pub data_bytes: u64,
+}
+
+impl Codec for SegmentMeta {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.seq.encode(buf);
+        self.not_before.encode(buf);
+        self.n_records.encode(buf);
+        self.data_bytes.encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(SegmentMeta {
+            seq: u64::decode(r)?,
+            not_before: u64::decode(r)?,
+            n_records: u64::decode(r)?,
+            data_bytes: u64::decode(r)?,
+        })
+    }
+}
+
+/// Appends committed segments to the journal. This models the *external
+/// client* (an upstream CDC pipeline, a write API): appends are durable
+/// before the job observes them and charge nothing to the job's virtual
+/// clocks — the engine pays the read side when it drains.
+pub struct JournalWriter {
+    hdfs: Arc<SimHdfs>,
+    next_seq: u64,
+}
+
+impl JournalWriter {
+    /// Open the journal, resuming after the highest committed segment.
+    pub fn open(hdfs: Arc<SimHdfs>) -> Result<Self> {
+        let next_seq = committed_segments(&hdfs)?.last().map_or(1, |m| m.seq + 1);
+        Ok(JournalWriter { hdfs, next_seq })
+    }
+
+    /// Append one segment: put the record blob, then the commit marker.
+    /// A crash between the two puts leaves an invisible segment — the
+    /// same atomicity argument as the checkpoint commit marker.
+    pub fn append(&mut self, not_before: u64, records: &[JournalRecord]) -> Result<SegmentMeta> {
+        if records.is_empty() {
+            bail!("refusing to commit an empty journal segment");
+        }
+        let seq = self.next_seq;
+        let mut data = Vec::new();
+        for rec in records {
+            rec.encode(&mut data);
+        }
+        let meta = SegmentMeta {
+            seq,
+            not_before,
+            n_records: records.len() as u64,
+            data_bytes: data.len() as u64,
+        };
+        self.hdfs.put(&segment_key(seq), &data)?;
+        self.hdfs.put(&segment_meta_key(seq), &meta.to_bytes())?;
+        self.next_seq += 1;
+        Ok(meta)
+    }
+
+    /// Sequence number the next `append` will commit.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+/// All committed segments, in sequence order. A data blob without its
+/// marker is invisible by construction.
+pub fn committed_segments(hdfs: &SimHdfs) -> Result<Vec<SegmentMeta>> {
+    let mut metas = Vec::new();
+    for key in hdfs.list(JOURNAL_PREFIX) {
+        if !key.ends_with("/meta") {
+            continue;
+        }
+        let m = SegmentMeta::from_bytes(&hdfs.get(&key)?)
+            .with_context(|| format!("corrupt journal marker {key}"))?;
+        metas.push(m);
+    }
+    metas.sort_by_key(|m| m.seq);
+    Ok(metas)
+}
+
+/// Read a committed segment's records.
+pub fn read_segment(hdfs: &SimHdfs, meta: &SegmentMeta) -> Result<Vec<JournalRecord>> {
+    let blob = hdfs.get(&segment_key(meta.seq))?;
+    let mut r = Reader::new(&blob);
+    let mut out = Vec::with_capacity(meta.n_records as usize);
+    while !r.is_empty() {
+        out.push(JournalRecord::decode(&mut r)?);
+    }
+    if out.len() as u64 != meta.n_records {
+        bail!(
+            "journal segment {} decoded {} records, marker says {}",
+            meta.seq,
+            out.len(),
+            meta.n_records
+        );
+    }
+    Ok(out)
+}
+
+/// Parse a delta file into `(not_before, records)` segments — the CLI
+/// lane feeding the journal. Line format (whitespace-separated,
+/// `#` comments):
+///
+/// ```text
+/// add SRC DST        # add out-edge SRC -> DST
+/// del SRC DST        # delete out-edge SRC -> DST
+/// set ID VALUE       # overwrite vertex ID's value (f64 payload)
+/// insert ID VALUE    # insert semantics; applies like set (fixed universe)
+/// @barrier N         # following records apply no earlier than barrier N
+/// ```
+///
+/// Records before the first `@barrier` directive get `not_before = 1`
+/// (the earliest barrier that exists).
+pub fn parse_delta_file(path: &Path) -> Result<Vec<(u64, Vec<JournalRecord>)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading delta file {}", path.display()))?;
+    parse_delta_text(&text)
+}
+
+/// [`parse_delta_file`] on in-memory text (tests, CI).
+pub fn parse_delta_text(text: &str) -> Result<Vec<(u64, Vec<JournalRecord>)>> {
+    let mut segments: Vec<(u64, Vec<JournalRecord>)> = Vec::new();
+    let mut current: (u64, Vec<JournalRecord>) = (1, Vec::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let word = it.next().unwrap();
+        let ctx = || format!("delta file line {}: {raw:?}", lineno + 1);
+        if word == "@barrier" {
+            let n: u64 = it
+                .next()
+                .with_context(ctx)?
+                .parse()
+                .with_context(ctx)?;
+            if !current.1.is_empty() {
+                segments.push(std::mem::replace(&mut current, (n, Vec::new())));
+            } else {
+                current.0 = n;
+            }
+            continue;
+        }
+        let rec = match word {
+            "add" | "del" => {
+                let src: VertexId = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                let dst: VertexId = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                if word == "add" {
+                    JournalRecord::AddEdge { src, dst }
+                } else {
+                    JournalRecord::DelEdge { src, dst }
+                }
+            }
+            "set" | "insert" => {
+                let id: VertexId = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                let value: f64 = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                if word == "set" {
+                    JournalRecord::SetVertex { id, value }
+                } else {
+                    JournalRecord::InsertVertex { id, value }
+                }
+            }
+            other => bail!("{}: unknown op {other:?}", ctx()),
+        };
+        current.1.push(rec);
+    }
+    if !current.1.is_empty() {
+        segments.push(current);
+    }
+    Ok(segments)
+}
+
+/// One scheduled online read: answered at superstep barrier `at_step`
+/// (or at job end if the job finishes earlier) from the latest
+/// committed checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeProbe {
+    pub at_step: u64,
+    pub kind: ProbeKind,
+}
+
+/// What a serve probe asks for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProbeKind {
+    /// One vertex's value.
+    Point(VertexId),
+    /// The k best vertices under [`crate::pregel::app::App::serve_score`].
+    TopK(usize),
+}
+
+impl std::fmt::Display for ProbeKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProbeKind::Point(v) => write!(f, "point({v})"),
+            ProbeKind::TopK(k) => write!(f, "top-{k}"),
+        }
+    }
+}
+
+/// The latest committed checkpoint's `(step, meta)`, scanning the CP
+/// marker keys. Only marker-bearing checkpoints are visible, so a serve
+/// read can never observe an in-flight (unmarked) snapshot.
+pub fn latest_committed_cp(
+    hdfs: &SimHdfs,
+) -> Result<Option<(u64, crate::storage::checkpoint::CpMeta)>> {
+    let mut best: Option<u64> = None;
+    for key in hdfs.list("cp/") {
+        if let Some(step) = cp_step_of_marker(&key) {
+            best = Some(best.map_or(step, |b: u64| b.max(step)));
+        }
+    }
+    match best {
+        None => Ok(None),
+        Some(step) => {
+            let meta = crate::storage::checkpoint::CpMeta::from_bytes(
+                &hdfs.get(&crate::storage::checkpoint::cp_meta_key(step))?,
+            )?;
+            Ok(Some((step, meta)))
+        }
+    }
+}
+
+/// Parse `cp/{step:06}/meta` → step.
+fn cp_step_of_marker(key: &str) -> Option<u64> {
+    let rest = key.strip_prefix("cp/")?;
+    let step = rest.strip_suffix("/meta")?;
+    step.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrip_all_tags() {
+        let recs = vec![
+            JournalRecord::AddEdge { src: 1, dst: 2 },
+            JournalRecord::DelEdge { src: 7, dst: 0 },
+            JournalRecord::SetVertex { id: 3, value: 2.5 },
+            JournalRecord::InsertVertex { id: 9, value: -1.25 },
+        ];
+        for rec in &recs {
+            assert_eq!(JournalRecord::from_bytes(&rec.to_bytes()).unwrap(), *rec);
+        }
+        // Stream form (no count prefix), like E_W.
+        let mut blob = Vec::new();
+        for rec in &recs {
+            rec.encode(&mut blob);
+        }
+        let mut r = Reader::new(&blob);
+        let mut back = Vec::new();
+        while !r.is_empty() {
+            back.push(JournalRecord::decode(&mut r).unwrap());
+        }
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn writer_commits_atomically_and_in_sequence() {
+        let hdfs = Arc::new(SimHdfs::in_memory());
+        let mut w = JournalWriter::open(Arc::clone(&hdfs)).unwrap();
+        assert!(committed_segments(&hdfs).unwrap().is_empty());
+        let m1 = w.append(2, &[JournalRecord::AddEdge { src: 0, dst: 1 }]).unwrap();
+        let m2 = w
+            .append(5, &[JournalRecord::SetVertex { id: 1, value: 4.0 }])
+            .unwrap();
+        assert_eq!((m1.seq, m2.seq), (1, 2));
+        let metas = committed_segments(&hdfs).unwrap();
+        assert_eq!(metas, vec![m1, m2]);
+        assert_eq!(
+            read_segment(&hdfs, &m1).unwrap(),
+            vec![JournalRecord::AddEdge { src: 0, dst: 1 }]
+        );
+        // A data blob without its marker is invisible (torn append).
+        hdfs.put(&segment_key(3), &[1, 2, 3]).unwrap();
+        assert_eq!(committed_segments(&hdfs).unwrap().len(), 2);
+        // Reopening resumes after the highest *committed* segment.
+        let w2 = JournalWriter::open(hdfs).unwrap();
+        assert_eq!(w2.next_seq(), 3);
+    }
+
+    #[test]
+    fn delta_text_parses_ops_comments_and_barriers() {
+        let text = "\
+# initial batch
+add 0 5
+del 2 3   # trailing comment
+@barrier 4
+set 1 2.5
+insert 7 0.5
+@barrier 9
+add 5 0
+";
+        let segs = parse_delta_text(text).unwrap();
+        assert_eq!(
+            segs,
+            vec![
+                (1, vec![
+                    JournalRecord::AddEdge { src: 0, dst: 5 },
+                    JournalRecord::DelEdge { src: 2, dst: 3 },
+                ]),
+                (4, vec![
+                    JournalRecord::SetVertex { id: 1, value: 2.5 },
+                    JournalRecord::InsertVertex { id: 7, value: 0.5 },
+                ]),
+                (9, vec![JournalRecord::AddEdge { src: 5, dst: 0 }]),
+            ]
+        );
+        assert!(parse_delta_text("frobnicate 1 2").is_err());
+        assert!(parse_delta_text("add 1").is_err());
+    }
+
+    #[test]
+    fn record_owner_touched_universe() {
+        let r = JournalRecord::AddEdge { src: 3, dst: 10 };
+        assert_eq!(r.owner(), 3);
+        assert_eq!(r.touched(), (3, Some(10)));
+        assert!(r.is_edge());
+        assert!(r.in_universe(11));
+        assert!(!r.in_universe(10));
+        let s = JournalRecord::SetVertex { id: 4, value: 1.0 };
+        assert_eq!(s.owner(), 4);
+        assert_eq!(s.touched(), (4, None));
+        assert!(!s.is_edge());
+    }
+
+    #[test]
+    fn cp_marker_scan_finds_latest_committed() {
+        use crate::storage::checkpoint::{cp_key, cp_meta_key, CpMeta};
+        let hdfs = SimHdfs::in_memory();
+        assert!(latest_committed_cp(&hdfs).unwrap().is_none());
+        for step in [0u64, 4, 8] {
+            hdfs.put(&cp_key(step, 0), b"blob").unwrap();
+            let meta =
+                CpMeta { step, agg: vec![], active_count: step, sent_msgs: 0 };
+            hdfs.put(&cp_meta_key(step), &meta.to_bytes()).unwrap();
+        }
+        // CP[12]'s blobs are flushed but its marker never landed: the
+        // serve path must not see it.
+        hdfs.put(&cp_key(12, 0), b"inflight").unwrap();
+        let (step, meta) = latest_committed_cp(&hdfs).unwrap().unwrap();
+        assert_eq!(step, 8);
+        assert_eq!(meta.active_count, 8);
+    }
+}

@@ -37,6 +37,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod ft;
 pub mod graph;
+pub mod ingest;
 pub mod metrics;
 pub mod pregel;
 pub mod runtime;

@@ -156,8 +156,77 @@ pub struct RunMetrics {
     pub wall_ms: f64,
     /// Wall-clock breakdown per pipeline phase (perf tracking).
     pub phase_wall: PhaseWall,
+    /// External ingest lane totals (journal drains at barriers).
+    pub ingest: IngestTotals,
+    /// Online serving lane samples (committed-snapshot reads).
+    pub serve: ServeMetrics,
     /// Result digest (hash of final vertex values) — equivalence checks.
     pub result_digest: u64,
+}
+
+/// Totals of the external ingest lane (`ingest` module): journal
+/// segments drained at superstep barriers and applied through the
+/// E_W mutation path.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IngestTotals {
+    /// Committed journal segments drained (fresh drains only).
+    pub segments_applied: u64,
+    /// Records applied (fresh drains only; excludes recovery re-applies).
+    pub records_applied: u64,
+    /// Edge records among `records_applied` (these flow into E_W).
+    pub edge_records: u64,
+    /// Vertex set/insert records among `records_applied`.
+    pub vertex_records: u64,
+    /// Records dropped for naming vertices outside the fixed universe.
+    pub dropped_records: u64,
+    /// Vertices newly activated by delta-reactivation (sums over fresh
+    /// applies *and* recovery re-applies — it is apply work performed).
+    pub reactivated: u64,
+    /// Recorded batches re-applied during recovery re-execution.
+    pub replayed_batches: u64,
+    /// Journal bytes read by fresh drains.
+    pub journal_bytes: u64,
+    /// Committed segments left unapplied at job end (the job converged
+    /// or hit its superstep cap before their `not_before` barrier).
+    pub pending_segments: u64,
+}
+
+/// One answered serve query (see `ingest::ServeProbe`): what was asked,
+/// which committed checkpoint answered it, and how stale that was.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSample {
+    /// Barrier superstep at which the query was answered ("head").
+    pub at_step: u64,
+    /// Committed checkpoint superstep the answer was read from
+    /// (`None`: no committed checkpoint existed — query unanswerable).
+    pub committed_step: Option<u64>,
+    /// `at_step - committed_step` — supersteps of staleness.
+    pub staleness: Option<u64>,
+    /// The query, rendered (`point(v)` / `top-k`).
+    pub query: String,
+    /// The answer, rendered (value text or ranked `id:score` list).
+    pub result: String,
+    /// Modeled read time of the snapshot blobs consulted (the serving
+    /// lane is off the job's critical path, so this is reported, not
+    /// charged to worker clocks).
+    pub read_cost: f64,
+}
+
+/// The serving lane's sample log.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeMetrics {
+    pub samples: Vec<ServeSample>,
+}
+
+impl ServeMetrics {
+    pub fn queries(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    /// Worst staleness over answered queries.
+    pub fn max_staleness(&self) -> Option<u64> {
+        self.samples.iter().filter_map(|s| s.staleness).max()
+    }
 }
 
 fn avg(xs: impl Iterator<Item = f64>) -> f64 {

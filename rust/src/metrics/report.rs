@@ -85,6 +85,51 @@ pub fn pager_table() -> Table {
     Table::new(vec!["", "resident peak", "faults", "page-in", "writebacks", "write-back"])
 }
 
+/// Render the external-ingest row: journal segments/records applied at
+/// barriers, delta-reactivated vertices, and journal read volume.
+pub fn ingest_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    let i = &m.ingest;
+    vec![
+        name.to_string(),
+        i.segments_applied.to_string(),
+        i.records_applied.to_string(),
+        format!("{}e/{}v", i.edge_records, i.vertex_records),
+        i.reactivated.to_string(),
+        bytes(i.journal_bytes),
+        i.pending_segments.to_string(),
+    ]
+}
+
+/// Build the external-ingest table header.
+pub fn ingest_table() -> Table {
+    Table::new(vec!["", "segments", "records", "edge/vertex", "reactivated", "journal", "pending"])
+}
+
+/// Render the serving-lane rows, one per answered query: the barrier
+/// head it was asked at, the committed checkpoint that answered it, the
+/// staleness gap, and the answer.
+pub fn serve_rows(m: &RunMetrics) -> Vec<Vec<String>> {
+    m.serve
+        .samples
+        .iter()
+        .map(|s| {
+            vec![
+                s.query.clone(),
+                s.at_step.to_string(),
+                s.committed_step.map_or("-".to_string(), |c| c.to_string()),
+                s.staleness.map_or("-".to_string(), |st| st.to_string()),
+                secs(s.read_cost),
+                s.result.clone(),
+            ]
+        })
+        .collect()
+}
+
+/// Build the serving-lane table header.
+pub fn serve_table() -> Table {
+    Table::new(vec!["query", "head", "cp", "stale", "read", "result"])
+}
+
 /// Build the Table 2 header.
 pub fn superstep_table() -> Table {
     Table::new(vec!["", "T_norm", "T_cpstep", "T_recov", "T_last"])
@@ -136,5 +181,47 @@ mod tests {
         let mut t = superstep_table();
         t.row(r);
         assert!(t.render().contains("T_cpstep"));
+    }
+
+    #[test]
+    fn ingest_and_serve_rows_format() {
+        let mut m = RunMetrics::default();
+        m.ingest.segments_applied = 2;
+        m.ingest.records_applied = 5;
+        m.ingest.edge_records = 3;
+        m.ingest.vertex_records = 2;
+        m.ingest.reactivated = 11;
+        m.ingest.journal_bytes = 2048;
+        let r = ingest_row("LWCP", &m);
+        assert_eq!(r[1], "2");
+        assert_eq!(r[3], "3e/2v");
+        assert_eq!(r[5], "2.00 KiB");
+        assert!(ingest_table().render().contains("reactivated"));
+        m.serve.samples.push(crate::metrics::ServeSample {
+            at_step: 10,
+            committed_step: Some(8),
+            staleness: Some(2),
+            query: "point(3)".into(),
+            result: "0.5".into(),
+            read_cost: 0.25,
+        });
+        m.serve.samples.push(crate::metrics::ServeSample {
+            at_step: 2,
+            committed_step: None,
+            staleness: None,
+            query: "top-3".into(),
+            result: "no committed snapshot".into(),
+            read_cost: 0.0,
+        });
+        let rows = serve_rows(&m);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][3], "2");
+        assert_eq!(rows[1][2], "-");
+        assert_eq!(m.serve.max_staleness(), Some(2));
+        let mut t = serve_table();
+        for row in rows {
+            t.row(row);
+        }
+        assert!(t.render().contains("stale"));
     }
 }

@@ -52,6 +52,22 @@ use anyhow::Result;
 /// Sender-side message combiner (fold `m` into `acc`).
 pub type CombineFn<M> = fn(&mut M, &M);
 
+/// Delta-reactivation policy for externally-ingested updates (see
+/// [`App::on_external_update`]): after an `ingest::JournalRecord` batch
+/// is applied at a barrier, which vertices wake up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExternalReactivation {
+    /// Updates change topology/state but wake nobody (the next
+    /// app-driven activation will see them).
+    Nothing,
+    /// Only the vertices named by the records reactivate.
+    Touched,
+    /// Touched vertices plus every vertex holding an out-edge into the
+    /// touched set (its in-neighbors) — the delta-propagation frontier,
+    /// found by a local adjacency scan on each worker.
+    TouchedAndInNeighbors,
+}
+
 /// A vertex program, written as two typed phases (see the module docs):
 /// [`App::update`] folds messages into state, [`App::emit`] generates
 /// messages from state through a read-only view, and the optional
@@ -160,6 +176,36 @@ pub trait App: Send + Sync + 'static {
     /// (graph-topology work), and recovery replay is untouched.
     fn supports_page_scan(&self) -> bool {
         false
+    }
+
+    /// Delta-reactivation policy for externally-ingested updates
+    /// (`ingest::JournalRecord` batches applied at superstep barriers):
+    /// which vertices wake up so that only affected state recomputes.
+    /// The default — touched vertices plus their local in-neighbors —
+    /// is correct for monotone fixpoint apps (connected components,
+    /// SSSP); apps whose convergence is time-based rather than
+    /// halt-based (PageRank's fixed superstep count) may narrow it.
+    fn on_external_update(&self) -> ExternalReactivation {
+        ExternalReactivation::TouchedAndInNeighbors
+    }
+
+    /// Convert an external vertex payload (the journal's app-agnostic
+    /// `f64`) into this app's value type. The default ignores the
+    /// payload and keeps the current value — an app must opt in before
+    /// external `set`/`insert` records can change its state. Must be a
+    /// pure function of `(payload, current)`: recovery re-applies
+    /// recorded batches and relies on identical results.
+    fn value_from_external(&self, payload: f64, current: &Self::V) -> Self::V {
+        let _ = payload;
+        current.clone()
+    }
+
+    /// Scalar ranking score of a vertex value for the serving lane's
+    /// top-k scan (`ingest::ProbeKind::TopK`). `None` (the default)
+    /// means the app's values have no total order and top-k queries
+    /// fail loudly; point queries always work.
+    fn serve_score(&self, _value: &Self::V) -> Option<f64> {
+        None
     }
 
     /// The page-scan update: fold one pinned page's incoming messages

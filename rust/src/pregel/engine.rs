@@ -30,7 +30,8 @@ use super::worker::{StepOutput, Worker};
 use crate::comm::WorkerSet;
 use crate::ft::FtKind;
 use crate::graph::{Partitioner, VertexId};
-use crate::metrics::{RunMetrics, StepKind, StepRecord};
+use crate::ingest::{self, JournalRecord, ProbeKind, ServeProbe};
+use crate::metrics::{RunMetrics, ServeSample, StepKind, StepRecord};
 use crate::sim::{CostModel, Topology};
 use crate::storage::{Backing, SimHdfs};
 use crate::util::codec::Codec;
@@ -227,6 +228,21 @@ pub struct Engine<A: App> {
     /// (`ft::checkpoint_ops`): joined before the next checkpoint, any
     /// recovery, and job end.
     pub(crate) inflight: Option<crate::ft::checkpoint_ops::InflightCp>,
+    /// Highest external journal segment sequence number already drained
+    /// (`ingest`): fresh segments are applied only in `Stage::Normal`;
+    /// recovery replays the recorded batches below instead, so a
+    /// re-executed barrier sees bit-identical external input.
+    pub(crate) ingest_seq: u64,
+    /// Barrier → the exact batch applied there (records in journal
+    /// order, post universe filtering). Entries below the committed
+    /// checkpoint frontier are pruned at each committed join.
+    pub(crate) ingest_log: BTreeMap<u64, Vec<JournalRecord>>,
+    /// Online-serving probes: bounded-staleness reads answered from the
+    /// latest *committed* checkpoint at their barrier (never in-flight
+    /// state). Probes left over at job end fire once against the final
+    /// committed snapshot.
+    pub(crate) probes: Vec<ServeProbe>,
+    pub(crate) probe_fired: Vec<bool>,
 }
 
 impl<A: App> Engine<A> {
@@ -280,6 +296,10 @@ impl<A: App> Engine<A> {
             pool,
             arena: BatchArena::new(),
             inflight: None,
+            ingest_seq: 0,
+            ingest_log: BTreeMap::new(),
+            probes: Vec::new(),
+            probe_fired: Vec::new(),
         })
     }
 
@@ -293,6 +313,31 @@ impl<A: App> Engine<A> {
     pub fn with_failures(mut self, plan: FailurePlan) -> Self {
         self.failure_plan = plan;
         self
+    }
+
+    /// Install online-serving probes (answered at their barrier from the
+    /// latest committed checkpoint; leftovers fire at job end).
+    pub fn with_probes(mut self, probes: Vec<ServeProbe>) -> Self {
+        self.probe_fired = vec![false; probes.len()];
+        self.probes = probes;
+        self
+    }
+
+    /// Pre-stage external journal segments into this job's store before
+    /// `run()` — the CLI's delta-file lane and the test harness. Each
+    /// `(not_before, records)` group becomes one atomically committed
+    /// segment in sequence order; empty groups are skipped.
+    pub fn stage_journal(&self, segments: &[(u64, Vec<JournalRecord>)]) -> Result<()> {
+        if segments.iter().all(|(_, recs)| recs.is_empty()) {
+            return Ok(());
+        }
+        let mut w = ingest::JournalWriter::open(Arc::clone(&self.hdfs))?;
+        for (not_before, recs) in segments {
+            if !recs.is_empty() {
+                w.append(*not_before, recs)?;
+            }
+        }
+        Ok(())
     }
 
     /// Max virtual clock over alive workers.
@@ -373,6 +418,12 @@ impl<A: App> Engine<A> {
             // past a masked superstep, or checkpointing disabled): fail
             // loudly rather than silently skip it and every later kill.
             self.ensure_no_pending_during_cp_kill(step)?;
+            // External ingest applies *after* the checkpoint decision:
+            // CP[step] snapshots pre-ingest states (LWCP recovery replays
+            // emit(step) from them), and the batch buffers under E_W key
+            // step+1 so CP[step]'s committed join cannot drain it early.
+            self.apply_ingest_at(step)?;
+            self.run_probes_at(step)?;
             step += 1;
         }
         // The final checkpoint's flush may still be in flight: join it
@@ -400,6 +451,24 @@ impl<A: App> Engine<A> {
                  its checkpoint write (check at_step vs job length and cp_every)"
             );
         }
+        // Serving probes the loop never reached (converged or capped
+        // first) fire once against the final committed snapshot, so a
+        // query lane always gets an answer with an honest staleness gap.
+        let head = self.metrics.steps.last().map_or(0, |s| s.step);
+        for i in 0..self.probes.len() {
+            if !self.probe_fired[i] {
+                let kind = self.probes[i].kind;
+                let sample = self.serve_query(head, kind)?;
+                self.metrics.serve.samples.push(sample);
+                self.probe_fired[i] = true;
+            }
+        }
+        // Journal segments that committed too late to be drained stay
+        // pending (the barrier loop has ended) — report, don't hide.
+        self.metrics.ingest.pending_segments = ingest::committed_segments(&self.hdfs)?
+            .iter()
+            .filter(|m| m.seq > self.ingest_seq)
+            .count() as u64;
         self.metrics.final_time = self.max_clock();
         self.metrics.supersteps_run = self.metrics.steps.len() as u64;
         self.metrics.wall_ms = wall.elapsed().as_secs_f64() * 1e3;
@@ -416,6 +485,252 @@ impl<A: App> Engine<A> {
             h.update(&w.part.digest().to_le_bytes());
         }
         h.finish()
+    }
+
+    /// Barrier hook of the external ingest lane: in `Stage::Normal`,
+    /// drain every committed journal segment that is due (`seq` above
+    /// the watermark, `not_before <= step`) in sequence order, stopping
+    /// at the first not-yet-due segment so the journal's total order is
+    /// never reordered; record the drained batch so a re-executed
+    /// barrier (Stage::Recovering) re-applies bit-identical input
+    /// instead of consuming fresh segments at the wrong point in time.
+    fn apply_ingest_at(&mut self, step: u64) -> Result<()> {
+        let replaying = matches!(self.stage, Stage::Recovering { .. });
+        let batch: Vec<JournalRecord> = if replaying {
+            match self.ingest_log.get(&step) {
+                Some(b) => b.clone(),
+                None => return Ok(()),
+            }
+        } else {
+            let mut fresh_segments = 0u64;
+            let mut fresh_bytes = 0u64;
+            let mut recs = Vec::new();
+            for meta in ingest::committed_segments(&self.hdfs)? {
+                if meta.seq <= self.ingest_seq {
+                    continue;
+                }
+                if meta.not_before > step {
+                    break; // later segments must not overtake this one
+                }
+                for r in ingest::read_segment(&self.hdfs, &meta)? {
+                    if r.in_universe(self.partitioner.n_vertices) {
+                        recs.push(r);
+                    } else {
+                        self.metrics.ingest.dropped_records += 1;
+                    }
+                }
+                fresh_segments += 1;
+                fresh_bytes += meta.data_bytes;
+                self.ingest_seq = meta.seq;
+            }
+            if fresh_segments == 0 {
+                return Ok(());
+            }
+            self.metrics.ingest.segments_applied += fresh_segments;
+            self.metrics.ingest.journal_bytes += fresh_bytes;
+            if recs.is_empty() {
+                return Ok(()); // every record was out of universe
+            }
+            self.metrics.ingest.records_applied += recs.len() as u64;
+            self.metrics.ingest.edge_records +=
+                recs.iter().filter(|r| r.is_edge()).count() as u64;
+            self.metrics.ingest.vertex_records +=
+                recs.iter().filter(|r| !r.is_edge()).count() as u64;
+            self.ingest_log.insert(step, recs.clone());
+            recs
+        };
+        if replaying {
+            self.metrics.ingest.replayed_batches += 1;
+        }
+        self.apply_ingest_batch(step, &batch)
+    }
+
+    /// Route one ingest batch to its owners and apply it. Targets every
+    /// alive worker whose committed frontier sits exactly at `step`: in
+    /// normal execution that is everyone; under checkpoint-kind recovery
+    /// everyone was rolled back (and the CP loaders cleared the mutation
+    /// buffers, so the E_W re-append is exactly-once); under log-kind
+    /// recovery only the respawned workers re-execute — survivors kept
+    /// their state and buffered mutations and must not apply twice.
+    pub(crate) fn apply_ingest_batch(&mut self, step: u64, batch: &[JournalRecord]) -> Result<()> {
+        if batch.iter().any(|r| r.is_edge()) {
+            // An external edge edit is part of superstep step+1's input
+            // topology: log-based kinds must fall back to message
+            // logging there and LWCP recovery must reload adjacency —
+            // exactly the in-program mutation bookkeeping (idempotent
+            // on replay).
+            self.mutated_steps.insert(step + 1);
+            self.any_mutation = true;
+        }
+        let mut touched: BTreeSet<VertexId> = BTreeSet::new();
+        for r in batch {
+            let (a, b) = r.touched();
+            touched.insert(a);
+            if let Some(b) = b {
+                touched.insert(b);
+            }
+        }
+        // The journal read charge is the encoded batch (recomputed, so
+        // fresh drains and recovery replays charge symmetrically).
+        let batch_bytes = {
+            let mut scratch = Vec::new();
+            for r in batch {
+                r.encode(&mut scratch);
+            }
+            scratch.len() as u64
+        };
+        let ranks: Vec<usize> = self
+            .ws
+            .alive_ranks()
+            .into_iter()
+            .filter(|&r| self.workers[r].s_w == step)
+            .collect();
+        if ranks.is_empty() {
+            return Ok(());
+        }
+        let sharers = self.sharers_by_rank();
+        let app = Arc::clone(&self.app);
+        let outcomes = {
+            let refs = executor::select_workers(&mut self.workers, &ranks);
+            executor::ingest_apply_phase(
+                &self.pool,
+                refs,
+                app.as_ref(),
+                batch,
+                &touched,
+                step + 1,
+                batch_bytes,
+                &sharers,
+                &self.cfg.cost,
+            )?
+        };
+        for (_, o) in &outcomes {
+            self.metrics.ingest.reactivated += o.reactivated;
+        }
+        self.barrier(0.0);
+        Ok(())
+    }
+
+    /// Recovery re-seed (`ft::recovery_ops::perform_failure`): the batch
+    /// applied at barrier `cp_last` is *not* in the committed E_W (it
+    /// buffers under key cp_last+1, and E_W holds keys <= cp_last), so
+    /// after rollback it must be re-applied to every worker whose
+    /// frontier was reset to `cp_last` before re-execution starts.
+    pub(crate) fn reapply_ingest_after_rollback(&mut self) -> Result<()> {
+        let cp = self.cp_last;
+        let batch = match self.ingest_log.get(&cp) {
+            Some(b) => b.clone(),
+            None => return Ok(()),
+        };
+        self.metrics.ingest.replayed_batches += 1;
+        self.apply_ingest_batch(cp, &batch)
+    }
+
+    /// Fire due serving probes. Normal stage only: each barrier's hooks
+    /// run in `Stage::Normal` exactly once (re-executed barriers are
+    /// `Recovering`; the failure barrier itself flips back to Normal
+    /// before its hooks on the retry pass), so no probe answers twice.
+    fn run_probes_at(&mut self, step: u64) -> Result<()> {
+        if matches!(self.stage, Stage::Recovering { .. }) {
+            return Ok(());
+        }
+        for i in 0..self.probes.len() {
+            if !self.probe_fired[i] && self.probes[i].at_step == step {
+                let kind = self.probes[i].kind;
+                let sample = self.serve_query(step, kind)?;
+                self.metrics.serve.samples.push(sample);
+                self.probe_fired[i] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Answer one online query from the latest *committed* checkpoint —
+    /// never from in-flight worker state, so a reader can never observe
+    /// a snapshot that a failure could roll back. Correct by
+    /// construction: only `cp/{step}/meta` commit markers are scanned,
+    /// and the marker is written strictly after every state blob.
+    /// Staleness is the barrier-head / committed-checkpoint gap; the
+    /// read cost is reported on the sample, not charged to worker
+    /// clocks (serving reads are off the job's critical path).
+    pub fn serve_query(&self, head_step: u64, kind: ProbeKind) -> Result<ServeSample> {
+        use crate::storage::checkpoint::{cp_key, Cp0, VertexStates};
+        use crate::util::codec::Reader;
+        let query = kind.to_string();
+        let Some((cp_step, _meta)) = ingest::latest_committed_cp(&self.hdfs)? else {
+            return Ok(ServeSample {
+                at_step: head_step,
+                committed_step: None,
+                staleness: None,
+                query,
+                result: "no committed snapshot".into(),
+                read_cost: 0.0,
+            });
+        };
+        let mut read_bytes = 0u64;
+        // CP[0] blobs are `Cp0` (values ++ active ++ adjacency); every
+        // later kind's blob starts with a `VertexStates` image (exactly
+        // for the lightweight kinds, as a prefix of the heavyweight
+        // blob), so a prefix decode reads the committed values.
+        let load = |rank: usize, read_bytes: &mut u64| -> Result<Vec<A::V>> {
+            let blob = self.hdfs.get(&cp_key(cp_step, rank))?;
+            *read_bytes += blob.len() as u64;
+            if cp_step == 0 {
+                Ok(Cp0::<A::V>::from_bytes(&blob)?.values)
+            } else {
+                let mut r = Reader::new(&blob);
+                Ok(VertexStates::<A::V>::decode(&mut r)?.values)
+            }
+        };
+        let result = match kind {
+            ProbeKind::Point(v) => {
+                if (v as usize) >= self.partitioner.n_vertices {
+                    format!("vertex {v} out of range")
+                } else {
+                    let values = load(self.partitioner.rank_of(v), &mut read_bytes)?;
+                    format!("{:?}", values[self.partitioner.slot_of(v)])
+                }
+            }
+            ProbeKind::TopK(k) => {
+                let mut scored: Vec<(f64, VertexId)> = Vec::new();
+                let mut scoreless = false;
+                'ranks: for rank in 0..self.partitioner.n_workers {
+                    let values = load(rank, &mut read_bytes)?;
+                    for (slot, val) in values.iter().enumerate() {
+                        match self.app.serve_score(val) {
+                            Some(s) => scored.push((s, self.partitioner.id_of(rank, slot))),
+                            None => {
+                                scoreless = true;
+                                break 'ranks;
+                            }
+                        }
+                    }
+                }
+                if scoreless {
+                    "app defines no serve score (top-k unavailable)".to_string()
+                } else {
+                    scored.sort_by(|a, b| {
+                        b.0.partial_cmp(&a.0)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.1.cmp(&b.1))
+                    });
+                    scored.truncate(k);
+                    scored
+                        .iter()
+                        .map(|(s, v)| format!("{v}:{s:.6}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                }
+            }
+        };
+        Ok(ServeSample {
+            at_step: head_step,
+            committed_step: Some(cp_step),
+            staleness: Some(head_step.saturating_sub(cp_step)),
+            query,
+            read_cost: self.cfg.cost.hdfs_read_time(read_bytes, 1),
+            result,
+        })
     }
 
     /// Collected global aggregator of a fully-committed superstep.

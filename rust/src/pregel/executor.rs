@@ -57,7 +57,7 @@
 use super::app::{App, BatchExec, CombineFn};
 use super::kernels::KernelMode;
 use super::message::{merge_machine_batch, MachineMerge};
-use super::worker::{StepOutput, Worker};
+use super::worker::{IngestOutcome, StepOutput, Worker};
 use crate::graph::Partitioner;
 use crate::sim::{CostModel, PhaseCost};
 use crate::util::codec::Codec;
@@ -421,6 +421,38 @@ pub fn log_phase<A: App>(
         },
     );
     results.into_iter().collect()
+}
+
+/// The ingest-apply phase unit: apply one external journal batch to
+/// every selected worker at a superstep barrier
+/// (`Worker::apply_external_batch`), all workers concurrently. Each
+/// worker filters the shared batch down to the records it owns
+/// (placement-keyed routing), charges its own clock for journal read +
+/// apply, and reports an [`IngestOutcome`] — returned in rank order.
+/// `read_bytes` is the drained journal volume; every applying worker is
+/// charged the read (workers fetch the committed segments from the
+/// resilient store, sharing their machine's NIC like a checkpoint load).
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_apply_phase<A: App>(
+    pool: &WorkerPool,
+    workers: Vec<(usize, &mut Worker<A>)>,
+    app: &A,
+    batch: &[crate::ingest::JournalRecord],
+    touched: &std::collections::BTreeSet<crate::graph::VertexId>,
+    buffer_step: u64,
+    read_bytes: u64,
+    sharers: &[usize],
+    cost: &CostModel,
+) -> Result<Vec<(usize, IngestOutcome)>> {
+    let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
+    let results = pool.map_named("ingest-apply", Some(ranks.as_slice()), workers, |(r, w)| {
+        if read_bytes > 0 {
+            w.clock.advance(cost.hdfs_read_time(read_bytes, sharers[r]));
+        }
+        let out = w.apply_external_batch(app, batch, touched, buffer_step, cost);
+        (r, out)
+    });
+    Ok(results)
 }
 
 /// The machine-combine phase unit (stage one of the two-stage shuffle):

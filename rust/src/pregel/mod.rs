@@ -30,7 +30,7 @@ pub mod partition;
 pub mod worker;
 
 pub use aggregator::AggState;
-pub use app::{App, BatchExec, EmitCtx, NoXla, PageScanCtx, UpdateCtx};
+pub use app::{App, BatchExec, EmitCtx, ExternalReactivation, NoXla, PageScanCtx, UpdateCtx};
 pub use engine::{Engine, EngineConfig, FailurePlan, Kill};
 pub use executor::WorkerPool;
 pub use kernels::{KernelMode, LANES};

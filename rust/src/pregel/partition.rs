@@ -186,12 +186,34 @@ impl<V: Clone + Codec + Send + Sync + 'static> Partition<V> {
         values.value(slot, &mut *mem)
     }
 
-    /// Apply an edge mutation to `slot` (E_W replay during recovery).
+    /// Apply an edge mutation to `slot` (E_W replay during recovery,
+    /// external ingest application at barriers).
     pub fn apply_mutation(&mut self, slot: usize, m: &Mutation) {
         let page_slots = self.values.page_slots();
         let ep = self.edge_page(slot / page_slots);
         ep.adj.apply(slot % page_slots, m);
         *ep.dirty = true;
+    }
+
+    /// Overwrite one slot's value (external ingest `set`/`insert`).
+    pub fn set_value(&mut self, slot: usize, v: V) {
+        let page_slots = self.values.page_slots();
+        let vp = self.value_page(slot / page_slots);
+        vp.values[slot - vp.base] = v;
+        *vp.dirty = true;
+    }
+
+    /// Set one slot's active flag (delta-reactivation; flags are
+    /// always resident, so no dirty mark is needed).
+    pub fn set_active(&mut self, slot: usize, a: bool) {
+        let page_slots = self.values.page_slots();
+        let vp = self.value_page(slot / page_slots);
+        vp.active[slot - vp.base] = a;
+    }
+
+    /// Is `slot` currently active? (reactivation counting).
+    pub fn is_active(&self, slot: usize) -> bool {
+        self.values.flags().0[slot]
     }
 
     /// Append the `VertexStates` codec stream (values, packed active,
@@ -447,6 +469,26 @@ mod tests {
         }
         assert_eq!(inmem.digest(), paged.digest());
         assert!(paged.pager_totals().in_bytes > 0, "paged store never touched its spill");
+    }
+
+    #[test]
+    fn set_value_and_active_through_the_page_store() {
+        for pager in pagers() {
+            let mut part = build(0, pager);
+            part.set_value(2, 77.0);
+            assert_eq!(part.value(2), 77.0);
+            assert!(part.is_active(1));
+            part.set_active(1, false);
+            assert!(!part.is_active(1));
+            assert_eq!(part.active_count(), 2);
+            part.set_active(1, true);
+            assert_eq!(part.active_count(), 3);
+            // The overwrite lands in the digest stream.
+            assert_ne!(
+                part.digest(),
+                digest_parts(&[1.0f32, 2.5, 5.5], &[true, true, true])
+            );
+        }
     }
 
     #[test]

@@ -26,6 +26,20 @@ pub struct StepOutput<M: Codec + Clone> {
     pub mutated: bool,
 }
 
+/// What applying one external ingest batch produced on one worker
+/// (see [`Worker::apply_external_batch`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IngestOutcome {
+    /// Edge records applied here (routed by `rank_of(src)`).
+    pub edge_applied: u64,
+    /// Vertex set/insert records applied here (routed by `rank_of(id)`).
+    pub vertex_applied: u64,
+    /// Local vertices newly woken by delta-reactivation.
+    pub reactivated: u64,
+    /// Bytes appended to the local mutation buffer (edge records).
+    pub log_bytes: u64,
+}
+
 /// A worker process.
 pub struct Worker<A: App> {
     pub rank: usize,
@@ -106,6 +120,106 @@ impl<A: App> Worker<A> {
             self.clock
                 .advance(cost.page_in_time(io.in_bytes) + cost.page_out_time(io.out_bytes));
         }
+    }
+
+    /// Apply one external ingest batch (committed journal records, in
+    /// journal order) to this worker at a superstep barrier.
+    ///
+    /// Routing is placement-keyed: the worker applies exactly the
+    /// records whose [`crate::ingest::JournalRecord::owner`] hashes
+    /// here, in batch order — every worker scans the same batch, so
+    /// any thread count applies the same records in the same order.
+    /// Edge records go through [`Partition::apply_mutation`] and are
+    /// appended to the local mutation buffer keyed `buffer_step` (the
+    /// *next* superstep: CP\[s\]'s commit drains entries `<= s`, and the
+    /// edits are part of superstep s+1's input topology), so the next
+    /// committed checkpoint subsumes them into E_W and recovery replays
+    /// them bit-identically. Vertex records overwrite values through
+    /// [`App::value_from_external`]. Finally, delta-reactivation wakes
+    /// the local members of `touched` — plus local in-neighbors of the
+    /// touched set under the default
+    /// [`App::on_external_update`] policy — so only affected
+    /// state recomputes.
+    pub fn apply_external_batch(
+        &mut self,
+        app: &A,
+        batch: &[crate::ingest::JournalRecord],
+        touched: &std::collections::BTreeSet<VertexId>,
+        buffer_step: u64,
+        cost: &CostModel,
+    ) -> IngestOutcome {
+        use crate::ingest::JournalRecord;
+        let mut out = IngestOutcome::default();
+        let mut enc: Vec<u8> = Vec::new();
+        for rec in batch {
+            let owner = rec.owner();
+            if self.part.partitioner.rank_of(owner) != self.rank {
+                continue;
+            }
+            let slot = self.part.partitioner.slot_of(owner);
+            match *rec {
+                JournalRecord::AddEdge { src, dst } => {
+                    let m = Mutation::AddEdge { src, dst };
+                    self.part.apply_mutation(slot, &m);
+                    m.encode(&mut enc);
+                    out.edge_applied += 1;
+                }
+                JournalRecord::DelEdge { src, dst } => {
+                    let m = Mutation::DelEdge { src, dst };
+                    self.part.apply_mutation(slot, &m);
+                    m.encode(&mut enc);
+                    out.edge_applied += 1;
+                }
+                JournalRecord::SetVertex { value, .. }
+                | JournalRecord::InsertVertex { value, .. } => {
+                    let cur = self.part.value(slot);
+                    let next = app.value_from_external(value, &cur);
+                    self.part.set_value(slot, next);
+                    out.vertex_applied += 1;
+                }
+            }
+        }
+        // Delta-reactivation: wake local touched vertices, then (policy
+        // permitting) scan the local adjacency pages for in-neighbors of
+        // the touched set. Candidates are collected first so the page
+        // borrow never overlaps the flag writes.
+        use super::app::ExternalReactivation as R;
+        let policy = app.on_external_update();
+        if policy != R::Nothing && !touched.is_empty() {
+            let mut wake: Vec<usize> = Vec::new();
+            for slot in 0..self.part.n_slots() {
+                if touched.contains(&self.part.id_of(slot)) {
+                    wake.push(slot);
+                }
+            }
+            if policy == R::TouchedAndInNeighbors {
+                for p in 0..self.part.n_pages() {
+                    let range = self.part.page_range(p);
+                    let ep = self.part.edge_page(p);
+                    for slot in range {
+                        if ep.adj.neighbors(slot - ep.base).iter().any(|d| touched.contains(d)) {
+                            wake.push(slot);
+                        }
+                    }
+                }
+            }
+            wake.sort_unstable();
+            wake.dedup();
+            for slot in wake {
+                if !self.part.is_active(slot) {
+                    self.part.set_active(slot, true);
+                    out.reactivated += 1;
+                }
+            }
+        }
+        if !enc.is_empty() {
+            out.log_bytes = enc.len() as u64;
+            self.clock.advance(cost.log_write_time(enc.len() as u64));
+            self.log.append_mutations(buffer_step, enc);
+        }
+        self.clock.advance(cost.ingest_apply_time(out.edge_applied + out.vertex_applied));
+        self.settle_page_io(cost);
+        out
     }
 
     /// Run the compute phase of `superstep`: run the two-phase vertex

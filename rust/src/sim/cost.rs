@@ -152,6 +152,11 @@ pub struct CostModel {
     pub per_vertex_batch: f64,
     /// Fixed cost per XLA executable launch.
     pub xla_launch: f64,
+    /// Per-record cost of applying an external journal record at a
+    /// superstep barrier (route + adjacency edit / value overwrite +
+    /// reactivation bookkeeping). The journal *read* is charged
+    /// separately through the HDFS read path.
+    pub per_ingest_apply: f64,
     /// Throughput multiplier of the vectorized page-scan kernels
     /// (`pregel::kernels`) over the per-vertex scalar update: the
     /// kernel path divides `per_vertex` by this. The default of 1.0
@@ -202,6 +207,7 @@ impl Default for CostModel {
             per_msg_combine: 25.0e-9,
             per_vertex_batch: 6.0e-9,
             xla_launch: 50.0e-6,
+            per_ingest_apply: 120.0e-9,
             kernel_speedup: 1.0,
             barrier_overhead: 5.0e-3,
             spawn_cost: 2.0,
@@ -270,6 +276,12 @@ impl CostModel {
     /// pair's gateway worker).
     pub fn combine_time(&self, n_msgs: u64) -> f64 {
         self.profile.compute_mult() * self.scaled(n_msgs) * self.per_msg_combine
+    }
+
+    /// CPU time to apply `n` external journal records at a barrier
+    /// (the ingest lane's per-worker apply cost).
+    pub fn ingest_apply_time(&self, n: u64) -> f64 {
+        self.profile.compute_mult() * self.scaled(n) * self.per_ingest_apply
     }
 
     /// Intra-machine staging of `bytes` over shared memory — the
@@ -526,5 +538,16 @@ mod tests {
         let m = CostModel::default();
         assert!(m.sync_time(120) < m.sync_time(120) * 2.0);
         assert!(m.sync_time(4) < m.sync_time(1024));
+    }
+
+    #[test]
+    fn ingest_apply_scales_with_records_and_profile() {
+        let m = CostModel::default();
+        assert_eq!(m.ingest_apply_time(0), 0.0);
+        assert!((m.ingest_apply_time(2000) / m.ingest_apply_time(1000) - 2.0).abs() < 1e-12);
+        let giraph = CostModel::with_profile(SystemProfile::GiraphLike);
+        assert!(giraph.ingest_apply_time(1000) > m.ingest_apply_time(1000));
+        let scaled = CostModel { data_scale: 10.0, ..Default::default() };
+        assert!((scaled.ingest_apply_time(100) / m.ingest_apply_time(1000) - 1.0).abs() < 1e-12);
     }
 }

@@ -165,6 +165,14 @@ impl LocalLogStore {
     }
 
     // ------------------------------------------------- mutation buffer
+    //
+    // Two producers share this buffer: in-program mutations buffered
+    // under the superstep that requested them, and external ingest
+    // batches (`crate::ingest`) applied at the barrier after superstep
+    // s and buffered under key s+1 — CP[s]'s committed drain
+    // (`clear_mutations_through(s)`) must not swallow an edit that is
+    // superstep s+1's input topology, and the next committed
+    // checkpoint's E_W increment then subsumes it for recovery.
 
     /// Buffer this superstep's encoded mutation requests.
     pub fn append_mutations(&mut self, step: u64, encoded: Vec<u8>) {
@@ -176,6 +184,15 @@ impl LocalLogStore {
     /// Bytes currently buffered.
     pub fn mutation_bytes(&self) -> u64 {
         self.mutations.iter().map(|(_, b)| b.len() as u64).sum()
+    }
+
+    /// The distinct superstep keys currently buffered, in order (test
+    /// introspection of the buffer-keying contract above).
+    pub fn mutation_steps(&self) -> Vec<u64> {
+        let mut steps: Vec<u64> = self.mutations.iter().map(|(s, _)| *s).collect();
+        steps.sort_unstable();
+        steps.dedup();
+        steps
     }
 
     /// Discard the whole buffer. Called on rollback recovery (the

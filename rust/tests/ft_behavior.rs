@@ -6,6 +6,7 @@
 use lwcp::apps::{HashMinCc, KCore, PageRank, PointerJump};
 use lwcp::ft::FtKind;
 use lwcp::graph::{generate, PresetGraph};
+use lwcp::ingest::{JournalRecord, ProbeKind, ServeProbe};
 use lwcp::pregel::{Engine, EngineConfig, FailurePlan, Kill};
 use lwcp::sim::Topology;
 use lwcp::storage::checkpoint::{cp_key, cp_prefix, ew_key};
@@ -308,6 +309,187 @@ fn kill_all_but_one_worker_still_recovers() {
     // Kill 5 of 6 workers (rank 0 survives to be elected master).
     let catastrophic = digest(FailurePlan::kill_n_at(5, 9), "all-f");
     assert_eq!(base, catastrophic);
+}
+
+// ------------------------------------------------------------ ingest lane
+
+/// Total committed E_W bytes across all six workers.
+fn ew_bytes<A: lwcp::pregel::App>(eng: &Engine<A>) -> u64 {
+    (0..6).filter_map(|r| eng.hdfs().size_of(&ew_key(r))).sum()
+}
+
+#[test]
+fn ingest_batch_with_during_cp_kill_applies_exactly_once() {
+    // The external batch lands at barrier 8 — the same barrier whose
+    // CP[8] write is aborted by a mid-write kill. The kill fires inside
+    // the checkpoint write, *before* the barrier's ingest hook, so
+    // nothing is recorded: the retry pass must re-run the checkpoint
+    // and then drain the journal fresh, exactly once. CP[8] stays
+    // pre-ingest (LWCP replays emit(8) from it), the batch buffers
+    // under E_W key 9, and the eventually-committed CP[12] appends each
+    // ingested edge record to E_W exactly once.
+    let adj = PresetGraph::WebBase.spec(1500, 13).generate();
+    let records = vec![
+        JournalRecord::AddEdge { src: 10, dst: 20 },
+        JournalRecord::AddEdge { src: 11, dst: 21 },
+        JournalRecord::AddEdge { src: 12, dst: 22 },
+        JournalRecord::SetVertex { id: 30, value: 3.5 },
+    ];
+    for ft in FtKind::all() {
+        let tag = format!("ingcp-{}", ft.name());
+        let mut base =
+            Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-b")), &adj).unwrap();
+        base.stage_journal(&[(8, records.clone())]).unwrap();
+        let mb = base.run().unwrap();
+        assert_eq!(mb.ingest.segments_applied, 1, "{}: base segments", ft.name());
+        assert_eq!(mb.ingest.records_applied, 4, "{}: base records", ft.name());
+        assert_eq!(mb.ingest.edge_records, 3, "{}: base edge records", ft.name());
+        assert_eq!(mb.ingest.vertex_records, 1, "{}: base vertex records", ft.name());
+        assert_eq!(mb.ingest.replayed_batches, 0, "{}: base replayed", ft.name());
+        assert_eq!(mb.ingest.pending_segments, 0, "{}: base pending", ft.name());
+
+        // The batch must actually matter: a journal-free run diverges.
+        let mut plain =
+            Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-p")), &adj).unwrap();
+        plain.run().unwrap();
+        assert_ne!(base.digest(), plain.digest(), "{}: batch had no effect", ft.name());
+
+        let plan = FailurePlan {
+            kills: vec![Kill {
+                at_step: 8,
+                ranks: vec![1],
+                machine_fails: false,
+                during_cp: true,
+            }],
+        };
+        let mut failed = Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-f")), &adj)
+            .unwrap()
+            .with_failures(plan);
+        failed.stage_journal(&[(8, records.clone())]).unwrap();
+        let mf = failed.run().unwrap();
+        assert!(mf.recovery_control > 0.0, "{}: no recovery recorded", ft.name());
+        assert_eq!(
+            failed.digest(),
+            base.digest(),
+            "{}: mid-checkpoint kill diverged from the same-journal baseline",
+            ft.name()
+        );
+        assert_eq!(mf.ingest.segments_applied, 1, "{}: segment drained twice", ft.name());
+        assert_eq!(mf.ingest.replayed_batches, 0, "{}: phantom replay", ft.name());
+        assert_eq!(mf.ingest.records_applied, 4, "{}: records", ft.name());
+
+        if matches!(ft, FtKind::LwCp | FtKind::LwLog) {
+            // PageRank makes no in-program mutations, so E_W holds
+            // exactly the three ingested edge records, 9 bytes each —
+            // in the aborted-and-retried run just as in the baseline.
+            assert_eq!(ew_bytes(&base), 9 * 3, "{}: base E_W", ft.name());
+            assert_eq!(ew_bytes(&failed), 9 * 3, "{}: E_W not exactly-once", ft.name());
+        }
+    }
+}
+
+#[test]
+fn recovery_reapplies_ingest_batch_from_checkpoint_barrier() {
+    // The batch drained at barrier 8 buffers under E_W key 9, which
+    // CP[8] — committed at the same barrier, draining keys <= 8 — must
+    // NOT contain (the checkpoint snapshots pre-ingest state). A kill
+    // at superstep 10 therefore rolls back to a snapshot that predates
+    // the batch: recovery must re-seed the recorded batch after
+    // rollback, and the eventual CP[12] must append it to E_W exactly
+    // once. A double apply or a lost batch both show up as a digest
+    // mismatch; a double buffer shows up as 54 E_W bytes.
+    let adj = PresetGraph::WebBase.spec(1500, 13).generate();
+    let records = vec![
+        JournalRecord::AddEdge { src: 10, dst: 20 },
+        JournalRecord::AddEdge { src: 11, dst: 21 },
+        JournalRecord::AddEdge { src: 12, dst: 22 },
+    ];
+    for ft in FtKind::all() {
+        let tag = format!("ingre-{}", ft.name());
+        let mut base =
+            Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-b")), &adj).unwrap();
+        base.stage_journal(&[(8, records.clone())]).unwrap();
+        base.run().unwrap();
+
+        let mut failed = Engine::new(pagerank(14), cfg(ft, 4, &format!("{tag}-f")), &adj)
+            .unwrap()
+            .with_failures(FailurePlan::kill_n_at(1, 10));
+        failed.stage_journal(&[(8, records.clone())]).unwrap();
+        let mf = failed.run().unwrap();
+        assert!(mf.recovery_control > 0.0, "{}: no recovery recorded", ft.name());
+        assert_eq!(
+            failed.digest(),
+            base.digest(),
+            "{}: recovery lost or double-applied the ingest batch",
+            ft.name()
+        );
+        // Fresh drains happen once; the recovery pass re-seeds the
+        // recorded batch exactly once (via the rollback re-apply when
+        // CP[8] covers the rollback point, via the re-executed barrier's
+        // replay when the in-flight CP[8] was abandoned).
+        assert_eq!(mf.ingest.segments_applied, 1, "{}: segment drained twice", ft.name());
+        assert_eq!(mf.ingest.replayed_batches, 1, "{}: batch re-seeded wrongly", ft.name());
+        if matches!(ft, FtKind::LwCp | FtKind::LwLog) {
+            assert_eq!(ew_bytes(&failed), 9 * 3, "{}: E_W not exactly-once", ft.name());
+        }
+    }
+}
+
+// ----------------------------------------------------------- serving lane
+
+#[test]
+fn serve_answers_only_from_committed_snapshots() {
+    let adj = PresetGraph::WebBase.spec(1500, 13).generate();
+    // Oracle for the committed CP[8] image: a plain 8-superstep run
+    // (CP[8] is written at barrier 8, after update(8) — exactly the
+    // final state of an 8-superstep job).
+    let mut eng8 =
+        Engine::new(pagerank(8), cfg(FtKind::None, 0, "srv-oracle"), &adj).unwrap();
+    eng8.run().unwrap();
+    let v5_at_8 = eng8.value_of(5);
+    // Expected top-3, rendered exactly like the serving lane renders it.
+    let mut scored: Vec<(f64, u32)> =
+        eng8.values().into_iter().map(|(v, x)| (x as f64, v)).collect();
+    scored.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+    });
+    scored.truncate(3);
+    let want_top3 =
+        scored.iter().map(|(s, v)| format!("{v}:{s:.6}")).collect::<Vec<_>>().join(" ");
+
+    let mut c = cfg(FtKind::LwCp, 4, "srv");
+    c.async_cp = false; // deterministic commit points: CP[s] commits at barrier s
+    let mut eng = Engine::new(pagerank(14), c, &adj).unwrap().with_probes(vec![
+        ServeProbe { at_step: 2, kind: ProbeKind::Point(5) },
+        ServeProbe { at_step: 9, kind: ProbeKind::Point(5) },
+        ServeProbe { at_step: 9, kind: ProbeKind::TopK(3) },
+        ServeProbe { at_step: 99, kind: ProbeKind::Point(5) }, // past job end
+    ]);
+    // An external overwrite of vertex 5 lands at barrier 9 — the very
+    // barrier the point query fires at (the ingest hook runs first).
+    // The query must answer from committed CP[8], never from the
+    // just-mutated live state.
+    eng.stage_journal(&[(9, vec![JournalRecord::SetVertex { id: 5, value: 99.0 }])])
+        .unwrap();
+    let m = eng.run().unwrap();
+    assert_eq!(m.serve.queries(), 4);
+    let s = &m.serve.samples;
+    // Before any CP[i]: the query is answered from CP[0] (initial ranks).
+    assert_eq!((s[0].at_step, s[0].committed_step, s[0].staleness), (2, Some(0), Some(2)));
+    assert_eq!(s[0].result, format!("{:?}", 1.0f32));
+    // At barrier 9 the freshest committed snapshot is CP[8].
+    assert_eq!((s[1].at_step, s[1].committed_step, s[1].staleness), (9, Some(8), Some(1)));
+    assert_eq!(s[1].result, format!("{:?}", v5_at_8));
+    assert_ne!(s[1].result, format!("{:?}", 99.0f32), "read uncommitted ingest state");
+    assert_eq!(s[2].result, want_top3);
+    // The past-the-end probe fires once at job end (head = superstep 14)
+    // against the final committed snapshot, CP[12].
+    assert_eq!((s[3].at_step, s[3].committed_step, s[3].staleness), (14, Some(12), Some(2)));
+    // Bounded staleness, never a future/uncommitted snapshot, honest
+    // read accounting.
+    assert!(s.iter().all(|x| x.committed_step.unwrap() <= x.at_step));
+    assert!(s.iter().all(|x| x.read_cost > 0.0));
+    assert_eq!(m.serve.max_staleness(), Some(2));
 }
 
 #[test]

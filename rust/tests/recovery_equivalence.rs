@@ -530,6 +530,172 @@ fn disk_backed_run_is_equivalent_to_memory() {
     assert_eq!(run(Backing::Memory), run(Backing::Disk));
 }
 
+// ----------------------------------------------------------- ingest lane
+
+/// The equivalence invariant extends to externally-ingested updates:
+/// with the same journal staged, a run that suffers a mid-flight kill
+/// converges to the failure-free digest for every FT algorithm. Two
+/// kill points cover both recovery shapes: superstep 8 rolls back *into*
+/// the ingest window (the recorded batch of barrier 6 is replayed at
+/// the re-executed barrier), superstep 11 rolls back to CP[10] (the
+/// batch is already subsumed by the committed checkpoint + E_W).
+#[test]
+fn ingest_updates_recover_identically_across_algorithms() {
+    use lwcp::ingest::JournalRecord;
+    let adj = webbase(500);
+    let segments = vec![
+        (
+            6u64,
+            vec![
+                JournalRecord::AddEdge { src: 3, dst: 77 },
+                JournalRecord::AddEdge { src: 77, dst: 3 },
+                JournalRecord::SetVertex { id: 11, value: 2.5 },
+            ],
+        ),
+        (
+            9u64,
+            vec![
+                JournalRecord::DelEdge { src: 3, dst: 77 },
+                JournalRecord::InsertVertex { id: 40, value: 0.25 },
+            ],
+        ),
+    ];
+    let app = || PageRank { damping: 0.85, supersteps: 13, combiner_enabled: true };
+    for ft in FtKind::all() {
+        let mut base =
+            Engine::new(app(), cfg(ft, 5, &format!("ing-{}-b", ft.name())), &adj).unwrap();
+        base.stage_journal(&segments).unwrap();
+        let mb = base.run().unwrap();
+        assert_eq!(mb.ingest.segments_applied, 2, "{}: base segments", ft.name());
+        assert_eq!(mb.ingest.records_applied, 5, "{}: base records", ft.name());
+
+        // The journal must matter: a journal-free run diverges.
+        let mut plain =
+            Engine::new(app(), cfg(ft, 5, &format!("ing-{}-p", ft.name())), &adj).unwrap();
+        plain.run().unwrap();
+        assert_ne!(base.digest(), plain.digest(), "{}: journal had no effect", ft.name());
+
+        for kill_at in [8u64, 11] {
+            let mut failed = Engine::new(
+                app(),
+                cfg(ft, 5, &format!("ing-{}-f{kill_at}", ft.name())),
+                &adj,
+            )
+            .unwrap()
+            .with_failures(FailurePlan::kill_n_at(1, kill_at));
+            failed.stage_journal(&segments).unwrap();
+            let mf = failed.run().unwrap();
+            assert!(mf.recovery_control > 0.0, "{} kill@{kill_at}: no recovery", ft.name());
+            assert_eq!(
+                failed.digest(),
+                base.digest(),
+                "{} kill@{kill_at}: recovered state diverged from same-journal baseline",
+                ft.name()
+            );
+            // Fresh drains are never repeated by recovery.
+            assert_eq!(
+                mf.ingest.segments_applied, 2,
+                "{} kill@{kill_at}: segment drained twice",
+                ft.name()
+            );
+            if kill_at == 8 {
+                // Rolling back past barrier 6 forces a recorded-batch
+                // replay during re-execution.
+                assert!(
+                    mf.ingest.replayed_batches >= 1,
+                    "{} kill@8: recorded batch never replayed",
+                    ft.name()
+                );
+            }
+        }
+    }
+}
+
+/// The parallel apply path of the ingest lane is deterministic: with a
+/// journal staged (and with a kill layered on top), every engine-pool
+/// size produces the sequential run's digest bit for bit.
+#[test]
+fn ingest_digest_identical_across_thread_counts() {
+    use lwcp::ingest::JournalRecord;
+    let adj = webbase(500);
+    let segments = vec![(
+        6u64,
+        vec![
+            JournalRecord::AddEdge { src: 3, dst: 77 },
+            JournalRecord::AddEdge { src: 77, dst: 3 },
+            JournalRecord::SetVertex { id: 11, value: 2.5 },
+        ],
+    )];
+    let app = || PageRank { damping: 0.85, supersteps: 13, combiner_enabled: true };
+    for plan in [None, Some(FailurePlan::kill_n_at(1, 8))] {
+        let digest_at = |threads: usize| {
+            let mut c =
+                cfg(FtKind::LwCp, 5, &format!("ingt-{threads}-{}", plan.is_some()));
+            c.threads = threads;
+            let mut eng = Engine::new(app(), c, &adj).unwrap();
+            if let Some(p) = plan.clone() {
+                eng = eng.with_failures(p);
+            }
+            eng.stage_journal(&segments).unwrap();
+            eng.run().unwrap();
+            eng.digest()
+        };
+        let want = digest_at(1);
+        for threads in [2usize, 4, 0] {
+            assert_eq!(
+                digest_at(threads),
+                want,
+                "ingest digest differs at threads={threads} (failure: {})",
+                plan.is_some()
+            );
+        }
+    }
+}
+
+/// Delta-reactivation recomputes only what an update could have
+/// changed: a long path keeps the job alive for ~100 supersteps while a
+/// detached pair {100, 101} converges and halts within a few. A
+/// duplicate intra-pair edge ingested at barrier 10 must wake exactly
+/// the touched vertex and its in-neighbors — the pair — and nothing on
+/// the path; hash-min re-runs the pair, reconfirms its labels, and the
+/// final state matches the no-ingest run bit for bit, at every
+/// thread count.
+#[test]
+fn delta_reactivation_wakes_only_touched_and_in_neighbors() {
+    use lwcp::ingest::JournalRecord;
+    let mut adj = path_graph(100);
+    adj.push(vec![101]); // vertex 100
+    adj.push(vec![100]); // vertex 101
+    let segments = vec![(
+        10u64,
+        vec![
+            JournalRecord::AddEdge { src: 100, dst: 101 },
+            JournalRecord::AddEdge { src: 5000, dst: 0 }, // outside the universe: dropped
+        ],
+    )];
+    let mut plain =
+        Engine::new(HashMinCc, cfg(FtKind::LwCp, 20, "react-p"), &adj).unwrap();
+    plain.run().unwrap();
+    for threads in [1usize, 2, 4, 0] {
+        let mut c = cfg(FtKind::LwCp, 20, &format!("react-{threads}"));
+        c.threads = threads;
+        let mut eng = Engine::new(HashMinCc, c, &adj).unwrap();
+        eng.stage_journal(&segments).unwrap();
+        let m = eng.run().unwrap();
+        assert_eq!(m.ingest.records_applied, 1, "threads={threads}: records");
+        assert_eq!(m.ingest.dropped_records, 1, "threads={threads}: dropped");
+        assert_eq!(
+            m.ingest.reactivated, 2,
+            "threads={threads}: woke more than the touched pair"
+        );
+        assert_eq!(
+            eng.digest(),
+            plain.digest(),
+            "threads={threads}: reactivation perturbed converged state"
+        );
+    }
+}
+
 // ------------------------------------------------------------ paged mode
 
 /// The equivalence invariant holds with the out-of-core paged
