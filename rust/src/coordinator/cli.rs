@@ -50,17 +50,17 @@ use crate::sim::{SystemProfile, Topology};
 use crate::storage::{Backing, PagerConfig};
 use crate::util::fmtutil::secs;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Parsed flag map: `--key value` pairs (+ bare flags as "true").
 pub struct Flags {
-    map: HashMap<String, Vec<String>>,
+    map: BTreeMap<String, Vec<String>>,
 }
 
 impl Flags {
     pub fn parse(args: &[String]) -> Result<Flags> {
-        let mut map: HashMap<String, Vec<String>> = HashMap::new();
+        let mut map: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
@@ -498,6 +498,24 @@ mod tests {
         assert_eq!(spec.plan.kills.len(), 1);
         assert_eq!(spec.plan.kills[0].at_step, 8);
         assert_eq!(spec.topo.n_workers(), 6);
+    }
+
+    #[test]
+    fn spec_is_identical_under_flag_permutation() {
+        // Digest equivalence for the flag map: `Flags` iterates its
+        // BTreeMap when building the spec, so the order flags appear
+        // on the command line must never reach the JobSpec.
+        let a = spec_from_flags(&flags(
+            "--app sssp --source 3 --graph webuk --n 2000 --machines 3 \
+             --workers-per-machine 2 --ft lwcp --cp-every 5 --seed 9",
+        ))
+        .unwrap();
+        let b = spec_from_flags(&flags(
+            "--seed 9 --cp-every 5 --ft lwcp --workers-per-machine 2 \
+             --machines 3 --n 2000 --graph webuk --source 3 --app sssp",
+        ))
+        .unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

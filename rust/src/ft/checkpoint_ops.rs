@@ -35,6 +35,7 @@ use crate::metrics::{CpOverlap, StepKind};
 use crate::pregel::app::App;
 use crate::pregel::engine::Engine;
 use crate::pregel::executor::{self, TaskHandle};
+use crate::sim::WallTimer;
 use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, CpMeta};
 use crate::util::codec::Codec;
 use anyhow::{bail, Context, Result};
@@ -80,7 +81,7 @@ impl<A: App> Engine<A> {
     pub(crate) fn write_cp0(&mut self) -> Result<()> {
         debug_assert!(self.inflight.is_none(), "CP[0] precedes every other checkpoint");
         let t0 = self.max_clock();
-        let wall = std::time::Instant::now();
+        let wall = WallTimer::start();
         let alive = self.ws.alive_ranks();
         let sharers = self.sharers_by_rank();
         let blobs: Vec<(usize, Vec<u8>)> = {
@@ -110,13 +111,13 @@ impl<A: App> Engine<A> {
         let meta_bytes = meta.to_bytes();
         let hdfs = Arc::clone(&self.hdfs);
         let handle = self.pool.submit(move || -> Result<(u64, f64)> {
-            let t0 = std::time::Instant::now();
+            let t0 = WallTimer::start();
             let mut n = 0u64;
             for (r, blob) in &blobs {
                 n += hdfs.put(&cp_key(0, *r), blob)?;
             }
             hdfs.put(&cp_meta_key(0), &meta_bytes)?;
-            Ok((n, t0.elapsed().as_secs_f64() * 1e3))
+            Ok((n, t0.elapsed_ms()))
         });
         self.inflight = Some(InflightCp {
             step: 0,
@@ -130,7 +131,7 @@ impl<A: App> Engine<A> {
             is_cp0: true,
             t_encode: t_snap - t0,
         });
-        self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+        self.metrics.phase_wall.checkpoint += wall.elapsed_ms();
         self.cp_last = 0;
         self.cp_last_time = t_snap; // refined to the commit time at join
         if !self.cfg.async_cp {
@@ -216,7 +217,7 @@ impl<A: App> Engine<A> {
     pub(crate) fn write_checkpoint(&mut self, step: u64) -> Result<Option<u64>> {
         debug_assert!(self.inflight.is_none(), "at most one checkpoint in flight");
         let t0 = self.barrier(0.0);
-        let wall = std::time::Instant::now();
+        let wall = WallTimer::start();
         let heavy = self.cfg.ft.heavyweight_cp();
         let alive = self.ws.alive_ranks();
         let sharers = self.sharers_by_rank();
@@ -321,7 +322,7 @@ impl<A: App> Engine<A> {
             snaps.into_iter().map(|(r, blob, inc, _)| (r, blob, inc)).collect();
         let hdfs = Arc::clone(&self.hdfs);
         let handle = self.pool.submit(move || -> Result<(u64, f64)> {
-            let t0 = std::time::Instant::now();
+            let t0 = WallTimer::start();
             let mut n = 0u64;
             for (r, blob, inc) in &payload {
                 n += hdfs.put(&cp_key(step, *r), blob)?;
@@ -346,7 +347,7 @@ impl<A: App> Engine<A> {
                     hdfs.delete_prefix(&prev_prefix);
                 }
             }
-            Ok((n, t0.elapsed().as_secs_f64() * 1e3))
+            Ok((n, t0.elapsed_ms()))
         });
         self.inflight = Some(InflightCp {
             step,
@@ -360,7 +361,7 @@ impl<A: App> Engine<A> {
             is_cp0: false,
             t_encode: t_snap - t0,
         });
-        self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+        self.metrics.phase_wall.checkpoint += wall.elapsed_ms();
 
         // ---- failure injection point (mid-flush) ----
         // The kill strikes after (some) workers put their blobs but
@@ -392,7 +393,7 @@ impl<A: App> Engine<A> {
         let Some(inf) = self.inflight.take() else {
             return Ok(());
         };
-        let wall = std::time::Instant::now();
+        let wall = WallTimer::start();
         let (cp_bytes, flush_ms) = match inf.handle.join() {
             Ok(res) => {
                 res.with_context(|| format!("checkpoint flush for CP[{}]", inf.step))?
@@ -411,7 +412,7 @@ impl<A: App> Engine<A> {
             for (r, t) in inf.put_times {
                 self.workers[r].clock.advance(t);
             }
-            self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+            self.metrics.phase_wall.checkpoint += wall.elapsed_ms();
             return Ok(());
         }
 
@@ -469,7 +470,7 @@ impl<A: App> Engine<A> {
         // never be replayed again (recovery resumes at cp_last + 1 and
         // re-seeds only barrier cp_last's batch) — prune them.
         self.ingest_log.retain(|&b, _| b >= inf.step);
-        self.metrics.phase_wall.checkpoint += wall.elapsed().as_secs_f64() * 1e3;
+        self.metrics.phase_wall.checkpoint += wall.elapsed_ms();
         Ok(())
     }
 

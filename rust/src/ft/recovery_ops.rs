@@ -21,7 +21,7 @@ use crate::pregel::app::App;
 use crate::pregel::engine::{Engine, Stage};
 use crate::pregel::executor;
 use crate::pregel::worker::Worker;
-use crate::sim::CostModel;
+use crate::sim::{clock, CostModel};
 use crate::storage::checkpoint::{cp_key, ew_key, Cp0, HwCp, LwCp};
 use crate::storage::SimHdfs;
 use crate::util::codec::{Codec, Reader};
@@ -137,11 +137,12 @@ impl<A: App> Engine<A> {
         let outcome = self.ws.recover(&s_w_vec, &self.cfg.cost);
         self.master = outcome.master;
 
-        let t_base = outcome
-            .survivors
-            .iter()
-            .map(|&r| self.workers[r].clock.now())
-            .fold(0.0, f64::max);
+        let t_base = clock::max_time(
+            outcome
+                .survivors
+                .iter()
+                .map(|&r| self.workers[r].clock.now()),
+        );
         let t_ready = t_base + outcome.control_time;
         for &r in &outcome.survivors {
             self.workers[r].clock.sync_to(t_ready);
@@ -193,7 +194,7 @@ impl<A: App> Engine<A> {
             .iter()
             .map(|&r| self.workers[r].s_w)
             .max()
-            .unwrap()
+            .expect("recovery contract: the survivor set is non-empty (recover() bails otherwise)")
             .max(step);
         self.stage = Stage::Recovering { failure_step };
         Ok(self.cp_last + 1)

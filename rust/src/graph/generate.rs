@@ -220,11 +220,24 @@ mod tests {
     fn no_self_loops_or_duplicates() {
         let adj = PresetGraph::WebUk.spec(1000, 3).generate();
         for (v, l) in adj.iter().enumerate() {
-            let mut seen = std::collections::HashSet::new();
+            let mut seen = std::collections::BTreeSet::new();
             for &t in l {
                 assert_ne!(t as usize, v, "self loop at {v}");
                 assert!(seen.insert(t), "dup edge {v}->{t}");
                 assert!((t as usize) < 1000);
+            }
+        }
+    }
+
+    #[test]
+    fn neighbor_lists_are_sorted() {
+        // The digest-equivalence guarantee for generated graphs: the
+        // final sort makes neighbor order independent of emission
+        // order, so no container choice upstream can leak into bytes.
+        for preset in [PresetGraph::WebUk, PresetGraph::Friendster] {
+            let adj = preset.spec(800, 11).generate();
+            for (v, l) in adj.iter().enumerate() {
+                assert!(l.windows(2).all(|w| w[0] < w[1]), "unsorted Γ({v})");
             }
         }
     }

@@ -282,7 +282,7 @@ pub fn parse_delta_text(text: &str) -> Result<Vec<(u64, Vec<JournalRecord>)>> {
             continue;
         }
         let mut it = line.split_whitespace();
-        let word = it.next().unwrap();
+        let word = it.next().expect("line is non-empty (checked above)");
         let ctx = || format!("delta file line {}: {raw:?}", lineno + 1);
         if word == "@barrier" {
             let n: u64 = it

@@ -32,18 +32,12 @@ use crate::ft::FtKind;
 use crate::graph::{Partitioner, VertexId};
 use crate::ingest::{self, JournalRecord, ProbeKind, ServeProbe};
 use crate::metrics::{RunMetrics, ServeSample, StepKind, StepRecord};
-use crate::sim::{CostModel, Topology};
+use crate::sim::{clock, CostModel, Topology, WallTimer};
 use crate::storage::{Backing, SimHdfs};
 use crate::util::codec::Codec;
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
-use std::time::Instant;
-
-/// Elapsed milliseconds since `t` (phase wall accounting).
-fn ms_since(t: Instant) -> f64 {
-    t.elapsed().as_secs_f64() * 1e3
-}
 
 /// One injected failure: kill `ranks` right after the compute+log phase
 /// of superstep `at_step` (the paper kills workers mid-communication).
@@ -342,11 +336,12 @@ impl<A: App> Engine<A> {
 
     /// Max virtual clock over alive workers.
     pub(crate) fn max_clock(&self) -> f64 {
-        self.ws
-            .alive_ranks()
-            .into_iter()
-            .map(|r| self.workers[r].clock.now())
-            .fold(0.0, f64::max)
+        clock::max_time(
+            self.ws
+                .alive_ranks()
+                .into_iter()
+                .map(|r| self.workers[r].clock.now()),
+        )
     }
 
     /// Per-rank NIC sharers (workers on the same machine) — precomputed
@@ -383,7 +378,7 @@ impl<A: App> Engine<A> {
 
     /// Run the job to completion. Returns the collected metrics.
     pub fn run(&mut self) -> Result<RunMetrics> {
-        let wall = std::time::Instant::now();
+        let wall = WallTimer::start();
         if self.cfg.ft != FtKind::None {
             self.write_cp0()?;
         }
@@ -471,7 +466,7 @@ impl<A: App> Engine<A> {
             .count() as u64;
         self.metrics.final_time = self.max_clock();
         self.metrics.supersteps_run = self.metrics.steps.len() as u64;
-        self.metrics.wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+        self.metrics.wall_ms = wall.elapsed_ms();
         self.metrics.result_digest = self.digest();
         Ok(self.metrics.clone())
     }
@@ -847,7 +842,7 @@ impl<A: App> Engine<A> {
         // Workers are independent within a superstep: the phase fans out
         // on the persistent pool (results merged in rank order, each
         // worker charging its own virtual clock).
-        let wall = Instant::now();
+        let wall = WallTimer::start();
         let app = Arc::clone(&self.app);
         let exec = self.exec.clone();
         let outputs: Vec<(usize, StepOutput<A::M>, crate::sim::PhaseCost)> = {
@@ -866,7 +861,7 @@ impl<A: App> Engine<A> {
         for (_, _, pc) in &outputs {
             pc.merge_into(&mut self.metrics.bytes);
         }
-        self.metrics.phase_wall.compute += ms_since(wall);
+        self.metrics.phase_wall.compute += wall.elapsed_ms();
 
         // Responding supersteps are LWCP-masked by construction: the
         // respond hook statically declares that messages depend on
@@ -883,7 +878,7 @@ impl<A: App> Engine<A> {
         // ---- logging phase (completes partial commit for log-based) ----
         // The log *kind* depends on the global mask, so this is a second
         // dispatch on the pool rather than fully fused into compute.
-        let wall = Instant::now();
+        let wall = WallTimer::start();
         let mut step_aggs: BTreeMap<usize, AggState> = BTreeMap::new();
         for (r, out, _) in &outputs {
             step_aggs.insert(*r, out.agg.clone());
@@ -919,7 +914,7 @@ impl<A: App> Engine<A> {
                 self.workers[*r].log.log_partial_agg(step, out.agg.to_bytes());
             }
         }
-        self.metrics.phase_wall.logging += ms_since(wall);
+        self.metrics.phase_wall.logging += wall.elapsed_ms();
 
         // ---- failure injection point (mid-communication) ----
         if let Some(kidx) = self.due_kill(step, false) {
@@ -928,7 +923,7 @@ impl<A: App> Engine<A> {
         }
 
         // ---- shuffle phase ----
-        let wall = Instant::now();
+        let wall = WallTimer::start();
         let n_workers = self.workers.len();
         let mut batches: Vec<(usize, usize, Vec<u8>)> = Vec::new();
         for (r, out, _) in &outputs {
@@ -958,11 +953,11 @@ impl<A: App> Engine<A> {
                 self.forward_logged_messages(step, &forwarding, &dests, &agg_prev, &mut batches)?;
             }
         }
-        self.metrics.phase_wall.shuffle += ms_since(wall);
+        self.metrics.phase_wall.shuffle += wall.elapsed_ms();
         self.deliver(&mut batches)?;
 
         // ---- sync & commit ----
-        let wall = Instant::now();
+        let wall = WallTimer::start();
         let global = if let Some(g) = self.agg_log.get(&step) {
             // Already fully committed before the failure: every computing
             // worker fetches it from the master's log (i < s(master)).
@@ -993,7 +988,7 @@ impl<A: App> Engine<A> {
             g
         };
         self.agg_log.insert(step, global);
-        self.metrics.phase_wall.sync += ms_since(wall);
+        self.metrics.phase_wall.sync += wall.elapsed_ms();
 
         let t1 = self.barrier(0.0);
         self.metrics.steps.push(StepRecord { step, kind: self.classify(step), dur: t1 - t0 });
@@ -1008,7 +1003,7 @@ impl<A: App> Engine<A> {
     /// wire/staging/CPU costs. Consumes the batches, recycling their
     /// buffers into the arena.
     pub(crate) fn deliver(&mut self, batches: &mut Vec<(usize, usize, Vec<u8>)>) -> Result<()> {
-        let wall = Instant::now();
+        let wall = WallTimer::start();
         batches.sort_by_key(|(src, dst, _)| (*dst, *src));
         // Pre-combine shuffle volume (what the workers generated); the
         // post-combine NIC volume lands in `wire_bytes` below.
@@ -1023,7 +1018,7 @@ impl<A: App> Engine<A> {
         for (_, _, b) in batches.drain(..) {
             self.arena.put(b);
         }
-        self.metrics.phase_wall.deliver += ms_since(wall);
+        self.metrics.phase_wall.deliver += wall.elapsed_ms();
         Ok(())
     }
 

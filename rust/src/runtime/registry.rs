@@ -19,7 +19,7 @@
 use crate::pregel::app::BatchExec;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -41,7 +41,7 @@ pub struct XlaRegistry {
     /// share compiled entries).
     id: u64,
     /// (fn, bucket) -> artifact metadata; buckets ascending per fn.
-    artifacts: HashMap<String, Vec<ArtifactInfo>>,
+    artifacts: BTreeMap<String, Vec<ArtifactInfo>>,
 }
 
 static NEXT_REGISTRY_ID: AtomicU64 = AtomicU64::new(0);
@@ -53,8 +53,8 @@ thread_local! {
     static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
     /// Per-thread compiled-executable cache, keyed by
     /// (registry id, fn name, bucket).
-    static COMPILED: RefCell<HashMap<(u64, String, usize), Arc<xla::PjRtLoadedExecutable>>> =
-        RefCell::new(HashMap::new());
+    static COMPILED: RefCell<BTreeMap<(u64, String, usize), Arc<xla::PjRtLoadedExecutable>>> =
+        const { RefCell::new(BTreeMap::new()) };
 }
 
 /// Inert padding values per function input (see module docs): padded
@@ -86,7 +86,7 @@ impl XlaRegistry {
         let manifest = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
-        let mut artifacts: HashMap<String, Vec<ArtifactInfo>> = HashMap::new();
+        let mut artifacts: BTreeMap<String, Vec<ArtifactInfo>> = BTreeMap::new();
         for (lineno, line) in text.lines().enumerate() {
             let parts: Vec<&str> = line.split_whitespace().collect();
             if parts.is_empty() {
@@ -118,11 +118,9 @@ impl XlaRegistry {
         Self::load(Path::new(&dir))
     }
 
-    /// Functions available in the manifest.
+    /// Functions available in the manifest, in sorted (BTreeMap) order.
     pub fn functions(&self) -> Vec<&str> {
-        let mut f: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
-        f.sort();
-        f
+        self.artifacts.keys().map(String::as_str).collect()
     }
 
     /// Buckets available for `fn_name`, ascending.

@@ -1,4 +1,10 @@
-//! Per-worker virtual clocks.
+//! Per-worker virtual clocks, the canonical clock-time reduction, and
+//! the single sanctioned wall-clock entry point.
+//!
+//! This file is the only place in the tree (besides `util/rng.rs` for
+//! entropy) allowed to touch ambient time: detlint rule D2 exempts it.
+//! Everything else reads virtual time from [`Clock`] or measures
+//! reporting-only wall time through [`WallTimer`].
 
 /// A worker's virtual clock, in simulated seconds since job start.
 #[derive(Debug, Clone, Default)]
@@ -34,14 +40,53 @@ impl Clock {
     }
 }
 
+/// Canonical clock-time reduction: the maximum of a set of times,
+/// floored at 0. `f64::max` is associative and commutative (absent
+/// NaN, which virtual clocks never produce), so this fold is
+/// order-independent — the one float reduction that is safe to apply
+/// to any iteration order. Open-coded clock maxima elsewhere are
+/// flagged by detlint rule D3; route them here.
+#[inline]
+pub fn max_time<I: IntoIterator<Item = f64>>(times: I) -> f64 {
+    times.into_iter().fold(0.0f64, f64::max)
+}
+
 /// Synchronize a set of clocks at a barrier: everyone jumps to the max,
 /// plus a fixed barrier overhead. Returns the post-barrier time.
 pub fn barrier(clocks: &mut [&mut Clock], overhead: f64) -> f64 {
-    let t = clocks.iter().map(|c| c.now()).fold(0.0f64, f64::max) + overhead;
+    let t = max_time(clocks.iter().map(|c| c.now())) + overhead;
     for c in clocks.iter_mut() {
         c.sync_to(t);
     }
     t
+}
+
+/// Reporting-only wall-clock stopwatch.
+///
+/// The simulation is driven entirely by virtual [`Clock`]s; the only
+/// legitimate use of host time is measuring how long *we* took, for
+/// the metrics report. `WallTimer` is the single sanctioned wrapper
+/// around `std::time::Instant` — everywhere else, `Instant::now()` is
+/// a detlint D2 error, because ambient time that feeds back into
+/// execution order breaks bit-identical replay.
+#[derive(Debug, Clone, Copy)]
+pub struct WallTimer {
+    start: std::time::Instant,
+}
+
+impl WallTimer {
+    /// Start a stopwatch.
+    #[allow(clippy::disallowed_methods)] // the sanctioned wall-clock entry
+    pub fn start() -> Self {
+        WallTimer {
+            start: std::time::Instant::now(),
+        }
+    }
+
+    /// Milliseconds elapsed since `start()`.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
 }
 
 #[cfg(test)]
@@ -58,6 +103,21 @@ mod tests {
         assert_eq!(c.now(), 1.5);
         c.sync_to(2.0);
         assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    fn max_time_is_order_independent() {
+        let a = max_time([3.0, 1.0, 2.0]);
+        let b = max_time([2.0, 3.0, 1.0]);
+        assert_eq!(a, b);
+        assert_eq!(a, 3.0);
+        assert_eq!(max_time([]), 0.0);
+    }
+
+    #[test]
+    fn wall_timer_is_monotone() {
+        let t = WallTimer::start();
+        assert!(t.elapsed_ms() >= 0.0);
     }
 
     #[test]

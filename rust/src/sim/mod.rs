@@ -16,5 +16,5 @@
 pub mod clock;
 pub mod cost;
 
-pub use clock::Clock;
+pub use clock::{Clock, WallTimer};
 pub use cost::{CostModel, PhaseCost, SystemProfile, Topology};

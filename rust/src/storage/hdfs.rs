@@ -16,7 +16,7 @@ use super::Backing;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 /// The shared blob store. Thread-safe; workers hold `Arc<SimHdfs>`.
 pub struct SimHdfs {
@@ -106,26 +106,32 @@ impl SimHdfs {
         self.backing
     }
 
+    /// Lock the key index — the single mutex acquisition point. The
+    /// mutex is poisoned only if another thread panicked mid-update;
+    /// for the store that backs checkpoint commit there is nothing
+    /// sane to salvage from that, so the panic states the contract.
+    fn index(&self) -> MutexGuard<'_, BTreeMap<String, Blob>> {
+        self.index
+            .lock()
+            .expect("SimHdfs index mutex poisoned: a writer panicked mid-update")
+    }
+
     /// Atomically store `data` under `key`, replacing any previous blob.
     /// Returns the byte count (for cost accounting).
     pub fn put(&self, key: &str, data: &[u8]) -> Result<u64> {
         let n = data.len() as u64;
         match self.backing {
             Backing::Memory => {
-                self.index
-                    .lock()
-                    .unwrap()
-                    .insert(key.to_string(), Blob::InMem { data: data.to_vec() });
+                let mut idx = self.index();
+                idx.insert(key.to_string(), Blob::InMem { data: data.to_vec() });
             }
             Backing::Disk => {
                 let path = self.root.join(sanitize(key));
                 let tmp = self.root.join(format!(".tmp-{}", sanitize(key)));
                 std::fs::write(&tmp, data).with_context(|| format!("write {key}"))?;
                 std::fs::rename(&tmp, &path)?;
-                self.index
-                    .lock()
-                    .unwrap()
-                    .insert(key.to_string(), Blob::OnDisk { size: n });
+                let mut idx = self.index();
+                idx.insert(key.to_string(), Blob::OnDisk { size: n });
             }
         }
         Ok(n)
@@ -139,7 +145,7 @@ impl SimHdfs {
         let n = data.len() as u64;
         match self.backing {
             Backing::Memory => {
-                let mut idx = self.index.lock().unwrap();
+                let mut idx = self.index();
                 match idx.get_mut(key) {
                     Some(Blob::InMem { data: d }) => d.extend_from_slice(data),
                     _ => {
@@ -156,10 +162,8 @@ impl SimHdfs {
                     .open(&path)?;
                 f.write_all(data)?;
                 let size = f.metadata()?.len();
-                self.index
-                    .lock()
-                    .unwrap()
-                    .insert(key.to_string(), Blob::OnDisk { size });
+                let mut idx = self.index();
+                idx.insert(key.to_string(), Blob::OnDisk { size });
             }
         }
         Ok(n)
@@ -167,7 +171,7 @@ impl SimHdfs {
 
     /// Fetch the blob stored under `key`.
     pub fn get(&self, key: &str) -> Result<Vec<u8>> {
-        let idx = self.index.lock().unwrap();
+        let idx = self.index();
         match idx.get(key) {
             None => bail!("hdfs: no such key {key}"),
             Some(Blob::InMem { data }) => Ok(data.clone()),
@@ -180,16 +184,16 @@ impl SimHdfs {
     }
 
     pub fn exists(&self, key: &str) -> bool {
-        self.index.lock().unwrap().contains_key(key)
+        self.index().contains_key(key)
     }
 
     pub fn size_of(&self, key: &str) -> Option<u64> {
-        self.index.lock().unwrap().get(key).map(Blob::size)
+        self.index().get(key).map(Blob::size)
     }
 
     /// Delete one blob; returns its size (0 if absent).
     pub fn delete(&self, key: &str) -> u64 {
-        let mut idx = self.index.lock().unwrap();
+        let mut idx = self.index();
         match idx.remove(key) {
             None => 0,
             Some(b) => {
@@ -207,7 +211,7 @@ impl SimHdfs {
     /// charges the namenode cost.
     pub fn delete_prefix(&self, prefix: &str) -> (u64, u64) {
         let keys: Vec<String> = {
-            let idx = self.index.lock().unwrap();
+            let idx = self.index();
             idx.keys().filter(|k| key_under(k, prefix)).cloned().collect()
         };
         let mut bytes = 0;
@@ -220,18 +224,13 @@ impl SimHdfs {
     /// Keys in the directory named by `prefix` (same directory-style
     /// semantics as [`SimHdfs::delete_prefix`]), sorted.
     pub fn list(&self, prefix: &str) -> Vec<String> {
-        self.index
-            .lock()
-            .unwrap()
-            .keys()
-            .filter(|k| key_under(k, prefix))
-            .cloned()
-            .collect()
+        let idx = self.index();
+        idx.keys().filter(|k| key_under(k, prefix)).cloned().collect()
     }
 
     /// Total stored bytes (for disk-usage assertions in tests).
     pub fn total_bytes(&self) -> u64 {
-        self.index.lock().unwrap().values().map(Blob::size).sum()
+        self.index().values().map(Blob::size).sum()
     }
 }
 

@@ -268,7 +268,10 @@ impl LocalLogStore {
         let mut files = 0u64;
         let msg_steps: Vec<u64> = self.msg_meta.range(..below).map(|(s, _)| *s).collect();
         for s in msg_steps {
-            let meta = self.msg_meta.remove(&s).unwrap();
+            let meta = self
+                .msg_meta
+                .remove(&s)
+                .expect("gc contract: step came from ranging over msg_meta");
             bytes += meta.total;
             files += 1;
             match self.backing {
@@ -282,7 +285,10 @@ impl LocalLogStore {
         }
         let v_steps: Vec<u64> = self.vstate_meta.range(..below).map(|(s, _)| *s).collect();
         for s in v_steps {
-            bytes += self.vstate_meta.remove(&s).unwrap();
+            bytes += self
+                .vstate_meta
+                .remove(&s)
+                .expect("gc contract: step came from ranging over vstate_meta itself");
             files += 1;
             match self.backing {
                 Backing::Memory => {

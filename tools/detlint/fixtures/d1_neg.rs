@@ -1,0 +1,21 @@
+//@ zone: pregel/engine.rs
+//@ active:
+
+use std::collections::BTreeMap;
+
+/// A HashMap would be wrong here (comment only).
+pub fn count(xs: &[u64]) -> usize {
+    let m: BTreeMap<u64, u64> = xs.iter().map(|&x| (x, 1)).collect();
+    let label = "HashMap in a string is fine";
+    m.len() + label.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn hash_ok_in_tests() {
+        assert!(HashMap::<u64, u64>::new().is_empty());
+    }
+}

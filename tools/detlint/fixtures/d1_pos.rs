@@ -1,0 +1,9 @@
+//@ zone: pregel/engine.rs
+//@ active: D1@4, D1@7
+
+use std::collections::HashMap;
+
+pub fn count(xs: &[u64]) -> usize {
+    let m: HashMap<u64, u64> = xs.iter().map(|&x| (x, 1)).collect();
+    m.len()
+}

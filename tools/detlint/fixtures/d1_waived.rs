@@ -1,0 +1,11 @@
+//@ zone: graph/mod.rs
+//@ active:
+//@ waived: D1@6, D1@9
+
+// detlint: allow(D1): membership-only set; iteration order never escapes
+use std::collections::HashSet;
+
+pub fn dedup(xs: &[u64]) -> usize {
+    let s: HashSet<u64> = xs.iter().copied().collect(); // detlint: allow(D1): same set
+    s.len()
+}

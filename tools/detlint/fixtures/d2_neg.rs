@@ -1,0 +1,12 @@
+//@ zone: sim/clock.rs
+//@ active:
+
+pub struct WallTimer {
+    start: std::time::Instant,
+}
+
+impl WallTimer {
+    pub fn start() -> Self {
+        WallTimer { start: std::time::Instant::now() }
+    }
+}

@@ -1,0 +1,11 @@
+//@ zone: ft/checkpoint_ops.rs
+//@ active: D2@4, D2@7, D2@8, D2@9
+
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    let wall = Instant::now();
+    let _unix = std::time::SystemTime::now();
+    let _r: u64 = rand::random();
+    wall.elapsed().as_secs_f64()
+}

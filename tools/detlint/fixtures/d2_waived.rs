@@ -1,0 +1,9 @@
+//@ zone: metrics/report.rs
+//@ active:
+//@ waived: D2@7
+
+pub fn report_header_age() -> u64 {
+    // detlint: allow(D2): one-shot header timestamp, never fed back
+    let now = std::time::SystemTime::now();
+    now.elapsed().map(|d| d.as_secs()).unwrap_or(0)
+}

@@ -1,0 +1,6 @@
+//@ zone: pregel/kernels.rs
+//@ active:
+
+pub fn lane_fold(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}

@@ -1,0 +1,9 @@
+//@ zone: pregel/worker.rs
+//@ active: D3@5, D3@6, D3@7
+
+pub fn bad_reductions(xs: &[f32], ts: &[f64]) -> (f32, f64, f32) {
+    let a = xs.iter().sum::<f32>();
+    let b = ts.iter().copied().fold(0.0, f64::max);
+    let c = xs.iter().fold(1.0f32, |m, &x| m * x);
+    (a, b, c)
+}

@@ -1,0 +1,9 @@
+//@ zone: ingest/mod.rs
+//@ active:
+//@ waived: D3@7
+
+pub fn mean(xs: &[f64]) -> f64 {
+    // detlint: allow(D3): diagnostics-only mean, result never hits state
+    let s = xs.iter().copied().fold(0.0, |a, b| a + b);
+    s / xs.len() as f64
+}

@@ -1,0 +1,13 @@
+//@ zone: apps/sssp.rs
+//@ active:
+
+impl Dummy {
+    fn update(&self, ctx: &mut Ctx) {
+        ctx.set_value(1.0);
+    }
+
+    fn emit(&self, ctx: &mut Ctx) {
+        ctx.send(1, 2.0);
+        ctx.send_all(3.0);
+    }
+}

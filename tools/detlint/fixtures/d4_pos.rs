@@ -1,0 +1,10 @@
+//@ zone: apps/pagerank.rs
+//@ active: D4@8
+
+pub struct Dummy;
+
+impl Dummy {
+    fn update(&self, ctx: &mut Ctx) {
+        ctx.send(1, 2.0);
+    }
+}

@@ -1,0 +1,10 @@
+//@ zone: apps/kcore.rs
+//@ active:
+//@ waived: D4@8
+
+impl Dummy {
+    fn update(&self, ctx: &mut Ctx) {
+        // detlint: allow(D4): removal notice must reach peers this phase
+        ctx.send_to(9, 1.0);
+    }
+}

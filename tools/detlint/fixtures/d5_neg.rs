@@ -1,0 +1,6 @@
+//@ zone: graph/partition.rs
+//@ active:
+
+pub fn rank_of(v: u64, n_workers: usize) -> usize {
+    (v as usize) % n_workers
+}

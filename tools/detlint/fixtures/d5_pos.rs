@@ -1,0 +1,8 @@
+//@ zone: comm/mod.rs
+//@ active: D5@5, D5@6
+
+pub fn place(rank: usize, machines: usize, n_workers: usize) -> (usize, usize) {
+    let m = rank % machines;
+    let w = rank % n_workers;
+    (m, w)
+}

@@ -1,0 +1,8 @@
+//@ zone: storage/pager.rs
+//@ active:
+//@ waived: D5@7
+
+pub fn debug_spread(key: u64, machines: usize) -> usize {
+    // detlint: allow(D5): debug histogram bucketing, not placement
+    key as usize % machines
+}

@@ -1,0 +1,17 @@
+//@ zone: ft/mod.rs
+//@ active:
+
+//! HashMap, Instant::now and thread_rng in doc comments are inert.
+
+/* block comment: SystemTime::now()
+   /* nested: xs.iter().sum::<f32>() */
+   still comment: rank % machines */
+
+pub fn clean(xs: &[u64], step: u64, cp_every: u64) -> u64 {
+    let banner = "HashMap and Instant::now inside a string";
+    let raw = r#"thread_rng() and .sum::<f32>() and % machines"#;
+    let tick = 'x';
+    let count = xs.iter().fold(0u64, |a, &b| a + b);
+    let phase = step % cp_every;
+    banner.len() as u64 + raw.len() as u64 + tick as u64 + count + phase
+}

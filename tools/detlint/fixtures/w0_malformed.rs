@@ -1,0 +1,8 @@
+//@ zone: ft/mod.rs
+//@ active: W0@5, W0@6, W0@7
+
+pub fn hygiene() {
+    // detlint: allow(D9): no such rule
+    // detlint: allow(D1):
+    // detlint: allow(D1): nothing to suppress here
+}

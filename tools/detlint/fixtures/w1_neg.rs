@@ -1,0 +1,14 @@
+//@ zone: storage/hdfs.rs
+//@ active:
+
+pub fn guarded(x: Option<u32>) -> u32 {
+    x.expect("index contract: key ranged from the map itself")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_fine_in_tests() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

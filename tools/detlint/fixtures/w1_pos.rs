@@ -1,0 +1,8 @@
+//@ zone: ft/recovery_ops.rs
+//@ active: W1@5, W1@6
+
+pub fn risky(x: Option<u32>, y: Option<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = y.expect("");
+    a + b
+}

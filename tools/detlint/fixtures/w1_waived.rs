@@ -1,0 +1,8 @@
+//@ zone: ingest/journal.rs
+//@ active:
+//@ waived: W1@7
+
+pub fn head(xs: &[u32]) -> u32 {
+    // detlint: allow(W1): slice checked non-empty by caller contract
+    *xs.first().unwrap()
+}

@@ -1,0 +1,100 @@
+//! Diagnostics: what a rule reports, and how it renders.
+
+/// Diagnostic severity. `Error` rules guard bit-identity contracts and
+/// always fail the lint; `Warning` rules (W1) guard attributability and
+/// fail only under `--deny-warnings` (which CI and the tier-1 test
+/// pass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Rule id: `D1`..`D5`, `W1`, or `W0` (waiver hygiene).
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What went wrong and what to do instead.
+    pub message: String,
+    /// The offending raw source line, trimmed.
+    pub excerpt: String,
+}
+
+impl Diagnostic {
+    /// `file:line: severity[rule]: message` plus an excerpt line.
+    pub fn render(&self) -> String {
+        let mut excerpt = self.excerpt.clone();
+        if excerpt.len() > 120 {
+            excerpt.truncate(117);
+            excerpt.push_str("...");
+        }
+        format!(
+            "{}:{}: {}[{}]: {}\n    | {}",
+            self.file,
+            self.line,
+            self.severity.label(),
+            self.rule,
+            self.message,
+            excerpt
+        )
+    }
+}
+
+/// Stable ordering for reports: by file, then line, then rule.
+pub fn sort_diagnostics(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_greppable() {
+        let d = Diagnostic {
+            rule: "D1",
+            severity: Severity::Error,
+            file: "pregel/engine.rs".to_string(),
+            line: 7,
+            message: "no hash-ordered containers".to_string(),
+            excerpt: "let m = HashMap::new();".to_string(),
+        };
+        let r = d.render();
+        assert!(r.starts_with("pregel/engine.rs:7: error[D1]:"));
+        assert!(r.contains("HashMap::new()"));
+    }
+
+    #[test]
+    fn sort_orders_by_file_then_line() {
+        let mk = |file: &str, line: usize| Diagnostic {
+            rule: "D2",
+            severity: Severity::Error,
+            file: file.to_string(),
+            line,
+            message: String::new(),
+            excerpt: String::new(),
+        };
+        let mut v = vec![mk("b.rs", 1), mk("a.rs", 9), mk("a.rs", 2)];
+        sort_diagnostics(&mut v);
+        assert_eq!(v[0].file, "a.rs");
+        assert_eq!(v[0].line, 2);
+        assert_eq!(v[2].file, "b.rs");
+    }
+}

@@ -1,0 +1,156 @@
+//! detlint — determinism-contract linter for the lwcp codebase.
+//!
+//! The engine's fault-tolerance story rests on bit-identical replay
+//! (DESIGN.md §5): identical inputs must produce identical vertex
+//! state, wire bytes, checkpoint digests and reports, on any thread
+//! count, before and after recovery. Most regressions against that
+//! contract are *lexically visible* — a `HashMap` iteration, an
+//! `Instant::now()`, an open-coded float fold — long before they are
+//! observable in a golden test. detlint scans `rust/src` for exactly
+//! those shapes and fails the build.
+//!
+//! Zero dependencies by design: the scrubber ([`scrub`]) blanks
+//! comments and literals, the rules ([`rules`]) pattern-match scrubbed
+//! lines within path-prefix zones, and waivers ([`waiver`]) are
+//! ratcheted against a checked-in baseline. See `DESIGN.md §10` for
+//! the rule-to-contract mapping and waiver etiquette.
+
+pub mod diag;
+pub mod rules;
+pub mod scrub;
+pub mod waiver;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use diag::{sort_diagnostics, Diagnostic};
+use waiver::{apply_waivers, parse_waivers, waived_counts};
+
+/// Lint result for one source file.
+pub struct FileLint {
+    /// Path relative to the scanned root, `/`-separated.
+    pub relpath: String,
+    /// Diagnostics still in force (includes `W0` hygiene errors).
+    pub active: Vec<Diagnostic>,
+    /// Diagnostics suppressed by a valid waiver.
+    pub waived: Vec<Diagnostic>,
+}
+
+/// Lint result for a whole tree.
+pub struct TreeLint {
+    pub files: Vec<FileLint>,
+    /// All active diagnostics across files, sorted for reporting.
+    pub active: Vec<Diagnostic>,
+    /// All waived diagnostics across files, sorted.
+    pub waived: Vec<Diagnostic>,
+}
+
+impl TreeLint {
+    /// Waived-violation counts per baseline rule (zero-filled).
+    pub fn waived_counts(&self) -> BTreeMap<String, usize> {
+        waived_counts(&self.waived)
+    }
+}
+
+/// Lint one source string as if it lived at `relpath` under the root.
+pub fn lint_source(relpath: &str, src: &str) -> FileLint {
+    let sc = scrub::scrub(src);
+    let raw = rules::check_file(relpath, &sc);
+    let (waivers, mut malformed) = parse_waivers(relpath, &sc.raw_lines);
+    let (mut active, waived, hygiene) = apply_waivers(relpath, &sc.raw_lines, &waivers, raw);
+    active.append(&mut malformed);
+    active.extend(hygiene);
+    FileLint {
+        relpath: relpath.to_string(),
+        active,
+        waived,
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by relative
+/// path so diagnostics and waiver counts are stable across platforms.
+pub fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+        entries.sort();
+        for path in entries {
+            if path.is_dir() {
+                walk(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, &mut out)?;
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root`.
+pub fn lint_tree(root: &Path) -> io::Result<TreeLint> {
+    let mut files = Vec::new();
+    let mut active = Vec::new();
+    let mut waived = Vec::new();
+    for path in collect_rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(&path)?;
+        let lint = lint_source(&rel, &src);
+        active.extend(lint.active.iter().cloned());
+        waived.extend(lint.waived.iter().cloned());
+        files.push(lint);
+    }
+    sort_diagnostics(&mut active);
+    sort_diagnostics(&mut waived);
+    Ok(TreeLint {
+        files,
+        active,
+        waived,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_source_merges_rule_and_hygiene_diagnostics() {
+        let src = "// detlint: allow(D1): unused on purpose\nlet t = std::time::Instant::now();\n";
+        let lint = lint_source("ft/mod.rs", src);
+        // One D2 (not suppressed: waiver names D1) + one W0 (stale).
+        assert_eq!(lint.active.len(), 2);
+        assert!(lint.active.iter().any(|d| d.rule == "D2"));
+        assert!(lint.active.iter().any(|d| d.rule == "W0"));
+        assert!(lint.waived.is_empty());
+    }
+
+    #[test]
+    fn lint_source_clean_file_is_clean() {
+        let src = "use std::collections::BTreeMap;\n\npub fn f() -> u32 {\n    1\n}\n";
+        let lint = lint_source("pregel/engine.rs", src);
+        assert!(lint.active.is_empty());
+        assert!(lint.waived.is_empty());
+    }
+
+    #[test]
+    fn waived_counts_are_zero_filled() {
+        let lint = lint_source("sim/cost.rs", "pub fn f() {}\n");
+        let tree = TreeLint {
+            files: vec![],
+            active: lint.active,
+            waived: lint.waived,
+        };
+        let counts = tree.waived_counts();
+        assert_eq!(counts.len(), rules::BASELINE_RULES.len());
+        assert!(counts.values().all(|&c| c == 0));
+    }
+}

@@ -1,0 +1,185 @@
+//! detlint CLI.
+//!
+//! ```text
+//! cargo run -p detlint                      # lint rust/src, check baseline
+//! cargo run -p detlint -- --deny-warnings   # what CI and tier-1 run
+//! cargo run -p detlint -- --explain D3      # rule documentation
+//! cargo run -p detlint -- --write-baseline  # after reviewing new waivers
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations or baseline mismatch, 2 usage
+//! error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use detlint::diag::Severity;
+use detlint::rules::{rule_doc, BASELINE_RULES};
+use detlint::waiver::{compare_baseline, format_baseline, parse_baseline};
+
+struct Options {
+    root: PathBuf,
+    baseline: Option<PathBuf>,
+    deny_warnings: bool,
+    write_baseline: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: detlint [--root DIR] [--baseline FILE|none] [--deny-warnings]\n\
+     \x20              [--write-baseline] [--explain RULE] [--list-rules]\n\
+     \n\
+     Lints rust/src against the determinism contracts (DESIGN.md §10).\n\
+     \x20 --root DIR        directory to scan (default: rust/src)\n\
+     \x20 --baseline FILE   waiver baseline to ratchet against\n\
+     \x20                   (default: tools/detlint/baseline.txt; `none` skips)\n\
+     \x20 --deny-warnings   treat W1 warnings as errors (CI / tier-1 mode)\n\
+     \x20 --write-baseline  rewrite the baseline from the current tree\n\
+     \x20 --explain RULE    print the contract behind a rule (D1..D5, W1, W0)\n\
+     \x20 --list-rules      list all rules with one-line summaries"
+}
+
+/// Default scan root: `rust/src` from the workspace root if we are
+/// there, else relative to this crate's manifest (so the tier-1 test
+/// binary works from any cwd).
+fn default_root() -> PathBuf {
+    let cwd = PathBuf::from("rust/src");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+fn default_baseline() -> PathBuf {
+    let local = PathBuf::from("tools/detlint/baseline.txt");
+    if local.is_file() {
+        return local;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("baseline.txt")
+}
+
+fn parse_args(args: &[String]) -> Result<Option<Options>, String> {
+    let mut opts = Options {
+        root: default_root(),
+        baseline: Some(default_baseline()),
+        deny_warnings: false,
+        write_baseline: false,
+    };
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                let v = args.get(i).ok_or("--root requires a directory")?;
+                opts.root = PathBuf::from(v);
+            }
+            "--baseline" => {
+                i += 1;
+                let v = args.get(i).ok_or("--baseline requires a path or `none`")?;
+                opts.baseline = if v == "none" { None } else { Some(PathBuf::from(v)) };
+            }
+            "--deny-warnings" => opts.deny_warnings = true,
+            "--write-baseline" => opts.write_baseline = true,
+            "--explain" => {
+                i += 1;
+                let rule = args.get(i).ok_or("--explain requires a rule id")?;
+                match rule_doc(rule) {
+                    Some(doc) => {
+                        println!("{rule}: {doc}");
+                        return Ok(None);
+                    }
+                    None => return Err(format!("unknown rule `{rule}`")),
+                }
+            }
+            "--list-rules" => {
+                for rule in BASELINE_RULES.iter().chain(["W0"].iter()) {
+                    let doc = rule_doc(rule).unwrap_or("");
+                    let first = doc.split('.').next().unwrap_or(doc);
+                    println!("{rule}  {first}.");
+                }
+                return Ok(None);
+            }
+            "--help" | "-h" => {
+                println!("{}", usage());
+                return Ok(None);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+        i += 1;
+    }
+    Ok(Some(opts))
+}
+
+fn run(opts: &Options) -> Result<bool, String> {
+    if !opts.root.is_dir() {
+        return Err(format!("scan root {} is not a directory", opts.root.display()));
+    }
+    let tree = detlint::lint_tree(&opts.root)
+        .map_err(|e| format!("scanning {}: {e}", opts.root.display()))?;
+
+    let mut failed = false;
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    for d in &tree.active {
+        eprintln!("{}", d.render());
+        match d.severity {
+            Severity::Error => errors += 1,
+            Severity::Warning => warnings += 1,
+        }
+    }
+    if errors > 0 || (opts.deny_warnings && warnings > 0) {
+        failed = true;
+    }
+
+    let counts = tree.waived_counts();
+    if opts.write_baseline {
+        let path = opts
+            .baseline
+            .clone()
+            .ok_or("--write-baseline needs a baseline path (not `none`)")?;
+        std::fs::write(&path, format_baseline(&counts))
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+        println!("wrote baseline to {}", path.display());
+    } else if let Some(path) = &opts.baseline {
+        let content = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading baseline {}: {e}", path.display()))?;
+        let baseline = parse_baseline(&content)?;
+        for msg in compare_baseline(&counts, &baseline) {
+            eprintln!("baseline mismatch: {msg}");
+            failed = true;
+        }
+    }
+
+    let n_files = tree.files.len();
+    let n_waived: usize = counts.values().sum();
+    if failed {
+        eprintln!(
+            "detlint: FAILED — {errors} error(s), {warnings} warning(s) in {n_files} file(s) \
+             ({n_waived} waived)"
+        );
+    } else {
+        println!(
+            "detlint: OK — {n_files} file(s) clean, {n_waived} waived, {warnings} warning(s)"
+        );
+    }
+    Ok(!failed)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&args) {
+        Ok(Some(opts)) => opts,
+        Ok(None) => return ExitCode::SUCCESS,
+        Err(msg) => {
+            eprintln!("detlint: {msg}\n{}", usage());
+            return ExitCode::from(2);
+        }
+    };
+    match run(&opts) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(msg) => {
+            eprintln!("detlint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! The determinism-contract rules (DESIGN.md §10).
+//!
+//! Every rule is zone-scoped by path prefix relative to the scanned
+//! root (`rust/src`), operates on scrubbed lines (comments and literal
+//! contents blanked — see [`crate::scrub`]), and skips `#[cfg(test)]`
+//! regions: the contracts govern runtime code, tests assert on it.
+
+use crate::diag::{Diagnostic, Severity};
+use crate::scrub::{test_mask, update_fn_mask, Scrubbed};
+
+/// Rule ids that participate in the waiver baseline, in report order.
+pub const BASELINE_RULES: [&str; 6] = ["D1", "D2", "D3", "D4", "D5", "W1"];
+
+/// Deterministic zones for D1: every module whose iteration order can
+/// reach vertex state, wire bytes, checkpoint blobs, placement, or the
+/// printed report.
+const D1_ZONES: [&str; 9] = [
+    "pregel/",
+    "ft/",
+    "storage/",
+    "ingest/",
+    "graph/",
+    "comm/",
+    "runtime/",
+    "coordinator/",
+    "metrics/",
+];
+
+/// D2 applies everywhere except the two sanctioned homes.
+const D2_EXEMPT: [&str; 2] = ["sim/clock.rs", "util/rng.rs"];
+
+/// D3 applies everywhere except the canonical fold homes: the lane-tree
+/// kernels (DESIGN.md §5 rule 4 / §5a) and the clock-time reductions
+/// (`sim::clock::max_time`, order-independent `f64::max`).
+const D3_EXEMPT: [&str; 2] = ["pregel/kernels.rs", "sim/clock.rs"];
+
+const D4_ZONES: [&str; 1] = ["apps/"];
+
+/// D5 applies everywhere except the canonical placement helpers.
+const D5_EXEMPT: [&str; 2] = ["sim/cost.rs", "graph/partition.rs"];
+
+const W1_ZONES: [&str; 3] = ["ft/", "storage/", "ingest/"];
+
+/// One-paragraph contract documentation per rule (`detlint --explain`).
+pub fn rule_doc(rule: &str) -> Option<&'static str> {
+    match rule {
+        "D1" => Some(
+            "D1 — no hash-ordered containers in deterministic zones. \
+             HashMap/HashSet iteration order varies per process, so any use \
+             inside pregel/, ft/, storage/, ingest/, graph/, comm/, runtime/, \
+             coordinator/ or metrics/ can leak nondeterministic order into \
+             wire batches, checkpoint blobs or the report (DESIGN.md §5 \
+             merge-order contract, §6a slot-major streams). Use BTreeMap / \
+             BTreeSet or a sorted Vec; waive only when order provably cannot \
+             escape (membership-only sets).",
+        ),
+        "D2" => Some(
+            "D2 — no ambient wall-clock or entropy sources. Instant::now, \
+             SystemTime and thread_rng make reruns incomparable and replay \
+             non-reproducible. Virtual time comes from sim::clock::Clock; \
+             wall-clock for *reporting only* goes through \
+             sim::clock::WallTimer; randomness through util::Rng (seeded \
+             splitmix64/xoshiro256**).",
+        ),
+        "D3" => Some(
+            "D3 — no open-coded floating-point reductions. Float folds are \
+             order-sensitive; every per-slot fold must route through the \
+             canonical lane-tree kernels (pregel::kernels::sum_f32 / min_f32, \
+             DESIGN.md §5 rule 4, §5a) so N-thread and SIMD runs stay \
+             bit-identical. Clock-time maxima belong in sim::clock::max_time.",
+        ),
+        "D4" => Some(
+            "D4 — no sends inside `fn update`. The two-phase vertex API \
+             (update = state fold, emit = message generation) is what makes \
+             replay emit-only and recovery bit-identical (DESIGN.md §4); a \
+             send-shaped call inside an update body breaks the phase split \
+             even if it compiles against some helper type.",
+        ),
+        "D5" => Some(
+            "D5 — placement arithmetic only via the canonical helpers. \
+             `% machines` / `% workers` open-coded at a use site can drift \
+             from the static-placement recovery invariant (rank_of, \
+             Topology::machine_of — DESIGN.md §3a): respawned workers keep \
+             their rank precisely because every placement decision goes \
+             through one function.",
+        ),
+        "W1" => Some(
+            "W1 (warn) — unwrap() and expect(\"\") on the checkpoint-commit, \
+             recovery and ingest paths must carry a contract-stating message, \
+             so a panic in the flush lane is attributable to the invariant \
+             that broke (executor panics re-raise with phase name + rank; an \
+             anonymous unwrap defeats that).",
+        ),
+        "W0" => Some(
+            "W0 — waiver hygiene. `// detlint: allow(RULE): justification` \
+             must name a known rule and carry a non-empty justification, and \
+             must actually suppress a violation on its own or the next line; \
+             stale waivers are errors so the waiver count only moves with \
+             intent (the checked-in baseline pins it).",
+        ),
+        _ => None,
+    }
+}
+
+fn in_any(relpath: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| relpath.starts_with(p))
+}
+
+/// First occurrence of `word` in `line` as a whole identifier
+/// (ASCII-boundary check on both sides), starting at `from`.
+fn find_word_from(line: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = line.as_bytes();
+    let mut start = from;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = at + word.len();
+    }
+    None
+}
+
+fn contains_word(line: &str, word: &str) -> bool {
+    find_word_from(line, word, 0).is_some()
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Does `line` contain a `.fold(` whose initial accumulator is
+/// float-typed (a float literal or an `f32::`/`f64::` constant)?
+fn has_float_fold(line: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = line[from..].find(".fold(") {
+        let arg = line[from + pos + ".fold(".len()..].trim_start();
+        if arg.starts_with("f32::") || arg.starts_with("f64::") {
+            return true;
+        }
+        if starts_with_float_literal(arg) {
+            return true;
+        }
+        from += pos + ".fold(".len();
+    }
+    false
+}
+
+/// `0.0`, `1.5e3`, `0.0f32` — digits, a dot, then a digit.
+fn starts_with_float_literal(s: &str) -> bool {
+    let bytes = s.as_bytes();
+    let mut i = 0usize;
+    while i < bytes.len() && (bytes[i].is_ascii_digit() || bytes[i] == b'_') {
+        i += 1;
+    }
+    i > 0 && i + 1 < bytes.len() && bytes[i] == b'.' && bytes[i + 1].is_ascii_digit()
+}
+
+/// Does `line` use `%` against an operand that names cluster shape
+/// (`machines`, `workers`, `n_workers`, `workers_per_machine`)?
+fn has_placement_modulo(line: &str) -> Option<String> {
+    let bytes = line.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'%' {
+            continue;
+        }
+        let rest = line[i + 1..].trim_start();
+        let operand: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || matches!(c, '_' | '.' | ':'))
+            .collect();
+        if operand.contains("machine") || operand.contains("worker") {
+            return Some(operand);
+        }
+    }
+    None
+}
+
+fn diag(
+    rule: &'static str,
+    severity: Severity,
+    relpath: &str,
+    lineno: usize,
+    raw_line: &str,
+    message: String,
+) -> Diagnostic {
+    Diagnostic {
+        rule,
+        severity,
+        file: relpath.to_string(),
+        line: lineno,
+        message,
+        excerpt: raw_line.trim().to_string(),
+    }
+}
+
+/// Run every rule over one scrubbed file. `relpath` is the
+/// `/`-separated path relative to the scanned root; it decides which
+/// zones apply. Returns raw (pre-waiver) diagnostics in line order.
+pub fn check_file(relpath: &str, sc: &Scrubbed) -> Vec<Diagnostic> {
+    let tests = test_mask(&sc.lines);
+    let d4_applies = in_any(relpath, &D4_ZONES);
+    let update_body = if d4_applies {
+        update_fn_mask(&sc.lines)
+    } else {
+        Vec::new()
+    };
+    let d1_applies = in_any(relpath, &D1_ZONES);
+    let d2_applies = !in_any(relpath, &D2_EXEMPT);
+    let d3_applies = !in_any(relpath, &D3_EXEMPT);
+    let d5_applies = !in_any(relpath, &D5_EXEMPT);
+    let w1_applies = in_any(relpath, &W1_ZONES);
+
+    let mut out = Vec::new();
+    for (idx, line) in sc.lines.iter().enumerate() {
+        if tests.get(idx).copied().unwrap_or(false) {
+            continue;
+        }
+        let lineno = idx + 1;
+        let raw = sc.raw_lines.get(idx).map(String::as_str).unwrap_or("");
+
+        if d1_applies {
+            for word in ["HashMap", "HashSet"] {
+                if contains_word(line, word) {
+                    out.push(diag(
+                        "D1",
+                        Severity::Error,
+                        relpath,
+                        lineno,
+                        raw,
+                        format!(
+                            "{word} in a deterministic zone: iteration order is \
+                             per-process nondeterministic (DESIGN.md §5); use \
+                             BTree{} or a sorted Vec",
+                            &word[4..]
+                        ),
+                    ));
+                }
+            }
+        }
+
+        if d2_applies {
+            for word in ["Instant", "SystemTime", "thread_rng"] {
+                if contains_word(line, word) {
+                    out.push(diag(
+                        "D2",
+                        Severity::Error,
+                        relpath,
+                        lineno,
+                        raw,
+                        format!(
+                            "{word} is an ambient wall-clock/entropy source; use \
+                             sim::clock::WallTimer (reporting) or util::Rng \
+                             (randomness)"
+                        ),
+                    ));
+                }
+            }
+            if let Some(pos) = find_word_from(line, "rand", 0) {
+                if line[pos + 4..].starts_with("::") {
+                    out.push(diag(
+                        "D2",
+                        Severity::Error,
+                        relpath,
+                        lineno,
+                        raw,
+                        "the rand crate is a nondeterministic entropy source; use \
+                         util::Rng (seeded xoshiro256**)"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+
+        if d3_applies {
+            let sum = line.contains(".sum::<f32>") || line.contains(".sum::<f64>");
+            if sum || has_float_fold(line) {
+                out.push(diag(
+                    "D3",
+                    Severity::Error,
+                    relpath,
+                    lineno,
+                    raw,
+                    "open-coded floating-point reduction: float folds are \
+                     order-sensitive; route through pregel::kernels (per-slot \
+                     folds, §5 rule 4) or sim::clock::max_time (clock maxima)"
+                        .to_string(),
+                ));
+            }
+        }
+
+        if d4_applies && update_body.get(idx).copied().unwrap_or(false) {
+            for pat in [".send(", ".send_all(", ".send_to("] {
+                if line.contains(pat) {
+                    out.push(diag(
+                        "D4",
+                        Severity::Error,
+                        relpath,
+                        lineno,
+                        raw,
+                        "send-shaped call inside `fn update`: the two-phase API \
+                         keeps updates send-free so replay is emit-only and \
+                         recovery bit-identical (DESIGN.md §4); move the send \
+                         into `emit`/`respond`"
+                            .to_string(),
+                    ));
+                    break;
+                }
+            }
+        }
+
+        if d5_applies {
+            if let Some(operand) = has_placement_modulo(line) {
+                out.push(diag(
+                    "D5",
+                    Severity::Error,
+                    relpath,
+                    lineno,
+                    raw,
+                    format!(
+                        "open-coded placement arithmetic `% {operand}`: static \
+                         placement must go through Partitioner::rank_of / \
+                         Topology::machine_of (DESIGN.md §3a) so recovery \
+                         reproduces it"
+                    ),
+                ));
+            }
+        }
+
+        if w1_applies {
+            let bare_unwrap = line.contains(".unwrap()");
+            let empty_expect = line.contains(".expect(\"\")");
+            if bare_unwrap || empty_expect {
+                out.push(diag(
+                    "W1",
+                    Severity::Warning,
+                    relpath,
+                    lineno,
+                    raw,
+                    "bare unwrap/expect on a checkpoint/recovery/ingest path: \
+                     state the violated contract in an expect(...) message (or \
+                     propagate the error) so flush-lane panics stay attributable"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scrub::scrub;
+
+    fn run(relpath: &str, src: &str) -> Vec<Diagnostic> {
+        check_file(relpath, &scrub(src))
+    }
+
+    #[test]
+    fn d1_flags_hash_containers_only_in_zones() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run("pregel/engine.rs", src).len(), 1);
+        assert_eq!(run("sim/cost.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn d1_ignores_comments_strings_and_tests() {
+        let src = "// a HashMap in prose\nlet s = \"HashMap\";\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        assert!(run("ft/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d2_flags_clock_sources_everywhere_but_exempt_files() {
+        let src = "let t = std::time::Instant::now();\n";
+        assert_eq!(run("apps/pagerank.rs", src).len(), 1);
+        assert_eq!(run("sim/clock.rs", src).len(), 0);
+        assert_eq!(run("util/rng.rs", "use rand::thread_rng;\n").len(), 0);
+    }
+
+    #[test]
+    fn d2_word_boundaries_do_not_misfire() {
+        // `instant` lowercase, `operand::x` — no rule words.
+        let src = "let instant = 3; let x = operand::new();\n";
+        assert!(run("pregel/worker.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d3_flags_float_reductions_but_not_integer_folds() {
+        assert_eq!(run("apps/sssp.rs", "let s = xs.iter().sum::<f32>();\n").len(), 1);
+        assert_eq!(run("ft/mod.rs", "let m = t.fold(0.0, f64::max);\n").len(), 1);
+        assert_eq!(run("ft/mod.rs", "let m = t.fold(f32::INFINITY, f32::min);\n").len(), 1);
+        assert!(run("ft/mod.rs", "let c = xs.iter().fold(0, |a, _| a + 1);\n").is_empty());
+        assert!(run("pregel/kernels.rs", "let s = xs.iter().sum::<f32>();\n").is_empty());
+        assert!(run("sim/clock.rs", "let m = t.fold(0.0f64, f64::max);\n").is_empty());
+    }
+
+    #[test]
+    fn d4_flags_sends_in_update_but_not_emit() {
+        let src = "fn update(&self, ctx: &mut C) {\n    ctx.send(1, m);\n}\nfn emit(&self, ctx: &mut E) {\n    ctx.send(1, m);\n}\n";
+        let diags = run("apps/pagerank.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].line, 2);
+    }
+
+    #[test]
+    fn d5_flags_open_coded_placement_modulo() {
+        assert_eq!(run("pregel/message.rs", "let m = rank % machines;\n").len(), 1);
+        assert_eq!(run("comm/ulfm.rs", "let m = r % self.n_workers;\n").len(), 1);
+        assert!(run("sim/cost.rs", "let m = rank % self.machines;\n").is_empty());
+        assert!(run("pregel/engine.rs", "let k = step % cp_every;\n").is_empty());
+    }
+
+    #[test]
+    fn w1_warns_on_bare_unwrap_in_ft_zones_only() {
+        let src = "let v = x.unwrap();\n";
+        let diags = run("ft/recovery_ops.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].severity, Severity::Warning);
+        assert!(run("pregel/engine.rs", src).is_empty());
+        assert!(run("storage/hdfs.rs", "let v = x.expect(\"lock poisoned\");\n").is_empty());
+        assert_eq!(run("storage/hdfs.rs", "let v = x.expect(\"\");\n").len(), 1);
+    }
+
+    #[test]
+    fn every_baseline_rule_is_documented() {
+        for rule in BASELINE_RULES {
+            assert!(rule_doc(rule).is_some(), "{rule} lacks docs");
+        }
+        assert!(rule_doc("W0").is_some());
+    }
+}

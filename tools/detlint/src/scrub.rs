@@ -1,0 +1,343 @@
+//! Comment- and string-aware source scrubbing, plus brace-tracked item
+//! regions.
+//!
+//! detlint has no dependencies, so instead of a full parser it uses the
+//! classic lexical trick: produce a *scrubbed* copy of the source in
+//! which every comment, string literal and char literal is blanked to
+//! spaces (newlines preserved), aligned line-for-line with the
+//! original. Rule patterns then scan the scrubbed lines — a `HashMap`
+//! mentioned in a doc comment or an `"Instant::now"` inside a format
+//! string can never trip a rule — while waiver comments are parsed from
+//! the raw lines.
+//!
+//! Handled lexical forms: `//` line comments, nested `/* */` block
+//! comments, `"…"` strings with escapes, byte strings `b"…"`, raw
+//! strings `r"…"` / `r#"…"#` / `br##"…"##` (any hash depth), char
+//! literals (`'a'`, `'\n'`, `'\u{1F600}'`), and lifetimes (`'a`, `'_`)
+//! which are *not* char literals.
+
+/// A scrubbed source file: `lines[i]` is the sanitized form of
+/// `raw_lines[i]`.
+pub struct Scrubbed {
+    /// Sanitized lines: comments and literal contents blanked.
+    pub lines: Vec<String>,
+    /// Original lines (waiver comments, diagnostic excerpts).
+    pub raw_lines: Vec<String>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Push `c` to `out`, preserving newlines, blanking everything else.
+fn push_blank(out: &mut String, c: char) {
+    out.push(if c == '\n' { '\n' } else { ' ' });
+}
+
+/// If `chars[i..]` starts a raw string (`r`, `r#`, `br##`, …), return
+/// `(hash_count, index_of_opening_quote)`.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j))
+    } else {
+        None
+    }
+}
+
+/// Does `chars[i..]` start with `count` consecutive `#`s?
+fn has_hashes(chars: &[char], i: usize, count: usize) -> bool {
+    (0..count).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Scrub `src` (see module docs).
+pub fn scrub(src: &str) -> Scrubbed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        // Line comment: blank to end of line.
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nested (Rust allows /* /* */ */).
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    push_blank(&mut out, chars[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (byte) string: no escapes, closes at `"` + matching #s.
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident_char(chars[i - 1])) {
+            if let Some((hashes, quote)) = raw_string_start(&chars, i) {
+                for _ in i..quote {
+                    out.push(' ');
+                }
+                out.push('"');
+                i = quote + 1;
+                while i < n {
+                    if chars[i] == '"' && has_hashes(&chars, i + 1, hashes) {
+                        out.push('"');
+                        for _ in 0..hashes {
+                            out.push(' ');
+                        }
+                        i += 1 + hashes;
+                        break;
+                    }
+                    push_blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Byte string b"…": escape-aware like a normal string.
+        let starts_string = c == '"'
+            || (c == 'b'
+                && (i == 0 || !is_ident_char(chars[i - 1]))
+                && chars.get(i + 1) == Some(&'"'));
+        if starts_string {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push('"');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    push_blank(&mut out, chars[i]);
+                    push_blank(&mut out, chars[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                }
+                push_blank(&mut out, chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: '\n', '\\', '\'', '\u{1F600}'.
+                out.push('\'');
+                out.push(' '); // the backslash
+                i += 2;
+                if i < n {
+                    // The escaped character itself (possibly a quote).
+                    push_blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                while i < n && chars[i] != '\'' {
+                    push_blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                if i < n {
+                    out.push('\'');
+                    i += 1;
+                }
+                continue;
+            }
+            if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                // Simple char literal 'x' (including '_' and unicode).
+                out.push('\'');
+                out.push(' ');
+                out.push('\'');
+                i += 3;
+                continue;
+            }
+            // Lifetime tick: pass through.
+            out.push('\'');
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    Scrubbed {
+        lines: out.lines().map(String::from).collect(),
+        raw_lines: src.lines().map(String::from).collect(),
+    }
+}
+
+/// Per-line mask of brace-delimited regions opened after a trigger
+/// line: `mask[i]` is true from the trigger line through the line
+/// closing the first `{` that follows it. Used for `#[cfg(test)]`
+/// modules and `fn update` bodies. Regions do not nest — a trigger
+/// inside an open region is ignored.
+pub fn region_mask(lines: &[String], trigger: impl Fn(&str) -> bool) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut depth = 0usize;
+    let mut close_at: Option<usize> = None;
+    let mut pending = false;
+    for (idx, line) in lines.iter().enumerate() {
+        if close_at.is_some() {
+            mask[idx] = true;
+        }
+        if close_at.is_none() && !pending && trigger(line) {
+            pending = true;
+        }
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        close_at = Some(depth);
+                        pending = false;
+                        mask[idx] = true;
+                    }
+                }
+                '}' => {
+                    if close_at == Some(depth) {
+                        close_at = None;
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                _ => {}
+            }
+        }
+        if pending {
+            // Between the trigger and its opening brace (attribute
+            // line, multi-line signature).
+            mask[idx] = true;
+        }
+    }
+    mask
+}
+
+/// Lines inside `#[cfg(test)]`-gated items. Contracts govern runtime
+/// code; tests assert on it and may use whatever they like.
+pub fn test_mask(lines: &[String]) -> Vec<bool> {
+    region_mask(lines, |l| l.contains("#[cfg(test)]"))
+}
+
+/// Lines inside `fn update` bodies (the two-phase vertex API's
+/// state-fold half — rule D4).
+pub fn update_fn_mask(lines: &[String]) -> Vec<bool> {
+    region_mask(lines, |l| {
+        if let Some(pos) = l.find("fn update") {
+            let rest = &l[pos + "fn update".len()..];
+            let next = rest.trim_start().chars().next();
+            matches!(next, Some('(') | Some('<'))
+        } else {
+            false
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrub_lines(src: &str) -> Vec<String> {
+        scrub(src).lines
+    }
+
+    #[test]
+    fn comments_are_blanked() {
+        let l = scrub_lines("let x = 1; // HashMap here\n/* Instant::now */ let y = 2;");
+        assert_eq!(l[0].trim_end(), "let x = 1;");
+        assert!(!l[0].contains("HashMap"));
+        assert!(!l[1].contains("Instant"));
+        assert!(l[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let l = scrub_lines("/* outer /* inner */ still comment */ let z = 3;");
+        assert!(!l[0].contains("inner"));
+        assert!(l[0].contains("let z = 3;"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_quotes_survive() {
+        let l = scrub_lines(r#"let s = "Instant::now \" escaped"; let t = 1;"#);
+        assert!(!l[0].contains("Instant"));
+        assert!(l[0].contains("let t = 1;"));
+        assert_eq!(l[0].matches('"').count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings_are_blanked() {
+        let l = scrub_lines("let a = r#\"HashMap \"quoted\" inside\"#; let b = b\"SystemTime\";");
+        assert!(!l[0].contains("HashMap"));
+        assert!(!l[0].contains("SystemTime"));
+        assert!(l[0].contains("let b ="));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let l = scrub_lines("fn f<'a>(x: &'a str) -> char { let c = 'x'; let q = '\\''; c }");
+        assert!(l[0].contains("<'a>"));
+        assert!(l[0].contains("&'a str"));
+        assert!(!l[0].contains("'x'"));
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_alignment() {
+        let src = "let s = \"line one\nHashMap in string\nlast\"; let after = 1;";
+        let l = scrub_lines(src);
+        assert_eq!(l.len(), 3);
+        assert!(!l[1].contains("HashMap"));
+        assert!(l[2].contains("let after = 1;"));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_module() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}";
+        let sc = scrub(src);
+        let mask = test_mask(&sc.lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn update_fn_mask_covers_only_update_body() {
+        let src = "fn update(&self, ctx: &mut C) {\n    body();\n}\nfn emit(&self) {\n    e();\n}";
+        let sc = scrub(src);
+        let mask = update_fn_mask(&sc.lines);
+        assert_eq!(mask, vec![true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn update_fn_mask_ignores_lookalike_names() {
+        let src = "fn update_ctx(&self) {\n    body();\n}";
+        let sc = scrub(src);
+        let mask = update_fn_mask(&sc.lines);
+        assert_eq!(mask, vec![false, false]);
+    }
+}

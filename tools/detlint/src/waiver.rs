@@ -1,0 +1,301 @@
+//! Inline waivers and the checked-in waiver baseline.
+//!
+//! A waiver is a comment of the form
+//!
+//! ```text
+//! // detlint: allow(D1): membership-only set, order never iterated
+//! ```
+//!
+//! placed either on the offending line (trailing comment) or on the
+//! line directly above it. A waiver must name a known rule, carry a
+//! non-empty justification, and actually suppress at least one
+//! diagnostic — anything else is a `W0` (waiver hygiene) error, so
+//! stale waivers cannot linger.
+//!
+//! Waived counts per rule are compared against `baseline.txt`
+//! (checked in next to the crate). The comparison is a two-sided
+//! ratchet: a *new* un-baselined waiver fails the lint, and a *stale*
+//! baseline entry (more waivers recorded than exist) also fails, so
+//! the baseline only moves with an intentional edit.
+
+use std::collections::BTreeMap;
+
+use crate::diag::{Diagnostic, Severity};
+use crate::rules::{rule_doc, BASELINE_RULES};
+
+const MARKER: &str = "detlint: allow(";
+
+/// One parsed waiver comment.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// Rule the waiver names, e.g. `D1`.
+    pub rule: String,
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// Justification text after the second colon (trimmed).
+    pub justification: String,
+}
+
+/// Scan raw source lines for waiver comments. Malformed waivers
+/// (unknown rule, missing/empty justification) are returned as `W0`
+/// diagnostics instead.
+pub fn parse_waivers(relpath: &str, raw_lines: &[String]) -> (Vec<Waiver>, Vec<Diagnostic>) {
+    let mut waivers = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, raw) in raw_lines.iter().enumerate() {
+        let Some(pos) = raw.find(MARKER) else {
+            continue;
+        };
+        let lineno = idx + 1;
+        let rest = &raw[pos + MARKER.len()..];
+        let w0 = |msg: String| Diagnostic {
+            rule: "W0",
+            severity: Severity::Error,
+            file: relpath.to_string(),
+            line: lineno,
+            message: msg,
+            excerpt: raw.trim().to_string(),
+        };
+        let Some(close) = rest.find(')') else {
+            bad.push(w0("malformed waiver: missing `)` after rule id".to_string()));
+            continue;
+        };
+        let rule = rest[..close].trim().to_string();
+        if rule_doc(&rule).is_none() || rule == "W0" {
+            bad.push(w0(format!("waiver names unknown or unwaivable rule `{rule}`")));
+            continue;
+        }
+        let after = &rest[close + 1..];
+        let justification = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if justification.is_empty() {
+            bad.push(w0(format!(
+                "waiver for {rule} lacks a justification: write \
+                 `// detlint: allow({rule}): <why this is safe>`"
+            )));
+            continue;
+        }
+        waivers.push(Waiver {
+            rule,
+            line: lineno,
+            justification: justification.to_string(),
+        });
+    }
+    (waivers, bad)
+}
+
+/// Apply `waivers` to `diags`. A waiver suppresses diagnostics of its
+/// rule on its own line or the next line. Returns
+/// `(active, waived, hygiene)` where `hygiene` holds `W0` errors for
+/// waivers that suppressed nothing.
+pub fn apply_waivers(
+    relpath: &str,
+    raw_lines: &[String],
+    waivers: &[Waiver],
+    diags: Vec<Diagnostic>,
+) -> (Vec<Diagnostic>, Vec<Diagnostic>, Vec<Diagnostic>) {
+    let mut used = vec![false; waivers.len()];
+    let mut active = Vec::new();
+    let mut waived = Vec::new();
+    for d in diags {
+        let hit = waivers.iter().enumerate().find(|(_, w)| {
+            w.rule == d.rule && (w.line == d.line || w.line + 1 == d.line)
+        });
+        if let Some((wi, _)) = hit {
+            used[wi] = true;
+            waived.push(d);
+        } else {
+            active.push(d);
+        }
+    }
+    let mut hygiene = Vec::new();
+    for (wi, w) in waivers.iter().enumerate() {
+        if !used[wi] {
+            hygiene.push(Diagnostic {
+                rule: "W0",
+                severity: Severity::Error,
+                file: relpath.to_string(),
+                line: w.line,
+                message: format!(
+                    "stale waiver: no {} violation on this or the next line — \
+                     remove it (and update baseline.txt)",
+                    w.rule
+                ),
+                excerpt: raw_lines
+                    .get(w.line - 1)
+                    .map(|l| l.trim().to_string())
+                    .unwrap_or_default(),
+            });
+        }
+    }
+    (active, waived, hygiene)
+}
+
+/// Count waived diagnostics per baseline rule, zero-filled so the
+/// output always lists every rule.
+pub fn waived_counts(waived: &[Diagnostic]) -> BTreeMap<String, usize> {
+    let mut counts: BTreeMap<String, usize> = BASELINE_RULES
+        .iter()
+        .map(|r| (r.to_string(), 0))
+        .collect();
+    for d in waived {
+        *counts.entry(d.rule.to_string()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Render counts in `baseline.txt` format: `RULE count` per line,
+/// `#` comments allowed.
+pub fn format_baseline(counts: &BTreeMap<String, usize>) -> String {
+    let mut out = String::from(
+        "# detlint waiver baseline: waived violations per rule.\n\
+         # Regenerate with `cargo run -p detlint -- --write-baseline`\n\
+         # after reviewing any new `// detlint: allow(...)` comment.\n",
+    );
+    for (rule, count) in counts {
+        out.push_str(&format!("{rule} {count}\n"));
+    }
+    out
+}
+
+/// Parse `baseline.txt` content. Unknown rules or garbage lines are
+/// reported as error strings.
+pub fn parse_baseline(content: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut counts: BTreeMap<String, usize> = BASELINE_RULES
+        .iter()
+        .map(|r| (r.to_string(), 0))
+        .collect();
+    for (idx, line) in content.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let rule = parts.next().unwrap_or("");
+        let count = parts
+            .next()
+            .and_then(|c| c.parse::<usize>().ok())
+            .ok_or_else(|| format!("baseline line {}: expected `RULE count`, got `{line}`", idx + 1))?;
+        if !BASELINE_RULES.contains(&rule) {
+            return Err(format!("baseline line {}: unknown rule `{rule}`", idx + 1));
+        }
+        counts.insert(rule.to_string(), count);
+    }
+    Ok(counts)
+}
+
+/// Two-sided ratchet comparison. Returns human-readable mismatch
+/// messages; empty means the baseline matches exactly.
+pub fn compare_baseline(
+    actual: &BTreeMap<String, usize>,
+    baseline: &BTreeMap<String, usize>,
+) -> Vec<String> {
+    let mut msgs = Vec::new();
+    for rule in BASELINE_RULES {
+        let a = actual.get(rule).copied().unwrap_or(0);
+        let b = baseline.get(rule).copied().unwrap_or(0);
+        if a > b {
+            msgs.push(format!(
+                "{rule}: {a} waiver(s) in tree but baseline records {b} — new \
+                 waivers need review; rerun with --write-baseline after review"
+            ));
+        } else if a < b {
+            msgs.push(format!(
+                "{rule}: baseline records {b} waiver(s) but only {a} in tree — \
+                 stale baseline; rerun with --write-baseline to ratchet down"
+            ));
+        }
+    }
+    msgs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scrub::scrub;
+
+    fn lines(src: &str) -> Vec<String> {
+        src.lines().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_accepts_well_formed_waiver() {
+        let raw = lines("// detlint: allow(D1): membership-only, never iterated\nuse x;\n");
+        let (ws, bad) = parse_waivers("a.rs", &raw);
+        assert!(bad.is_empty());
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].rule, "D1");
+        assert_eq!(ws[0].line, 1);
+        assert!(ws[0].justification.contains("membership"));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_rule_and_empty_justification() {
+        let raw = lines("// detlint: allow(D9): whatever\n// detlint: allow(D2):\n// detlint: allow(D2)\n");
+        let (ws, bad) = parse_waivers("a.rs", &raw);
+        assert!(ws.is_empty());
+        assert_eq!(bad.len(), 3);
+        assert!(bad.iter().all(|d| d.rule == "W0"));
+    }
+
+    #[test]
+    fn waiver_suppresses_same_line_and_next_line() {
+        let src = "// detlint: allow(D2): fixture\nlet t = std::time::Instant::now();\n";
+        let sc = scrub(src);
+        let diags = crate::rules::check_file("ft/mod.rs", &sc);
+        assert_eq!(diags.len(), 1);
+        let (ws, bad) = parse_waivers("ft/mod.rs", &sc.raw_lines);
+        assert!(bad.is_empty());
+        let (active, waived, hygiene) = apply_waivers("ft/mod.rs", &sc.raw_lines, &ws, diags);
+        assert!(active.is_empty());
+        assert_eq!(waived.len(), 1);
+        assert!(hygiene.is_empty());
+    }
+
+    #[test]
+    fn unused_waiver_is_a_hygiene_error() {
+        let src = "// detlint: allow(D1): nothing here\nlet x = 1;\n";
+        let sc = scrub(src);
+        let (ws, _) = parse_waivers("a.rs", &sc.raw_lines);
+        let (_, _, hygiene) = apply_waivers("a.rs", &sc.raw_lines, &ws, Vec::new());
+        assert_eq!(hygiene.len(), 1);
+        assert_eq!(hygiene[0].rule, "W0");
+        assert!(hygiene[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn waiver_for_wrong_rule_does_not_suppress() {
+        let src = "// detlint: allow(D1): wrong rule\nlet t = std::time::Instant::now();\n";
+        let sc = scrub(src);
+        let diags = crate::rules::check_file("ft/mod.rs", &sc);
+        let (ws, _) = parse_waivers("ft/mod.rs", &sc.raw_lines);
+        let (active, waived, hygiene) = apply_waivers("ft/mod.rs", &sc.raw_lines, &ws, diags);
+        assert_eq!(active.len(), 1);
+        assert!(waived.is_empty());
+        assert_eq!(hygiene.len(), 1);
+    }
+
+    #[test]
+    fn baseline_round_trip_and_ratchet() {
+        let counts = waived_counts(&[]);
+        let text = format_baseline(&counts);
+        let parsed = parse_baseline(&text).expect("round trip");
+        assert_eq!(parsed, counts);
+        assert!(compare_baseline(&counts, &parsed).is_empty());
+
+        let mut grown = counts.clone();
+        grown.insert("D1".to_string(), 1);
+        let up = compare_baseline(&grown, &counts);
+        assert_eq!(up.len(), 1);
+        assert!(up[0].contains("new"));
+        let down = compare_baseline(&counts, &grown);
+        assert_eq!(down.len(), 1);
+        assert!(down[0].contains("stale"));
+    }
+
+    #[test]
+    fn baseline_rejects_garbage() {
+        assert!(parse_baseline("D1 not-a-number\n").is_err());
+        assert!(parse_baseline("D9 3\n").is_err());
+        assert!(parse_baseline("# comment only\n\n").is_ok());
+    }
+}

@@ -1,0 +1,103 @@
+//! Fixture-corpus test: every rule must have a positive (caught), a
+//! negative (not caught) and a waived case, and each fixture's
+//! diagnostics must match its `//@` directives exactly.
+//!
+//! Fixture format (see `fixtures/*.rs`):
+//!
+//! ```text
+//! //@ zone: pregel/engine.rs        <- pretend path inside rust/src
+//! //@ active: D1@4, D1@7            <- expected active (rule@line)
+//! //@ waived: D1@9                  <- expected waived (optional)
+//! ```
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures")
+}
+
+fn directive(src: &str, key: &str) -> Option<String> {
+    let tag = format!("//@ {key}:");
+    src.lines()
+        .find_map(|l| l.strip_prefix(&tag))
+        .map(|rest| rest.trim().to_string())
+}
+
+/// Parse "D1@4, D1@7" into a sorted multiset of (rule, line).
+fn parse_expectations(list: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for item in list.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            continue;
+        }
+        let (rule, line) = item
+            .split_once('@')
+            .unwrap_or_else(|| panic!("bad expectation `{item}` (want RULE@LINE)"));
+        let line: usize = line
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("bad line in expectation `{item}`"));
+        out.push((rule.trim().to_string(), line));
+    }
+    out.sort();
+    out
+}
+
+fn found(diags: &[detlint::diag::Diagnostic]) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> =
+        diags.iter().map(|d| (d.rule.to_string(), d.line)).collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn fixtures_match_their_directives() {
+    let dir = fixtures_dir();
+    if !dir.is_dir() {
+        eprintln!(
+            "detlint fixture corpus MISSING at {} — skipping the fixture test. \
+             The determinism-contract rules are NOT being exercised; restore \
+             tools/detlint/fixtures/ to re-enable.",
+            dir.display()
+        );
+        return;
+    }
+    let mut active_rules: BTreeSet<String> = BTreeSet::new();
+    let mut waived_rules: BTreeSet<String> = BTreeSet::new();
+    let mut checked = 0usize;
+    let files = detlint::collect_rs_files(&dir).expect("reading fixtures dir");
+    assert!(!files.is_empty(), "fixture dir {} has no .rs files", dir.display());
+    for path in files {
+        let src = std::fs::read_to_string(&path).expect("reading fixture");
+        let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+        let zone = directive(&src, "zone")
+            .unwrap_or_else(|| panic!("{name}: missing `//@ zone:` directive"));
+        let expect_active = parse_expectations(&directive(&src, "active").unwrap_or_default());
+        let expect_waived = parse_expectations(&directive(&src, "waived").unwrap_or_default());
+
+        let lint = detlint::lint_source(&zone, &src);
+        assert_eq!(
+            found(&lint.active),
+            expect_active,
+            "{name}: active diagnostics diverge from //@ active directive"
+        );
+        assert_eq!(
+            found(&lint.waived),
+            expect_waived,
+            "{name}: waived diagnostics diverge from //@ waived directive"
+        );
+        active_rules.extend(expect_active.into_iter().map(|(r, _)| r));
+        waived_rules.extend(expect_waived.into_iter().map(|(r, _)| r));
+        checked += 1;
+    }
+    assert!(checked >= 18, "fixture corpus shrank to {checked} files");
+    // Every rule must be demonstrably caught and demonstrably waivable.
+    for rule in ["D1", "D2", "D3", "D4", "D5", "W1", "W0"] {
+        assert!(active_rules.contains(rule), "no positive fixture catches {rule}");
+    }
+    for rule in ["D1", "D2", "D3", "D4", "D5", "W1"] {
+        assert!(waived_rules.contains(rule), "no fixture waives {rule}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Tier-1 contract enforcement: `cargo test -q` at the workspace root
+//! runs this, so a determinism-contract violation anywhere in
+//! `rust/src` fails the build — not just CI's dedicated detlint step.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use detlint::diag::Severity;
+use detlint::waiver::{compare_baseline, parse_baseline};
+
+fn repo_src() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+fn baseline_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("baseline.txt")
+}
+
+#[test]
+fn rust_src_has_no_active_violations() {
+    let root = repo_src();
+    if !root.is_dir() {
+        eprintln!(
+            "rust/src NOT FOUND at {} — skipping the repo-wide contract scan. \
+             detlint is enforcing NOTHING; fix the layout or the path above.",
+            root.display()
+        );
+        return;
+    }
+    let tree = detlint::lint_tree(&root).expect("scanning rust/src");
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    for d in &tree.active {
+        eprintln!("{}", d.render());
+        match d.severity {
+            Severity::Error => errors += 1,
+            Severity::Warning => warnings += 1,
+        }
+    }
+    assert_eq!(errors, 0, "determinism-contract errors in rust/src (see stderr)");
+    // Tier-1 runs warn-tier rules at full strength (`--deny-warnings`
+    // semantics): a bare unwrap on the recovery path fails the build.
+    assert_eq!(warnings, 0, "W1 warnings in rust/src (see stderr)");
+}
+
+#[test]
+fn waiver_counts_match_checked_in_baseline() {
+    let root = repo_src();
+    let bpath = baseline_path();
+    if !root.is_dir() || !bpath.is_file() {
+        eprintln!(
+            "detlint baseline check SKIPPED: missing {} or {} — the waiver \
+             ratchet is NOT being enforced.",
+            root.display(),
+            bpath.display()
+        );
+        return;
+    }
+    let tree = detlint::lint_tree(&root).expect("scanning rust/src");
+    let content = std::fs::read_to_string(&bpath).expect("reading baseline.txt");
+    let baseline = parse_baseline(&content).expect("parsing baseline.txt");
+    let mismatches = compare_baseline(&tree.waived_counts(), &baseline);
+    assert!(
+        mismatches.is_empty(),
+        "waiver baseline drift:\n  {}",
+        mismatches.join("\n  ")
+    );
+}
+
+#[test]
+fn baseline_ratchet_fails_on_drift_in_both_directions() {
+    let content = std::fs::read_to_string(baseline_path()).expect("reading baseline.txt");
+    let baseline = parse_baseline(&content).expect("parsing baseline.txt");
+
+    // A new un-baselined waiver must fail...
+    let mut grown: BTreeMap<String, usize> = baseline.clone();
+    *grown.get_mut("D1").expect("baseline lists D1") += 1;
+    let up = compare_baseline(&grown, &baseline);
+    assert_eq!(up.len(), 1, "un-baselined waiver not caught");
+    assert!(up[0].contains("new waivers"), "wrong message: {}", up[0]);
+
+    // ...and a stale (over-recorded) baseline must also fail.
+    let down = compare_baseline(&baseline, &grown);
+    assert_eq!(down.len(), 1, "stale baseline not caught");
+    assert!(down[0].contains("stale baseline"), "wrong message: {}", down[0]);
+}
