@@ -33,8 +33,15 @@
 //!    interpreter loop on one large page — asserting bit-identical
 //!    values, a ≥1.3× fold speedup, and exact (values *and* delta
 //!    bits) Simd↔Scalar-fallback parity.
+//! 10. Skew-aware execution: PageRank on a Chung–Lu power-law graph at
+//!    2 machines × 4 workers — high-degree mirroring must cut the
+//!    hub-bound remote wire bytes ≥2× against the expansion-side
+//!    counterfactual (and shrink the total wire volume below the
+//!    combine-only baseline), and the barrier-time migration balancer
+//!    must report moves and reduce the max/mean compute imbalance, all
+//!    at bit-identical digests.
 //!
-//! Results of sections 4, 6, 7, 8 and 9 are also written to
+//! Results of sections 4, 6, 7, 8, 9 and 10 are also written to
 //! `BENCH_hotpath.json` (machine-readable, consumed by CI). Pass
 //! `--check` for a fast smoke run (small graphs, same assertions) —
 //! the CI invocation.
@@ -47,10 +54,12 @@
 use lwcp::apps::{PageRank, TriangleCount};
 use lwcp::bench_support as bs;
 use lwcp::ft::FtKind;
-use lwcp::graph::{Partitioner, PresetGraph};
+use lwcp::graph::{generate, Partitioner, PresetGraph};
 use lwcp::pregel::app::{BatchExec, CombineFn};
 use lwcp::pregel::kernels::{self, KernelMode};
-use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan, Inbox, Outbox, Worker};
+use lwcp::pregel::{
+    App, Engine, EngineConfig, FailurePlan, Inbox, Outbox, SkewConfig, StepOpts, Worker,
+};
 use lwcp::sim::Topology;
 use lwcp::storage::Backing;
 use lwcp::util::fmtutil::Table;
@@ -128,6 +137,7 @@ fn main() {
                 machine_combine: true,
                 simd: true,
                 pager: Default::default(),
+                skew: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj).expect("engine");
             if use_xla {
@@ -209,6 +219,7 @@ fn main() {
             machine_combine: true,
             simd: true,
             pager: Default::default(),
+            skew: Default::default(),
         };
         let mut eng = Engine::new(app, cfg, &adj).expect("engine");
         let m = eng.run().expect("run");
@@ -292,6 +303,7 @@ fn main() {
                 machine_combine: true,
                 simd: true,
                 pager: Default::default(),
+                skew: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj6).expect("engine");
             let m = eng.run().expect("run");
@@ -373,6 +385,7 @@ fn main() {
                 machine_combine: mc,
                 simd: true,
                 pager: Default::default(),
+                skew: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj7).expect("engine");
             let m = eng.run().expect("run");
@@ -436,6 +449,7 @@ fn main() {
                 machine_combine: mc,
                 simd: true,
                 pager: Default::default(),
+                skew: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj7)
                 .expect("engine")
@@ -489,6 +503,7 @@ fn main() {
                     memory_budget: budget,
                     page_slots: 256,
                 },
+                skew: Default::default(),
             };
             let mut eng = Engine::new(app, cfg, &adj8).expect("engine");
             let m = eng.run().expect("run");
@@ -650,6 +665,134 @@ fn main() {
         );
     }
 
+    // --------------- 10: skew-aware execution: mirroring + migration
+    // PageRank on a seeded Chung–Lu power-law graph, 2 machines x 4
+    // workers, combine trees on everywhere (mirroring must win *beyond*
+    // combine-only). Mirror axis: threshold 64 with the compact wire
+    // format on vs off — both run the identical hub-diverted compute
+    // (same digest), but the off mode charges the expansion-side
+    // fan-out to the wire, so `hub_wire(off) >= 2x hub_wire(on)` is the
+    // per-hub remote saving, and the on-mode total wire volume must
+    // undercut the no-mirror baseline. Migration axis: the balancer
+    // must record moves and lower max/mean compute imbalance without
+    // moving the digest (delegation shifts cost attribution only).
+    println!("\n=== Hot path 10 — skew-aware execution: mirroring + migration ===");
+    let mut json_skew: Vec<String> = Vec::new();
+    {
+        let n10: usize = if check { 6_000 } else { 40_000 };
+        let adj10 = generate::chung_lu(n10, 8.0, 2.0, true, 31);
+        let steps: u64 = if check { 10 } else { 16 };
+        let mut run_skew = |label: &str, skew: SkewConfig| {
+            let app =
+                PageRank { damping: 0.85, supersteps: steps, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(2, 4),
+                cost: Default::default(),
+                ft: FtKind::None,
+                cp_every: 0,
+                cp_every_secs: None,
+                backing: Backing::Memory,
+                tag: format!("hp10-{label}"),
+                max_supersteps: 10_000,
+                threads: 0,
+                async_cp: true,
+                machine_combine: true,
+                simd: true,
+                pager: Default::default(),
+                skew,
+            };
+            let mut eng = Engine::new(app, cfg, &adj10).expect("engine");
+            let m = eng.run().expect("run");
+            let digest = eng.digest();
+            json_skew.push(json_obj(&[
+                ("run", json_str(label)),
+                ("mirror_threshold", skew.mirror_threshold.to_string()),
+                ("mirror_wire", skew.mirror_wire.to_string()),
+                ("migrate", skew.migrate.to_string()),
+                ("wire_bytes", m.bytes.wire_bytes.to_string()),
+                ("hub_wire_bytes", m.bytes.hub_wire_bytes.to_string()),
+                ("imbalance", format!("{:.4}", m.compute_imbalance())),
+                ("migrations", m.migrations.to_string()),
+                ("digest", json_str(&format!("{digest:016x}"))),
+            ]));
+            (digest, m)
+        };
+        let (dig_base, m_base) = run_skew("baseline", SkewConfig::default());
+        let (dig_mir, m_mir) =
+            run_skew("mirror", SkewConfig { mirror_threshold: 64, ..Default::default() });
+        let (dig_fat, m_fat) = run_skew(
+            "mirror-fat-wire",
+            SkewConfig { mirror_threshold: 64, mirror_wire: false, ..Default::default() },
+        );
+        let (dig_mig, m_mig) =
+            run_skew("migrate", SkewConfig { migrate: true, ..Default::default() });
+
+        let mut t = Table::new(vec![
+            "run",
+            "wire MiB",
+            "hub-wire MiB",
+            "imbalance",
+            "migrations",
+        ]);
+        let mib = |b: u64| b as f64 / (1 << 20) as f64;
+        for (label, m) in [
+            ("baseline", &m_base),
+            ("mirror (compact wire)", &m_mir),
+            ("mirror (fat wire)", &m_fat),
+            ("migrate", &m_mig),
+        ] {
+            t.row(vec![
+                label.to_string(),
+                format!("{:.2}", mib(m.bytes.wire_bytes)),
+                format!("{:.2}", mib(m.bytes.hub_wire_bytes)),
+                format!("{:.2}", m.compute_imbalance()),
+                m.migrations.to_string(),
+            ]);
+        }
+        t.print();
+
+        assert_eq!(
+            dig_mir, dig_fat,
+            "mirror wire format changed the result (compact={dig_mir:016x} fat={dig_fat:016x})"
+        );
+        assert!(
+            m_mir.bytes.hub_wire_bytes > 0,
+            "threshold 64 found no hubs on the Chung-Lu graph"
+        );
+        assert!(
+            2 * m_mir.bytes.hub_wire_bytes <= m_fat.bytes.hub_wire_bytes,
+            "expected >=2x hub-bound remote wire cut (compact={} fat={})",
+            m_mir.bytes.hub_wire_bytes,
+            m_fat.bytes.hub_wire_bytes
+        );
+        assert!(
+            m_mir.bytes.wire_bytes < m_base.bytes.wire_bytes,
+            "mirroring must shrink total wire volume beyond combine-only \
+             (mirror={} baseline={})",
+            m_mir.bytes.wire_bytes,
+            m_base.bytes.wire_bytes
+        );
+        assert_eq!(
+            dig_base, dig_mig,
+            "migration changed the result (off={dig_base:016x} on={dig_mig:016x})"
+        );
+        assert!(m_mig.migrations > 0, "balancer recorded no moves on the skewed graph");
+        assert!(
+            m_mig.compute_imbalance() < m_base.compute_imbalance(),
+            "migration did not reduce compute imbalance (on={:.4} off={:.4})",
+            m_mig.compute_imbalance(),
+            m_base.compute_imbalance()
+        );
+        println!(
+            "  [PASS] mirror digest invariant, {:.2}x hub wire cut, \
+             imbalance {:.2} -> {:.2} with {} migrations",
+            m_fat.bytes.hub_wire_bytes as f64 / m_mir.bytes.hub_wire_bytes.max(1) as f64,
+            m_base.compute_imbalance(),
+            m_mig.compute_imbalance(),
+            m_mig.migrations
+        );
+    }
+
     // ------------------------------------------- machine-readable dump
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"check_mode\": {check},\n  \
@@ -657,12 +800,14 @@ fn main() {
          \"overlapped_checkpoint\": [\n    {}\n  ],\n  \
          \"machine_combine\": [\n    {}\n  ],\n  \
          \"paged_store\": [\n    {}\n  ],\n  \
-         \"kernels\": [\n    {}\n  ]\n}}\n",
+         \"kernels\": [\n    {}\n  ],\n  \
+         \"skew\": [\n    {}\n  ]\n}}\n",
         json_pipeline.join(",\n    "),
         json_overlap.join(",\n    "),
         json_mc.join(",\n    "),
         json_pager.join(",\n    "),
         json_kernels.join(",\n    "),
+        json_skew.join(",\n    "),
     );
     let path = "BENCH_hotpath.json";
     std::fs::write(path, &json).expect("write BENCH_hotpath.json");
@@ -681,9 +826,10 @@ fn bench_replay_row<A: App>(name: &str, adj: &[Vec<u32>], app: A) -> Vec<String>
     let part = Partitioner::new(1, adj.len());
     let agg_prev = vec![0.0f64; app.agg_slots()];
     let fresh = |tag: &str| {
-        let mut w = Worker::new(0, part, adj, &app, Default::default(), Backing::Memory, tag)
+        let mut w = Worker::new(0, part, adj, &app, 0, Default::default(), Backing::Memory, tag)
             .expect("worker");
-        w.compute_superstep(&app, 1, &agg_prev, None, KernelMode::Off).expect("superstep 1");
+        w.compute_superstep(&app, 1, &agg_prev, None, KernelMode::Off, StepOpts::plain())
+            .expect("superstep 1");
         w
     };
 
@@ -695,7 +841,7 @@ fn bench_replay_row<A: App>(name: &str, adj: &[Vec<u32>], app: A) -> Vec<String>
         // The per-vertex core (`KernelMode::Off`) — the monolithic
         // interpreter cost the old replay path paid.
         let out = w
-            .compute_superstep(&app, 3, &agg_prev, None, KernelMode::Off)
+            .compute_superstep(&app, 3, &agg_prev, None, KernelMode::Off, StepOpts::plain())
             .expect("full superstep");
         full_s += t0.elapsed().as_secs_f64();
         std::hint::black_box(out.outbox.raw_count());
@@ -703,9 +849,10 @@ fn bench_replay_row<A: App>(name: &str, adj: &[Vec<u32>], app: A) -> Vec<String>
     let mut emit_s = 0.0f64;
     for i in 0..iters {
         let mut w = fresh(&format!("hp5-{name}-e{i}"));
-        w.compute_superstep(&app, 3, &agg_prev, None, KernelMode::Off).expect("superstep 3");
+        w.compute_superstep(&app, 3, &agg_prev, None, KernelMode::Off, StepOpts::plain())
+            .expect("superstep 3");
         let t1 = Instant::now();
-        let ob = w.replay_generate(&app, 3, &agg_prev, None);
+        let (ob, _bcasts) = w.replay_generate(&app, 3, &agg_prev, None, StepOpts::plain());
         emit_s += t1.elapsed().as_secs_f64();
         std::hint::black_box(ob.raw_count());
     }

@@ -88,6 +88,7 @@ fn main() -> anyhow::Result<()> {
             machine_combine: true,
             simd: true,
             pager: Default::default(),
+            skew: Default::default(),
         };
         let mut eng = Engine::new(HashMax, cfg, &adj)?;
         if let Some(at) = kill {

@@ -122,6 +122,7 @@ fn main() -> anyhow::Result<()> {
         machine_combine: true,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     };
     let mut eng = lwcp::pregel::Engine::new(app, cfg, &adj2)?;
     if let Some(e) = exec {

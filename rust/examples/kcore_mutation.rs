@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             machine_combine: true,
             simd: true,
             pager: Default::default(),
+            skew: Default::default(),
         };
         let mut eng = Engine::new(KCore { k: 4 }, cfg, &adj)?;
         if kill {

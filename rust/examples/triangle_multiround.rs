@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
             machine_combine: true,
             simd: true,
             pager: Default::default(),
+            skew: Default::default(),
         };
         let mut eng = Engine::new(TriangleCount { c }, cfg, &adj)?;
         if let Some(at) = kill {

@@ -37,4 +37,50 @@ mod tests {
     fn empty_survivor_set_panics() {
         elect_master(&[1], &[]);
     }
+
+    #[test]
+    fn single_survivor_is_master_regardless_of_state() {
+        // A lone survivor wins even if it was the youngest worker.
+        let s = vec![30, 30, 0, 30];
+        assert_eq!(elect_master(&s, &[2]), 2);
+    }
+
+    #[test]
+    fn alive_list_order_never_changes_the_winner() {
+        // Determinism contract: the election is a pure function of the
+        // (s_w, alive-set) pair, not of the order the membership layer
+        // happens to enumerate survivors in.
+        let s = vec![12, 19, 19, 7, 19];
+        let orderings: [&[usize]; 4] =
+            [&[1, 2, 3, 4], &[4, 3, 2, 1], &[2, 4, 1, 3], &[3, 1, 4, 2]];
+        for alive in orderings {
+            assert_eq!(elect_master(&s, alive), 1, "alive={alive:?}");
+        }
+    }
+
+    #[test]
+    fn dead_workers_never_win_even_with_max_state() {
+        // Rank 0 has the globally largest s(W) but is not in the alive
+        // set — the election must only consult survivors.
+        let s = vec![99, 5, 8];
+        assert_eq!(elect_master(&s, &[1, 2]), 2);
+    }
+
+    #[test]
+    fn post_recovery_states_elect_the_forwarder() {
+        // Paper shape: after a failure at superstep 17 with CP[10],
+        // survivors hold s_w = 17 while respawned workers restart at
+        // s_w = 10 — a survivor (the longest-living) must win.
+        let s = vec![10, 17, 17, 10];
+        assert_eq!(elect_master(&s, &[0, 1, 2, 3]), 1);
+        // Cascading failure killing all forwarders: a respawned worker
+        // is all that is left and must still be electable.
+        assert_eq!(elect_master(&s, &[0, 3]), 0);
+    }
+
+    #[test]
+    fn highest_rank_wins_when_it_alone_is_longest_living() {
+        let s = vec![3, 4, 9];
+        assert_eq!(elect_master(&s, &[0, 1, 2]), 2);
+    }
 }

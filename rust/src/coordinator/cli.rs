@@ -3,7 +3,11 @@
 //!
 //! ```text
 //! lwcp run [--app pagerank|cc|sssp|triangle|kcore|pointerjump|bipartite]
-//!          [--graph webuk|webbase|friendster|btc|er] [--n 120000] [--m 0]
+//!          [--graph webuk|webbase|friendster|btc|er|cl] [--n 120000] [--m 0]
+//!          [--avg-deg 8.0] [--beta 2.2]  (cl = seeded Chung–Lu power-law
+//!                                         generator: average degree and
+//!                                         tail exponent of the skewed
+//!                                         degree distribution)
 //!          [--graph-file PATH]
 //!          [--machines 15] [--workers-per-machine 8]
 //!          [--ft none|hwcp|lwcp|hwlog|lwlog] [--cp-every 10]
@@ -16,6 +20,16 @@
 //!                                   machine-level combine trees)
 //!          [--no-simd]     (disable the lane-chunked page-scan compute
 //!                           core; results are bit-identical either way)
+//!          [--mirror-threshold 0]  (mirror vertices whose out-degree
+//!                                   exceeds the threshold: the owner
+//!                                   ships one value per machine and
+//!                                   machine-local mirrors fan out in
+//!                                   the deliver path; 0 = off)
+//!          [--migrate]     (deterministic barrier-time skew balancer:
+//!                           delegates the hottest plain vertices'
+//!                           compute between co-located workers,
+//!                           recorded in the checkpointed placement
+//!                           ledger; digests identical either way)
 //!          [--memory-budget 64m]   (out-of-core partitions: per-worker
 //!                                   resident budget in bytes, with k/m/g
 //!                                   suffixes; unset = fully in-memory)
@@ -167,6 +181,11 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
                 m: f.parse_or("m", n * 8)?,
                 directed: f.has("directed"),
             },
+            "cl" | "chunglu" => GraphSource::ChungLu {
+                n,
+                avg_deg: f.parse_or("avg-deg", 8.0)?,
+                beta: f.parse_or("beta", 2.2)?,
+            },
             other => GraphSource::Preset(parse_preset(other)?, n),
         }
     };
@@ -252,6 +271,8 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         },
         ingest: ingest_segments,
         probes,
+        mirror_threshold: f.parse_or("mirror-threshold", 0)?,
+        migrate: f.has("migrate"),
     })
 }
 
@@ -284,6 +305,11 @@ fn cmd_run(f: &Flags) -> Result<()> {
     let mut wt = report::wire_table();
     wt.row(report::wire_row(spec.ft.name(), &m));
     wt.print();
+    if !m.compute_virt.is_empty() {
+        let mut bt = report::balance_table();
+        bt.row(report::balance_row(spec.ft.name(), &m));
+        bt.print();
+    }
     if m.pager.faults > 0 {
         let mut pt = report::pager_table();
         pt.row(report::pager_row(spec.ft.name(), &m));
@@ -297,16 +323,19 @@ fn cmd_run(f: &Flags) -> Result<()> {
     print_serve_samples(&m);
     println!(
         "supersteps={} virtual_time={} wall={:.0} ms kernels={} shuffled={} wire={} \
-         cp_bytes={} resident_peak={} faults={}",
+         hub_wire={} cp_bytes={} resident_peak={} faults={} imbalance={:.2} migrations={}",
         m.supersteps_run,
         secs(m.final_time),
         m.wall_ms,
         if spec.simd { "simd" } else { "scalar" },
         crate::util::fmtutil::bytes(m.bytes.shuffle_bytes),
         crate::util::fmtutil::bytes(m.bytes.wire_bytes),
+        crate::util::fmtutil::bytes(m.bytes.hub_wire_bytes),
         crate::util::fmtutil::bytes(m.bytes.checkpoint_bytes),
         crate::util::fmtutil::bytes(m.pager.resident_peak),
         m.pager.faults,
+        m.compute_imbalance(),
+        m.migrations,
     );
     Ok(())
 }
@@ -498,6 +527,23 @@ mod tests {
         assert_eq!(spec.plan.kills.len(), 1);
         assert_eq!(spec.plan.kills[0].at_step, 8);
         assert_eq!(spec.topo.n_workers(), 6);
+    }
+
+    #[test]
+    fn skew_flags_parse_and_default_off() {
+        let spec = spec_from_flags(&flags("")).unwrap();
+        assert_eq!(spec.mirror_threshold, 0, "mirroring defaults off");
+        assert!(!spec.migrate, "migration defaults off");
+        let spec = spec_from_flags(&flags(
+            "--graph cl --n 4000 --avg-deg 6.5 --beta 2.4 --mirror-threshold 64 --migrate",
+        ))
+        .unwrap();
+        assert_eq!(
+            spec.graph,
+            GraphSource::ChungLu { n: 4000, avg_deg: 6.5, beta: 2.4 }
+        );
+        assert_eq!(spec.mirror_threshold, 64);
+        assert!(spec.migrate);
     }
 
     #[test]

@@ -48,6 +48,9 @@ pub enum GraphSource {
     Preset(PresetGraph, usize),
     /// Erdős–Rényi-style (n, m, directed).
     Er { n: usize, m: usize, directed: bool },
+    /// Chung–Lu power-law (n, average degree, tail exponent β) — the
+    /// skewed generator behind the mirroring/migration experiments.
+    ChungLu { n: usize, avg_deg: f64, beta: f64 },
     /// Edge-list file (text `src dst` lines).
     File(PathBuf),
 }
@@ -57,6 +60,9 @@ impl GraphSource {
         Ok(match self {
             GraphSource::Preset(p, n) => p.spec(*n, seed).generate(),
             GraphSource::Er { n, m, directed } => generate::erdos_renyi(*n, *m, *directed, seed),
+            GraphSource::ChungLu { n, avg_deg, beta } => {
+                generate::chung_lu(*n, *avg_deg, *beta, true, seed)
+            }
             GraphSource::File(path) => loader::read_edge_list_text(path, 0)
                 .with_context(|| format!("loading {}", path.display()))?,
         })
@@ -115,6 +121,17 @@ pub struct JobSpec {
     /// reads answered at their barrier from the latest committed
     /// checkpoint.
     pub probes: Vec<ServeProbe>,
+    /// High-degree vertex mirroring cut-off (see
+    /// `SkewConfig::mirror_threshold`, CLI `--mirror-threshold`): a
+    /// vertex whose out-degree exceeds it broadcasts one value per
+    /// machine instead of one per edge. 0 = off (byte-exact legacy
+    /// path).
+    pub mirror_threshold: usize,
+    /// Barrier-time skew balancer (see `SkewConfig::migrate`, CLI
+    /// `--migrate`): deterministically delegates the hottest plain
+    /// vertices' compute between co-located workers. Digests are
+    /// identical either way.
+    pub migrate: bool,
 }
 
 impl JobSpec {
@@ -142,6 +159,8 @@ impl JobSpec {
             simd: true,
             ingest: Vec::new(),
             probes: Vec::new(),
+            mirror_threshold: 0,
+            migrate: false,
         }
     }
 
@@ -162,6 +181,11 @@ impl JobSpec {
             machine_combine: self.machine_combine,
             pager: self.pager,
             simd: self.simd,
+            skew: crate::pregel::SkewConfig {
+                mirror_threshold: self.mirror_threshold,
+                migrate: self.migrate,
+                ..Default::default()
+            },
         }
     }
 }

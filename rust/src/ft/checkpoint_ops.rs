@@ -36,7 +36,7 @@ use crate::pregel::app::App;
 use crate::pregel::engine::Engine;
 use crate::pregel::executor::{self, TaskHandle};
 use crate::sim::WallTimer;
-use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, CpMeta};
+use crate::storage::checkpoint::{cp_key, cp_meta_key, cp_prefix, ew_key, placement_key, CpMeta};
 use crate::util::codec::Codec;
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -279,6 +279,22 @@ impl<A: App> Engine<A> {
             put_times.push((*r, t));
         }
         flush_virtual += self.cfg.cost.barrier_overhead; // commit marker
+        // Migration placement ledger: the move history through `step`,
+        // encoded at the barrier (the flush lane must never race a
+        // later barrier's `record`) and committed under `cp/{step}/` so
+        // the prev-checkpoint delete garbage-collects it and recovery
+        // can verify its in-memory prefix bit-for-bit. The decision the
+        // balancer takes *at* this barrier is stamped `step + 1` and
+        // belongs to the next checkpoint — the loop migrates after the
+        // checkpoint condition, so the encode here is exactly the
+        // committed prefix.
+        let placement_blob = if self.cfg.skew.migrate {
+            let b = self.ledger.encode_through(step);
+            flush_virtual += self.cfg.cost.hdfs_write_time(b.len() as u64, 1);
+            Some(b)
+        } else {
+            None
+        };
         // Delete the previous checkpoint at commit. Lightweight
         // algorithms must keep CP[0]: it is the edge source for every
         // later recovery.
@@ -331,6 +347,9 @@ impl<A: App> Engine<A> {
                 // commit lands; only its *visibility* — the append —
                 // waits for the marker.
                 n += inc.len() as u64;
+            }
+            if let Some(pb) = &placement_blob {
+                n += hdfs.put(&placement_key(step), pb)?;
             }
             if committed {
                 // Commit barrier: every blob is fully (and atomically)

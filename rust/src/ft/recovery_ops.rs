@@ -17,12 +17,12 @@
 //! `replay_phase`, and everything funnels into the shared `deliver`.
 
 use crate::ft::FtKind;
-use crate::pregel::app::App;
+use crate::pregel::app::{App, HubBcast};
 use crate::pregel::engine::{Engine, Stage};
 use crate::pregel::executor;
-use crate::pregel::worker::Worker;
+use crate::pregel::worker::{StepOpts, Worker};
 use crate::sim::{clock, CostModel};
-use crate::storage::checkpoint::{cp_key, ew_key, Cp0, HwCp, LwCp};
+use crate::storage::checkpoint::{cp_key, ew_key, mirror_key, placement_key, Cp0, HwCp, LwCp};
 use crate::storage::SimHdfs;
 use crate::util::codec::{Codec, Reader};
 use anyhow::{bail, Context, Result};
@@ -165,6 +165,43 @@ impl<A: App> Engine<A> {
             self.workers[rank] = w;
         }
 
+        // Respawned workers reinstall the frozen mirror tables from the
+        // durable blob written at load time — the hub registry is part
+        // of the graph image, not of any checkpoint, and replay below
+        // must re-divert exactly the sends the original run diverted.
+        if self.mirror_enabled() {
+            for &(rank, _machine) in &outcome.respawned {
+                let blob = self
+                    .hdfs
+                    .get(&mirror_key(rank))
+                    .with_context(|| format!("loading mirror tables for worker {rank}"))?;
+                let t = self.cfg.cost.hdfs_read_time(blob.len() as u64, 1);
+                let (hubs, mirror_in) = Worker::<A>::decode_mirror_tables(&blob)?;
+                self.workers[rank].install_mirror_tables(hubs, mirror_in);
+                self.workers[rank].clock.advance(t);
+            }
+        }
+        // Placement-ledger rollback: check the in-memory move history
+        // against the committed blob (bit-for-bit prefix — a divergence
+        // means the balancer was non-deterministic and replay fidelity
+        // is already lost), then rebuild the executing placement from
+        // the moves stamped ≤ cp_last + 1: exactly the decision of
+        // barrier cp_last, which the resumed loop re-applies instead of
+        // re-deciding.
+        if self.cfg.skew.migrate {
+            if self.cp_last > 0 {
+                let blob = self
+                    .hdfs
+                    .get(&placement_key(self.cp_last))
+                    .with_context(|| format!("loading placement ledger CP[{}]", self.cp_last))?;
+                self.ledger.verify_prefix(&blob)?;
+            }
+            self.ledger.reset_current_to(self.cp_last + 1);
+            // Replay compute is recovery work, not skew — restart the
+            // balancer's observation window at the rollback point.
+            self.last_window = self.compute_virt.clone();
+        }
+
         // On-the-fly messages of the failed superstep are dropped.
         self.reset_inboxes();
 
@@ -251,17 +288,22 @@ impl<A: App> Engine<A> {
         }
         let agg_prev = self.agg_prev_for(cp_step);
         let app = Arc::clone(&self.app);
+        let mirror_on = self.mirror_enabled();
         let refs = executor::select_workers(&mut self.workers, &alive);
-        let mut batches = executor::replay_phase(
+        let (mut batches, mut hub_srcs) = executor::replay_phase(
             &self.pool,
             refs,
             app.as_ref(),
             cp_step,
             &agg_prev,
             None,
+            self.cfg.topo,
+            mirror_on,
             &self.cfg.cost,
         );
-        self.deliver(&mut batches)
+        hub_srcs.sort_by_key(|(r, _)| *r);
+        let hub_flows = self.build_hub_flows(cp_step, &hub_srcs);
+        self.deliver(&mut batches, &hub_flows)
     }
 
     /// LWLog: survivors keep their state; respawned workers load the
@@ -318,20 +360,34 @@ impl<A: App> Engine<A> {
         // Respawned workers regenerate their own checkpointed-superstep
         // messages (only the segments destined to recovering workers).
         let app = Arc::clone(&self.app);
+        let mirror_on = self.mirror_enabled();
         let refs = executor::select_workers(&mut self.workers, &respawned_v);
-        let mut batches = executor::replay_phase(
+        let (mut batches, mut hub_srcs) = executor::replay_phase(
             &self.pool,
             refs,
             app.as_ref(),
             cp_step,
             &agg_prev,
             Some(&dests),
+            self.cfg.topo,
+            mirror_on,
             &self.cfg.cost,
         );
         // Survivors contribute from their local logs of cp_last.
         let survivors: Vec<usize> = outcome.survivors.clone();
-        self.forward_logged_messages(cp_step, &survivors, &dests, &agg_prev, &mut batches)?;
-        self.deliver(&mut batches)
+        self.forward_logged_messages(
+            cp_step,
+            &survivors,
+            &dests,
+            &agg_prev,
+            &mut batches,
+            &mut hub_srcs,
+        )?;
+        // Hub flows reach only the workers whose `s_w` is at the replay
+        // superstep — exactly `dests` here (survivors are ahead).
+        hub_srcs.sort_by_key(|(r, _)| *r);
+        let hub_flows = self.build_hub_flows(cp_step, &hub_srcs);
+        self.deliver(&mut batches, &hub_flows)
     }
 
     /// Case 1 of §5: workers ahead of the recovery superstep re-send that
@@ -344,25 +400,33 @@ impl<A: App> Engine<A> {
         dests: &[usize],
         agg_prev: &[f64],
         batches: &mut Vec<(usize, usize, Vec<u8>)>,
+        hub_srcs: &mut Vec<(usize, Vec<HubBcast<A::M>>)>,
     ) -> Result<()> {
         let ft = self.cfg.ft;
         let app = Arc::clone(&self.app);
         let app_ref: &A = app.as_ref();
         let cost = &self.cfg.cost;
-        type Forwarded = (Vec<(usize, usize, Vec<u8>)>, Option<f64>);
+        let topo = self.cfg.topo;
+        let mirror_on = self.mirror_enabled();
+        type Forwarded<M> = (usize, Vec<(usize, usize, Vec<u8>)>, Vec<HubBcast<M>>, Option<f64>);
         let refs = executor::select_workers(&mut self.workers, forwarding);
         let results = self.pool.map_named(
             "log-forward",
             Some(forwarding),
             refs,
-            |(r, w)| -> Result<Forwarded> {
+            |(r, w)| -> Result<Forwarded<A::M>> {
                 let use_vstate = ft == FtKind::LwLog && w.log.has_vstate_log(step);
                 if use_vstate {
                     let (bytes, payload) = w.log.read_vstate_log(step)?;
                     let t_load = cost.log_read_time(bytes);
                     let states = Worker::<A>::decode_vstate_log(&payload)?;
                     let n_comp = states.1.iter().filter(|&&c| c).count() as u64;
-                    let ob = w.replay_generate(app_ref, step, agg_prev, Some(states));
+                    // Replay with the original mirror flag: hub sends
+                    // re-divert into broadcast units exactly as the
+                    // original superstep diverted them.
+                    let opts = StepOpts { topo, mirror: mirror_on, away: &[] };
+                    let (ob, bcasts) =
+                        w.replay_generate(app_ref, step, agg_prev, Some(states), opts);
                     let t = t_load + cost.compute_time(n_comp, ob.raw_count());
                     w.clock.advance(t);
                     // State-substituted replay pins only edge pages;
@@ -372,7 +436,7 @@ impl<A: App> Engine<A> {
                         .iter()
                         .filter_map(|&d| ob.batch_for(d).map(|b| (r, d, b)))
                         .collect();
-                    Ok((out, Some(t_load)))
+                    Ok((r, out, bcasts, Some(t_load)))
                 } else {
                     // HWLog — or an LWLog masked/mutating superstep.
                     if !w.log.has_msg_log(step) {
@@ -387,22 +451,35 @@ impl<A: App> Engine<A> {
                             out.push((r, d, payload));
                         }
                     }
+                    // Hub broadcasts bypass the per-destination batches,
+                    // so msg-log supersteps keep them in a hub-sized
+                    // side log; forward the pre-expansion units and let
+                    // the engine rebuild the recovering workers' flows.
+                    let mut bcasts = Vec::new();
+                    if mirror_on && w.log.has_hub_log(step) {
+                        let (hb, payload) = w.log.read_hub_log(step)?;
+                        t += cost.log_read_time(hb);
+                        bcasts = Worker::<A>::decode_hub_log(&payload)?;
+                    }
                     let sample = if t > 0.0 {
                         w.clock.advance(t);
                         Some(t)
                     } else {
                         None
                     };
-                    Ok((out, sample))
+                    Ok((r, out, bcasts, sample))
                 }
             },
         );
         for res in results {
-            let (mut out, sample) = res?;
+            let (r, mut out, bcasts, sample) = res?;
             if let Some(t) = sample {
                 self.metrics.log_loads.push(t);
             }
             batches.append(&mut out);
+            if !bcasts.is_empty() {
+                hub_srcs.push((r, bcasts));
+            }
         }
         Ok(())
     }

@@ -177,6 +177,73 @@ impl GraphSpec {
     }
 }
 
+/// Seeded deterministic Chung–Lu power-law generator.
+///
+/// Endpoint sampling: each vertex `i` gets weight `w_i = (i+1)^(-1/(β-1))`
+/// (β is the target degree-distribution exponent, typically 2–3; smaller
+/// β ⇒ heavier head), and each edge picks both endpoints independently
+/// with probability proportional to weight via binary search on the
+/// cumulative weight vector. Expected degree is proportional to `w_i`,
+/// so vertex 0 is the heaviest hub by construction — which is what the
+/// skew-aware execution benches need: a *known* hub set whose out-degree
+/// clears any `--mirror-threshold` under test.
+///
+/// Same hygiene as the RMAT path: self-loops and duplicates rejected,
+/// undirected edges mirrored into both lists, and a final per-list
+/// `sort_unstable` so neighbor order is independent of emission order
+/// (the digest-equivalence guarantee `neighbor_lists_are_sorted` pins).
+pub fn chung_lu(
+    n: usize,
+    avg_deg: f64,
+    beta: f64,
+    directed: bool,
+    seed: u64,
+) -> Vec<Vec<VertexId>> {
+    assert!(n >= 2, "chung_lu needs at least two vertices");
+    assert!(beta > 1.0, "chung_lu exponent must satisfy beta > 1");
+    let mut rng = Rng::new(seed ^ 0xc417_ff6e_0bad_cafe);
+    let gamma = -1.0 / (beta - 1.0);
+    // Cumulative weights; cum[i] = sum of w_0..=w_i.
+    let mut cum = Vec::with_capacity(n);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        total += ((i + 1) as f64).powf(gamma);
+        cum.push(total);
+    }
+    let pick = |r: f64| -> usize {
+        // First index with cum[idx] >= r (partition_point is a binary
+        // search; cum is strictly increasing).
+        cum.partition_point(|&c| c < r).min(n - 1)
+    };
+    let m_target =
+        ((n as f64) * avg_deg / if directed { 1.0 } else { 2.0 }) as usize;
+    let mut adj: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+    let mut emitted = 0usize;
+    let mut attempts = 0usize;
+    let max_attempts = m_target * 6 + 64;
+    while emitted < m_target && attempts < max_attempts {
+        attempts += 1;
+        let u = pick(rng.next_f64() * total);
+        let v = pick(rng.next_f64() * total);
+        if u == v {
+            continue;
+        }
+        let (u, v) = (u as VertexId, v as VertexId);
+        if adj[u as usize].contains(&v) {
+            continue;
+        }
+        adj[u as usize].push(v);
+        if !directed {
+            adj[v as usize].push(u);
+        }
+        emitted += 1;
+    }
+    for l in adj.iter_mut() {
+        l.sort_unstable();
+    }
+    adj
+}
+
 /// Simple deterministic Erdős–Rényi G(n, m)-style graph for tests.
 pub fn erdos_renyi(n: usize, m: usize, directed: bool, seed: u64) -> Vec<Vec<VertexId>> {
     GraphSpec {
@@ -269,6 +336,70 @@ mod tests {
         let uni = erdos_renyi(4000, 9400, false, 5);
         let maxd = |a: &[Vec<VertexId>]| a.iter().map(Vec::len).max().unwrap();
         assert!(maxd(&hub) > 3 * maxd(&uni), "hub={} uni={}", maxd(&hub), maxd(&uni));
+    }
+
+    #[test]
+    fn chung_lu_is_deterministic_with_sorted_adjacency() {
+        // The satellite's determinism contract: same (n, deg, β, seed)
+        // ⇒ identical lists, and every list arrives sorted so no
+        // upstream container order can leak into downstream digests.
+        let a = chung_lu(3000, 8.0, 2.2, true, 42);
+        let b = chung_lu(3000, 8.0, 2.2, true, 42);
+        assert_eq!(a, b);
+        for (v, l) in a.iter().enumerate() {
+            assert!(l.windows(2).all(|w| w[0] < w[1]), "unsorted Γ({v})");
+            for &t in l {
+                assert_ne!(t as usize, v, "self loop at {v}");
+                assert!((t as usize) < 3000);
+            }
+        }
+    }
+
+    #[test]
+    fn chung_lu_seeds_differ() {
+        let a = chung_lu(1500, 6.0, 2.2, true, 1);
+        let b = chung_lu(1500, 6.0, 2.2, true, 2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn chung_lu_head_is_heavy() {
+        // Vertex 0 carries the largest weight: its out-degree must
+        // tower over the median — the hub the mirroring benches key on.
+        let adj = chung_lu(4000, 10.0, 2.2, true, 7);
+        let mut degs: Vec<usize> = adj.iter().map(Vec::len).collect();
+        let d0 = degs[0];
+        degs.sort_unstable();
+        let median = degs[degs.len() / 2];
+        assert!(
+            d0 >= 8 * median.max(1),
+            "hub head too light: deg(0)={d0} median={median}"
+        );
+        assert_eq!(
+            d0,
+            *degs.last().unwrap(),
+            "vertex 0 must be the max-degree hub"
+        );
+    }
+
+    #[test]
+    fn chung_lu_undirected_is_symmetric() {
+        let adj = chung_lu(800, 6.0, 2.4, false, 3);
+        for (v, l) in adj.iter().enumerate() {
+            for &t in l {
+                assert!(
+                    adj[t as usize].contains(&(v as VertexId)),
+                    "missing reverse edge {t}->{v}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chung_lu_average_degree_in_band() {
+        let adj = chung_lu(4000, 8.0, 2.2, true, 5);
+        let avg = edge_count(&adj) as f64 / 4000.0;
+        assert!(avg > 4.0 && avg < 9.6, "avg={avg}");
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod partition;
 pub use csr::Adjacency;
 pub use generate::{GraphSpec, PresetGraph};
 pub use mutation::Mutation;
-pub use partition::Partitioner;
+pub use partition::{PlacementEntry, PlacementLedger, Partitioner};
 
 /// Dense global vertex identifier.
 pub type VertexId = u32;

@@ -6,6 +6,9 @@
 //! (paper §3 "Worker Reassignment").
 
 use super::VertexId;
+use crate::util::{Codec, Fnv64, Reader};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
 /// Maps global vertex ids to worker ranks and worker-local slots.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -59,6 +62,172 @@ impl Partitioner {
     }
 }
 
+/// One recorded migration: from superstep `step` onward, vertex
+/// `vertex` *executes* on worker `to` instead of its home `from`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlacementEntry {
+    /// First superstep at which the move is in effect (moves are decided
+    /// at barrier `step - 1`, after that superstep fully committed).
+    pub step: u64,
+    pub vertex: VertexId,
+    pub from: usize,
+    pub to: usize,
+}
+
+impl Codec for PlacementEntry {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.step.encode(buf);
+        self.vertex.encode(buf);
+        (self.from as u32).encode(buf);
+        (self.to as u32).encode(buf);
+    }
+    fn decode(r: &mut Reader) -> Result<Self> {
+        Ok(PlacementEntry {
+            step: u64::decode(r)?,
+            vertex: u32::decode(r)?,
+            from: u32::decode(r)? as usize,
+            to: u32::decode(r)? as usize,
+        })
+    }
+}
+
+/// The deterministic placement ledger (DESIGN.md §11).
+///
+/// The static modulo partitioner above stays the *home* function —
+/// state, checkpoints, logs and message delivery never move. What the
+/// ledger reassigns is **execution**: which worker's clock pays for a
+/// vertex's compute. Every migration the barrier-time balancer decides
+/// is appended here, superstep-stamped, so ownership at any superstep
+/// is a pure function of the ledger prefix — `owner_of` is the lookup
+/// that replaces bare `rank_of(v)` wherever execution cost is charged.
+///
+/// Recovery contract: the ledger is checkpointed alongside E_W
+/// (`ft::checkpoint_ops`), and on rollback to CP[i] the in-effect map
+/// is rebuilt from the prefix of moves stamped ≤ i+1
+/// ([`PlacementLedger::reset_current_to`] — barrier i itself is never
+/// re-executed, so its decisions, stamped i+1, stay in force). During
+/// replay the recorded moves re-apply verbatim
+/// ([`PlacementLedger::apply_recorded`]); the balancer never re-decides
+/// a barrier it already decided.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementLedger {
+    /// Append-only move log, stamped with the first superstep in effect.
+    moves: Vec<PlacementEntry>,
+    /// The in-effect map: vertex → executing rank (absent = home).
+    current: BTreeMap<VertexId, usize>,
+}
+
+impl PlacementLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Executing owner of `v`: the ledger entry, else the static home.
+    #[inline]
+    pub fn owner_of(&self, v: VertexId, part: &Partitioner) -> usize {
+        match self.current.get(&v) {
+            Some(&r) => r,
+            None => part.rank_of(v),
+        }
+    }
+
+    /// Record a move taking effect at `step` and apply it immediately.
+    pub fn record(&mut self, step: u64, vertex: VertexId, from: usize, to: usize) {
+        debug_assert!(
+            self.moves.last().map_or(true, |m| m.step <= step),
+            "placement ledger must be appended in superstep order"
+        );
+        self.moves.push(PlacementEntry { step, vertex, from, to });
+        self.current.insert(vertex, to);
+    }
+
+    /// Are there recorded moves stamped exactly `step`? (Replay asks
+    /// this at each barrier before re-deciding anything.)
+    pub fn has_moves_at(&self, step: u64) -> bool {
+        self.moves.iter().any(|m| m.step == step)
+    }
+
+    /// Re-apply the recorded moves stamped `step` (bit-identical replay
+    /// of a barrier decision; idempotent).
+    pub fn apply_recorded(&mut self, step: u64) {
+        for i in 0..self.moves.len() {
+            let m = self.moves[i];
+            if m.step == step {
+                self.current.insert(m.vertex, m.to);
+            }
+        }
+    }
+
+    /// Rebuild the in-effect map from the prefix of moves stamped
+    /// ≤ `max_step` (rollback: later moves will re-apply during replay).
+    pub fn reset_current_to(&mut self, max_step: u64) {
+        self.current.clear();
+        for i in 0..self.moves.len() {
+            let m = self.moves[i];
+            if m.step <= max_step {
+                self.current.insert(m.vertex, m.to);
+            }
+        }
+    }
+
+    /// All recorded moves, in superstep order.
+    pub fn moves(&self) -> &[PlacementEntry] {
+        &self.moves
+    }
+
+    /// The in-effect map (vertex → executing rank), deterministic order.
+    pub fn current(&self) -> &BTreeMap<VertexId, usize> {
+        &self.current
+    }
+
+    /// Encode the prefix of moves stamped ≤ `max_step` (the checkpoint
+    /// blob: what CP[i] can vouch for at barrier i).
+    pub fn encode_through(&self, max_step: u64) -> Vec<u8> {
+        let pfx: Vec<PlacementEntry> =
+            self.moves.iter().copied().filter(|m| m.step <= max_step).collect();
+        pfx.to_bytes()
+    }
+
+    /// Decode a checkpoint blob back into a ledger (in-effect map fully
+    /// rebuilt from the decoded moves).
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let moves = Vec::<PlacementEntry>::from_bytes(bytes)?;
+        let mut led = PlacementLedger { moves, current: BTreeMap::new() };
+        led.reset_current_to(u64::MAX);
+        Ok(led)
+    }
+
+    /// Verify `blob` (a checkpointed prefix) is a prefix of this ledger
+    /// — the recovery consistency check between the master's in-memory
+    /// move log and what CP[i] persisted.
+    pub fn verify_prefix(&self, blob: &[u8]) -> Result<()> {
+        let cp = Self::decode(blob)?;
+        if cp.moves.len() > self.moves.len()
+            || cp.moves[..] != self.moves[..cp.moves.len()]
+        {
+            bail!(
+                "placement ledger diverged from checkpointed prefix \
+                 ({} checkpointed vs {} in-memory moves)",
+                cp.moves.len(),
+                self.moves.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Digest of the full move log (equivalence checks in tests).
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        let mut buf = Vec::new();
+        for m in &self.moves {
+            buf.clear();
+            m.encode(&mut buf);
+            h.update(&buf);
+        }
+        h.finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +264,83 @@ mod tests {
         let min = *sizes.iter().min().unwrap();
         let max = *sizes.iter().max().unwrap();
         assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn ledger_owner_falls_back_to_home() {
+        let p = Partitioner::new(4, 100);
+        let led = PlacementLedger::new();
+        for v in 0..100u32 {
+            assert_eq!(led.owner_of(v, &p), p.rank_of(v));
+        }
+    }
+
+    #[test]
+    fn ledger_record_and_lookup() {
+        let p = Partitioner::new(4, 100);
+        let mut led = PlacementLedger::new();
+        led.record(6, 8, 0, 2); // vertex 8: home 0, executes on 2
+        led.record(6, 12, 0, 2);
+        led.record(10, 8, 2, 1); // later re-move
+        assert_eq!(led.owner_of(8, &p), 1);
+        assert_eq!(led.owner_of(12, &p), 2);
+        assert_eq!(led.owner_of(4, &p), 0, "unmoved vertex stays home");
+        assert!(led.has_moves_at(6));
+        assert!(led.has_moves_at(10));
+        assert!(!led.has_moves_at(7));
+    }
+
+    #[test]
+    fn ledger_reset_replays_prefix_only() {
+        let p = Partitioner::new(4, 100);
+        let mut led = PlacementLedger::new();
+        led.record(6, 8, 0, 2);
+        led.record(10, 8, 2, 1);
+        led.record(10, 16, 0, 3);
+        // Roll back to CP[5] → moves stamped ≤ 6 stay in force.
+        led.reset_current_to(6);
+        assert_eq!(led.owner_of(8, &p), 2);
+        assert_eq!(led.owner_of(16, &p), 0);
+        // Replay reaches barrier 9 again → stamped-10 moves re-apply.
+        led.apply_recorded(10);
+        assert_eq!(led.owner_of(8, &p), 1);
+        assert_eq!(led.owner_of(16, &p), 3);
+        // The full move log never shrank.
+        assert_eq!(led.moves().len(), 3);
+    }
+
+    #[test]
+    fn ledger_codec_roundtrip_and_prefix_verify() {
+        let mut led = PlacementLedger::new();
+        led.record(4, 3, 3, 1);
+        led.record(8, 7, 3, 1);
+        let blob4 = led.encode_through(4);
+        let blob8 = led.encode_through(8);
+        let cp4 = PlacementLedger::decode(&blob4).unwrap();
+        assert_eq!(cp4.moves().len(), 1);
+        let cp8 = PlacementLedger::decode(&blob8).unwrap();
+        assert_eq!(cp8.moves(), led.moves());
+        assert_eq!(cp8.digest(), led.digest());
+        // Both blobs are prefixes of the in-memory ledger.
+        led.verify_prefix(&blob4).unwrap();
+        led.verify_prefix(&blob8).unwrap();
+        // A diverged blob is rejected.
+        let mut other = PlacementLedger::new();
+        other.record(4, 3, 3, 2);
+        assert!(other.verify_prefix(&blob8).is_err());
+        let mut fork = PlacementLedger::new();
+        fork.record(4, 9, 1, 0);
+        assert!(fork.verify_prefix(&blob4).is_err());
+    }
+
+    #[test]
+    fn ledger_digest_tracks_moves() {
+        let mut a = PlacementLedger::new();
+        let mut b = PlacementLedger::new();
+        assert_eq!(a.digest(), b.digest());
+        a.record(4, 3, 3, 1);
+        assert_ne!(a.digest(), b.digest());
+        b.record(4, 3, 3, 1);
+        assert_eq!(a.digest(), b.digest());
     }
 }

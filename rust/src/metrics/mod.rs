@@ -54,6 +54,14 @@ pub struct ByteStats {
     pub log_bytes: u64,
     pub gc_bytes: u64,
     pub messages_sent: u64,
+    /// Bytes of hub *mirror units* that crossed a NIC (skew-aware
+    /// mirroring, DESIGN.md §11): with `--mirror-threshold` on, a hub
+    /// ships one unit per remote machine and the mirrors fan out
+    /// locally, so this is a slice of `wire_bytes`. With mirror wire
+    /// accounting off (`--no-mirror-wire`-style baselines) the same
+    /// traffic is charged at full fan-out volume — the ratio of the two
+    /// is the mirroring win reported by hotpath bench §10.
+    pub hub_wire_bytes: u64,
 }
 
 /// Real wall-clock milliseconds spent in each phase of the superstep
@@ -162,6 +170,16 @@ pub struct RunMetrics {
     pub serve: ServeMetrics,
     /// Result digest (hash of final vertex values) — equivalence checks.
     pub result_digest: u64,
+    /// Per-rank virtual compute-time ledgers (simulated seconds spent in
+    /// the compute phase, delegated work credited to the executing rank).
+    /// These are what the migration balancer reads at barriers and what
+    /// `report::balance_row` summarizes; indexed by worker rank.
+    pub compute_virt: Vec<f64>,
+    /// Vertices migrated (delegated) by the skew balancer over the run.
+    pub migrations: u64,
+    /// Modeled bytes of migrated vertex state+adjacency staged between
+    /// co-located workers (charged as staging time, not wire bytes).
+    pub migrated_bytes: u64,
 }
 
 /// Totals of the external ingest lane (`ingest` module): journal
@@ -216,6 +234,11 @@ pub struct ServeSample {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeMetrics {
     pub samples: Vec<ServeSample>,
+    /// Queries whose per-rank snapshot blobs were served from the
+    /// engine's committed-snapshot cache instead of re-read from
+    /// SimHdfs (the cache is invalidated whenever a newer commit
+    /// marker appears).
+    pub cache_hits: u64,
 }
 
 impl ServeMetrics {
@@ -297,6 +320,46 @@ impl RunMetrics {
         self.cp_overlap.iter().map(|o| o.exposed).sum()
     }
 
+    /// Max over the per-rank virtual compute ledgers (0.0 when empty).
+    pub fn compute_max(&self) -> f64 {
+        crate::sim::clock::max_time(self.compute_virt.iter().copied())
+    }
+
+    /// Mean over the per-rank virtual compute ledgers (0.0 when empty).
+    pub fn compute_mean(&self) -> f64 {
+        crate::sim::clock::mean_time(self.compute_virt.iter().copied())
+    }
+
+    /// Max/mean compute-imbalance ratio — 1.0 is perfectly balanced;
+    /// 0.0 when no ledgers were recorded (skew accounting off).
+    pub fn compute_imbalance(&self) -> f64 {
+        let mean = self.compute_mean();
+        if mean <= 0.0 {
+            0.0
+        } else {
+            self.compute_max() / mean
+        }
+    }
+
+    /// The p99 worker by virtual compute time: `(rank, seconds)`.
+    /// Ties sort by rank so the answer is a pure function of the
+    /// ledgers, not of sort internals.
+    pub fn compute_p99(&self) -> Option<(usize, f64)> {
+        if self.compute_virt.is_empty() {
+            return None;
+        }
+        let mut idx: Vec<usize> = (0..self.compute_virt.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.compute_virt[a]
+                .partial_cmp(&self.compute_virt[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let n = idx.len();
+        let rank = idx[((n - 1) * 99 + 99) / 100];
+        Some((rank, self.compute_virt[rank]))
+    }
+
     /// Total simulated time of supersteps in `[lo, hi]` of the given
     /// kinds (Table 7 reports window totals, not averages).
     pub fn window_total(&self, lo: u64, hi: u64, kinds: &[StepKind]) -> f64 {
@@ -356,6 +419,27 @@ mod tests {
         for o in &m.cp_overlap {
             assert!((o.hidden + o.exposed - o.flush).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn balance_helpers_summarize_compute_ledgers() {
+        let m = RunMetrics::default();
+        assert_eq!(m.compute_imbalance(), 0.0);
+        assert!(m.compute_p99().is_none());
+
+        let m = RunMetrics {
+            compute_virt: vec![2.0, 6.0, 2.0, 2.0],
+            ..Default::default()
+        };
+        assert_eq!(m.compute_max(), 6.0);
+        assert_eq!(m.compute_mean(), 3.0);
+        assert_eq!(m.compute_imbalance(), 2.0);
+        // p99 of 4 workers is the hottest one: rank 1.
+        assert_eq!(m.compute_p99(), Some((1, 6.0)));
+
+        // Ties resolve to the lowest rank among equals at the p99 slot.
+        let m = RunMetrics { compute_virt: vec![5.0, 5.0], ..Default::default() };
+        assert_eq!(m.compute_p99(), Some((1, 5.0)));
     }
 
     #[test]

@@ -57,12 +57,41 @@ pub fn wire_row(name: &str, m: &RunMetrics) -> Vec<String> {
         bytes(m.bytes.shuffle_bytes),
         bytes(m.bytes.wire_bytes),
         ratio,
+        bytes(m.bytes.hub_wire_bytes),
     ]
 }
 
 /// Build the shuffle-volume table header.
 pub fn wire_table() -> Table {
-    Table::new(vec!["", "shuffle bytes", "wire bytes", "reduction"])
+    Table::new(vec!["", "shuffle bytes", "wire bytes", "reduction", "hub wire"])
+}
+
+/// Render the per-worker compute-balance row (skew-aware execution,
+/// DESIGN.md §11): max and mean of the per-rank virtual compute
+/// ledgers, their max/mean imbalance ratio, the p99 worker, and how
+/// many vertices the barrier-time balancer migrated.
+pub fn balance_row(name: &str, m: &RunMetrics) -> Vec<String> {
+    let imb = if m.compute_mean() > 0.0 {
+        format!("{:.2}x", m.compute_imbalance())
+    } else {
+        "-".to_string()
+    };
+    let p99 = m
+        .compute_p99()
+        .map_or("-".to_string(), |(rank, t)| format!("w{rank} ({})", secs(t)));
+    vec![
+        name.to_string(),
+        secs(m.compute_max()),
+        secs(m.compute_mean()),
+        imb,
+        p99,
+        m.migrations.to_string(),
+    ]
+}
+
+/// Build the compute-balance table header.
+pub fn balance_table() -> Table {
+    Table::new(vec!["", "cmp max", "cmp mean", "imbalance", "p99 worker", "migrations"])
 }
 
 /// Render the out-of-core memory-pressure row: worst per-worker
@@ -173,6 +202,7 @@ mod tests {
         m.bytes.wire_bytes = 0;
         assert_eq!(wire_row("HWCP", &m)[3], "-");
         assert!(wire_table().render().contains("wire bytes"));
+        assert!(wire_table().render().contains("hub wire"));
         m.pager.resident_peak = 2048;
         m.pager.faults = 7;
         let pr = pager_row("HWCP", &m);
@@ -181,6 +211,29 @@ mod tests {
         let mut t = superstep_table();
         t.row(r);
         assert!(t.render().contains("T_cpstep"));
+    }
+
+    #[test]
+    fn balance_row_formats_ledgers_and_migrations() {
+        // No ledgers recorded: every figure degrades to a dash/zero.
+        let m = RunMetrics::default();
+        let r = balance_row("LWCP", &m);
+        assert_eq!(r[3], "-");
+        assert_eq!(r[4], "-");
+        assert_eq!(r[5], "0");
+
+        let m = RunMetrics {
+            compute_virt: vec![2.0, 6.0, 2.0, 2.0],
+            migrations: 5,
+            ..Default::default()
+        };
+        let r = balance_row("LWCP", &m);
+        assert_eq!(r[1], "6.00 s");
+        assert_eq!(r[2], "3.00 s");
+        assert_eq!(r[3], "2.00x");
+        assert!(r[4].starts_with("w1"));
+        assert_eq!(r[5], "5");
+        assert!(balance_table().render().contains("imbalance"));
     }
 
     #[test]

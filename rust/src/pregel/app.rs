@@ -366,6 +366,36 @@ impl<'a, V: Clone> UpdateCtx<'a, V> {
     }
 }
 
+/// One hub broadcast unit (skew-aware mirroring, DESIGN.md §11): hub
+/// vertex `hub` sends `msg` to all of its neighbors; machines whose bit
+/// is set in `mask` receive ONE copy of this unit on the wire and
+/// expand it to the hub's local targets at the receiver, instead of one
+/// message per remote edge. The owner's own machine never appears in
+/// `mask` (its targets go through the plain outbox).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HubBcast<M> {
+    pub hub: VertexId,
+    pub mask: u64,
+    pub msg: M,
+}
+
+/// Per-vertex hub divert handle, built by the worker only for vertices
+/// in the frozen hub registry whose current adjacency still hashes to
+/// the registered frozen hash (the "clean hub" check — a pure function
+/// of current state, so replay makes the identical decision). `mask`
+/// is the precomputed remote-machine bitmap of Γ(v) with the owner's
+/// machine bit cleared.
+pub struct HubSink<'a, M> {
+    pub(crate) mask: u64,
+    pub(crate) topo: crate::sim::Topology,
+    pub(crate) my_machine: usize,
+    pub(crate) sink: &'a mut Vec<HubBcast<M>>,
+    /// Per-edge sends the divert suppressed (the mirrors will make
+    /// them): added back to the logical sent-message count so the
+    /// engine's convergence check is mirror-invariant.
+    pub(crate) skipped: &'a mut u64,
+}
+
 /// Per-vertex **message-generation** view handed to [`App::emit`] and
 /// [`App::respond`] — a read-only view of the vertex state plus the
 /// outbox (Equation (3) of the paper).
@@ -386,6 +416,11 @@ pub struct EmitCtx<'a, V, M: Codec + Clone> {
     pub(crate) adj: &'a Adjacency,
     pub(crate) agg_prev: &'a [f64],
     pub(crate) out: &'a mut Outbox<M>,
+    /// `Some` only for clean hub vertices when mirroring is enabled:
+    /// [`EmitCtx::send_all`] then ships one [`HubBcast`] unit per
+    /// remote machine instead of per-edge messages. Selective
+    /// [`EmitCtx::send`] never diverts.
+    pub(crate) hub: Option<HubSink<'a, M>>,
 }
 
 impl<'a, V: Clone, M: Codec + Clone> EmitCtx<'a, V, M> {
@@ -437,12 +472,31 @@ impl<'a, V: Clone, M: Codec + Clone> EmitCtx<'a, V, M> {
         self.out.send(to, m);
     }
 
-    /// Send `m` to every neighbor.
+    /// Send `m` to every neighbor. For clean hub vertices under
+    /// skew-aware mirroring this diverts: neighbors on a masked remote
+    /// machine are served by ONE [`HubBcast`] unit per machine
+    /// (expanded receiver-side), all other neighbors get plain sends.
     pub fn send_all(&mut self, m: M) {
         let adj = self.adj;
         let out = &mut *self.out;
-        for &to in adj.neighbors(self.off) {
-            out.send(to, m.clone());
+        match &mut self.hub {
+            Some(h) if h.mask != 0 => {
+                let part = out.part();
+                for &to in adj.neighbors(self.off) {
+                    let mach = h.topo.machine_of(part.rank_of(to));
+                    if mach != h.my_machine && (h.mask >> mach) & 1 == 1 {
+                        *h.skipped += 1; // that machine's mirror fans out
+                        continue;
+                    }
+                    out.send(to, m.clone());
+                }
+                h.sink.push(HubBcast { hub: self.id, mask: h.mask, msg: m });
+            }
+            _ => {
+                for &to in adj.neighbors(self.off) {
+                    out.send(to, m.clone());
+                }
+            }
         }
     }
 }
@@ -559,6 +613,7 @@ mod tests {
             adj: &p.adj,
             agg_prev: &agg_prev,
             out: &mut out,
+            hub: None,
         };
         // The whole point of the `'a` accessors: hold neighbors/value
         // across mutable sends.
@@ -568,6 +623,75 @@ mod tests {
             ctx.send(to, *v);
         }
         assert_eq!(out.raw_count(), 1);
+    }
+
+    #[test]
+    fn send_all_diverts_remote_machines_for_clean_hubs() {
+        // Topology 2×2, Partitioner 4×8: ranks 0,2 → machine 0 and
+        // ranks 1,3 → machine 1. The hub (vertex 0 on rank 0, machine
+        // 0) has neighbors on both machines.
+        let adj = Adjacency::from_lists(&[vec![1, 2, 3, 4, 5, 6, 7]]);
+        let values = vec![1.0f32];
+        let part = Partitioner::new(4, 8);
+        let topo = crate::sim::Topology::new(2, 2);
+        let agg_prev: Vec<f64> = Vec::new();
+
+        let mut out = Outbox::<f32>::new(part, None);
+        let mut sink = Vec::new();
+        let mut skipped = 0u64;
+        let mut ctx = EmitCtx {
+            id: 0,
+            off: 0,
+            superstep: 1,
+            n_vertices: 8,
+            values: &values,
+            adj: &adj,
+            agg_prev: &agg_prev,
+            out: &mut out,
+            hub: Some(HubSink {
+                mask: 0b10,
+                topo,
+                my_machine: 0,
+                sink: &mut sink,
+                skipped: &mut skipped,
+            }),
+        };
+        ctx.send_all(2.5);
+        drop(ctx);
+        // Machine-0 targets (vertices 2, 4, 6) got plain sends; the
+        // four machine-1 targets ride one broadcast unit.
+        assert_eq!(out.raw_count(), 3);
+        assert_eq!(skipped, 4);
+        assert_eq!(sink, vec![HubBcast { hub: 0, mask: 0b10, msg: 2.5 }]);
+
+        // A zero mask degrades to the plain per-edge path.
+        let mut out2 = Outbox::<f32>::new(part, None);
+        let mut sink2 = Vec::new();
+        let mut skipped2 = 0u64;
+        let mut ctx = EmitCtx {
+            id: 0,
+            off: 0,
+            superstep: 1,
+            n_vertices: 8,
+            values: &values,
+            adj: &adj,
+            agg_prev: &agg_prev,
+            out: &mut out2,
+            hub: Some(HubSink {
+                mask: 0,
+                topo,
+                my_machine: 0,
+                sink: &mut sink2,
+                skipped: &mut skipped2,
+            }),
+        };
+        ctx.send_all(2.5);
+        // Selective sends never divert, even on a masked hub.
+        ctx.send(3, 9.0);
+        drop(ctx);
+        assert_eq!(out2.raw_count(), 8);
+        assert_eq!(skipped2, 0);
+        assert!(sink2.is_empty());
     }
 
     #[test]
@@ -612,6 +736,7 @@ mod tests {
             adj: &p.adj,
             agg_prev: &agg_prev,
             out: &mut out,
+            hub: None,
         };
         let _ = ctx.agg_prev(3);
     }

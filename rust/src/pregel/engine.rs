@@ -23,13 +23,13 @@
 //! Case-2 worker — recovery *is* re-execution.
 
 use super::aggregator::AggState;
-use super::app::{App, BatchExec};
+use super::app::{App, BatchExec, HubBcast};
 use super::executor::{self, BatchArena, WorkerPool};
 use super::message;
 use super::worker::{StepOutput, Worker};
 use crate::comm::WorkerSet;
 use crate::ft::FtKind;
-use crate::graph::{Partitioner, VertexId};
+use crate::graph::{PlacementEntry, PlacementLedger, Partitioner, VertexId};
 use crate::ingest::{self, JournalRecord, ProbeKind, ServeProbe};
 use crate::metrics::{RunMetrics, ServeSample, StepKind, StepRecord};
 use crate::sim::{clock, CostModel, Topology, WallTimer};
@@ -83,6 +83,49 @@ impl FailurePlan {
                 machine_fails: false,
                 during_cp: false,
             }],
+        }
+    }
+}
+
+/// Skew-aware execution knobs (DESIGN.md §11): high-degree vertex
+/// mirroring and deterministic dynamic migration. Both default *off* —
+/// every knob at its default reproduces the legacy execution byte for
+/// byte; benches and tests opt in explicitly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SkewConfig {
+    /// Out-degree strictly above which a vertex's `send_all` broadcasts
+    /// are diverted through machine-local mirrors (0 = mirroring off).
+    /// The hub set freezes at load time; a hub whose adjacency later
+    /// mutates deterministically reverts to plain sends (frozen-hash
+    /// check). CLI `--mirror-threshold`; 256 is the recommended
+    /// production setting.
+    pub mirror_threshold: usize,
+    /// Charge the one-batch-per-machine wire model for hub broadcasts.
+    /// `false` keeps the mirror *routing* but re-charges the plain
+    /// per-edge wire bytes — the measurement baseline of bench §10.
+    /// Message content and digests are identical either way.
+    pub mirror_wire: bool,
+    /// Enable the barrier-time migration balancer (CLI `--migrate`):
+    /// reassigns the *execution cost* of the hottest plain vertices
+    /// between co-located workers through the placement ledger.
+    pub migrate: bool,
+    /// Balancer cadence: decide at every Nth committed barrier.
+    pub migrate_every: u64,
+    /// Trigger: migrate when the window's max/mean compute exceeds this.
+    pub migrate_ratio: f64,
+    /// Candidate pool per decision: top-k hottest plain slots.
+    pub migrate_k: usize,
+}
+
+impl Default for SkewConfig {
+    fn default() -> Self {
+        SkewConfig {
+            mirror_threshold: 0,
+            mirror_wire: true,
+            migrate: false,
+            migrate_every: 4,
+            migrate_ratio: 1.15,
+            migrate_k: 8,
         }
     }
 }
@@ -150,6 +193,9 @@ pub struct EngineConfig {
     /// are bit-identical either way (see `tests/paged_store.rs`); only
     /// the cost model sees the page faults.
     pub pager: crate::storage::pager::PagerConfig,
+    /// Skew-aware execution: hub mirroring + dynamic migration
+    /// (DESIGN.md §11). Defaults to everything off.
+    pub skew: SkewConfig,
 }
 
 impl EngineConfig {
@@ -168,6 +214,7 @@ impl EngineConfig {
             machine_combine: true,
             simd: true,
             pager: Default::default(),
+            skew: Default::default(),
         }
     }
 }
@@ -177,6 +224,25 @@ impl EngineConfig {
 pub(crate) enum Stage {
     Normal,
     Recovering { failure_step: u64 },
+}
+
+/// One hub broadcast's traffic toward one remote machine (mirroring,
+/// DESIGN.md §11): the owner ships `unit_bytes` — one `(hub, msg)`
+/// entry per broadcast — to the machine's gateway; the machine-local
+/// mirrors fan the payload out to `batches`, one pre-encoded
+/// plain-format batch per destination rank on that machine (ascending).
+/// Delivery appends these batches *after* the plain entries of the
+/// owner's source-machine group, so the fold position is fixed by the
+/// merge-order contract of `pregel::message`.
+pub(crate) struct HubFlow {
+    /// Source (hub owner) rank.
+    pub src: usize,
+    /// Destination machine whose mirrors expand the broadcast.
+    pub machine: usize,
+    /// Modeled wire bytes of the owner's one-per-machine unit.
+    pub unit_bytes: u64,
+    /// `(dst rank, plain wire batch)` — `u32 count, (u32 slot, M)*`.
+    pub batches: Vec<(usize, Vec<u8>)>,
 }
 
 /// The job engine.
@@ -237,6 +303,21 @@ pub struct Engine<A: App> {
     /// committed snapshot.
     pub(crate) probes: Vec<ServeProbe>,
     pub(crate) probe_fired: Vec<bool>,
+    /// Skew-aware migration: the deterministic placement ledger mapping
+    /// vertices to their *executing* rank (state stays home-resident —
+    /// DESIGN.md §11). Checkpointed alongside E_W, replayed on recovery.
+    pub(crate) ledger: PlacementLedger,
+    /// Per-rank cumulative *virtual* compute time — the balancer's
+    /// input ledger (wall clocks are nondeterministic; this is a pure
+    /// function of the cost model).
+    pub(crate) compute_virt: Vec<f64>,
+    /// `compute_virt` snapshot at the last balancer decision (window
+    /// deltas drive the imbalance trigger).
+    pub(crate) last_window: Vec<f64>,
+    /// Serve-lane snapshot cache, keyed by the committed checkpoint
+    /// step it was read from; invalidated wholesale when a newer commit
+    /// marker appears. Maps rank → that rank's committed values.
+    pub(crate) serve_cache: Option<(u64, BTreeMap<usize, Vec<A::V>>)>,
 }
 
 impl<A: App> Engine<A> {
@@ -255,6 +336,7 @@ impl<A: App> Engine<A> {
                 partitioner,
                 global_adj,
                 &app,
+                cfg.skew.mirror_threshold,
                 cfg.pager,
                 cfg.backing,
                 &cfg.tag,
@@ -294,7 +376,48 @@ impl<A: App> Engine<A> {
             ingest_log: BTreeMap::new(),
             probes: Vec::new(),
             probe_fired: Vec::new(),
+            ledger: PlacementLedger::new(),
+            compute_virt: vec![0.0; n_workers],
+            last_window: vec![0.0; n_workers],
+            serve_cache: None,
         })
+    }
+
+    /// Is hub mirroring in effect for this run? Requires a threshold,
+    /// a mask-representable machine count, and a non-XLA compute path
+    /// (the XLA batch core cannot divert per-edge sends).
+    pub(crate) fn mirror_enabled(&self) -> bool {
+        self.cfg.skew.mirror_threshold > 0
+            && self.cfg.topo.machines <= 64
+            && !(self.exec.is_some() && self.app.supports_xla())
+    }
+
+    /// The rank that executes vertex `v`'s compute (ledger-resolved;
+    /// equals the static home unless migration moved it).
+    pub fn executing_rank(&self, v: VertexId) -> usize {
+        self.ledger.owner_of(v, &self.partitioner)
+    }
+
+    /// All recorded migration moves, in superstep order (tests).
+    pub fn placement(&self) -> &[PlacementEntry] {
+        self.ledger.moves()
+    }
+
+    /// Per-home delegation map for one superstep: home rank → its
+    /// migrated-away `(slot, executing rank)` pairs, slot-ascending —
+    /// the `StepOpts::away` slices of the compute phase.
+    pub(crate) fn away_map(&self) -> BTreeMap<usize, Vec<(usize, usize)>> {
+        let mut m: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for (&v, &owner) in self.ledger.current() {
+            let home = self.partitioner.rank_of(v);
+            if owner != home {
+                m.entry(home).or_default().push((self.partitioner.slot_of(v), owner));
+            }
+        }
+        for lst in m.values_mut() {
+            lst.sort_unstable();
+        }
+        m
     }
 
     /// Install an XLA batch executor (PageRank & friends hot path).
@@ -380,6 +503,19 @@ impl<A: App> Engine<A> {
     pub fn run(&mut self) -> Result<RunMetrics> {
         let wall = WallTimer::start();
         if self.cfg.ft != FtKind::None {
+            // Mirror tables are a pure function of the loaded graph;
+            // persist them once (outside cp/, never GC'd) so respawned
+            // workers can reinstall them instead of rebuilding from a
+            // global adjacency they no longer hold.
+            if self.mirror_enabled() {
+                let sharers = self.sharers_by_rank();
+                for r in 0..self.workers.len() {
+                    let blob = self.workers[r].encode_mirror_tables();
+                    let t = self.cfg.cost.hdfs_write_time(blob.len() as u64, sharers[r]);
+                    self.hdfs.put(&crate::storage::checkpoint::mirror_key(r), &blob)?;
+                    self.workers[r].clock.advance(t);
+                }
+            }
             self.write_cp0()?;
         }
         let max_steps = self.app.max_supersteps().min(self.cfg.max_supersteps);
@@ -413,6 +549,11 @@ impl<A: App> Engine<A> {
             // past a masked superstep, or checkpointing disabled): fail
             // loudly rather than silently skip it and every later kill.
             self.ensure_no_pending_during_cp_kill(step)?;
+            // The migration balancer runs after the checkpoint decision
+            // (CP[step] must not see moves stamped step+1 as committed)
+            // and before ingest/probes, so a barrier's hook order is
+            // fixed and replayable.
+            self.maybe_migrate(step);
             // External ingest applies *after* the checkpoint decision:
             // CP[step] snapshots pre-ingest states (LWCP recovery replays
             // emit(step) from them), and the batch buffers under E_W key
@@ -464,6 +605,7 @@ impl<A: App> Engine<A> {
             .iter()
             .filter(|m| m.seq > self.ingest_seq)
             .count() as u64;
+        self.metrics.compute_virt = self.compute_virt.clone();
         self.metrics.final_time = self.max_clock();
         self.metrics.supersteps_run = self.metrics.steps.len() as u64;
         self.metrics.wall_ms = wall.elapsed_ms();
@@ -648,7 +790,13 @@ impl<A: App> Engine<A> {
     /// Staleness is the barrier-head / committed-checkpoint gap; the
     /// read cost is reported on the sample, not charged to worker
     /// clocks (serving reads are off the job's critical path).
-    pub fn serve_query(&self, head_step: u64, kind: ProbeKind) -> Result<ServeSample> {
+    ///
+    /// Decoded snapshots are cached keyed by the committed step: a
+    /// probe that lands between checkpoints reuses the previous probe's
+    /// reads (`serve.cache_hits` counts the avoided blob fetches), and
+    /// a newer commit marker invalidates the whole cache — a reader
+    /// still never observes anything but the latest committed snapshot.
+    pub fn serve_query(&mut self, head_step: u64, kind: ProbeKind) -> Result<ServeSample> {
         use crate::storage::checkpoint::{cp_key, Cp0, VertexStates};
         use crate::util::codec::Reader;
         let query = kind.to_string();
@@ -662,27 +810,50 @@ impl<A: App> Engine<A> {
                 read_cost: 0.0,
             });
         };
-        let mut read_bytes = 0u64;
         // CP[0] blobs are `Cp0` (values ++ active ++ adjacency); every
         // later kind's blob starts with a `VertexStates` image (exactly
         // for the lightweight kinds, as a prefix of the heavyweight
-        // blob), so a prefix decode reads the committed values.
-        let load = |rank: usize, read_bytes: &mut u64| -> Result<Vec<A::V>> {
-            let blob = self.hdfs.get(&cp_key(cp_step, rank))?;
+        // blob), so a prefix decode reads the committed values. A rank
+        // already in the cache skips the read entirely.
+        fn load_into<V: Codec>(
+            cache: &mut BTreeMap<usize, Vec<V>>,
+            hdfs: &SimHdfs,
+            cp_step: u64,
+            rank: usize,
+            read_bytes: &mut u64,
+            cache_hits: &mut u64,
+        ) -> Result<()> {
+            if cache.contains_key(&rank) {
+                *cache_hits += 1;
+                return Ok(());
+            }
+            let blob = hdfs.get(&cp_key(cp_step, rank))?;
             *read_bytes += blob.len() as u64;
-            if cp_step == 0 {
-                Ok(Cp0::<A::V>::from_bytes(&blob)?.values)
+            let values = if cp_step == 0 {
+                Cp0::<V>::from_bytes(&blob)?.values
             } else {
                 let mut r = Reader::new(&blob);
-                Ok(VertexStates::<A::V>::decode(&mut r)?.values)
-            }
-        };
+                VertexStates::<V>::decode(&mut r)?.values
+            };
+            cache.insert(rank, values);
+            Ok(())
+        }
+        match &mut self.serve_cache {
+            Some((s, _)) if *s == cp_step => {}
+            other => *other = Some((cp_step, BTreeMap::new())),
+        }
+        let mut read_bytes = 0u64;
+        let mut cache_hits = 0u64;
+        let hdfs = Arc::clone(&self.hdfs);
+        let cache = &mut self.serve_cache.as_mut().expect("cache primed above").1;
         let result = match kind {
             ProbeKind::Point(v) => {
                 if (v as usize) >= self.partitioner.n_vertices {
                     format!("vertex {v} out of range")
                 } else {
-                    let values = load(self.partitioner.rank_of(v), &mut read_bytes)?;
+                    let rank = self.partitioner.rank_of(v);
+                    load_into(cache, &hdfs, cp_step, rank, &mut read_bytes, &mut cache_hits)?;
+                    let values = cache.get(&rank).expect("loaded above");
                     format!("{:?}", values[self.partitioner.slot_of(v)])
                 }
             }
@@ -690,7 +861,8 @@ impl<A: App> Engine<A> {
                 let mut scored: Vec<(f64, VertexId)> = Vec::new();
                 let mut scoreless = false;
                 'ranks: for rank in 0..self.partitioner.n_workers {
-                    let values = load(rank, &mut read_bytes)?;
+                    load_into(cache, &hdfs, cp_step, rank, &mut read_bytes, &mut cache_hits)?;
+                    let values = cache.get(&rank).expect("loaded above");
                     for (slot, val) in values.iter().enumerate() {
                         match self.app.serve_score(val) {
                             Some(s) => scored.push((s, self.partitioner.id_of(rank, slot))),
@@ -718,6 +890,7 @@ impl<A: App> Engine<A> {
                 }
             }
         };
+        self.metrics.serve.cache_hits += cache_hits;
         Ok(ServeSample {
             at_step: head_step,
             committed_step: Some(cp_step),
@@ -814,6 +987,183 @@ impl<A: App> Engine<A> {
         slots
     }
 
+    /// Expand hub broadcasts into delivery-side mirror flows: for each
+    /// broadcasting source rank (ascending) and each masked machine
+    /// (ascending), build one [`HubFlow`] whose batches reproduce —
+    /// per destination on that machine, in broadcast order then
+    /// adjacency order — exactly the `(slot, msg)` entries the plain
+    /// path would have sent, using the *destination* worker's mirror
+    /// table. Destinations are Case-2 filtered (`s_w <= step`), the
+    /// same rule the plain shuffle applies.
+    pub(crate) fn build_hub_flows(
+        &self,
+        step: u64,
+        srcs: &[(usize, Vec<HubBcast<A::M>>)],
+    ) -> Vec<HubFlow> {
+        let mut flows = Vec::new();
+        let topo = self.cfg.topo;
+        for &(src, ref bcasts) in srcs {
+            if bcasts.is_empty() {
+                continue;
+            }
+            let mut mask_union = 0u64;
+            for b in bcasts {
+                mask_union |= b.mask;
+            }
+            for m in 0..topo.machines {
+                if (mask_union >> m) & 1 == 0 {
+                    continue;
+                }
+                let mut dst_batches: Vec<(usize, Vec<u8>)> = Vec::new();
+                for (dst, w) in self.workers.iter().enumerate() {
+                    if topo.machine_of(dst) != m || w.s_w > step || !self.ws.is_alive(dst) {
+                        continue;
+                    }
+                    let mut count = 0u32;
+                    let mut body = Vec::new();
+                    for b in bcasts {
+                        if (b.mask >> m) & 1 == 0 {
+                            continue;
+                        }
+                        if let Some(slots) = w.mirror_targets(b.hub) {
+                            for &slot in slots {
+                                slot.encode(&mut body);
+                                b.msg.encode(&mut body);
+                                count += 1;
+                            }
+                        }
+                    }
+                    if count > 0 {
+                        let mut batch = Vec::with_capacity(4 + body.len());
+                        count.encode(&mut batch);
+                        batch.extend_from_slice(&body);
+                        dst_batches.push((dst, batch));
+                    }
+                }
+                if dst_batches.is_empty() {
+                    continue; // no eligible mirror target survives
+                }
+                let mut unit_bytes = 4u64;
+                for b in bcasts {
+                    if (b.mask >> m) & 1 == 1 {
+                        let mut scratch = Vec::new();
+                        b.msg.encode(&mut scratch);
+                        unit_bytes += 4 + scratch.len() as u64;
+                    }
+                }
+                flows.push(HubFlow { src, machine: m, unit_bytes, batches: dst_batches });
+            }
+        }
+        flows
+    }
+
+    /// The barrier-time migration balancer (DESIGN.md §11). Runs at
+    /// every committed barrier:
+    ///
+    /// 1. If the ledger already holds moves stamped `step + 1` (replay
+    ///    of a barrier decided before a failure), re-apply them
+    ///    verbatim — the balancer never re-decides a decided barrier,
+    ///    so re-execution delegates bit-identically.
+    /// 2. Otherwise, in `Stage::Normal` at the configured cadence,
+    ///    compare per-worker *virtual* compute windows: when the
+    ///    hottest worker exceeds `migrate_ratio ×` the mean, move the
+    ///    execution cost of its top-k hottest plain (non-hub,
+    ///    not-already-away) vertices to the coolest co-located worker,
+    ///    recording every move in the superstep-stamped ledger.
+    ///
+    /// Migration is a no-op under the XLA batch core (the batch path
+    /// cannot split its per-slot loop); moves are still recorded and
+    /// replayed so the ledger stays deterministic if cores mix.
+    pub(crate) fn maybe_migrate(&mut self, step: u64) {
+        // Replay lane first — unconditionally, so recorded moves stay
+        // in force whether or not the knob is still on.
+        if self.ledger.has_moves_at(step + 1) {
+            self.ledger.apply_recorded(step + 1);
+            return;
+        }
+        let skew = self.cfg.skew;
+        if !skew.migrate
+            || matches!(self.stage, Stage::Recovering { .. })
+            || skew.migrate_every == 0
+            || step % skew.migrate_every != 0
+        {
+            return;
+        }
+        let alive = self.ws.alive_ranks();
+        let deltas: Vec<(usize, f64)> = alive
+            .iter()
+            .map(|&r| (r, self.compute_virt[r] - self.last_window[r]))
+            .collect();
+        let mean = clock::mean_time(deltas.iter().map(|&(_, d)| d));
+        // Window snapshot happens whether or not we move anything: each
+        // decision sees only the compute since the previous decision.
+        for &r in &alive {
+            self.last_window[r] = self.compute_virt[r];
+        }
+        if mean <= 0.0 {
+            return;
+        }
+        // Hottest worker; ties break to the lowest rank (alive_ranks is
+        // ascending and `>` keeps the first maximum).
+        let (mut from, mut maxd) = (alive[0], f64::NEG_INFINITY);
+        for &(r, d) in &deltas {
+            if d > maxd {
+                maxd = d;
+                from = r;
+            }
+        }
+        if maxd < skew.migrate_ratio * mean {
+            return;
+        }
+        // Coolest co-located target (static placement — recovery keeps
+        // combine groups and therefore migration pairs stable).
+        let fm = self.cfg.topo.machine_of(from);
+        let (mut to, mut mind) = (None, f64::INFINITY);
+        for &(r, d) in &deltas {
+            if r == from || self.cfg.topo.machine_of(r) != fm {
+                continue;
+            }
+            if d < mind {
+                mind = d;
+                to = Some(r);
+            }
+        }
+        let Some(to) = to else {
+            return; // sole worker on its machine: nothing co-located
+        };
+        // Candidates: hottest plain slots — hubs are mirrored, not
+        // migrated, and already-away slots are not re-moved.
+        let mut skip: Vec<usize> =
+            self.workers[from].hubs.iter().map(|&(slot, _)| slot).collect();
+        for (&v, &owner) in self.ledger.current() {
+            if self.partitioner.rank_of(v) == from && owner != from {
+                skip.push(self.partitioner.slot_of(v));
+            }
+        }
+        skip.sort_unstable();
+        skip.dedup();
+        let cands = self.workers[from].top_degree_slots(skew.migrate_k, &skip);
+        self.workers[from].settle_page_io(&self.cfg.cost);
+        if cands.is_empty() {
+            return;
+        }
+        let mut moved_bytes = 0u64;
+        for &(slot, deg) in &cands {
+            let v = self.partitioner.id_of(from, slot);
+            // Stamped step+1: barrier `step` is fully committed and
+            // never re-executed, so the move survives any rollback to
+            // CP[step] (reset_current_to(cp_last + 1)).
+            self.ledger.record(step + 1, v, from, to);
+            // Modeled handoff volume: value + flags + adjacency.
+            moved_bytes += 16 + 8 * deg;
+        }
+        let t = self.cfg.cost.staging_time(moved_bytes) + self.cfg.cost.migrate_admin_time();
+        self.workers[from].clock.advance(t);
+        self.workers[to].clock.advance(t);
+        self.metrics.migrations += cands.len() as u64;
+        self.metrics.migrated_bytes += moved_bytes;
+    }
+
     // ---------------------------------------------------------------
     // The superstep
     // ---------------------------------------------------------------
@@ -845,7 +1195,10 @@ impl<A: App> Engine<A> {
         let wall = WallTimer::start();
         let app = Arc::clone(&self.app);
         let exec = self.exec.clone();
-        let outputs: Vec<(usize, StepOutput<A::M>, crate::sim::PhaseCost)> = {
+        let mirror_on = self.mirror_enabled();
+        let away = self.away_map();
+        type Computed<M> = (usize, StepOutput<M>, crate::sim::PhaseCost, Vec<(usize, f64)>);
+        let mut outputs: Vec<Computed<A::M>> = {
             let refs = executor::select_workers(&mut self.workers, &computing);
             executor::compute_phase(
                 &self.pool,
@@ -855,11 +1208,28 @@ impl<A: App> Engine<A> {
                 super::kernels::KernelMode::from_simd_flag(self.cfg.simd),
                 step,
                 &agg_prev,
+                self.cfg.topo,
+                mirror_on,
+                &away,
                 &self.cfg.cost,
             )?
         };
-        for (_, _, pc) in &outputs {
+        for (r, _, pc, deleg) in &outputs {
             pc.merge_into(&mut self.metrics.bytes);
+            self.compute_virt[*r] += pc.compute_virt;
+            // Delegated compute settles on the executing rank's clock;
+            // a dead delegate's share returns home (deterministic —
+            // the balancer only ever picks alive targets, but a kill
+            // can outrun the ledger).
+            for &(to, t) in deleg {
+                if self.ws.is_alive(to) {
+                    self.workers[to].clock.advance(t);
+                    self.compute_virt[to] += t;
+                } else {
+                    self.workers[*r].clock.advance(t);
+                    self.compute_virt[*r] += t;
+                }
+            }
         }
         self.metrics.phase_wall.compute += wall.elapsed_ms();
 
@@ -870,7 +1240,7 @@ impl<A: App> Engine<A> {
         if masked {
             self.masked_steps.insert(step);
         }
-        if outputs.iter().any(|(_, o, _)| o.mutated) {
+        if outputs.iter().any(|(_, o, _, _)| o.mutated) {
             self.mutated_steps.insert(step);
             self.any_mutation = true;
         }
@@ -880,22 +1250,28 @@ impl<A: App> Engine<A> {
         // dispatch on the pool rather than fully fused into compute.
         let wall = WallTimer::start();
         let mut step_aggs: BTreeMap<usize, AggState> = BTreeMap::new();
-        for (r, out, _) in &outputs {
+        for (r, out, _, _) in &outputs {
             step_aggs.insert(*r, out.agg.clone());
         }
         if self.cfg.ft.log_based() {
             let fallback = masked || self.mutated_steps.contains(&step);
             let use_msg_log = self.cfg.ft == FtKind::HwLog || fallback;
-            let ranks: Vec<usize> = outputs.iter().map(|(r, _, _)| *r).collect();
+            let ranks: Vec<usize> = outputs.iter().map(|(r, _, _, _)| *r).collect();
             let refs = executor::select_workers(&mut self.workers, &ranks);
             let mut items: Vec<(&mut Worker<A>, &StepOutput<A::M>)> =
                 Vec::with_capacity(outputs.len());
-            for ((wr, w), (or, o, _)) in refs.into_iter().zip(outputs.iter()) {
+            for ((wr, w), (or, o, _, _)) in refs.into_iter().zip(outputs.iter()) {
                 debug_assert_eq!(wr, *or);
                 items.push((w, o));
             }
-            let costs =
-                executor::log_phase(&self.pool, items, step, use_msg_log, &self.cfg.cost)?;
+            let costs = executor::log_phase(
+                &self.pool,
+                items,
+                step,
+                use_msg_log,
+                mirror_on,
+                &self.cfg.cost,
+            )?;
             for pc in &costs {
                 pc.merge_into(&mut self.metrics.bytes);
                 if let Some(t) = pc.sample {
@@ -905,7 +1281,7 @@ impl<A: App> Engine<A> {
         } else {
             // No per-superstep log: only the mutation buffer and the
             // partial-aggregate log complete the partial commit.
-            for (r, out, _) in &outputs {
+            for (r, out, _, _) in &outputs {
                 if !out.mutations_encoded.is_empty() {
                     let t = self.cfg.cost.log_write_time(out.mutations_encoded.len() as u64);
                     self.workers[*r].clock.advance(t);
@@ -924,9 +1300,18 @@ impl<A: App> Engine<A> {
 
         // ---- shuffle phase ----
         let wall = WallTimer::start();
+        // Mirror fan-out: collect this step's hub broadcasts (the
+        // owners' one-per-machine sends) before serializing the plain
+        // batches; forwarders append theirs below.
+        let mut hub_srcs: Vec<(usize, Vec<HubBcast<A::M>>)> = Vec::new();
+        for (r, out, _, _) in &mut outputs {
+            if !out.hub_bcasts.is_empty() {
+                hub_srcs.push((*r, std::mem::take(&mut out.hub_bcasts)));
+            }
+        }
         let n_workers = self.workers.len();
         let mut batches: Vec<(usize, usize, Vec<u8>)> = Vec::new();
-        for (r, out, _) in &outputs {
+        for (r, out, _, _) in &outputs {
             for dst in 0..n_workers {
                 // Case 2: send only to workers that will compute i+1.
                 if self.workers[dst].s_w > step {
@@ -950,11 +1335,23 @@ impl<A: App> Engine<A> {
                 .filter(|&d| self.workers[d].s_w <= step)
                 .collect();
             if !dests.is_empty() {
-                self.forward_logged_messages(step, &forwarding, &dests, &agg_prev, &mut batches)?;
+                self.forward_logged_messages(
+                    step,
+                    &forwarding,
+                    &dests,
+                    &agg_prev,
+                    &mut batches,
+                    &mut hub_srcs,
+                )?;
             }
         }
+        // Rank-ascending source order: the expansion fold position
+        // within each source-machine group is part of the merge-order
+        // contract (`pregel::message`).
+        hub_srcs.sort_by_key(|(r, _)| *r);
+        let hub_flows = self.build_hub_flows(step, &hub_srcs);
         self.metrics.phase_wall.shuffle += wall.elapsed_ms();
-        self.deliver(&mut batches)?;
+        self.deliver(&mut batches, &hub_flows)?;
 
         // ---- sync & commit ----
         let wall = WallTimer::start();
@@ -1001,8 +1398,14 @@ impl<A: App> Engine<A> {
     /// ingest into the destination inboxes on the pool under the
     /// two-level merge-order contract of `pregel::message`, and charge
     /// wire/staging/CPU costs. Consumes the batches, recycling their
-    /// buffers into the arena.
-    pub(crate) fn deliver(&mut self, batches: &mut Vec<(usize, usize, Vec<u8>)>) -> Result<()> {
+    /// buffers into the arena. `hub_flows` are the mirror expansions of
+    /// this step's hub broadcasts (`build_hub_flows`) — their batches
+    /// fold after the plain entries of each source-machine group.
+    pub(crate) fn deliver(
+        &mut self,
+        batches: &mut Vec<(usize, usize, Vec<u8>)>,
+        hub_flows: &[HubFlow],
+    ) -> Result<()> {
         let wall = WallTimer::start();
         batches.sort_by_key(|(src, dst, _)| (*dst, *src));
         // Pre-combine shuffle volume (what the workers generated); the
@@ -1011,9 +1414,9 @@ impl<A: App> Engine<A> {
             self.metrics.bytes.shuffle_bytes += b.len() as u64;
         }
         if self.cfg.machine_combine {
-            self.deliver_machine_combined(batches)?;
+            self.deliver_machine_combined(batches, hub_flows)?;
         } else {
-            self.deliver_single_stage(batches)?;
+            self.deliver_single_stage(batches, hub_flows)?;
         }
         for (_, _, b) in batches.drain(..) {
             self.arena.put(b);
@@ -1026,7 +1429,11 @@ impl<A: App> Engine<A> {
     /// batch is its own wire transfer; receivers still fold under the
     /// two-level contract (per-source-machine partials) so results are
     /// bit-identical to the machine-combined path.
-    fn deliver_single_stage(&mut self, batches: &[(usize, usize, Vec<u8>)]) -> Result<()> {
+    fn deliver_single_stage(
+        &mut self,
+        batches: &[(usize, usize, Vec<u8>)],
+        hub_flows: &[HubFlow],
+    ) -> Result<()> {
         let n = self.workers.len();
         let mut sent_remote = vec![0u64; n];
         let mut sent_intra = vec![0u64; n];
@@ -1045,32 +1452,42 @@ impl<A: App> Engine<A> {
                 self.metrics.bytes.wire_bytes += len;
             }
         }
-        // Group by destination (contiguous under the (dst, src) sort),
-        // one sub-group per *static* source machine in ascending
-        // machine order — the two-level merge-order contract — then
-        // ingest every destination's inbox concurrently.
+        self.hub_flow_costs(
+            hub_flows,
+            &mut sent_remote,
+            &mut sent_intra,
+            &mut recv_remote,
+            &mut recv_intra,
+            &mut recv_cpu,
+        );
+        // Group by destination, one sub-group per *static* source
+        // machine in ascending machine order — the two-level
+        // merge-order contract — then ingest every destination's inbox
+        // concurrently. Within a group the plain per-worker batches
+        // come first (ascending src under the (dst, src) sort), then
+        // the hub expansion batches, also ascending by hub source rank:
+        // the shuffle sorts `hub_flows` by source before building them.
         {
             let topo = self.cfg.topo;
+            let mut units: Vec<BTreeMap<usize, Vec<&[u8]>>> =
+                (0..n).map(|_| BTreeMap::new()).collect();
+            for (src, dst, b) in batches.iter() {
+                units[*dst].entry(topo.machine_of(*src)).or_default().push(b.as_slice());
+            }
+            for f in hub_flows {
+                let sm = topo.machine_of(f.src);
+                for (dst, b) in &f.batches {
+                    units[*dst].entry(sm).or_default().push(b.as_slice());
+                }
+            }
             let mut dst_ranks: Vec<usize> = Vec::new();
             let mut groups: Vec<Vec<Vec<&[u8]>>> = Vec::new();
-            let mut i = 0;
-            while i < batches.len() {
-                let dst = batches[i].1;
-                let mut j = i;
-                while j < batches.len() && batches[j].1 == dst {
-                    j += 1;
-                }
-                // One pass over the destination's batches: ascending src
-                // within the (dst, src)-sorted slice, bucketed by static
-                // machine; the BTreeMap then yields groups in ascending
-                // machine order.
-                let mut by_machine: BTreeMap<usize, Vec<&[u8]>> = BTreeMap::new();
-                for (s, _, b) in &batches[i..j] {
-                    by_machine.entry(topo.machine_of(*s)).or_default().push(b.as_slice());
+            for (dst, m) in units.iter().enumerate() {
+                if m.is_empty() {
+                    continue;
                 }
                 dst_ranks.push(dst);
-                groups.push(by_machine.into_values().collect());
-                i = j;
+                groups.push(m.values().cloned().collect());
             }
             let refs = executor::select_workers(&mut self.workers, &dst_ranks);
             let mut items: Vec<(&mut Worker<A>, Vec<Vec<&[u8]>>)> =
@@ -1081,7 +1498,7 @@ impl<A: App> Engine<A> {
             }
             let costs = executor::deliver_phase(&self.pool, items, &self.cfg.cost)?;
             for (d, pc) in dst_ranks.iter().zip(costs) {
-                recv_cpu[*d] = pc.recv_cpu;
+                recv_cpu[*d] += pc.recv_cpu;
             }
         }
         // NIC sharing: count communicating workers per machine.
@@ -1136,7 +1553,11 @@ impl<A: App> Engine<A> {
     /// destination rank of the pair) pays the inbound wire transfer,
     /// and each destination pays its section's fan-out at `mem_bw` plus
     /// ingest CPU.
-    fn deliver_machine_combined(&mut self, batches: &[(usize, usize, Vec<u8>)]) -> Result<()> {
+    fn deliver_machine_combined(
+        &mut self,
+        batches: &[(usize, usize, Vec<u8>)],
+        hub_flows: &[HubFlow],
+    ) -> Result<()> {
         let n = self.workers.len();
         let topo = self.cfg.topo;
         let mut sent_remote = vec![0u64; n];
@@ -1208,6 +1629,17 @@ impl<A: App> Engine<A> {
             recv_remote[*dst] += b.len() as u64;
             self.metrics.bytes.wire_bytes += b.len() as u64;
         }
+        // Hub expansion units bypass the combine tree entirely — they
+        // already carry one pre-deduplicated value per hub — so their
+        // costs use the same ledgers as the single-stage path.
+        self.hub_flow_costs(
+            hub_flows,
+            &mut sent_remote,
+            &mut sent_intra,
+            &mut recv_remote,
+            &mut recv_intra,
+            &mut recv_cpu,
+        );
 
         // Stage 4: grouped ingest — each destination folds one unit per
         // source machine in ascending machine order: the intra-machine
@@ -1233,6 +1665,15 @@ impl<A: App> Engine<A> {
                     units[*dst].entry(*sm).or_default().push(&mg.data[range.clone()]);
                 }
             }
+            // Hub expansions fold after their source machine's plain
+            // batches (intra, single, or merged section — exactly one
+            // category per pair), ascending by hub source rank.
+            for f in hub_flows {
+                let sm = topo.machine_of(f.src);
+                for (dst, b) in &f.batches {
+                    units[*dst].entry(sm).or_default().push(b.as_slice());
+                }
+            }
             let mut dst_ranks: Vec<usize> = Vec::new();
             let mut groups: Vec<Vec<Vec<&[u8]>>> = Vec::new();
             for (dst, m) in units.iter().enumerate() {
@@ -1251,7 +1692,7 @@ impl<A: App> Engine<A> {
             }
             let costs = executor::deliver_phase(&self.pool, items, &self.cfg.cost)?;
             for (d, pc) in dst_ranks.iter().zip(costs) {
-                recv_cpu[*d] = pc.recv_cpu;
+                recv_cpu[*d] += pc.recv_cpu;
             }
         }
 
@@ -1293,6 +1734,63 @@ impl<A: App> Engine<A> {
             self.workers[r].clock.advance(send_t.max(recv_t) + recv_cpu[r]);
         }
         Ok(())
+    }
+
+    /// Cost accounting for hub expansion flows, shared by both delivery
+    /// paths. With `mirror_wire` on, one compact unit (`unit_bytes`:
+    /// one value per masked hub) crosses the NIC per (hub source,
+    /// remote machine); the machine's lowest-ranked flow destination
+    /// acts as gateway, and every destination pays its expansion batch
+    /// at memory bandwidth plus the per-entry fan-out CPU. With it off,
+    /// each expansion batch is charged as its own wire transfer — what
+    /// the hub would have paid sending per-destination batches — so the
+    /// on/off delta isolates exactly the mirror wire saving while the
+    /// delivered bytes (and digests) stay identical. Machine grouping
+    /// is static (`Topology::machine_of`), matching `build_hub_flows`.
+    /// `hub_wire_bytes` counts only the remote share in both modes.
+    fn hub_flow_costs(
+        &mut self,
+        flows: &[HubFlow],
+        sent_remote: &mut [u64],
+        sent_intra: &mut [u64],
+        recv_remote: &mut [u64],
+        recv_intra: &mut [u64],
+        recv_cpu: &mut [f64],
+    ) {
+        let topo = self.cfg.topo;
+        let wire_on = self.cfg.skew.mirror_wire;
+        for f in flows {
+            let local = topo.machine_of(f.src) == f.machine;
+            if wire_on {
+                if local {
+                    sent_intra[f.src] += f.unit_bytes;
+                } else {
+                    sent_remote[f.src] += f.unit_bytes;
+                    let gw = f.batches[0].0;
+                    recv_remote[gw] += f.unit_bytes;
+                    self.metrics.bytes.wire_bytes += f.unit_bytes;
+                    self.metrics.bytes.hub_wire_bytes += f.unit_bytes;
+                }
+            }
+            for (dst, b) in &f.batches {
+                let len = b.len() as u64;
+                let entries =
+                    u32::from_le_bytes(b[..4].try_into().expect("hub batch has a count header"))
+                        as u64;
+                recv_cpu[*dst] += self.cfg.cost.mirror_expand_time(entries);
+                if wire_on {
+                    recv_intra[*dst] += len;
+                } else if local {
+                    sent_intra[f.src] += len;
+                    recv_intra[*dst] += len;
+                } else {
+                    sent_remote[f.src] += len;
+                    recv_remote[*dst] += len;
+                    self.metrics.bytes.wire_bytes += len;
+                    self.metrics.bytes.hub_wire_bytes += len;
+                }
+            }
+        }
     }
 
     /// Reset every alive worker's inbox in place (recovery drops

@@ -54,12 +54,13 @@
 //! `EngineConfig::threads` pins the pool size (0 = one per hardware
 //! thread, 1 = run every task inline on the master).
 
-use super::app::{App, BatchExec, CombineFn};
+use super::app::{App, BatchExec, CombineFn, HubBcast};
 use super::kernels::KernelMode;
 use super::message::{merge_machine_batch, MachineMerge};
-use super::worker::{IngestOutcome, StepOutput, Worker};
+use super::worker::{IngestOutcome, StepOpts, StepOutput, Worker};
 use crate::graph::Partitioner;
-use crate::sim::{CostModel, PhaseCost};
+use crate::sim::{CostModel, PhaseCost, Topology};
+use std::collections::BTreeMap;
 use crate::util::codec::Codec;
 use anyhow::{Context, Result};
 use std::any::Any;
@@ -338,6 +339,7 @@ pub fn select_workers<'a, A: App>(
 /// clients — see `runtime::registry`), so batch compute fans out across
 /// workers too instead of serializing on the master. Each worker is
 /// charged the cost branch of the core it actually ran.
+#[allow(clippy::too_many_arguments)]
 pub fn compute_phase<A: App>(
     pool: &WorkerPool,
     workers: Vec<(usize, &mut Worker<A>)>,
@@ -346,8 +348,11 @@ pub fn compute_phase<A: App>(
     kern: KernelMode,
     step: u64,
     agg_prev: &[f64],
+    topo: Topology,
+    mirror: bool,
+    away: &BTreeMap<usize, Vec<(usize, usize)>>,
     cost: &CostModel,
-) -> Result<Vec<(usize, StepOutput<A::M>, PhaseCost)>> {
+) -> Result<Vec<(usize, StepOutput<A::M>, PhaseCost, Vec<(usize, f64)>)>> {
     // Mirror Worker::compute_superstep's core choice exactly, so every
     // worker's clock is charged for the path it took.
     let use_xla = exec.is_some() && app.supports_xla();
@@ -356,21 +361,60 @@ pub fn compute_phase<A: App>(
     let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
     let results = pool.map_named("compute", Some(ranks.as_slice()), workers, |(r, w)| {
         let n_slots = w.part.n_slots() as u64;
-        match w.compute_superstep(app, step, agg_prev, exec, kern) {
+        let opts = StepOpts {
+            topo,
+            mirror,
+            away: away.get(&r).map(|v| v.as_slice()).unwrap_or(&[]),
+        };
+        match w.compute_superstep(app, step, agg_prev, exec, kern, opts) {
             Ok(o) => {
-                let t = if use_xla {
-                    cost.batch_compute_time(n_slots, o.outbox.raw_count())
-                } else if use_kernels {
-                    cost.kernel_compute_time(o.n_computed, o.outbox.raw_count())
-                } else {
-                    cost.compute_time(o.n_computed, o.outbox.raw_count())
+                let branch = |n: u64, msgs: u64| {
+                    if use_xla {
+                        cost.batch_compute_time(n_slots, msgs)
+                    } else if use_kernels {
+                        cost.kernel_compute_time(n, msgs)
+                    } else {
+                        cost.compute_time(n, msgs)
+                    }
                 };
-                w.clock.advance(t);
+                let t_total = branch(o.n_computed, o.outbox.raw_count());
+                // Delegation (DESIGN.md §11): the compute cost of slots
+                // this worker executed on behalf of a migrated-away
+                // owner is re-charged to the executing rank's clock by
+                // the engine after the phase joins. The per-entry
+                // estimate runs the *same* cost branch with that
+                // entry's (vertex count, degree-weighted message
+                // proxy); it can overshoot the whole-step charge
+                // (shared fixed overheads), so the total is capped at
+                // t_total and scaled proportionally — home time never
+                // goes negative.
+                let mut deleg: Vec<(usize, f64)> = o
+                    .delegated
+                    .iter()
+                    .map(|&(to, n, deg)| (to, branch(n, deg)))
+                    .collect();
+                let mut t_away = 0.0f64;
+                for &(_, t) in &deleg {
+                    t_away += t;
+                }
+                if t_away > t_total {
+                    let scale = t_total / t_away;
+                    for d in &mut deleg {
+                        d.1 *= scale;
+                    }
+                    t_away = t_total;
+                }
+                let t_home = t_total - t_away;
+                w.clock.advance(t_home);
                 // Out-of-core partitions: faults/write-backs of the
                 // page scan, at disk bandwidth.
                 w.settle_page_io(cost);
-                let pc = PhaseCost { messages_sent: o.outbox.raw_count(), ..Default::default() };
-                Ok((r, o, pc))
+                let pc = PhaseCost {
+                    messages_sent: o.outbox.raw_count(),
+                    compute_virt: t_home,
+                    ..Default::default()
+                };
+                Ok((r, o, pc, deleg))
             }
             Err(e) => Err((r, e)),
         }
@@ -397,6 +441,7 @@ pub fn log_phase<A: App>(
     items: Vec<(&mut Worker<A>, &StepOutput<A::M>)>,
     step: u64,
     use_msg_log: bool,
+    mirror: bool,
     cost: &CostModel,
 ) -> Result<Vec<PhaseCost>> {
     let ranks: Vec<usize> = items.iter().map(|(w, _)| w.rank).collect();
@@ -405,7 +450,7 @@ pub fn log_phase<A: App>(
         Some(ranks.as_slice()),
         items,
         |(w, out)| -> Result<PhaseCost> {
-            let bytes = w.write_step_log(step, out, use_msg_log)?;
+            let bytes = w.write_step_log(step, out, use_msg_log, mirror)?;
             let t = cost.log_write_time(bytes) + cost.file_op;
             w.clock.advance(t);
             // The vertex-state log streams from the partition store:
@@ -545,7 +590,11 @@ impl BatchArena {
 /// workers' outgoing messages of `step` from vertex states — emit-only,
 /// via [`super::worker::Worker::replay_generate`] — and serialize the
 /// batches for `dests` (`None` = every destination), charging each
-/// worker's clock. Batches come back in (rank, dest) order.
+/// worker's clock. Batches come back in (rank, dest) order; each
+/// rank's regenerated hub broadcasts (mirroring on) come back
+/// alongside, rank-ascending, so the caller can rebuild the same
+/// mirror expansions the failed run delivered.
+#[allow(clippy::too_many_arguments)]
 pub fn replay_phase<A: App>(
     pool: &WorkerPool,
     workers: Vec<(usize, &mut Worker<A>)>,
@@ -553,15 +602,20 @@ pub fn replay_phase<A: App>(
     step: u64,
     agg_prev: &[f64],
     dests: Option<&[usize]>,
+    topo: Topology,
+    mirror: bool,
     cost: &CostModel,
-) -> Vec<(usize, usize, Vec<u8>)> {
+) -> (Vec<(usize, usize, Vec<u8>)>, Vec<(usize, Vec<HubBcast<A::M>>)>) {
     let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
     let per_worker = pool.map_named("replay", Some(ranks.as_slice()), workers, |(r, w)| {
-        let ob = w.replay_generate(app, step, agg_prev, None);
+        // Replay charges recovery time, not compute delegation: the
+        // away list is irrelevant to emit-only regeneration.
+        let opts = StepOpts { topo, mirror, away: &[] };
+        let (ob, bcasts) = w.replay_generate(app, step, agg_prev, None, opts);
         let n_comp = w.part.comp_count();
         w.clock.advance(cost.compute_time(n_comp, ob.raw_count()));
         w.settle_page_io(cost);
-        match dests {
+        let batches = match dests {
             None => ob
                 .all_batches()
                 .into_iter()
@@ -571,9 +625,16 @@ pub fn replay_phase<A: App>(
                 .iter()
                 .filter_map(|&d| ob.batch_for(d).map(|b| (r, d, b)))
                 .collect::<Vec<(usize, usize, Vec<u8>)>>(),
-        }
+        };
+        (batches, (r, bcasts))
     });
-    per_worker.into_iter().flatten().collect()
+    let mut all_batches = Vec::new();
+    let mut all_bcasts = Vec::new();
+    for (batches, bcasts) in per_worker {
+        all_batches.extend(batches);
+        all_bcasts.push(bcasts);
+    }
+    (all_batches, all_bcasts)
 }
 
 #[cfg(test)]

@@ -37,6 +37,17 @@
 //! contract above (and every wire byte) is unchanged; they are always
 //! on, independent of the engine's `simd` knob, which governs only the
 //! page-scan compute core.
+//!
+//! **Hub mirror batches** (skew-aware mirroring, DESIGN.md §11) extend
+//! the contract without bending it: a hub's owner ships one unit per
+//! destination machine and the engine expands it receiver-side into
+//! per-destination batches in the plain `u32 count, (u32 slot, M)*`
+//! format. Within each source-machine group those expansion batches
+//! fold **after** all plain batches of the group, in ascending source
+//! rank, one batch per (source, destination) pair — a fixed position in
+//! the per-machine partial's left fold, so machine-combine on/off and
+//! mirror-wire on/off all reproduce the identical combine() chain. Hub
+//! batches are never machine-combined themselves.
 
 use super::app::CombineFn;
 use super::kernels;
@@ -107,6 +118,15 @@ impl<M: Codec + Clone> Outbox<M> {
                 *raw_count += 1;
                 queues[part.rank_of(to)].push((to, m));
             }
+        }
+    }
+
+    /// The partitioner this outbox routes with (hub divert decisions in
+    /// `app::EmitCtx::send_all` need destination ranks without holding
+    /// a second borrow of the outbox).
+    pub(crate) fn part(&self) -> Partitioner {
+        match self {
+            Outbox::Combined { part, .. } | Outbox::Direct { part, .. } => *part,
         }
     }
 

@@ -30,10 +30,13 @@ pub mod partition;
 pub mod worker;
 
 pub use aggregator::AggState;
-pub use app::{App, BatchExec, EmitCtx, ExternalReactivation, NoXla, PageScanCtx, UpdateCtx};
-pub use engine::{Engine, EngineConfig, FailurePlan, Kill};
+pub use app::{
+    App, BatchExec, EmitCtx, ExternalReactivation, HubBcast, HubSink, NoXla, PageScanCtx,
+    UpdateCtx,
+};
+pub use engine::{Engine, EngineConfig, FailurePlan, Kill, SkewConfig};
 pub use executor::WorkerPool;
 pub use kernels::{KernelMode, LANES};
 pub use message::{Inbox, Outbox};
 pub use partition::Partition;
-pub use worker::Worker;
+pub use worker::{StepOpts, StepOutput, Worker};

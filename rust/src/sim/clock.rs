@@ -51,6 +51,37 @@ pub fn max_time<I: IntoIterator<Item = f64>>(times: I) -> f64 {
     times.into_iter().fold(0.0f64, f64::max)
 }
 
+/// Canonical clock-time accumulation: the sum of a set of times.
+///
+/// Float addition is *not* associative, so unlike [`max_time`] this is
+/// only deterministic when the iteration order is fixed — which is why
+/// it lives here rather than being open-coded at call sites (detlint
+/// rule D3): every caller hands in a deterministically-ordered
+/// sequence (per-rank ledgers in ascending rank order, window deltas in
+/// ascending rank order), and the single left-fold below is the one
+/// documented order. Used by the migration balancer's mean-load trigger
+/// and the compute-imbalance report.
+#[inline]
+pub fn sum_time<I: IntoIterator<Item = f64>>(times: I) -> f64 {
+    times.into_iter().fold(0.0f64, |a, b| a + b)
+}
+
+/// Mean of a deterministically-ordered set of times (0.0 when empty).
+/// See [`sum_time`] for the fold-order contract.
+#[inline]
+pub fn mean_time<I: IntoIterator<Item = f64>>(times: I) -> f64 {
+    let (mut s, mut n) = (0.0f64, 0u64);
+    for t in times {
+        s += t;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        s / n as f64
+    }
+}
+
 /// Synchronize a set of clocks at a barrier: everyone jumps to the max,
 /// plus a fixed barrier overhead. Returns the post-barrier time.
 pub fn barrier(clocks: &mut [&mut Clock], overhead: f64) -> f64 {
@@ -112,6 +143,14 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a, 3.0);
         assert_eq!(max_time([]), 0.0);
+    }
+
+    #[test]
+    fn sum_and_mean_time() {
+        assert_eq!(sum_time([1.0, 2.0, 4.0]), 7.0);
+        assert_eq!(sum_time([]), 0.0);
+        assert_eq!(mean_time([1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean_time([]), 0.0);
     }
 
     #[test]

@@ -166,6 +166,12 @@ pub struct CostModel {
     /// Pregel+'s compiler did — are unchanged; raise it to study the
     /// measured ratio (hotpath bench section 9).
     pub kernel_speedup: f64,
+    /// Per-entry CPU cost of mirror fan-out: expanding one hub unit's
+    /// message to one machine-local target inside the deliver path
+    /// (skew-aware execution, DESIGN.md §11). Only charged when
+    /// `--mirror-threshold` is set, so the default leaves every
+    /// calibrated table untouched.
+    pub per_mirror_entry: f64,
     // --- control ---
     /// Barrier / collective sync overhead per superstep.
     pub barrier_overhead: f64,
@@ -173,6 +179,11 @@ pub struct CostModel {
     pub spawn_cost: f64,
     /// ULFM revoke+shrink round (failure detection & agreement).
     pub shrink_cost: f64,
+    /// Fixed control-plane cost of one migration barrier: the balancer
+    /// collecting per-worker ledgers, deciding moves, and broadcasting
+    /// the placement-ledger delta. Only charged when `--migrate` fires,
+    /// so the default leaves calibrated tables untouched.
+    pub migrate_admin: f64,
     // --- scaling ---
     /// Data-volume scale factor: every byte/message/vertex count is
     /// multiplied by this before being charged. The benches run a
@@ -209,9 +220,11 @@ impl Default for CostModel {
             xla_launch: 50.0e-6,
             per_ingest_apply: 120.0e-9,
             kernel_speedup: 1.0,
+            per_mirror_entry: 50.0e-9,
             barrier_overhead: 5.0e-3,
             spawn_cost: 2.0,
             shrink_cost: 0.5,
+            migrate_admin: 1.0e-3,
             data_scale: 1.0,
             profile: SystemProfile::PregelPlus,
         }
@@ -371,6 +384,22 @@ impl CostModel {
         self.hdfs_latency + files as f64 * self.file_op
     }
 
+    /// CPU time of mirror fan-out in the deliver path: expanding
+    /// `n_entries` (hub unit × machine-local target) pairs into plain
+    /// inbox batches. Charged alongside the intra-machine staging of the
+    /// expanded bytes; zero unless mirroring is on.
+    pub fn mirror_expand_time(&self, n_entries: u64) -> f64 {
+        self.profile.compute_mult() * self.scaled(n_entries) * self.per_mirror_entry
+    }
+
+    /// Control-plane time of one migration barrier (decision +
+    /// placement-ledger broadcast). The *data* cost of a move — staging
+    /// the migrated execution context — is charged separately through
+    /// [`CostModel::staging_time`].
+    pub fn migrate_admin_time(&self) -> f64 {
+        self.migrate_admin
+    }
+
     /// Aggregator/control-info synchronization across `n_workers`
     /// (tree reduce + broadcast).
     pub fn sync_time(&self, n_workers: usize) -> f64 {
@@ -407,6 +436,13 @@ pub struct PhaseCost {
     /// (`log_writes` / `cp_loads` / `log_loads`), if the phase unit
     /// produced one.
     pub sample: Option<f64>,
+    /// Compute seconds this worker's own clock was charged in the
+    /// compute phase, *after* subtracting delegated execution shipped to
+    /// co-located workers via the placement ledger. The engine
+    /// accumulates this (plus received delegations) into the per-worker
+    /// compute ledgers the migration balancer and the imbalance report
+    /// read.
+    pub compute_virt: f64,
 }
 
 impl PhaseCost {
@@ -543,6 +579,12 @@ mod tests {
     #[test]
     fn ingest_apply_scales_with_records_and_profile() {
         let m = CostModel::default();
+        assert_eq!(m.mirror_expand_time(0), 0.0);
+        assert!(
+            (m.mirror_expand_time(2000) / m.mirror_expand_time(1000) - 2.0).abs() < 1e-12,
+            "mirror fan-out cost must be linear in expanded entries"
+        );
+        assert!(m.migrate_admin_time() > 0.0);
         assert_eq!(m.ingest_apply_time(0), 0.0);
         assert!((m.ingest_apply_time(2000) / m.ingest_apply_time(1000) - 2.0).abs() < 1e-12);
         let giraph = CostModel::with_profile(SystemProfile::GiraphLike);

@@ -40,6 +40,20 @@ pub fn ew_key(rank: usize) -> String {
     format!("ew/w{rank:04}")
 }
 
+/// HDFS key for the placement ledger snapshot committed with CP\[step\]
+/// (skew-aware migration, DESIGN.md §11). Lives under `cp_prefix` so
+/// the previous-checkpoint delete garbage-collects it with the blobs.
+pub fn placement_key(step: u64) -> String {
+    format!("cp/{step:06}/placement")
+}
+
+/// HDFS key for worker `rank`'s mirror table + hub registry (skew-aware
+/// mirroring). Written once at job start, outside `cp/` so checkpoint
+/// GC never touches it; respawned workers reload it on recovery.
+pub fn mirror_key(rank: usize) -> String {
+    format!("mirror/w{rank:04}")
+}
+
 /// Per-vertex state triple of the lightweight checkpoint:
 /// values, active(v), and comp(v) (whether compute() ran in the
 /// checkpointed superstep — needed because message regeneration must

@@ -38,6 +38,12 @@ pub struct LocalLogStore {
     msg_mem: BTreeMap<u64, Vec<u8>>,
     vstate_meta: BTreeMap<u64, u64>,
     vstate_mem: BTreeMap<u64, Vec<u8>>,
+    /// Hub-broadcast log `hlog_<step>`: the pre-expansion owner units of
+    /// skew-aware mirroring (DESIGN.md §11). HwLog/LwLog recovery
+    /// replays the owner's one-unit-per-machine sends and re-expands at
+    /// the receiver, so the log stays hub-sized, not fan-out-sized.
+    hub_meta: BTreeMap<u64, u64>,
+    hub_mem: BTreeMap<u64, Vec<u8>>,
     /// (superstep, encoded mutation batch) since the last checkpoint.
     mutations: Vec<(u64, Vec<u8>)>,
     /// Partial aggregator/control log: superstep -> encoded partial agg.
@@ -67,6 +73,8 @@ impl LocalLogStore {
             msg_mem: BTreeMap::new(),
             vstate_meta: BTreeMap::new(),
             vstate_mem: BTreeMap::new(),
+            hub_meta: BTreeMap::new(),
+            hub_mem: BTreeMap::new(),
             mutations: Vec::new(),
             agg_log: BTreeMap::new(),
         })
@@ -164,6 +172,41 @@ impl LocalLogStore {
         Ok((n, payload))
     }
 
+    // -------------------------------------------------- hub-bcast log
+
+    /// Write the hub-broadcast log for `step` (encoded owner units,
+    /// empty slice allowed — absence of a log then still means "never
+    /// logged", not "no hubs fired"). Returns bytes written.
+    pub fn write_hub_log(&mut self, step: u64, data: &[u8]) -> Result<u64> {
+        let n = data.len() as u64;
+        match self.backing {
+            Backing::Memory => {
+                self.hub_mem.insert(step, data.to_vec());
+            }
+            Backing::Disk => {
+                std::fs::write(self.dir.join(format!("hlog_{step}")), data)?;
+            }
+        }
+        self.hub_meta.insert(step, n);
+        Ok(n)
+    }
+
+    pub fn has_hub_log(&self, step: u64) -> bool {
+        self.hub_meta.contains_key(&step)
+    }
+
+    /// Load the hub-broadcast log of `step`: (bytes, payload).
+    pub fn read_hub_log(&self, step: u64) -> Result<(u64, Vec<u8>)> {
+        let Some(&n) = self.hub_meta.get(&step) else {
+            bail!("w{}: no hub-broadcast log for superstep {step}", self.rank);
+        };
+        let payload = match self.backing {
+            Backing::Memory => self.hub_mem[&step].clone(),
+            Backing::Disk => std::fs::read(self.dir.join(format!("hlog_{step}")))?,
+        };
+        Ok((n, payload))
+    }
+
     // ------------------------------------------------- mutation buffer
     //
     // Two producers share this buffer: in-program mutations buffered
@@ -256,6 +299,10 @@ impl LocalLogStore {
             bytes += *n;
             files += 1;
         }
+        for (_, n) in self.hub_meta.range(..below) {
+            bytes += *n;
+            files += 1;
+        }
         (bytes, files)
     }
 
@@ -299,6 +346,22 @@ impl LocalLogStore {
                 }
             }
         }
+        let h_steps: Vec<u64> = self.hub_meta.range(..below).map(|(s, _)| *s).collect();
+        for s in h_steps {
+            bytes += self
+                .hub_meta
+                .remove(&s)
+                .expect("gc contract: step came from ranging over hub_meta itself");
+            files += 1;
+            match self.backing {
+                Backing::Memory => {
+                    self.hub_mem.remove(&s);
+                }
+                Backing::Disk => {
+                    std::fs::remove_file(self.dir.join(format!("hlog_{s}"))).ok();
+                }
+            }
+        }
         self.agg_log.retain(|s, _| *s >= below);
         (bytes, files)
     }
@@ -307,6 +370,7 @@ impl LocalLogStore {
     pub fn total_bytes(&self) -> u64 {
         self.msg_meta.values().map(|m| m.total).sum::<u64>()
             + self.vstate_meta.values().sum::<u64>()
+            + self.hub_meta.values().sum::<u64>()
             + self.mutation_bytes()
     }
 }
@@ -374,6 +438,25 @@ mod tests {
             assert!(s.has_msg_log(3));
             assert!(s.has_vstate_log(5));
             assert_eq!(s.total_bytes(), 3 * 14);
+        }
+    }
+
+    #[test]
+    fn hub_log_roundtrip_and_gc() {
+        for mut s in stores() {
+            assert!(!s.has_hub_log(3));
+            assert!(s.read_hub_log(3).is_err());
+            s.write_hub_log(3, &[7u8; 12]).unwrap();
+            s.write_hub_log(4, &[]).unwrap(); // hub-less superstep still logs
+            assert!(s.has_hub_log(3) && s.has_hub_log(4));
+            let (n, p) = s.read_hub_log(3).unwrap();
+            assert_eq!((n, p), (12, vec![7u8; 12]));
+            assert_eq!(s.read_hub_log(4).unwrap(), (0, Vec::new()));
+            assert_eq!(s.total_bytes(), 12);
+            assert_eq!(s.gc_preview(4), (12, 1));
+            assert_eq!(s.gc_below(4), (12, 1));
+            assert!(!s.has_hub_log(3));
+            assert!(s.has_hub_log(4));
         }
     }
 

@@ -29,6 +29,7 @@ fn cfg(ft: FtKind, cp_every: u64, async_cp: bool, tag: &str) -> EngineConfig {
         machine_combine: true,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     }
 }
 

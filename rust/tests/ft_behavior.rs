@@ -27,6 +27,7 @@ fn cfg(ft: FtKind, cp_every: u64, tag: &str) -> EngineConfig {
         machine_combine: true,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     }
 }
 

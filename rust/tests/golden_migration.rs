@@ -253,6 +253,7 @@ fn run_new<A: App, F: Fn() -> A>(
         machine_combine: true,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     };
     let mut eng = Engine::new(app_fn(), cfg, adj).expect("engine");
     if let Some(p) = plan {

@@ -35,6 +35,7 @@ fn cfg(simd: bool, page_slots: usize, ft: FtKind, cp_every: u64, tag: &str) -> E
         machine_combine: true,
         simd,
         pager: PagerConfig { memory_budget: None, page_slots },
+        skew: Default::default(),
     }
 }
 

@@ -38,6 +38,7 @@ fn cfg(
         machine_combine,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     }
 }
 

@@ -38,6 +38,7 @@ fn cfg(ft: FtKind, cp_every: u64, pager: PagerConfig, backing: Backing, tag: &st
         machine_combine: true,
         simd: true,
         pager,
+        skew: Default::default(),
     }
 }
 
@@ -237,6 +238,7 @@ fn budget_below_working_set_bounds_resident_bytes() {
         FtKind::LwCp,
         4,
         pager,
+        skew: Default::default(),
         Backing::Memory,
         None,
         "pgw-paged",

@@ -74,6 +74,7 @@ fn cfg(case: &Case, tag: &str) -> EngineConfig {
         machine_combine: true,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     }
 }
 
@@ -253,6 +254,7 @@ fn double_failure_same_worker_rank() {
             machine_combine: true,
             simd: true,
             pager: Default::default(),
+            skew: Default::default(),
         };
         let app = || PageRank { damping: 0.85, supersteps: 12, combiner_enabled: true };
         let mut base = Engine::new(app(), c.clone(), &adj).unwrap();

@@ -1,0 +1,419 @@
+//! Skew-aware execution goldens: high-degree vertex mirroring and the
+//! barrier-time migration balancer must be invisible to correctness.
+//!
+//! * Mirroring re-routes a hub's `send_all` through machine-local
+//!   mirrors. Within a fixed threshold the digest must not move across
+//!   FT algorithms, mid-flight kills, wire formats, or thread counts
+//!   (the hub log + mirror blobs make replay exact). Across
+//!   threshold-on-vs-off the digest is asserted for the min-combiner
+//!   apps (SSSP, hash-min CC), where the fold is order-insensitive
+//!   bit-for-bit; f32 *sum* apps legitimately fold hub messages at a
+//!   different tree position (see DESIGN.md §11).
+//! * Migration delegates execution *cost* only — state stays
+//!   home-resident — so its digest must equal the static-placement run
+//!   everywhere, including a kill after a migration barrier, which
+//!   exercises the checkpointed placement ledger's rollback + replay.
+
+use lwcp::apps::*;
+use lwcp::ft::FtKind;
+use lwcp::graph::{generate, PresetGraph, VertexId};
+use lwcp::ingest::{ProbeKind, ServeProbe};
+use lwcp::pregel::{App, Engine, EngineConfig, FailurePlan, SkewConfig};
+use lwcp::sim::Topology;
+use lwcp::storage::Backing;
+
+fn cfg(ft: FtKind, cp_every: u64, skew: SkewConfig, tag: &str) -> EngineConfig {
+    EngineConfig {
+        topo: Topology::new(3, 2), // 6 workers on 3 machines
+        cost: Default::default(),
+        ft,
+        cp_every,
+        cp_every_secs: None,
+        backing: Backing::Memory,
+        tag: tag.into(),
+        max_supersteps: 10_000,
+        threads: 0,
+        async_cp: true,
+        machine_combine: true,
+        simd: true,
+        pager: Default::default(),
+        skew,
+    }
+}
+
+fn webbase(n: usize) -> Vec<Vec<VertexId>> {
+    PresetGraph::WebBase.spec(n, 42).generate()
+}
+
+fn mirror(threshold: usize) -> SkewConfig {
+    SkewConfig { mirror_threshold: threshold, ..Default::default() }
+}
+
+/// An always-armed balancer (any imbalance above the mean triggers a
+/// decision at every other barrier) — the goldens must hold however
+/// aggressively it fires.
+fn eager_migrate() -> SkewConfig {
+    SkewConfig { migrate: true, migrate_every: 2, migrate_ratio: 1.0, ..Default::default() }
+}
+
+fn digest_of<A: App>(
+    app: A,
+    adj: &[Vec<VertexId>],
+    ft: FtKind,
+    cp_every: u64,
+    skew: SkewConfig,
+    plan: Option<FailurePlan>,
+    tag: &str,
+) -> u64 {
+    let mut eng = Engine::new(app, cfg(ft, cp_every, skew, tag), adj).expect("engine");
+    if let Some(p) = plan {
+        eng = eng.with_failures(p);
+    }
+    eng.run().expect("run");
+    eng.digest()
+}
+
+// ------------------------------------------------------------- mirroring
+
+/// Within mirror-on, every FT algorithm recovers a mid-flight kill to
+/// the failure-free digest, across all seven apps. Kills land after the
+/// first checkpoint so Hw/Lw log replay must reproduce hub broadcasts
+/// from the hub log and respawned workers must reinstall their mirror
+/// tables from the persisted blobs.
+fn mirror_sweep<A: App, F: Fn() -> A>(
+    label: &str,
+    app_fn: F,
+    adj: &[Vec<VertexId>],
+    threshold: usize,
+    cp_every: u64,
+    kill_at: u64,
+) {
+    for ft in FtKind::all() {
+        let tag = format!("skmir-{label}-{}", ft.name());
+        let want = digest_of(
+            app_fn(),
+            adj,
+            ft,
+            cp_every,
+            mirror(threshold),
+            None,
+            &format!("{tag}-b"),
+        );
+        let mut eng = Engine::new(
+            app_fn(),
+            cfg(ft, cp_every, mirror(threshold), &format!("{tag}-f")),
+            adj,
+        )
+        .expect("engine")
+        .with_failures(FailurePlan::kill_n_at(1, kill_at));
+        let m = eng.run().expect("recovery run");
+        assert!(m.recovery_control > 0.0, "{label}/{}: kill never fired", ft.name());
+        assert_eq!(
+            eng.digest(),
+            want,
+            "{label}/{}: mirror-on recovery diverged from failure-free",
+            ft.name()
+        );
+    }
+}
+
+fn path_graph(n: u32) -> Vec<Vec<VertexId>> {
+    (0..n)
+        .map(|v| {
+            let mut l = Vec::new();
+            if v > 0 {
+                l.push(v - 1);
+            }
+            if v + 1 < n {
+                l.push(v + 1);
+            }
+            l
+        })
+        .collect()
+}
+
+#[test]
+fn mirroring_is_recovery_transparent_across_apps_and_algorithms() {
+    mirror_sweep(
+        "pagerank",
+        || PageRank { damping: 0.85, supersteps: 17, combiner_enabled: true },
+        &webbase(600),
+        8,
+        5,
+        12,
+    );
+    mirror_sweep("cc", || HashMinCc, &generate::erdos_renyi(500, 700, false, 5), 2, 3, 5);
+    mirror_sweep(
+        "sssp",
+        || Sssp { source: 0 },
+        &generate::erdos_renyi(400, 1600, false, 6),
+        8,
+        3,
+        4,
+    );
+    mirror_sweep(
+        "triangle",
+        || TriangleCount { c: 1 },
+        &generate::erdos_renyi(150, 1200, false, 7),
+        8,
+        3,
+        5,
+    );
+    mirror_sweep("kcore", || KCore { k: 2 }, &path_graph(120), 1, 4, 10);
+    mirror_sweep(
+        "pointerjump",
+        || PointerJump,
+        &generate::erdos_renyi(300, 450, false, 8),
+        1,
+        2,
+        7,
+    );
+    mirror_sweep(
+        "bipartite",
+        || BipartiteMatching,
+        &generate::erdos_renyi(200, 500, false, 9),
+        1,
+        3,
+        6,
+    );
+}
+
+/// The mirror hot path is deterministic: with a fixed threshold the
+/// digest is identical across engine-pool sizes, both wire formats, and
+/// with a kill layered on top.
+#[test]
+fn mirror_digest_identical_across_threads_and_wire_formats() {
+    let adj = webbase(500);
+    let app = || PageRank { damping: 0.85, supersteps: 13, combiner_enabled: true };
+    for plan in [None, Some(FailurePlan::kill_n_at(1, 8))] {
+        let want = digest_of(app(), &adj, FtKind::LwCp, 4, mirror(8), plan.clone(), "skdet-ref");
+        for wire in [true, false] {
+            for threads in [1usize, 2, 4, 0] {
+                let mut c = cfg(
+                    FtKind::LwCp,
+                    4,
+                    SkewConfig { mirror_threshold: 8, mirror_wire: wire, ..Default::default() },
+                    &format!("skdet-{wire}-{threads}-{}", plan.is_some()),
+                );
+                c.threads = threads;
+                let mut eng = Engine::new(app(), c, &adj).expect("engine");
+                if let Some(p) = plan.clone() {
+                    eng = eng.with_failures(p);
+                }
+                eng.run().expect("run");
+                assert_eq!(
+                    eng.digest(),
+                    want,
+                    "digest differs at wire={wire} threads={threads} (failure: {})",
+                    plan.is_some()
+                );
+            }
+        }
+    }
+}
+
+/// Mirroring must actually divert on a hub-bearing graph: the compact
+/// hub wire lane records bytes, and the hub set at threshold 0 is
+/// empty (bit-exact legacy path, zero hub bytes).
+#[test]
+fn mirror_divert_fires_and_threshold_zero_is_off() {
+    let adj = webbase(600);
+    let app = || PageRank { damping: 0.85, supersteps: 10, combiner_enabled: true };
+    let run = |skew: SkewConfig, tag: &str| {
+        let mut eng = Engine::new(app(), cfg(FtKind::None, 0, skew, tag), &adj).expect("engine");
+        let m = eng.run().expect("run");
+        m.bytes.hub_wire_bytes
+    };
+    assert!(run(mirror(8), "skfire-on") > 0, "threshold 8 found no hubs on WebBase-600");
+    assert_eq!(run(mirror(0), "skfire-off"), 0, "threshold 0 must keep the legacy path");
+}
+
+/// For the min-combiner apps the fold is order-insensitive bit-for-bit,
+/// so mirroring on-vs-off must not move the digest — failure-free and
+/// through a kill.
+#[test]
+fn mirror_on_off_digest_equal_for_min_combiner_apps() {
+    let cl = generate::chung_lu(500, 8.0, 2.2, false, 13);
+    for plan in [None, Some(FailurePlan::kill_n_at(1, 4))] {
+        for ft in [FtKind::LwCp, FtKind::LwLog] {
+            let off = digest_of(HashMinCc, &cl, ft, 3, mirror(0), plan.clone(), "skcc-off");
+            let on = digest_of(HashMinCc, &cl, ft, 3, mirror(8), plan.clone(), "skcc-on");
+            assert_eq!(on, off, "cc/{}: threshold changed the result", ft.name());
+
+            let off =
+                digest_of(Sssp { source: 0 }, &cl, ft, 3, mirror(0), plan.clone(), "sksp-off");
+            let on =
+                digest_of(Sssp { source: 0 }, &cl, ft, 3, mirror(8), plan.clone(), "sksp-on");
+            assert_eq!(on, off, "sssp/{}: threshold changed the result", ft.name());
+        }
+    }
+}
+
+// ------------------------------------------------------------- migration
+
+/// Delegation reassigns execution cost only, so the balancer must be
+/// digest-invariant on-vs-off for every app, and it must actually fire
+/// on the skewed PageRank run.
+#[test]
+fn migration_is_digest_invariant_across_apps() {
+    let cl = generate::chung_lu(600, 8.0, 2.0, true, 17);
+    let clu = generate::chung_lu(500, 8.0, 2.2, false, 13);
+    let tri = generate::erdos_renyi(150, 1200, false, 7);
+
+    // PageRank: also assert the balancer fired.
+    let app = || PageRank { damping: 0.85, supersteps: 14, combiner_enabled: true };
+    let off = digest_of(app(), &cl, FtKind::None, 0, SkewConfig::default(), None, "skmg-pr-off");
+    let mut eng =
+        Engine::new(app(), cfg(FtKind::None, 0, eager_migrate(), "skmg-pr-on"), &cl).unwrap();
+    let m = eng.run().unwrap();
+    assert_eq!(eng.digest(), off, "pagerank: migration moved the digest");
+    assert!(m.migrations > 0, "balancer never fired on the skewed graph");
+    assert!(m.migrated_bytes > 0, "moves recorded no transfer bytes");
+    // Final placement is queryable: the most recent move's vertex
+    // executes at its destination worker.
+    let last = *eng.placement().last().expect("ledger has entries");
+    assert_ne!(last.from, last.to, "self-move recorded");
+    assert_eq!(
+        eng.executing_rank(last.vertex),
+        last.to,
+        "executing_rank disagrees with the ledger tail"
+    );
+
+    for (label, d) in [
+        ("cc", {
+            let off =
+                digest_of(HashMinCc, &clu, FtKind::None, 0, SkewConfig::default(), None, "skmg-cc0");
+            let on = digest_of(HashMinCc, &clu, FtKind::None, 0, eager_migrate(), None, "skmg-cc1");
+            (off, on)
+        }),
+        ("triangle", {
+            let off = digest_of(
+                TriangleCount { c: 1 },
+                &tri,
+                FtKind::None,
+                0,
+                SkewConfig::default(),
+                None,
+                "skmg-tr0",
+            );
+            let on = digest_of(
+                TriangleCount { c: 1 },
+                &tri,
+                FtKind::None,
+                0,
+                eager_migrate(),
+                None,
+                "skmg-tr1",
+            );
+            (off, on)
+        }),
+    ] {
+        assert_eq!(d.1, d.0, "{label}: migration moved the digest");
+    }
+}
+
+/// The placement ledger survives failure: a kill *after* a migration
+/// barrier rolls the ledger back to the checkpointed prefix and replays
+/// the recorded decisions during re-execution — for every FT algorithm
+/// the result equals both the migrate-on and the static-placement
+/// failure-free runs bit for bit.
+#[test]
+fn migration_ledger_rolls_back_and_replays_identically() {
+    let cl = generate::chung_lu(800, 8.0, 2.0, true, 11);
+    let app = || PageRank { damping: 0.85, supersteps: 14, combiner_enabled: true };
+    let static_want =
+        digest_of(app(), &cl, FtKind::None, 0, SkewConfig::default(), None, "skled-static");
+    for ft in FtKind::all() {
+        let base = digest_of(
+            app(),
+            &cl,
+            ft,
+            3,
+            eager_migrate(),
+            None,
+            &format!("skled-{}-b", ft.name()),
+        );
+        assert_eq!(base, static_want, "{}: migrate-on diverged failure-free", ft.name());
+        // cp_every=3, migrate_every=2: the kill at superstep 5 lands
+        // after the barrier-4 decision (in effect from superstep 5) and
+        // after CP[3], whose blob holds the ledger prefix through 3 —
+        // recovery must verify that prefix, drop the in-memory tail,
+        // and re-arrive at the same decisions.
+        let mut eng = Engine::new(
+            app(),
+            cfg(ft, 3, eager_migrate(), &format!("skled-{}-f", ft.name())),
+            &cl,
+        )
+        .unwrap()
+        .with_failures(FailurePlan::kill_n_at(1, 5));
+        let m = eng.run().unwrap();
+        assert!(m.recovery_control > 0.0, "{}: kill never fired", ft.name());
+        assert!(m.migrations > 0, "{}: balancer never fired", ft.name());
+        assert_eq!(
+            eng.digest(),
+            static_want,
+            "{}: post-kill migrate run diverged from static placement",
+            ft.name()
+        );
+    }
+}
+
+/// Mirroring and migration compose: both on, across FT kinds with a
+/// kill, the digest equals the mirror-only failure-free run (migration
+/// skips mirrored hubs, so the two features touch disjoint vertices).
+#[test]
+fn mirror_and_migration_compose() {
+    let cl = generate::chung_lu(600, 8.0, 2.0, true, 17);
+    let app = || PageRank { damping: 0.85, supersteps: 14, combiner_enabled: true };
+    let both = SkewConfig { mirror_threshold: 8, ..eager_migrate() };
+    let want = digest_of(app(), &cl, FtKind::LwCp, 4, mirror(8), None, "skcomp-m");
+    for ft in FtKind::all() {
+        let got = digest_of(
+            app(),
+            &cl,
+            ft,
+            4,
+            both,
+            Some(FailurePlan::kill_n_at(1, 7)),
+            &format!("skcomp-{}", ft.name()),
+        );
+        assert_eq!(got, want, "{}: mirror+migrate+kill diverged", ft.name());
+    }
+}
+
+// ------------------------------------------------------------ serve cache
+
+/// The serving lane's committed-snapshot cache: two probes answered
+/// from the same checkpoint share blobs (cache hits recorded), a newer
+/// commit marker invalidates, and the sample log is bit-identical run
+/// to run.
+#[test]
+fn serve_cache_hits_between_checkpoints_and_invalidates_on_commit() {
+    let adj = webbase(500);
+    let probes = vec![
+        ServeProbe { at_step: 7, kind: ProbeKind::Point(3) },
+        ServeProbe { at_step: 8, kind: ProbeKind::TopK(4) },
+        ServeProbe { at_step: 12, kind: ProbeKind::Point(3) },
+    ];
+    let run = |tag: &str| {
+        let mut c = cfg(FtKind::LwCp, 5, SkewConfig::default(), tag);
+        c.async_cp = false; // commit markers land at their own barrier
+        let app = PageRank { damping: 0.85, supersteps: 15, combiner_enabled: true };
+        let mut eng = Engine::new(app, c, &adj).unwrap().with_probes(probes.clone());
+        let m = eng.run().unwrap();
+        m.serve
+    };
+    let a = run("skserve-a");
+    assert_eq!(a.queries(), 3, "all probes answered");
+    assert!(
+        a.cache_hits >= 1,
+        "probes at steps 7/8 read CP[5] twice but the cache never hit"
+    );
+    assert_eq!(
+        a.samples[2].committed_step,
+        Some(10),
+        "the step-12 probe must see the newer CP[10] commit"
+    );
+    let b = run("skserve-b");
+    assert_eq!(a, b, "serving lane is not deterministic run-to-run");
+}

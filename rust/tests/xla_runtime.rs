@@ -111,6 +111,7 @@ fn cfg(tag: &str, ft: FtKind) -> EngineConfig {
         machine_combine: true,
         simd: true,
         pager: Default::default(),
+        skew: Default::default(),
     }
 }
 
