@@ -41,7 +41,7 @@
 //!    must report moves and reduce the max/mean compute imbalance, all
 //!    at bit-identical digests.
 //!
-//! Results of sections 4, 6, 7, 8, 9 and 10 are also written to
+//! Results of sections 4, 6, 7, 8, 9, 10 and 11 are also written to
 //! `BENCH_hotpath.json` (machine-readable, consumed by CI). Pass
 //! `--check` for a fast smoke run (small graphs, same assertions) —
 //! the CI invocation.
@@ -793,6 +793,97 @@ fn main() {
         );
     }
 
+    // --------------- 11: tracing overhead — observer, not participant
+    // A killed LWCP run with the full event timeline retained vs the
+    // identical run with only the always-on flight recorder: tracing
+    // reads virtual clocks but never advances one, so final virtual
+    // time must be *bitwise* equal and the result digest unmoved —
+    // zero trace overhead is charged to the simulation (DESIGN.md
+    // §12). Wall cost of retention is reported for the record.
+    println!("\n=== Hot path 11 — tracing overhead (virtual-time invariance) ===");
+    let mut json_trace: Vec<String> = Vec::new();
+    {
+        let n11: usize = if check { 6_000 } else { 40_000 };
+        let adj11 = PresetGraph::WebBase.spec(n11, 7).generate();
+        let steps: u64 = if check { 12 } else { 24 };
+        let mut run_traced = |label: &str, trace_on: bool| {
+            let app =
+                PageRank { damping: 0.85, supersteps: steps, combiner_enabled: true };
+            let cfg = EngineConfig {
+                topo: Topology::new(3, 2),
+                cost: Default::default(),
+                ft: FtKind::LwCp,
+                cp_every: 4,
+                cp_every_secs: None,
+                backing: Backing::Memory,
+                tag: format!("hp11-{label}"),
+                max_supersteps: 10_000,
+                threads: 0,
+                async_cp: true,
+                machine_combine: true,
+                simd: true,
+                pager: Default::default(),
+                skew: Default::default(),
+            };
+            let mut eng = Engine::new(app, cfg, &adj11)
+                .expect("engine")
+                .with_failures(FailurePlan::kill_n_at(1, steps / 2))
+                .with_trace(trace_on);
+            let t0 = Instant::now();
+            let m = eng.run().expect("run");
+            let wall = t0.elapsed().as_secs_f64() * 1e3;
+            let digest = eng.digest();
+            json_trace.push(json_obj(&[
+                ("run", json_str(label)),
+                ("trace", trace_on.to_string()),
+                ("events", m.trace.len().to_string()),
+                ("final_time_bits", m.final_time.to_bits().to_string()),
+                ("wall_ms", format!("{wall:.1}")),
+                ("digest", json_str(&format!("{digest:016x}"))),
+            ]));
+            (digest, m, wall)
+        };
+        let (dig_off, m_off, wall_off) = run_traced("trace-off", false);
+        let (dig_on, m_on, wall_on) = run_traced("trace-on", true);
+
+        let mut t = Table::new(vec!["run", "events", "virtual time", "wall ms"]);
+        for (label, m, wall) in
+            [("trace-off", &m_off, wall_off), ("trace-on", &m_on, wall_on)]
+        {
+            t.row(vec![
+                label.to_string(),
+                m.trace.len().to_string(),
+                format!("{:.2}", m.final_time),
+                format!("{wall:.1}"),
+            ]);
+        }
+        t.print();
+
+        assert_eq!(
+            dig_off, dig_on,
+            "tracing changed the result (off={dig_off:016x} on={dig_on:016x})"
+        );
+        assert_eq!(
+            m_off.final_time.to_bits(),
+            m_on.final_time.to_bits(),
+            "tracing charged virtual time (off={} on={})",
+            m_off.final_time,
+            m_on.final_time
+        );
+        assert!(m_off.trace.is_empty(), "trace-off run retained a timeline");
+        assert!(!m_on.trace.is_empty(), "trace-on run recorded no events");
+        assert_eq!(
+            m_off.forensics.len(),
+            m_on.forensics.len(),
+            "flight recorder must dump identically with retention on or off"
+        );
+        println!(
+            "  [PASS] digest + virtual time bitwise invariant across tracing, \
+             {} events retained",
+            m_on.trace.len()
+        );
+    }
+
     // ------------------------------------------- machine-readable dump
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"check_mode\": {check},\n  \
@@ -801,13 +892,15 @@ fn main() {
          \"machine_combine\": [\n    {}\n  ],\n  \
          \"paged_store\": [\n    {}\n  ],\n  \
          \"kernels\": [\n    {}\n  ],\n  \
-         \"skew\": [\n    {}\n  ]\n}}\n",
+         \"skew\": [\n    {}\n  ],\n  \
+         \"tracing\": [\n    {}\n  ]\n}}\n",
         json_pipeline.join(",\n    "),
         json_overlap.join(",\n    "),
         json_mc.join(",\n    "),
         json_pager.join(",\n    "),
         json_kernels.join(",\n    "),
         json_skew.join(",\n    "),
+        json_trace.join(",\n    "),
     );
     let path = "BENCH_hotpath.json";
     std::fs::write(path, &json).expect("write BENCH_hotpath.json");

@@ -45,6 +45,18 @@
 //!                                     barrier, answered from the latest
 //!                                     committed checkpoint)
 //!          [--top-k STEP:K]...       (top-k read by App::serve_score)
+//!          [--trace-out FILE]  (export the structured run timeline as
+//!                               Chrome trace-event JSON — open in
+//!                               Perfetto / chrome://tracing; virtual
+//!                               sim time, bit-identical at any
+//!                               --threads value)
+//!          [--report-json FILE]  (machine-readable JSONL run report:
+//!                                 one record per superstep + a final
+//!                                 `run` record; `obs::report` is the
+//!                                 schema contract)
+//!          [--quiet]   (suppress the human-facing tables and summary
+//!                       lines; --report-json/--trace-out files and the
+//!                       stderr failure forensics still emit)
 //! lwcp serve  (same flags as run; requires at least one --query/--top-k,
 //!              prints one `serve query=… staleness=…` line per answer;
 //!              [--staleness-bound N] fails the run if an answer is
@@ -62,7 +74,6 @@ use crate::pregel::{FailurePlan, Kill};
 use crate::runtime::XlaRegistry;
 use crate::sim::{SystemProfile, Topology};
 use crate::storage::{Backing, PagerConfig};
-use crate::util::fmtutil::secs;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -273,6 +284,7 @@ pub fn spec_from_flags(f: &Flags) -> Result<JobSpec> {
         probes,
         mirror_threshold: f.parse_or("mirror-threshold", 0)?,
         migrate: f.has("migrate"),
+        trace: f.has("trace-out") || f.has("report-json"),
     })
 }
 
@@ -291,75 +303,36 @@ fn cmd_run(f: &Flags) -> Result<()> {
         spec.graph
     );
     let m = run_job(&spec, exec)?;
-    let mut t = report::superstep_table();
-    t.row(report::superstep_row(spec.ft.name(), &m));
-    t.print();
-    let mut io = report::io_table();
-    io.row(report::io_row(spec.ft.name(), &m));
-    io.print();
-    if !m.cp_overlap.is_empty() {
-        let mut ov = report::overlap_table();
-        ov.row(report::overlap_row(spec.ft.name(), &m));
-        ov.print();
+    let em = report::Emitter::new(f.has("quiet"));
+    for t in report::run_tables(spec.ft.name(), &m) {
+        em.table(t);
     }
-    let mut wt = report::wire_table();
-    wt.row(report::wire_row(spec.ft.name(), &m));
-    wt.print();
-    if !m.compute_virt.is_empty() {
-        let mut bt = report::balance_table();
-        bt.row(report::balance_row(spec.ft.name(), &m));
-        bt.print();
-    }
-    if m.pager.faults > 0 {
-        let mut pt = report::pager_table();
-        pt.row(report::pager_row(spec.ft.name(), &m));
-        pt.print();
-    }
-    if m.ingest != Default::default() {
-        let mut it = report::ingest_table();
-        it.row(report::ingest_row(spec.ft.name(), &m));
-        it.print();
-    }
-    print_serve_samples(&m);
-    println!(
-        "supersteps={} virtual_time={} wall={:.0} ms kernels={} shuffled={} wire={} \
-         hub_wire={} cp_bytes={} resident_peak={} faults={} imbalance={:.2} migrations={}",
-        m.supersteps_run,
-        secs(m.final_time),
-        m.wall_ms,
+    print_serve_samples(&em, &m);
+    em.line(&report::summary_line(
+        &m,
         if spec.simd { "simd" } else { "scalar" },
-        crate::util::fmtutil::bytes(m.bytes.shuffle_bytes),
-        crate::util::fmtutil::bytes(m.bytes.wire_bytes),
-        crate::util::fmtutil::bytes(m.bytes.hub_wire_bytes),
-        crate::util::fmtutil::bytes(m.bytes.checkpoint_bytes),
-        crate::util::fmtutil::bytes(m.pager.resident_peak),
-        m.pager.faults,
-        m.compute_imbalance(),
-        m.migrations,
-    );
+    ));
+    // File exports are the machine-facing product: they write even
+    // under --quiet.
+    if let Some(path) = f.get("trace-out") {
+        std::fs::write(path, crate::obs::chrome::chrome_trace(&m.trace))
+            .with_context(|| format!("writing --trace-out {path}"))?;
+        eprintln!("lwcp: wrote chrome trace ({} events) to {path}", m.trace.len());
+    }
+    if let Some(path) = f.get("report-json") {
+        std::fs::write(path, crate::obs::report::run_report_jsonl(&m))
+            .with_context(|| format!("writing --report-json {path}"))?;
+        eprintln!("lwcp: wrote jsonl report to {path}");
+    }
     Ok(())
 }
 
 /// One `serve query=…` line per answered probe (stable, greppable —
-/// the CI smoke test and scripts key on `staleness=`).
-fn print_serve_samples(m: &crate::metrics::RunMetrics) {
-    if m.serve.samples.is_empty() {
-        return;
-    }
-    let mut st = report::serve_table();
-    for row in report::serve_rows(m) {
-        st.row(row);
-    }
-    st.print();
+/// the CI smoke test and scripts key on `staleness=`). The answers
+/// table itself comes from `report::run_tables`/`serve_tables`.
+fn print_serve_samples(em: &report::Emitter, m: &crate::metrics::RunMetrics) {
     for s in &m.serve.samples {
-        println!(
-            "serve query={} head={} committed={} staleness={} result=\"{}\"",
-            s.query,
-            s.at_step,
-            s.committed_step.map_or("-".to_string(), |c| c.to_string()),
-            s.staleness.map_or("-".to_string(), |x| x.to_string()),
-            s.result,
-        );
+        em.line(&report::serve_sample_line(s));
     }
 }
 
@@ -384,12 +357,11 @@ fn cmd_serve(f: &Flags) -> Result<()> {
         spec.ingest.len(),
     );
     let m = run_job(&spec, None)?;
-    if m.ingest != Default::default() {
-        let mut it = report::ingest_table();
-        it.row(report::ingest_row(spec.ft.name(), &m));
-        it.print();
+    let em = report::Emitter::new(f.has("quiet"));
+    for t in report::serve_tables(spec.ft.name(), &m) {
+        em.table(t);
     }
-    print_serve_samples(&m);
+    print_serve_samples(&em, &m);
     if let Some(bound) = f.get("staleness-bound") {
         let bound: u64 = bound
             .parse()
@@ -582,6 +554,22 @@ mod tests {
         assert_eq!(spec.probes[0].at_step, 10);
         assert!(matches!(spec.probes[0].kind, ProbeKind::Point(3)));
         assert!(matches!(spec.probes[2].kind, ProbeKind::TopK(4)));
+    }
+
+    #[test]
+    fn trace_flags_parse() {
+        let spec = spec_from_flags(&flags("")).unwrap();
+        assert!(!spec.trace, "timeline retention defaults off");
+        let spec = spec_from_flags(&flags("--trace-out /tmp/t.json")).unwrap();
+        assert!(spec.trace, "--trace-out turns the full timeline on");
+        let spec = spec_from_flags(&flags("--report-json /tmp/r.jsonl")).unwrap();
+        assert!(spec.trace, "the JSONL report counts events, so it retains too");
+        // --quiet is a CLI-layer concern: it never reaches the JobSpec.
+        let spec = spec_from_flags(&flags("--quiet")).unwrap();
+        assert!(!spec.trace);
+        let f = flags("--quiet --trace-out /tmp/t.json");
+        assert!(f.has("quiet"));
+        assert_eq!(f.get("trace-out"), Some("/tmp/t.json"));
     }
 
     #[test]

@@ -132,6 +132,12 @@ pub struct JobSpec {
     /// vertices' compute between co-located workers. Digests are
     /// identical either way.
     pub migrate: bool,
+    /// Retain the full structured-event timeline (CLI `--trace-out` /
+    /// `--report-json`): the exporters read `RunMetrics::trace`. The
+    /// bounded flight recorder is always on regardless; tracing never
+    /// advances a virtual clock, so digests and times are identical
+    /// either way.
+    pub trace: bool,
 }
 
 impl JobSpec {
@@ -161,6 +167,7 @@ impl JobSpec {
             probes: Vec::new(),
             mirror_threshold: 0,
             migrate: false,
+            trace: false,
         }
     }
 
@@ -198,7 +205,8 @@ fn run_app<A: App>(
 ) -> Result<RunMetrics> {
     let mut engine = Engine::new(app, spec.config(), adj)?
         .with_failures(spec.plan.clone())
-        .with_probes(spec.probes.clone());
+        .with_probes(spec.probes.clone())
+        .with_trace(spec.trace);
     if let Some(exec) = exec {
         engine = engine.with_exec(exec);
     }

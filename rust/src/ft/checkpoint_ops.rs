@@ -32,6 +32,7 @@
 
 use crate::ft::FtKind;
 use crate::metrics::{CpOverlap, StepKind};
+use crate::obs::EventKind;
 use crate::pregel::app::App;
 use crate::pregel::engine::Engine;
 use crate::pregel::executor::{self, TaskHandle};
@@ -93,12 +94,16 @@ impl<A: App> Engine<A> {
                 // a paged store blits cold pages from its spill file.
                 let mut blob = Vec::new();
                 w.part.encode_cp0_into(&mut blob);
-                w.clock.advance(cost.snapshot_time(blob.len() as u64));
+                let t_enc = w.clock.now();
+                let dt = cost.snapshot_time(blob.len() as u64);
+                w.clock.advance(dt);
+                w.tracer.emit(t_enc, dt, 0, EventKind::CpSnapshot { bytes: blob.len() as u64 });
                 w.settle_page_io(cost);
                 (r, blob)
             })
         };
         let t_snap = self.barrier(0.0);
+        self.drain_trace();
         let mut flush_virtual = 0.0f64;
         let mut put_times = Vec::with_capacity(blobs.len());
         for (r, b) in &blobs {
@@ -259,7 +264,15 @@ impl<A: App> Engine<A> {
                         inc.extend_from_slice(&seg);
                     }
                 }
-                w.clock.advance(cost.snapshot_time((blob.len() + inc.len()) as u64));
+                let t_enc = w.clock.now();
+                let dt = cost.snapshot_time((blob.len() + inc.len()) as u64);
+                w.clock.advance(dt);
+                w.tracer.emit(
+                    t_enc,
+                    dt,
+                    step,
+                    EventKind::CpSnapshot { bytes: (blob.len() + inc.len()) as u64 },
+                );
                 w.settle_page_io(cost);
                 let gc = match gc_below {
                     Some(below) => w.log.gc_preview(below),
@@ -269,6 +282,7 @@ impl<A: App> Engine<A> {
             })
         };
         let t_snap = self.barrier(0.0);
+        self.drain_trace();
 
         // ---- modeled flush duration (deterministic byte counts) ----
         let mut flush_virtual = 0.0f64;
@@ -431,6 +445,12 @@ impl<A: App> Engine<A> {
             for (r, t) in inf.put_times {
                 self.workers[r].clock.advance(t);
             }
+            self.recorder.master(
+                inf.t_snap,
+                inf.flush_virtual,
+                inf.step,
+                EventKind::CpFlush { hidden: 0.0, exposed: 0.0, committed: false },
+            );
             self.metrics.phase_wall.checkpoint += wall.elapsed_ms();
             return Ok(());
         }
@@ -478,6 +498,15 @@ impl<A: App> Engine<A> {
             hidden,
             exposed,
         });
+        // Async slice on the master lane: snapshot barrier → commit,
+        // with the overlap split the join just computed. Wall-clock
+        // flush_ms stays out of the event (trace determinism).
+        self.recorder.master(
+            inf.t_snap,
+            inf.flush_virtual,
+            inf.step,
+            EventKind::CpFlush { hidden, exposed, committed: true },
+        );
         if inf.is_cp0 {
             self.metrics.t_cp0 = inf.t_encode + inf.flush_virtual;
         } else {

@@ -17,6 +17,7 @@
 //! `replay_phase`, and everything funnels into the shared `deliver`.
 
 use crate::ft::FtKind;
+use crate::obs::{forensics, Event, EventKind, FailureReport};
 use crate::pregel::app::{App, HubBcast};
 use crate::pregel::engine::{Engine, Stage};
 use crate::pregel::executor;
@@ -44,7 +45,9 @@ fn load_heavy_cp_worker<A: App>(
         .get(&cp_key(cp_step, rank))
         .with_context(|| format!("loading CP[{cp_step}] for worker {rank}"))?;
     let t = cost.hdfs_read_time(blob.len() as u64, sharers);
+    let t0 = w.clock.now();
     w.clock.advance(t);
+    w.tracer.emit(t0, t, cp_step, EventKind::CpLoad { bytes: blob.len() as u64 });
     if cp_step == 0 {
         let cp0 = Cp0::<A::V>::from_bytes(&blob)?;
         w.part.restore_cp0(cp0.values, cp0.active, &cp0.adj);
@@ -85,16 +88,19 @@ fn load_light_cp_worker<A: App>(
         .get(&cp_key(cp_step, rank))
         .with_context(|| format!("loading LWCP[{cp_step}] for worker {rank}"))?;
     let mut t = cost.hdfs_read_time(blob.len() as u64, sharers);
+    let mut read_bytes = blob.len() as u64;
     let states = LwCp::<A::V>::from_bytes(&blob)?;
     if reload_edges {
         let cp0_blob = hdfs.get(&cp_key(0, rank))?;
         t += cost.hdfs_read_time(cp0_blob.len() as u64, sharers);
+        read_bytes += cp0_blob.len() as u64;
         let cp0 = Cp0::<A::V>::from_bytes(&cp0_blob)?;
         w.part.restore_adjacency(&cp0.adj);
         // Replay the incremental mutation log E_W in append order.
         if hdfs.exists(&ew_key(rank)) {
             let ew = hdfs.get(&ew_key(rank))?;
             t += cost.hdfs_read_time(ew.len() as u64, sharers);
+            read_bytes += ew.len() as u64;
             let mut rd = Reader::new(&ew);
             while !rd.is_empty() {
                 let m = crate::graph::Mutation::decode(&mut rd)?;
@@ -106,7 +112,9 @@ fn load_light_cp_worker<A: App>(
     w.part.restore_states(states);
     w.log.clear_mutations();
     w.s_w = cp_step;
+    let t0 = w.clock.now();
     w.clock.advance(t);
+    w.tracer.emit(t0, t, cp_step, EventKind::CpLoad { bytes: read_bytes });
     // Restored pages of a paged partition re-spill at disk bandwidth.
     w.settle_page_io(cost);
     Ok(t)
@@ -128,6 +136,20 @@ impl<A: App> Engine<A> {
         let kill = self.failure_plan.kills[kidx].clone();
         self.next_kill = kidx + 1;
 
+        // Flight recorder: flush every worker's undrained events (the
+        // failed superstep's compute/log spans) into the rings *before*
+        // the respawn below discards the dead workers' buffers, and
+        // snapshot the doomed lanes' rings — recovery events at the
+        // same ranks belong to the replacement workers, not the dump.
+        self.drain_trace();
+        let ring_snaps: Vec<(u32, Vec<Event>)> = kill
+            .ranks
+            .iter()
+            .map(|&r| {
+                (r as u32, self.recorder.ring(r as u32).into_iter().cloned().collect())
+            })
+            .collect();
+
         // The failure: the machines' local state (logs!) is gone.
         self.ws.kill(&kill.ranks, kill.machine_fails);
 
@@ -147,6 +169,15 @@ impl<A: App> Engine<A> {
         for &r in &outcome.survivors {
             self.workers[r].clock.sync_to(t_ready);
         }
+        self.recorder.master(
+            t_base,
+            0.0,
+            step,
+            EventKind::Kill {
+                ranks: kill.ranks.iter().map(|&r| r as u32).collect(),
+                during_cp: kill.during_cp,
+            },
+        );
 
         // Replace dead workers: same rank (hash(.) unchanged), fresh
         // local disk, state loaded below by new_worker_recovery.
@@ -205,12 +236,26 @@ impl<A: App> Engine<A> {
         // On-the-fly messages of the failed superstep are dropped.
         self.reset_inboxes();
 
+        let ingest_replayed_before = self.metrics.ingest.replayed_batches;
         match self.cfg.ft {
             FtKind::None => unreachable!(),
             FtKind::HwCp | FtKind::HwLog => self.recover_heavy(&outcome)?,
             FtKind::LwCp => self.recover_lwcp(&outcome)?,
             FtKind::LwLog => self.recover_lwlog(&outcome)?,
         }
+        // The recovery phases emitted cp-load / log-forward spans into
+        // the worker tracers; drain them here so the dump's re-read
+        // totals come from the same event stream the trace exports.
+        let drained = self.drain_trace_collect();
+        let (mut cp_bytes_reread, mut log_bytes_reread) = (0u64, 0u64);
+        for ev in &drained {
+            match ev.kind {
+                EventKind::CpLoad { bytes } => cp_bytes_reread += bytes,
+                EventKind::LogForward { bytes } => log_bytes_reread += bytes,
+                _ => {}
+            }
+        }
+        self.recorder.absorb(drained);
 
         // Re-seed the external ingest batch of barrier cp_last: it
         // buffers under E_W key cp_last+1, so no committed checkpoint
@@ -234,6 +279,36 @@ impl<A: App> Engine<A> {
             .expect("recovery contract: the survivor set is non-empty (recover() bails otherwise)")
             .max(step);
         self.stage = Stage::Recovering { failure_step };
+
+        // The recovery decision, on the master lane and in the dump.
+        let rep = FailureReport {
+            kill_index: kidx,
+            step,
+            ranks: kill.ranks.iter().map(|&r| r as u32).collect(),
+            machine_fails: kill.machine_fails,
+            during_cp: kill.during_cp,
+            t_fail: t_base,
+            cp: self.cp_last,
+            failure_step,
+            cp_bytes_reread,
+            log_bytes_reread,
+            ingest_batches_reapplied: self.metrics.ingest.replayed_batches
+                - ingest_replayed_before,
+            control_time: outcome.control_time,
+        };
+        self.recorder.master(
+            t1,
+            0.0,
+            step,
+            EventKind::Rollback { cp: rep.cp, failure_step, depth: rep.depth() },
+        );
+        let ring_refs: Vec<(u32, Vec<&Event>)> =
+            ring_snaps.iter().map(|(r, evs)| (*r, evs.iter().collect())).collect();
+        let dump = forensics::render(&rep, &ring_refs);
+        // Always-on and quiet-proof: the dump goes to stderr on every
+        // injected failure and rides the metrics for the JSONL report.
+        eprint!("{dump}");
+        self.metrics.forensics.push(dump);
         Ok(self.cp_last + 1)
     }
 
@@ -428,7 +503,9 @@ impl<A: App> Engine<A> {
                     let (ob, bcasts) =
                         w.replay_generate(app_ref, step, agg_prev, Some(states), opts);
                     let t = t_load + cost.compute_time(n_comp, ob.raw_count());
+                    let t0 = w.clock.now();
                     w.clock.advance(t);
+                    w.tracer.emit(t0, t, step, EventKind::LogForward { bytes });
                     // State-substituted replay pins only edge pages;
                     // settle their faults.
                     w.settle_page_io(cost);
@@ -443,11 +520,13 @@ impl<A: App> Engine<A> {
                         bail!("worker {r} has no log for recovery superstep {step}");
                     }
                     let mut t = 0.0;
+                    let mut fwd_bytes = 0u64;
                     let mut out: Vec<(usize, usize, Vec<u8>)> = Vec::new();
                     for &d in dests {
                         let (bytes, payload) = w.log.read_msg_log(step, d)?;
                         if !payload.is_empty() {
                             t += cost.log_read_time(bytes);
+                            fwd_bytes += bytes;
                             out.push((r, d, payload));
                         }
                     }
@@ -459,10 +538,13 @@ impl<A: App> Engine<A> {
                     if mirror_on && w.log.has_hub_log(step) {
                         let (hb, payload) = w.log.read_hub_log(step)?;
                         t += cost.log_read_time(hb);
+                        fwd_bytes += hb;
                         bcasts = Worker::<A>::decode_hub_log(&payload)?;
                     }
                     let sample = if t > 0.0 {
+                        let t0 = w.clock.now();
                         w.clock.advance(t);
+                        w.tracer.emit(t0, t, step, EventKind::LogForward { bytes: fwd_bytes });
                         Some(t)
                     } else {
                         None

@@ -39,6 +39,7 @@ pub mod ft;
 pub mod graph;
 pub mod ingest;
 pub mod metrics;
+pub mod obs;
 pub mod pregel;
 pub mod runtime;
 pub mod sim;

@@ -30,6 +30,19 @@ pub enum StepKind {
     LastRecovery,
 }
 
+impl StepKind {
+    /// Stable lower-case name — the `kind` field of superstep records
+    /// in the JSONL report and of `superstep` trace events.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StepKind::Normal => "normal",
+            StepKind::CpStep => "cp-step",
+            StepKind::Recovery => "recovery",
+            StepKind::LastRecovery => "last-recovery",
+        }
+    }
+}
+
 /// One superstep's simulated duration.
 #[derive(Debug, Clone, Copy)]
 pub struct StepRecord {
@@ -180,6 +193,13 @@ pub struct RunMetrics {
     /// Modeled bytes of migrated vertex state+adjacency staged between
     /// co-located workers (charged as staging time, not wire bytes).
     pub migrated_bytes: u64,
+    /// The full deterministic event timeline (`obs`), retained only
+    /// when the run asked for it (`Engine::with_trace` /
+    /// `--trace-out`); empty otherwise. Every timestamp is virtual.
+    pub trace: Vec<crate::obs::Event>,
+    /// One rendered flight-recorder dump per injected failure (always
+    /// on — the bounded rings behind it cost nothing to keep).
+    pub forensics: Vec<String>,
 }
 
 /// Totals of the external ingest lane (`ingest` module): journal

@@ -1,7 +1,138 @@
 //! Pretty reporting of run metrics in the paper's table layout.
+//!
+//! All human-facing output of the CLI routes through one [`Emitter`]:
+//! `--quiet` turns the tables and summary lines off in a single place,
+//! while the machine-readable JSONL report (`--report-json`) and the
+//! stderr failure forensics are deliberately *not* routed through it —
+//! quiet mode silences the pretty print, never the contracts.
 
-use super::RunMetrics;
+use super::{RunMetrics, ServeSample};
 use crate::util::fmtutil::{bytes, secs, Table};
+
+/// The single sink for tables and summary lines (`--quiet` switch).
+pub struct Emitter {
+    quiet: bool,
+}
+
+impl Emitter {
+    pub fn new(quiet: bool) -> Self {
+        Emitter { quiet }
+    }
+
+    /// Is table/summary output suppressed?
+    pub fn quiet(&self) -> bool {
+        self.quiet
+    }
+
+    /// Print one assembled table, unless quiet.
+    pub fn table(&self, t: Table) {
+        if !self.quiet {
+            t.print();
+        }
+    }
+
+    /// Print one summary line, unless quiet.
+    pub fn line(&self, s: &str) {
+        if !self.quiet {
+            println!("{s}");
+        }
+    }
+}
+
+/// Assemble the full `run` table set for one finished job, in the
+/// order the CLI has always printed them; conditional tables appear
+/// only when their subsystem did something.
+pub fn run_tables(name: &str, m: &RunMetrics) -> Vec<Table> {
+    let mut out = Vec::new();
+    let mut t = superstep_table();
+    t.row(superstep_row(name, m));
+    out.push(t);
+    let mut io = io_table();
+    io.row(io_row(name, m));
+    out.push(io);
+    if !m.cp_overlap.is_empty() {
+        let mut ov = overlap_table();
+        ov.row(overlap_row(name, m));
+        out.push(ov);
+    }
+    let mut wt = wire_table();
+    wt.row(wire_row(name, m));
+    out.push(wt);
+    if !m.compute_virt.is_empty() {
+        let mut bt = balance_table();
+        bt.row(balance_row(name, m));
+        out.push(bt);
+    }
+    if m.pager.faults > 0 {
+        let mut pt = pager_table();
+        pt.row(pager_row(name, m));
+        out.push(pt);
+    }
+    if m.ingest != Default::default() {
+        let mut it = ingest_table();
+        it.row(ingest_row(name, m));
+        out.push(it);
+    }
+    if !m.serve.samples.is_empty() {
+        let mut st = serve_table();
+        for row in serve_rows(m) {
+            st.row(row);
+        }
+        out.push(st);
+    }
+    out
+}
+
+/// The `serve` subcommand's table subset: ingest activity + answers.
+pub fn serve_tables(name: &str, m: &RunMetrics) -> Vec<Table> {
+    let mut out = Vec::new();
+    if m.ingest != Default::default() {
+        let mut it = ingest_table();
+        it.row(ingest_row(name, m));
+        out.push(it);
+    }
+    if !m.serve.samples.is_empty() {
+        let mut st = serve_table();
+        for row in serve_rows(m) {
+            st.row(row);
+        }
+        out.push(st);
+    }
+    out
+}
+
+/// The final one-line run summary (greppable `key=value` pairs).
+pub fn summary_line(m: &RunMetrics, kernels: &str) -> String {
+    format!(
+        "supersteps={} virtual_time={} wall={:.0} ms kernels={} shuffled={} wire={} \
+         hub_wire={} cp_bytes={} resident_peak={} faults={} imbalance={:.2} migrations={}",
+        m.supersteps_run,
+        secs(m.final_time),
+        m.wall_ms,
+        kernels,
+        bytes(m.bytes.shuffle_bytes),
+        bytes(m.bytes.wire_bytes),
+        bytes(m.bytes.hub_wire_bytes),
+        bytes(m.bytes.checkpoint_bytes),
+        bytes(m.pager.resident_peak),
+        m.pager.faults,
+        m.compute_imbalance(),
+        m.migrations,
+    )
+}
+
+/// One stable `serve query=…` line per answered probe (scripts and the
+/// CI smoke test key on `staleness=`).
+pub fn serve_sample_line(s: &ServeSample) -> String {
+    format!(
+        "serve query={} head={} committed={} staleness={} result=\"{}\"",
+        s.query,
+        s.at_step,
+        s.committed_step.map_or("-".to_string(), |c| c.to_string()),
+        s.staleness.map_or("-".to_string(), |x| x.to_string()),
+        s.result,
+    )
+}
 
 /// Render the Table-2-style row for one algorithm.
 pub fn superstep_row(name: &str, m: &RunMetrics) -> Vec<String> {
@@ -234,6 +365,37 @@ mod tests {
         assert!(r[4].starts_with("w1"));
         assert_eq!(r[5], "5");
         assert!(balance_table().render().contains("imbalance"));
+    }
+
+    #[test]
+    fn emitter_and_consolidated_writers() {
+        let mut m = RunMetrics::default();
+        m.supersteps_run = 3;
+        m.compute_virt = vec![1.0, 2.0];
+        // superstep + io + wire + balance (overlap/pager/ingest/serve idle).
+        assert_eq!(run_tables("LWCP", &m).len(), 4);
+        m.serve.samples.push(crate::metrics::ServeSample {
+            at_step: 4,
+            committed_step: Some(2),
+            staleness: Some(2),
+            query: "point(1)".into(),
+            result: "0.1".into(),
+            read_cost: 0.0,
+        });
+        assert_eq!(run_tables("LWCP", &m).len(), 5);
+        assert_eq!(serve_tables("LWCP", &m).len(), 1);
+        let line = summary_line(&m, "simd");
+        assert!(line.starts_with("supersteps=3"));
+        assert!(line.contains("kernels=simd"));
+        assert!(line.contains("migrations=0"));
+        let sl = serve_sample_line(&m.serve.samples[0]);
+        assert!(sl.contains("serve query=point(1)"));
+        assert!(sl.contains("staleness=2"));
+        let em = Emitter::new(true);
+        assert!(em.quiet());
+        em.line("suppressed"); // no output, no panic
+        em.table(superstep_table());
+        assert!(!Emitter::new(false).quiet());
     }
 
     #[test]

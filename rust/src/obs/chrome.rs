@@ -1,0 +1,167 @@
+//! Chrome trace-event JSON export (`--trace-out`), viewable in
+//! Perfetto / `chrome://tracing`.
+//!
+//! Mapping: `pid` = machine, `tid` = worker rank, with the engine
+//! lane on the sentinel `MASTER` ids; spans are `"X"` complete events,
+//! instant events are `"i"`, and the detached checkpoint flush is a
+//! `"b"`/`"e"` async pair (id = superstep) so its hidden/exposed
+//! overlap is visible as a slice floating over the compute lanes.
+//! Timestamps are **virtual** sim time in microseconds
+//! ([`crate::sim::clock::micros`]) — never wall time — which is why
+//! the exported bytes are identical at any thread-pool size.
+
+use super::event::{ArgVal, Event, EventKind, MASTER};
+use super::json::Json;
+use crate::sim::clock::micros;
+use std::collections::BTreeSet;
+
+fn lane_name(id: u32, kind: &str) -> String {
+    if id == MASTER {
+        "engine".to_string()
+    } else {
+        format!("{kind} {id}")
+    }
+}
+
+fn arg_json(v: &ArgVal) -> Json {
+    match v {
+        ArgVal::U(x) => Json::U(*x),
+        ArgVal::F(x) => Json::F(*x),
+        ArgVal::B(x) => Json::Bool(*x),
+        ArgVal::S(x) => Json::Str(x.clone()),
+    }
+}
+
+fn args_obj(ev: &Event) -> Json {
+    let mut pairs = vec![("step".to_string(), Json::U(ev.step))];
+    for (k, v) in ev.kind.args() {
+        pairs.push((k.to_string(), arg_json(&v)));
+    }
+    Json::Obj(pairs)
+}
+
+fn base(ev: &Event, ph: &str) -> Vec<(String, Json)> {
+    vec![
+        ("name".to_string(), Json::Str(ev.kind.name().to_string())),
+        ("cat".to_string(), Json::Str(ev.kind.category().to_string())),
+        ("ph".to_string(), Json::Str(ph.to_string())),
+        ("ts".to_string(), Json::U(micros(ev.t))),
+        ("pid".to_string(), Json::U(ev.machine as u64)),
+        ("tid".to_string(), Json::U(ev.worker as u64)),
+    ]
+}
+
+/// Render a deterministic Chrome trace-event document from the
+/// recorder timeline. The event order is the recorder's merge order;
+/// no sorting, no wall time, no host entropy.
+pub fn chrome_trace(events: &[Event]) -> String {
+    let mut out: Vec<Json> = Vec::new();
+
+    // Lane metadata first: name every (machine, worker) that appears.
+    let mut machines: BTreeSet<u32> = BTreeSet::new();
+    let mut lanes: BTreeSet<(u32, u32)> = BTreeSet::new();
+    for ev in events {
+        machines.insert(ev.machine);
+        lanes.insert((ev.machine, ev.worker));
+    }
+    for &m in &machines {
+        out.push(Json::obj(vec![
+            ("name", Json::Str("process_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::U(m as u64)),
+            ("args", Json::obj(vec![("name", Json::Str(lane_name(m, "machine")))])),
+        ]));
+    }
+    for &(m, w) in &lanes {
+        out.push(Json::obj(vec![
+            ("name", Json::Str("thread_name".into())),
+            ("ph", Json::Str("M".into())),
+            ("pid", Json::U(m as u64)),
+            ("tid", Json::U(w as u64)),
+            ("args", Json::obj(vec![("name", Json::Str(lane_name(w, "worker")))])),
+        ]));
+    }
+
+    for ev in events {
+        match &ev.kind {
+            EventKind::CpFlush { .. } => {
+                // Async begin/end pair so the flush overlaps lanes.
+                let mut b = base(ev, "b");
+                b.push(("id".to_string(), Json::U(ev.step)));
+                b.push(("args".to_string(), args_obj(ev)));
+                out.push(Json::Obj(b));
+                let mut e = base(ev, "e");
+                if let Some(ts) = e.iter_mut().find(|(k, _)| k == "ts") {
+                    ts.1 = Json::U(micros(ev.t + ev.dur));
+                }
+                e.push(("id".to_string(), Json::U(ev.step)));
+                out.push(Json::Obj(e));
+            }
+            _ if ev.dur > 0.0 => {
+                let mut x = base(ev, "X");
+                x.push(("dur".to_string(), Json::U(micros(ev.dur))));
+                x.push(("args".to_string(), args_obj(ev)));
+                out.push(Json::Obj(x));
+            }
+            _ => {
+                let mut i = base(ev, "i");
+                i.push(("s".to_string(), Json::Str("t".into())));
+                i.push(("args".to_string(), args_obj(ev)));
+                out.push(Json::Obj(i));
+            }
+        }
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+    .emit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, dur: f64, step: u64, worker: u32, machine: u32, kind: EventKind) -> Event {
+        Event { t, dur, step, worker, machine, kind }
+    }
+
+    #[test]
+    fn export_is_valid_json_with_lanes_and_slices() {
+        let events = vec![
+            ev(0.0, 1.5, 1, 0, 0, EventKind::Compute { vertices: 10, messages: 4 }),
+            ev(2.0, 3.0, 5, MASTER, MASTER, EventKind::CpFlush {
+                hidden: 2.0,
+                exposed: 1.0,
+                committed: true,
+            }),
+            ev(2.5, 0.0, 5, MASTER, MASTER, EventKind::Kill {
+                ranks: vec![1],
+                during_cp: false,
+            }),
+        ];
+        let s = chrome_trace(&events);
+        let doc = Json::parse(&s).expect("export must be valid JSON");
+        let arr = match doc.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        // 2 process_name + 2 thread_name + X + b + e + i.
+        assert_eq!(arr.len(), 8);
+        assert!(s.contains("\"ph\":\"X\""));
+        assert!(s.contains("\"ph\":\"b\""));
+        assert!(s.contains("\"ph\":\"e\""));
+        assert!(s.contains("\"ph\":\"i\""));
+        assert!(s.contains("\"name\":\"engine\""));
+        assert!(s.contains("\"name\":\"worker 0\""));
+        // Virtual-time microseconds: 1.5 s compute span.
+        assert!(s.contains("\"dur\":1500000"));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let events = vec![ev(1.0, 0.5, 2, 3, 1, EventKind::LogWrite { bytes: 77 })];
+        assert_eq!(chrome_trace(&events), chrome_trace(&events));
+    }
+}

@@ -1,0 +1,207 @@
+//! The typed event vocabulary of the trace bus.
+//!
+//! Every subsystem that does virtual work emits [`Event`]s keyed by
+//! `(superstep, worker, machine)` with **virtual sim time** as the
+//! canonical timeline: `t` is the worker's clock when the span began
+//! and `dur` is how much virtual time the span charged (0.0 marks an
+//! instant event). Wall time never enters an event — that is what
+//! makes traces bit-identical across thread counts (DESIGN.md §12).
+
+/// Sentinel worker/machine id for engine/master-lane events (barrier
+/// bookkeeping, checkpoint flush commits, kills, rollbacks).
+pub const MASTER: u32 = u32::MAX;
+
+/// One span or instant event on the run timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Virtual start time, simulated seconds since job start.
+    pub t: f64,
+    /// Virtual duration charged by the span; 0.0 = instant event.
+    pub dur: f64,
+    /// Superstep the event is attributed to.
+    pub step: u64,
+    /// Emitting worker rank, or [`MASTER`] for the engine lane.
+    pub worker: u32,
+    /// Machine hosting the worker, or [`MASTER`] for the engine lane.
+    pub machine: u32,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// A typed argument on an event, for exporters and forensics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgVal {
+    U(u64),
+    F(f64),
+    B(bool),
+    S(String),
+}
+
+impl std::fmt::Display for ArgVal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgVal::U(v) => write!(f, "{v}"),
+            ArgVal::F(v) => write!(f, "{v:.6}"),
+            ArgVal::B(v) => write!(f, "{v}"),
+            ArgVal::S(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// The event taxonomy (DESIGN.md §12). Spans carry the byte/record
+/// counts their cost-model charge was derived from; control events
+/// carry the decision they record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Master lane: one span per superstep, `kind` mirroring
+    /// `StepKind` ("normal", "cp", "recovery", "last-recovery").
+    Superstep { kind: &'static str },
+    /// Worker compute phase (update+emit over the partition).
+    Compute { vertices: u64, messages: u64 },
+    /// Log-based FT: the step's outbox/vstate log write.
+    LogWrite { bytes: u64 },
+    /// Shuffle delivery charged to this rank (send + recv CPU).
+    Deliver,
+    /// Recovery replay regeneration on a surviving rank.
+    Replay { vertices: u64 },
+    /// Recovery: logged-message forwarding to respawned ranks.
+    LogForward { bytes: u64 },
+    /// One external-journal batch applied on this rank at a barrier.
+    IngestApply { records: u64 },
+    /// Master lane: a journal batch drained at a barrier (instant).
+    IngestBatch { records: u64, replayed: bool },
+    /// Barrier-time checkpoint snapshot encode on this rank.
+    CpSnapshot { bytes: u64 },
+    /// Master lane: the detached checkpoint flush, from snapshot to
+    /// commit/abort, with its hidden-vs-exposed overlap split.
+    CpFlush { hidden: f64, exposed: f64, committed: bool },
+    /// Recovery: checkpoint blob re-read on this rank.
+    CpLoad { bytes: u64 },
+    /// Out-of-core pager traffic settled on this rank.
+    PagerIo { in_bytes: u64, out_bytes: u64 },
+    /// Master lane: an injected failure (instant).
+    Kill { ranks: Vec<u32>, during_cp: bool },
+    /// Master lane: the recovery decision — roll back to `CP[cp]`,
+    /// replay `cp+1 ..= failure_step` (`depth` supersteps).
+    Rollback { cp: u64, failure_step: u64, depth: u64 },
+    /// Master lane: the barrier-time skew balancer moved vertices.
+    Migrate { moves: u64, bytes: u64 },
+    /// Master lane: a bounded-staleness serve probe was answered.
+    Serve { staleness: Option<u64> },
+}
+
+impl EventKind {
+    /// Stable event name (Chrome trace `name`, forensics label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Superstep { .. } => "superstep",
+            EventKind::Compute { .. } => "compute",
+            EventKind::LogWrite { .. } => "log-write",
+            EventKind::Deliver => "deliver",
+            EventKind::Replay { .. } => "replay",
+            EventKind::LogForward { .. } => "log-forward",
+            EventKind::IngestApply { .. } => "ingest-apply",
+            EventKind::IngestBatch { .. } => "ingest-batch",
+            EventKind::CpSnapshot { .. } => "cp-snapshot",
+            EventKind::CpFlush { .. } => "cp-flush",
+            EventKind::CpLoad { .. } => "cp-load",
+            EventKind::PagerIo { .. } => "pager-io",
+            EventKind::Kill { .. } => "kill",
+            EventKind::Rollback { .. } => "rollback",
+            EventKind::Migrate { .. } => "migrate",
+            EventKind::Serve { .. } => "serve",
+        }
+    }
+
+    /// Chrome trace category: the lane the event belongs to.
+    pub fn category(&self) -> &'static str {
+        match self {
+            EventKind::Superstep { .. } => "engine",
+            EventKind::Compute { .. } | EventKind::Deliver => "compute",
+            EventKind::LogWrite { .. } | EventKind::LogForward { .. } => "log",
+            EventKind::Replay { .. }
+            | EventKind::CpLoad { .. }
+            | EventKind::Kill { .. }
+            | EventKind::Rollback { .. } => "recovery",
+            EventKind::IngestApply { .. } | EventKind::IngestBatch { .. } => "ingest",
+            EventKind::CpSnapshot { .. } | EventKind::CpFlush { .. } => "checkpoint",
+            EventKind::PagerIo { .. } => "pager",
+            EventKind::Migrate { .. } => "skew",
+            EventKind::Serve { .. } => "serve",
+        }
+    }
+
+    /// Typed argument list, in a stable order.
+    pub fn args(&self) -> Vec<(&'static str, ArgVal)> {
+        match self {
+            EventKind::Superstep { kind } => vec![("kind", ArgVal::S((*kind).to_string()))],
+            EventKind::Compute { vertices, messages } => {
+                vec![("vertices", ArgVal::U(*vertices)), ("messages", ArgVal::U(*messages))]
+            }
+            EventKind::LogWrite { bytes }
+            | EventKind::LogForward { bytes }
+            | EventKind::CpSnapshot { bytes }
+            | EventKind::CpLoad { bytes } => vec![("bytes", ArgVal::U(*bytes))],
+            EventKind::Deliver => vec![],
+            EventKind::Replay { vertices } => vec![("vertices", ArgVal::U(*vertices))],
+            EventKind::IngestApply { records } => vec![("records", ArgVal::U(*records))],
+            EventKind::IngestBatch { records, replayed } => {
+                vec![("records", ArgVal::U(*records)), ("replayed", ArgVal::B(*replayed))]
+            }
+            EventKind::CpFlush { hidden, exposed, committed } => vec![
+                ("hidden", ArgVal::F(*hidden)),
+                ("exposed", ArgVal::F(*exposed)),
+                ("committed", ArgVal::B(*committed)),
+            ],
+            EventKind::PagerIo { in_bytes, out_bytes } => {
+                vec![("in_bytes", ArgVal::U(*in_bytes)), ("out_bytes", ArgVal::U(*out_bytes))]
+            }
+            EventKind::Kill { ranks, during_cp } => {
+                let list =
+                    ranks.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",");
+                vec![("ranks", ArgVal::S(list)), ("during_cp", ArgVal::B(*during_cp))]
+            }
+            EventKind::Rollback { cp, failure_step, depth } => vec![
+                ("cp", ArgVal::U(*cp)),
+                ("failure_step", ArgVal::U(*failure_step)),
+                ("depth", ArgVal::U(*depth)),
+            ],
+            EventKind::Migrate { moves, bytes } => {
+                vec![("moves", ArgVal::U(*moves)), ("bytes", ArgVal::U(*bytes))]
+            }
+            EventKind::Serve { staleness } => vec![(
+                "staleness",
+                staleness.map_or(ArgVal::S("-".into()), ArgVal::U),
+            )],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_categories_are_stable() {
+        let k = EventKind::CpFlush { hidden: 1.0, exposed: 0.5, committed: true };
+        assert_eq!(k.name(), "cp-flush");
+        assert_eq!(k.category(), "checkpoint");
+        let args = k.args();
+        assert_eq!(args[0].0, "hidden");
+        assert_eq!(args[2].1, ArgVal::B(true));
+    }
+
+    #[test]
+    fn kill_ranks_render_as_list() {
+        let k = EventKind::Kill { ranks: vec![1, 5], during_cp: false };
+        assert_eq!(k.args()[0].1, ArgVal::S("1,5".into()));
+        assert_eq!(format!("{}", k.args()[0].1), "1,5");
+    }
+
+    #[test]
+    fn argval_displays() {
+        assert_eq!(format!("{}", ArgVal::U(7)), "7");
+        assert_eq!(format!("{}", ArgVal::F(1.5)), "1.500000");
+        assert_eq!(format!("{}", ArgVal::B(false)), "false");
+    }
+}

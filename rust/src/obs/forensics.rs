@@ -1,0 +1,159 @@
+//! Failure forensics: the human-readable timeline the flight recorder
+//! dumps on every kill/rollback.
+//!
+//! The engine fills a [`FailureReport`] inside `perform_failure` —
+//! after the recovery decision is made but from purely virtual
+//! quantities — and [`render`] turns it plus the killed lanes' flight
+//! rings into the text that goes to stderr and into
+//! `RunMetrics::forensics`. Everything here is derived from the
+//! deterministic event stream, so the dump itself is bit-identical
+//! across thread counts.
+
+use super::event::Event;
+use crate::util::fmtutil::{bytes, secs};
+
+/// Everything the flight recorder knows about one injected failure.
+#[derive(Debug, Clone, Default)]
+pub struct FailureReport {
+    /// Which kill in the failure plan this was (0-based).
+    pub kill_index: usize,
+    /// Superstep the kill interrupted.
+    pub step: u64,
+    /// Ranks that died (the whole machine's ranks on a machine kill).
+    pub ranks: Vec<u32>,
+    pub machine_fails: bool,
+    /// Kill landed inside a checkpoint write (the CP aborts).
+    pub during_cp: bool,
+    /// Virtual time the survivors observed the failure.
+    pub t_fail: f64,
+    /// The checkpoint recovery selected: CP[`cp`].
+    pub cp: u64,
+    /// Highest superstep any survivor had computed (rollback horizon).
+    pub failure_step: u64,
+    /// Checkpoint bytes re-read during recovery (from `cp-load` events).
+    pub cp_bytes_reread: u64,
+    /// Log bytes re-read/forwarded (from `log-forward` events).
+    pub log_bytes_reread: u64,
+    /// External ingest batches re-applied during the rollback window.
+    pub ingest_batches_reapplied: u64,
+    /// Control-plane time of the recovery round (revoke/shrink/spawn).
+    pub control_time: f64,
+}
+
+impl FailureReport {
+    /// Supersteps rolled back: the replay window size.
+    pub fn depth(&self) -> u64 {
+        self.failure_step.saturating_sub(self.cp)
+    }
+}
+
+fn event_line(ev: &Event) -> String {
+    let mut line = format!(
+        "    [t={} +{}] step {} {}",
+        secs(ev.t),
+        secs(ev.dur),
+        ev.step,
+        ev.kind.name()
+    );
+    for (k, v) in ev.kind.args() {
+        line.push_str(&format!(" {k}={v}"));
+    }
+    line
+}
+
+/// Render the forensics dump. `rings` holds `(rank, recent events)`
+/// for each killed lane, oldest event first.
+pub fn render(rep: &FailureReport, rings: &[(u32, Vec<&Event>)]) -> String {
+    let ranks =
+        rep.ranks.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(",");
+    let mut out = String::new();
+    out.push_str(&format!(
+        "=== flight recorder: failure #{} at superstep {} (t={}) ===\n",
+        rep.kill_index,
+        rep.step,
+        secs(rep.t_fail)
+    ));
+    out.push_str(&format!(
+        "  killed ranks: [{ranks}]{}{}\n",
+        if rep.machine_fails { " (machine failure)" } else { "" },
+        if rep.during_cp { " (during checkpoint write — CP aborted)" } else { "" },
+    ));
+    out.push_str(&format!(
+        "  rollback: selected CP[{}], replaying supersteps {}..={} (depth {})\n",
+        rep.cp,
+        rep.cp + 1,
+        rep.failure_step,
+        rep.depth()
+    ));
+    out.push_str(&format!(
+        "  re-read: checkpoint {}, logs {}; ingest batches re-applied: {}\n",
+        bytes(rep.cp_bytes_reread),
+        bytes(rep.log_bytes_reread),
+        rep.ingest_batches_reapplied
+    ));
+    out.push_str(&format!("  recovery control time: {}\n", secs(rep.control_time)));
+    for (rank, events) in rings {
+        out.push_str(&format!("  last {} events on killed worker {rank}:\n", events.len()));
+        if events.is_empty() {
+            out.push_str("    (none recorded)\n");
+        }
+        for ev in events {
+            out.push_str(&event_line(ev));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventKind;
+
+    #[test]
+    fn dump_names_cp_and_replay_range() {
+        let rep = FailureReport {
+            kill_index: 0,
+            step: 17,
+            ranks: vec![1],
+            machine_fails: false,
+            during_cp: false,
+            t_fail: 100.0,
+            cp: 10,
+            failure_step: 17,
+            cp_bytes_reread: 2048,
+            log_bytes_reread: 512,
+            ingest_batches_reapplied: 2,
+            control_time: 1.5,
+        };
+        let ev = Event {
+            t: 99.0,
+            dur: 0.5,
+            step: 17,
+            worker: 1,
+            machine: 0,
+            kind: EventKind::Compute { vertices: 9, messages: 3 },
+        };
+        let text = render(&rep, &[(1, vec![&ev])]);
+        assert!(text.contains("selected CP[10]"));
+        assert!(text.contains("replaying supersteps 11..=17 (depth 7)"));
+        assert!(text.contains("killed ranks: [1]"));
+        assert!(text.contains("checkpoint 2.00 KiB"));
+        assert!(text.contains("compute vertices=9 messages=3"));
+    }
+
+    #[test]
+    fn during_cp_and_machine_flags_render() {
+        let rep = FailureReport {
+            ranks: vec![2, 3],
+            machine_fails: true,
+            during_cp: true,
+            ..Default::default()
+        };
+        let text = render(&rep, &[(2, vec![]), (3, vec![])]);
+        assert!(text.contains("machine failure"));
+        assert!(text.contains("CP aborted"));
+        assert!(text.contains("(none recorded)"));
+        assert!(text.contains("killed ranks: [2,3]"));
+    }
+}

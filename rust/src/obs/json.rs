@@ -1,0 +1,345 @@
+//! A minimal, dependency-free JSON value with a deterministic emitter
+//! and a strict parser — the codec behind `--trace-out` and
+//! `--report-json`.
+//!
+//! Objects are ordered `Vec<(key, value)>`, not maps: emission order
+//! is exactly construction order, which is what makes two runs'
+//! exports byte-comparable. Floats emit with an explicit fractional
+//! part (`1.0`, never `1`) so `parse(emit(v)) == v` holds — the
+//! round-trip contract the report schema test pins.
+
+use anyhow::{bail, Result};
+
+/// A JSON value. Integers and floats are kept distinct so round-trips
+/// are exact; object key order is preserved.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    U(u64),
+    I(i64),
+    F(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience: build an object from pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Look up a key on an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Serialize (compact, no whitespace).
+    pub fn emit(&self) -> String {
+        let mut out = String::new();
+        self.emit_into(&mut out);
+        out
+    }
+
+    fn emit_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::U(v) => out.push_str(&v.to_string()),
+            Json::I(v) => out.push_str(&v.to_string()),
+            Json::F(v) => {
+                if !v.is_finite() {
+                    // Virtual clocks never produce these; degrade safely.
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 1e15 {
+                    out.push_str(&format!("{v:.1}"));
+                } else {
+                    // Shortest round-trippable repr (exact via str::parse).
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.emit_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).emit_into(out);
+                    out.push(':');
+                    v.emit_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document (trailing whitespace allowed).
+    pub fn parse(s: &str) -> Result<Json> {
+        let bytes = s.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing garbage at byte {pos}");
+        }
+        Ok(v)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected `{lit}` at byte {pos}")
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'n') => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        Some(b't') => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected `,` or `]` at byte {pos}"),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                let val = parse_value(b, pos)?;
+                pairs.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    _ => bail!("expected `,` or `}}` at byte {pos}"),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at byte {pos}");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = std::str::from_utf8(
+                            b.get(*pos + 1..*pos + 5)
+                                .ok_or_else(|| anyhow::anyhow!("short \\u escape"))?,
+                        )?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| anyhow::anyhow!("bad \\u escape {hex}"))?,
+                        );
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at byte {pos}"),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (input is a &str, so valid).
+                let rest = std::str::from_utf8(&b[*pos..])?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let mut is_float = false;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'0'..=b'9' => *pos += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                is_float = true;
+                *pos += 1;
+            }
+            _ => break,
+        }
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    if text.is_empty() || text == "-" {
+        bail!("expected number at byte {start}");
+    }
+    if is_float {
+        Ok(Json::F(text.parse::<f64>()?))
+    } else if text.starts_with('-') {
+        Ok(Json::I(text.parse::<i64>()?))
+    } else {
+        Ok(Json::U(text.parse::<u64>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        for v in [
+            Json::Null,
+            Json::Bool(true),
+            Json::U(42),
+            Json::I(-7),
+            Json::F(1.0),
+            Json::F(0.125),
+            Json::F(31.45),
+            Json::Str("a \"quoted\"\nline\tand \\ more".into()),
+        ] {
+            let s = v.emit();
+            assert_eq!(Json::parse(&s).unwrap(), v, "{s}");
+        }
+    }
+
+    #[test]
+    fn integral_floats_keep_their_floatness() {
+        assert_eq!(Json::F(3.0).emit(), "3.0");
+        assert_eq!(Json::parse("3.0").unwrap(), Json::F(3.0));
+        assert_eq!(Json::parse("3").unwrap(), Json::U(3));
+    }
+
+    #[test]
+    fn roundtrip_nested() {
+        let v = Json::obj(vec![
+            ("type", Json::Str("superstep".into())),
+            ("step", Json::U(17)),
+            ("dur", Json::F(2.5)),
+            ("tags", Json::Arr(vec![Json::U(1), Json::Null, Json::Bool(false)])),
+            ("inner", Json::obj(vec![("k", Json::I(-1))])),
+        ]);
+        let s = v.emit();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("step"), Some(&Json::U(17)));
+        assert_eq!(back.get("inner").unwrap().get("k"), Some(&Json::I(-1)));
+        // Key order is preserved byte-for-byte.
+        assert_eq!(back.emit(), s);
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"open").is_err());
+        assert!(Json::parse("-").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes_parse() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        let s = Json::Str("ctrl\u{1}char".into()).emit();
+        assert_eq!(s, "\"ctrl\\u0001char\"");
+        assert_eq!(Json::parse(&s).unwrap(), Json::Str("ctrl\u{1}char".into()));
+    }
+}

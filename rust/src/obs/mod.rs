@@ -1,0 +1,33 @@
+//! Deterministic tracing + flight recorder (DESIGN.md §12).
+//!
+//! A structured event bus over the whole engine: every subsystem that
+//! charges virtual time — compute, logging, shuffle delivery,
+//! checkpoint snapshot/flush, recovery replay, pager, ingest, skew
+//! migration, serving — emits typed [`Event`]s with **virtual sim
+//! time as the canonical timeline**. Wall time never enters an event
+//! (the only sanctioned wall clock stays
+//! [`crate::sim::clock::WallTimer`], and `obs/` sits inside detlint's
+//! D2 deterministic zone), so a trace is a pure function of the job
+//! and is bit-identical across thread counts.
+//!
+//! Three consumers sit on the bus:
+//!
+//! 1. [`chrome::chrome_trace`] — Chrome trace-event JSON for
+//!    `--trace-out` (Perfetto-viewable lanes per worker, checkpoint
+//!    flush overlap as async slices);
+//! 2. [`report::run_report_jsonl`] — the machine-readable JSONL run
+//!    report for `--report-json`;
+//! 3. the always-on flight recorder ([`Recorder`] rings, bounded by
+//!    [`RING_CAP`]) feeding the [`forensics`] dump on every
+//!    kill/rollback.
+
+pub mod chrome;
+pub mod event;
+pub mod forensics;
+pub mod json;
+pub mod report;
+pub mod trace;
+
+pub use event::{ArgVal, Event, EventKind, MASTER};
+pub use forensics::FailureReport;
+pub use trace::{Recorder, Tracer, RING_CAP};

@@ -1,0 +1,192 @@
+//! The machine-readable JSONL run report (`--report-json`): one
+//! record per superstep plus a final `run` record with the full
+//! [`RunMetrics`] dump. This is the stable integration surface for
+//! benches and CI — greppable summary lines stay human-facing, this
+//! file is the contract.
+//!
+//! Every record is one line of compact JSON emitted by
+//! [`super::json::Json`], and the schema test pins the round-trip:
+//! `emit(parse(line)) == line` for every line.
+
+use super::json::Json;
+use crate::metrics::RunMetrics;
+use anyhow::{bail, Result};
+
+fn f(v: f64) -> Json {
+    if v.is_finite() {
+        Json::F(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Render the JSONL run report. Superstep records are in engine
+/// recording order (recovery reruns repeat their superstep number with
+/// a different `kind`); the final line is the `run` record.
+pub fn run_report_jsonl(m: &RunMetrics) -> String {
+    let mut out = String::new();
+    for s in &m.steps {
+        let rec = Json::obj(vec![
+            ("type", Json::Str("superstep".into())),
+            ("step", Json::U(s.step)),
+            ("kind", Json::Str(s.kind.name().into())),
+            ("dur", f(s.dur)),
+        ]);
+        out.push_str(&rec.emit());
+        out.push('\n');
+    }
+    let run = Json::obj(vec![
+        ("type", Json::Str("run".into())),
+        ("supersteps", Json::U(m.supersteps_run)),
+        ("final_time", f(m.final_time)),
+        ("wall_ms", f(m.wall_ms)),
+        ("digest", Json::Str(format!("{:016x}", m.result_digest))),
+        ("t_cp0", f(m.t_cp0)),
+        ("recovery_control", f(m.recovery_control)),
+        ("cp_hidden", f(m.cp_hidden())),
+        ("cp_exposed", f(m.cp_exposed())),
+        (
+            "bytes",
+            Json::obj(vec![
+                ("shuffle", Json::U(m.bytes.shuffle_bytes)),
+                ("wire", Json::U(m.bytes.wire_bytes)),
+                ("hub_wire", Json::U(m.bytes.hub_wire_bytes)),
+                ("checkpoint", Json::U(m.bytes.checkpoint_bytes)),
+                ("log", Json::U(m.bytes.log_bytes)),
+                ("gc", Json::U(m.bytes.gc_bytes)),
+                ("messages", Json::U(m.bytes.messages_sent)),
+            ]),
+        ),
+        (
+            "pager",
+            Json::obj(vec![
+                ("faults", Json::U(m.pager.faults)),
+                ("page_in", Json::U(m.pager.page_in_bytes)),
+                ("writebacks", Json::U(m.pager.writebacks)),
+                ("page_out", Json::U(m.pager.page_out_bytes)),
+                ("resident_peak", Json::U(m.pager.resident_peak)),
+            ]),
+        ),
+        (
+            "ingest",
+            Json::obj(vec![
+                ("segments", Json::U(m.ingest.segments_applied)),
+                ("records", Json::U(m.ingest.records_applied)),
+                ("edge", Json::U(m.ingest.edge_records)),
+                ("vertex", Json::U(m.ingest.vertex_records)),
+                ("dropped", Json::U(m.ingest.dropped_records)),
+                ("reactivated", Json::U(m.ingest.reactivated)),
+                ("replayed_batches", Json::U(m.ingest.replayed_batches)),
+                ("journal_bytes", Json::U(m.ingest.journal_bytes)),
+                ("pending", Json::U(m.ingest.pending_segments)),
+            ]),
+        ),
+        (
+            "serve",
+            Json::obj(vec![
+                ("queries", Json::U(m.serve.queries())),
+                ("cache_hits", Json::U(m.serve.cache_hits)),
+                ("max_staleness", m.serve.max_staleness().map_or(Json::Null, Json::U)),
+            ]),
+        ),
+        ("migrations", Json::U(m.migrations)),
+        ("migrated_bytes", Json::U(m.migrated_bytes)),
+        (
+            "compute_virt",
+            Json::Arr(m.compute_virt.iter().map(|&t| f(t)).collect()),
+        ),
+        ("events", Json::U(m.trace.len() as u64)),
+        (
+            "forensics",
+            Json::Arr(m.forensics.iter().map(|s| Json::Str(s.clone())).collect()),
+        ),
+    ]);
+    out.push_str(&run.emit());
+    out.push('\n');
+    out
+}
+
+/// Schema-validate a JSONL report: every line must parse, round-trip
+/// byte-identically through the codec, and carry a `type`; the last
+/// line must be the `run` record. Returns the number of superstep
+/// records.
+pub fn validate_report(text: &str) -> Result<u64> {
+    let mut steps = 0u64;
+    let mut saw_run = false;
+    let lines: Vec<&str> = text.lines().collect();
+    if lines.is_empty() {
+        bail!("empty report");
+    }
+    for (i, line) in lines.iter().enumerate() {
+        let v = Json::parse(line)?;
+        if v.emit() != *line {
+            bail!("line {} does not round-trip through the codec", i + 1);
+        }
+        match v.get("type") {
+            Some(Json::Str(t)) if t == "superstep" => {
+                for key in ["step", "kind", "dur"] {
+                    if v.get(key).is_none() {
+                        bail!("superstep record {} missing `{key}`", i + 1);
+                    }
+                }
+                steps += 1;
+            }
+            Some(Json::Str(t)) if t == "run" => {
+                for key in ["supersteps", "final_time", "digest", "bytes", "ingest", "serve"] {
+                    if v.get(key).is_none() {
+                        bail!("run record missing `{key}`");
+                    }
+                }
+                if i + 1 != lines.len() {
+                    bail!("run record must be the last line");
+                }
+                saw_run = true;
+            }
+            other => bail!("line {} has bad type: {other:?}", i + 1),
+        }
+    }
+    if !saw_run {
+        bail!("no run record");
+    }
+    Ok(steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{StepKind, StepRecord};
+
+    #[test]
+    fn report_roundtrips_and_validates() {
+        let mut m = RunMetrics::default();
+        m.steps.push(StepRecord { step: 1, kind: StepKind::Normal, dur: 10.0 });
+        m.steps.push(StepRecord { step: 2, kind: StepKind::Recovery, dur: 2.5 });
+        m.supersteps_run = 2;
+        m.final_time = 12.5;
+        m.result_digest = 0xdead_beef;
+        m.compute_virt = vec![1.0, 2.0];
+        m.forensics.push("rollback to CP[0]".into());
+        let text = run_report_jsonl(&m);
+        assert_eq!(validate_report(&text).unwrap(), 2);
+        assert!(text.contains("\"digest\":\"00000000deadbeef\""));
+        assert!(text.contains("\"kind\":\"recovery\""));
+        assert!(text.contains("rollback to CP[0]"));
+    }
+
+    #[test]
+    fn nan_averages_degrade_to_null() {
+        // A run with no recovery has NaN t_* averages; the report must
+        // still be valid JSON.
+        let m = RunMetrics::default();
+        let text = run_report_jsonl(&m);
+        assert!(validate_report(&text).is_ok());
+        assert!(text.contains("\"t_cp0\":0.0"));
+    }
+
+    #[test]
+    fn validator_rejects_broken_lines() {
+        assert!(validate_report("").is_err());
+        assert!(validate_report("{\"type\":\"superstep\"}\n").is_err());
+        assert!(validate_report("{\"nope\":1}\n").is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! The event bus: per-worker lock-free tracers and the engine-owned
+//! recorder that merges them into one deterministic timeline.
+//!
+//! Each [`crate::pregel::Worker`] owns a [`Tracer`] — a plain append
+//! buffer, written only by the phase unit that holds `&mut Worker`, so
+//! emission needs no locks and no atomics. The engine drains every
+//! tracer in ascending rank order at fixed master-driven points (end
+//! of superstep, checkpoint snapshot/commit, recovery), which makes
+//! the merged order a pure function of the virtual execution and
+//! therefore identical at any thread-pool size.
+//!
+//! The [`Recorder`] keeps two views: an optional full timeline (only
+//! when `--trace-out`/`--report-json` asked for it) and an always-on
+//! bounded flight recorder — a ring of the last [`RING_CAP`] events
+//! per worker plus a master ring — that feeds the failure-forensics
+//! dump. Rings live on the recorder, not the worker, so they survive
+//! worker respawn after a kill.
+
+use super::event::{Event, EventKind, MASTER};
+use std::collections::VecDeque;
+
+/// Flight-recorder depth: last N events retained per worker lane.
+pub const RING_CAP: usize = 64;
+
+/// Per-worker append-only event buffer. `worker`/`machine` are filled
+/// in by the recorder at drain time, so emitting code only supplies
+/// the virtual span and the payload.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    buf: Vec<Event>,
+}
+
+impl Tracer {
+    /// Record a span of `dur` virtual seconds starting at `t`.
+    #[inline]
+    pub fn emit(&mut self, t: f64, dur: f64, step: u64, kind: EventKind) {
+        self.buf.push(Event { t, dur, step, worker: 0, machine: 0, kind });
+    }
+
+    /// Take everything emitted since the last drain.
+    pub fn drain(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Number of undrained events (tests).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Engine-owned event sink: full timeline (opt-in) + flight rings.
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    /// Retain the full timeline? Off by default; `--trace-out` /
+    /// `--report-json` turn it on via `Engine::with_trace`.
+    pub retain: bool,
+    /// The merged deterministic timeline (empty unless `retain`).
+    pub timeline: Vec<Event>,
+    /// Per-rank flight rings, always on.
+    rings: Vec<VecDeque<Event>>,
+    /// Master-lane flight ring.
+    master_ring: VecDeque<Event>,
+}
+
+impl Recorder {
+    pub fn new(n_workers: usize) -> Self {
+        Recorder {
+            retain: false,
+            timeline: Vec::new(),
+            rings: vec![VecDeque::with_capacity(RING_CAP); n_workers],
+            master_ring: VecDeque::with_capacity(RING_CAP),
+        }
+    }
+
+    fn push_ring(ring: &mut VecDeque<Event>, ev: Event) {
+        if ring.len() == RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(ev);
+    }
+
+    /// Absorb events already stamped with worker/machine, in the order
+    /// the engine drained them (ascending rank, emission order within
+    /// a rank).
+    pub fn absorb(&mut self, events: Vec<Event>) {
+        for ev in events {
+            let ring = if ev.worker == MASTER {
+                &mut self.master_ring
+            } else {
+                &mut self.rings[ev.worker as usize]
+            };
+            Self::push_ring(ring, ev.clone());
+            if self.retain {
+                self.timeline.push(ev);
+            }
+        }
+    }
+
+    /// Record a master-lane event directly.
+    pub fn master(&mut self, t: f64, dur: f64, step: u64, kind: EventKind) {
+        self.absorb(vec![Event { t, dur, step, worker: MASTER, machine: MASTER, kind }]);
+    }
+
+    /// The flight ring of one worker lane, oldest first.
+    pub fn ring(&self, worker: u32) -> Vec<&Event> {
+        if worker == MASTER {
+            self.master_ring.iter().collect()
+        } else {
+            self.rings
+                .get(worker as usize)
+                .map(|r| r.iter().collect())
+                .unwrap_or_default()
+        }
+    }
+
+    /// Hand the retained timeline to the metrics report.
+    pub fn take_timeline(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.timeline)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracer_drains_in_emission_order() {
+        let mut tr = Tracer::default();
+        tr.emit(1.0, 0.5, 3, EventKind::Deliver);
+        tr.emit(2.0, 0.0, 3, EventKind::Replay { vertices: 4 });
+        assert_eq!(tr.pending(), 2);
+        let evs = tr.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind.name(), "deliver");
+        assert_eq!(tr.pending(), 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_fifo() {
+        let mut rec = Recorder::new(1);
+        for i in 0..(RING_CAP as u64 + 10) {
+            rec.absorb(vec![Event {
+                t: i as f64,
+                dur: 0.0,
+                step: i,
+                worker: 0,
+                machine: 0,
+                kind: EventKind::Deliver,
+            }]);
+        }
+        let ring = rec.ring(0);
+        assert_eq!(ring.len(), RING_CAP);
+        assert_eq!(ring[0].step, 10); // oldest surviving
+        assert!(rec.timeline.is_empty(), "retention is off by default");
+    }
+
+    #[test]
+    fn retain_keeps_full_timeline_and_master_ring_separates() {
+        let mut rec = Recorder::new(2);
+        rec.retain = true;
+        rec.master(5.0, 0.0, 1, EventKind::Kill { ranks: vec![0], during_cp: false });
+        rec.absorb(vec![Event {
+            t: 1.0,
+            dur: 1.0,
+            step: 1,
+            worker: 1,
+            machine: 0,
+            kind: EventKind::Compute { vertices: 9, messages: 2 },
+        }]);
+        assert_eq!(rec.timeline.len(), 2);
+        assert_eq!(rec.ring(MASTER).len(), 1);
+        assert_eq!(rec.ring(1).len(), 1);
+        assert_eq!(rec.ring(0).len(), 0);
+        let tl = rec.take_timeline();
+        assert_eq!(tl.len(), 2);
+        assert!(rec.timeline.is_empty());
+    }
+}

@@ -32,6 +32,7 @@ use crate::ft::FtKind;
 use crate::graph::{PlacementEntry, PlacementLedger, Partitioner, VertexId};
 use crate::ingest::{self, JournalRecord, ProbeKind, ServeProbe};
 use crate::metrics::{RunMetrics, ServeSample, StepKind, StepRecord};
+use crate::obs::EventKind;
 use crate::sim::{clock, CostModel, Topology, WallTimer};
 use crate::storage::{Backing, SimHdfs};
 use crate::util::codec::Codec;
@@ -318,6 +319,12 @@ pub struct Engine<A: App> {
     /// step it was read from; invalidated wholesale when a newer commit
     /// marker appears. Maps rank → that rank's committed values.
     pub(crate) serve_cache: Option<(u64, BTreeMap<usize, Vec<A::V>>)>,
+    /// Structured-event sink (`obs`): per-worker tracer buffers drain
+    /// here at deterministic master points (rank-ascending, so the
+    /// timeline is bit-identical across thread counts). Always keeps
+    /// the bounded flight-recorder rings; retains the full timeline
+    /// only when tracing was requested ([`Engine::with_trace`]).
+    pub(crate) recorder: crate::obs::Recorder,
 }
 
 impl<A: App> Engine<A> {
@@ -380,6 +387,7 @@ impl<A: App> Engine<A> {
             compute_virt: vec![0.0; n_workers],
             last_window: vec![0.0; n_workers],
             serve_cache: None,
+            recorder: crate::obs::Recorder::new(n_workers),
         })
     }
 
@@ -440,6 +448,17 @@ impl<A: App> Engine<A> {
         self
     }
 
+    /// Retain the full structured-event timeline for export
+    /// (`--trace-out` / `RunMetrics::trace`). The flight-recorder rings
+    /// are always on; this only controls whether every event is also
+    /// kept for the Chrome-trace/JSONL exporters. Emission never
+    /// advances a virtual clock, so toggling tracing cannot change any
+    /// time metric or the result digest.
+    pub fn with_trace(mut self, on: bool) -> Self {
+        self.recorder.retain = on;
+        self
+    }
+
     /// Pre-stage external journal segments into this job's store before
     /// `run()` — the CLI's delta-file lane and the test harness. Each
     /// `(not_before, records)` group becomes one atomically committed
@@ -465,6 +484,30 @@ impl<A: App> Engine<A> {
                 .into_iter()
                 .map(|r| self.workers[r].clock.now()),
         )
+    }
+
+    /// Drain every worker's tracer buffer in ascending rank order,
+    /// stamping worker and (live) machine identity at the drain point —
+    /// workers don't know their placement; the engine does. The
+    /// rank-ascending merge at a deterministic master point is what
+    /// makes the timeline bit-identical across thread counts.
+    pub(crate) fn drain_trace_collect(&mut self) -> Vec<crate::obs::Event> {
+        let mut out = Vec::new();
+        for r in 0..self.workers.len() {
+            let machine = self.ws.machine_of(r) as u32;
+            for mut ev in self.workers[r].tracer.drain() {
+                ev.worker = r as u32;
+                ev.machine = machine;
+                out.push(ev);
+            }
+        }
+        out
+    }
+
+    /// Drain all tracer buffers straight into the recorder.
+    pub(crate) fn drain_trace(&mut self) {
+        let events = self.drain_trace_collect();
+        self.recorder.absorb(events);
     }
 
     /// Per-rank NIC sharers (workers on the same machine) — precomputed
@@ -610,6 +653,10 @@ impl<A: App> Engine<A> {
         self.metrics.supersteps_run = self.metrics.steps.len() as u64;
         self.metrics.wall_ms = wall.elapsed_ms();
         self.metrics.result_digest = self.digest();
+        // Final drain: straggler events from the last barrier's hooks
+        // land in the recorder before the timeline is handed out.
+        self.drain_trace();
+        self.metrics.trace = self.recorder.take_timeline();
         Ok(self.metrics.clone())
     }
 
@@ -679,7 +726,7 @@ impl<A: App> Engine<A> {
         if replaying {
             self.metrics.ingest.replayed_batches += 1;
         }
-        self.apply_ingest_batch(step, &batch)
+        self.apply_ingest_batch(step, &batch, replaying)
     }
 
     /// Route one ingest batch to its owners and apply it. Targets every
@@ -689,7 +736,12 @@ impl<A: App> Engine<A> {
     /// buffers, so the E_W re-append is exactly-once); under log-kind
     /// recovery only the respawned workers re-execute — survivors kept
     /// their state and buffered mutations and must not apply twice.
-    pub(crate) fn apply_ingest_batch(&mut self, step: u64, batch: &[JournalRecord]) -> Result<()> {
+    pub(crate) fn apply_ingest_batch(
+        &mut self,
+        step: u64,
+        batch: &[JournalRecord],
+        replayed: bool,
+    ) -> Result<()> {
         if batch.iter().any(|r| r.is_edge()) {
             // An external edge edit is part of superstep step+1's input
             // topology: log-based kinds must fall back to message
@@ -744,7 +796,14 @@ impl<A: App> Engine<A> {
         for (_, o) in &outcomes {
             self.metrics.ingest.reactivated += o.reactivated;
         }
-        self.barrier(0.0);
+        let t = self.barrier(0.0);
+        self.drain_trace();
+        self.recorder.master(
+            t,
+            0.0,
+            step,
+            EventKind::IngestBatch { records: batch.len() as u64, replayed },
+        );
         Ok(())
     }
 
@@ -760,7 +819,7 @@ impl<A: App> Engine<A> {
             None => return Ok(()),
         };
         self.metrics.ingest.replayed_batches += 1;
-        self.apply_ingest_batch(cp, &batch)
+        self.apply_ingest_batch(cp, &batch, true)
     }
 
     /// Fire due serving probes. Normal stage only: each barrier's hooks
@@ -801,6 +860,12 @@ impl<A: App> Engine<A> {
         use crate::util::codec::Reader;
         let query = kind.to_string();
         let Some((cp_step, _meta)) = ingest::latest_committed_cp(&self.hdfs)? else {
+            self.recorder.master(
+                self.max_clock(),
+                0.0,
+                head_step,
+                EventKind::Serve { staleness: None },
+            );
             return Ok(ServeSample {
                 at_step: head_step,
                 committed_step: None,
@@ -891,10 +956,12 @@ impl<A: App> Engine<A> {
             }
         };
         self.metrics.serve.cache_hits += cache_hits;
+        let staleness = Some(head_step.saturating_sub(cp_step));
+        self.recorder.master(self.max_clock(), 0.0, head_step, EventKind::Serve { staleness });
         Ok(ServeSample {
             at_step: head_step,
             committed_step: Some(cp_step),
-            staleness: Some(head_step.saturating_sub(cp_step)),
+            staleness,
             query,
             read_cost: self.cfg.cost.hdfs_read_time(read_bytes, 1),
             result,
@@ -1158,10 +1225,17 @@ impl<A: App> Engine<A> {
             moved_bytes += 16 + 8 * deg;
         }
         let t = self.cfg.cost.staging_time(moved_bytes) + self.cfg.cost.migrate_admin_time();
+        let tm = self.workers[from].clock.now();
         self.workers[from].clock.advance(t);
         self.workers[to].clock.advance(t);
         self.metrics.migrations += cands.len() as u64;
         self.metrics.migrated_bytes += moved_bytes;
+        self.recorder.master(
+            tm,
+            t,
+            step,
+            EventKind::Migrate { moves: cands.len() as u64, bytes: moved_bytes },
+        );
     }
 
     // ---------------------------------------------------------------
@@ -1351,7 +1425,18 @@ impl<A: App> Engine<A> {
         hub_srcs.sort_by_key(|(r, _)| *r);
         let hub_flows = self.build_hub_flows(step, &hub_srcs);
         self.metrics.phase_wall.shuffle += wall.elapsed_ms();
+        // Deliver spans: the phase charges clocks engine-side, so the
+        // per-rank delta around the call is the span (observed, never
+        // charged — tracing cannot move a clock).
+        let pre_deliver: Vec<(usize, f64)> =
+            alive.iter().map(|&r| (r, self.workers[r].clock.now())).collect();
         self.deliver(&mut batches, &hub_flows)?;
+        for (r, td) in pre_deliver {
+            let dt = self.workers[r].clock.now() - td;
+            if dt > 0.0 {
+                self.workers[r].tracer.emit(td, dt, step, EventKind::Deliver);
+            }
+        }
 
         // ---- sync & commit ----
         let wall = WallTimer::start();
@@ -1388,7 +1473,12 @@ impl<A: App> Engine<A> {
         self.metrics.phase_wall.sync += wall.elapsed_ms();
 
         let t1 = self.barrier(0.0);
-        self.metrics.steps.push(StepRecord { step, kind: self.classify(step), dur: t1 - t0 });
+        let kind = self.classify(step);
+        self.metrics.steps.push(StepRecord { step, kind, dur: t1 - t0 });
+        // Commit point: merge the workers' phase events (rank order)
+        // and close the master's superstep span over them.
+        self.drain_trace();
+        self.recorder.master(t0, t1 - t0, step, EventKind::Superstep { kind: kind.name() });
         Ok(None)
     }
 

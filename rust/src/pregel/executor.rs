@@ -59,6 +59,7 @@ use super::kernels::KernelMode;
 use super::message::{merge_machine_batch, MachineMerge};
 use super::worker::{IngestOutcome, StepOpts, StepOutput, Worker};
 use crate::graph::Partitioner;
+use crate::obs::EventKind;
 use crate::sim::{CostModel, PhaseCost, Topology};
 use std::collections::BTreeMap;
 use crate::util::codec::Codec;
@@ -405,7 +406,17 @@ pub fn compute_phase<A: App>(
                     t_away = t_total;
                 }
                 let t_home = t_total - t_away;
+                let t0 = w.clock.now();
                 w.clock.advance(t_home);
+                w.tracer.emit(
+                    t0,
+                    t_home,
+                    step,
+                    EventKind::Compute {
+                        vertices: o.n_computed,
+                        messages: o.outbox.raw_count(),
+                    },
+                );
                 // Out-of-core partitions: faults/write-backs of the
                 // page scan, at disk bandwidth.
                 w.settle_page_io(cost);
@@ -452,7 +463,9 @@ pub fn log_phase<A: App>(
         |(w, out)| -> Result<PhaseCost> {
             let bytes = w.write_step_log(step, out, use_msg_log, mirror)?;
             let t = cost.log_write_time(bytes) + cost.file_op;
+            let t0 = w.clock.now();
             w.clock.advance(t);
+            w.tracer.emit(t0, t, step, EventKind::LogWrite { bytes });
             // The vertex-state log streams from the partition store:
             // cold pages were read from the spill file.
             w.settle_page_io(cost);
@@ -491,10 +504,17 @@ pub fn ingest_apply_phase<A: App>(
 ) -> Result<Vec<(usize, IngestOutcome)>> {
     let ranks: Vec<usize> = workers.iter().map(|(r, _)| *r).collect();
     let results = pool.map_named("ingest-apply", Some(ranks.as_slice()), workers, |(r, w)| {
+        let t0 = w.clock.now();
         if read_bytes > 0 {
             w.clock.advance(cost.hdfs_read_time(read_bytes, sharers[r]));
         }
         let out = w.apply_external_batch(app, batch, touched, buffer_step, cost);
+        w.tracer.emit(
+            t0,
+            w.clock.now() - t0,
+            buffer_step,
+            EventKind::IngestApply { records: out.edge_applied + out.vertex_applied },
+        );
         (r, out)
     });
     Ok(results)
@@ -613,7 +633,9 @@ pub fn replay_phase<A: App>(
         let opts = StepOpts { topo, mirror, away: &[] };
         let (ob, bcasts) = w.replay_generate(app, step, agg_prev, None, opts);
         let n_comp = w.part.comp_count();
+        let t0 = w.clock.now();
         w.clock.advance(cost.compute_time(n_comp, ob.raw_count()));
+        w.tracer.emit(t0, w.clock.now() - t0, step, EventKind::Replay { vertices: n_comp });
         w.settle_page_io(cost);
         let batches = match dests {
             None => ob

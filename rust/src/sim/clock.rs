@@ -82,6 +82,18 @@ pub fn mean_time<I: IntoIterator<Item = f64>>(times: I) -> f64 {
     }
 }
 
+/// Virtual seconds → whole microseconds, the trace-export time unit
+/// (`obs::chrome`). Rounding through one shared helper keeps every
+/// exporter's timestamps bit-identical for identical virtual times.
+#[inline]
+pub fn micros(t: f64) -> u64 {
+    if t.is_finite() && t > 0.0 {
+        (t * 1e6).round() as u64
+    } else {
+        0
+    }
+}
+
 /// Synchronize a set of clocks at a barrier: everyone jumps to the max,
 /// plus a fixed barrier overhead. Returns the post-barrier time.
 pub fn barrier(clocks: &mut [&mut Clock], overhead: f64) -> f64 {
@@ -151,6 +163,15 @@ mod tests {
         assert_eq!(sum_time([]), 0.0);
         assert_eq!(mean_time([1.0, 2.0, 3.0]), 2.0);
         assert_eq!(mean_time([]), 0.0);
+    }
+
+    #[test]
+    fn micros_rounds_and_floors() {
+        assert_eq!(micros(1.5), 1_500_000);
+        assert_eq!(micros(0.0), 0);
+        assert_eq!(micros(-3.0), 0);
+        assert_eq!(micros(f64::NAN), 0);
+        assert_eq!(micros(0.000_000_6), 1);
     }
 
     #[test]

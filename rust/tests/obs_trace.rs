@@ -1,0 +1,209 @@
+//! Trace-determinism sweep (DESIGN.md §12): the structured run
+//! timeline, its Chrome-trace export and the JSONL run report must be
+//! byte-identical across worker-pool sizes — tracing observes the
+//! simulated cluster, it never perturbs it — and the flight recorder
+//! must dump a forensics timeline naming the selected checkpoint and
+//! the replayed superstep range on every injected failure.
+
+use lwcp::coordinator::driver::{run_job, AppSpec, GraphSource, JobSpec};
+use lwcp::ft::FtKind;
+use lwcp::graph::PresetGraph;
+use lwcp::metrics::RunMetrics;
+use lwcp::obs::{chrome, report, EventKind, RING_CAP};
+use lwcp::pregel::FailurePlan;
+use lwcp::sim::Topology;
+
+fn spec(ft: FtKind, kill: bool, threads: usize) -> JobSpec {
+    JobSpec {
+        app: AppSpec::PageRank { damping: 0.85, supersteps: 14 },
+        graph: GraphSource::Preset(PresetGraph::WebBase, 1500),
+        topo: Topology::new(3, 2),
+        ft,
+        cp_every: 4,
+        plan: if kill {
+            FailurePlan::kill_n_at(1, 9)
+        } else {
+            FailurePlan::none()
+        },
+        threads,
+        trace: true,
+        ..JobSpec::paper_default()
+    }
+}
+
+fn run(ft: FtKind, kill: bool, threads: usize) -> RunMetrics {
+    run_job(&spec(ft, kill, threads), None).expect("traced job")
+}
+
+#[test]
+fn chrome_trace_is_byte_identical_across_thread_counts() {
+    for ft in [FtKind::LwCp, FtKind::HwLog] {
+        for kill in [false, true] {
+            let base = run(ft, kill, 1);
+            assert!(
+                !base.trace.is_empty(),
+                "{}: traced run produced no events",
+                ft.name()
+            );
+            let golden = chrome::chrome_trace(&base.trace);
+            for threads in [2usize, 4, 0] {
+                let m = run(ft, kill, threads);
+                assert_eq!(
+                    m.trace,
+                    base.trace,
+                    "{} kill={kill} threads={threads}: event timeline diverged",
+                    ft.name()
+                );
+                assert_eq!(
+                    chrome::chrome_trace(&m.trace),
+                    golden,
+                    "{} kill={kill} threads={threads}: chrome export diverged",
+                    ft.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_shape_and_rerun_stability() {
+    // Same spec, fresh run: the export is a pure function of the spec.
+    let a = chrome::chrome_trace(&run(FtKind::LwCp, true, 0).trace);
+    let b = chrome::chrome_trace(&run(FtKind::LwCp, true, 0).trace);
+    assert_eq!(a, b, "re-running the identical killed job changed the trace");
+    assert!(a.starts_with("{\"traceEvents\":["));
+    assert!(a.trim_end().ends_with('}'));
+    for needle in ["\"ph\":\"X\"", "\"ph\":\"M\"", "superstep", "compute", "rollback"] {
+        assert!(a.contains(needle), "trace lacks {needle}");
+    }
+}
+
+/// Blank out the one legitimately wall-clock field in the run record.
+fn scrub_wall(text: &str) -> String {
+    let mut out = String::new();
+    for line in text.lines() {
+        if let Some(at) = line.find("\"wall_ms\":") {
+            let rest = &line[at..];
+            let end = rest.find(',').unwrap_or(rest.len());
+            out.push_str(&line[..at]);
+            out.push_str("\"wall_ms\":null");
+            out.push_str(&rest[end..]);
+        } else {
+            out.push_str(line);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn jsonl_report_validates_and_roundtrips() {
+    for kill in [false, true] {
+        let m = run(FtKind::LwCp, kill, 0);
+        let text = report::run_report_jsonl(&m);
+        let steps = report::validate_report(&text)
+            .unwrap_or_else(|e| panic!("kill={kill}: report rejected: {e:#}"));
+        assert_eq!(
+            steps,
+            m.steps.len() as u64,
+            "kill={kill}: superstep record count"
+        );
+        // The report is part of the determinism contract too — every
+        // field but the wall-clock stamp is a pure function of the spec.
+        let again = report::run_report_jsonl(&run(FtKind::LwCp, kill, 2));
+        assert_eq!(
+            scrub_wall(&text),
+            scrub_wall(&again),
+            "kill={kill}: JSONL report diverged across threads"
+        );
+    }
+}
+
+#[test]
+fn flight_recorder_dumps_forensics_on_every_kill() {
+    let m = run(FtKind::LwCp, true, 0);
+    assert_eq!(m.forensics.len(), 1, "one injected kill, one dump");
+    let dump = &m.forensics[0];
+    assert!(dump.contains("flight recorder: failure #0"), "{dump}");
+    assert!(dump.contains("selected CP["), "dump must name the checkpoint:\n{dump}");
+    assert!(
+        dump.contains("replaying supersteps"),
+        "dump must name the replay range:\n{dump}"
+    );
+    assert!(dump.contains("killed ranks"), "{dump}");
+
+    // Two kills → two dumps, in kill order.
+    let mut s = spec(FtKind::LwCp, false, 0);
+    s.plan = FailurePlan { kills: vec![
+        lwcp::pregel::Kill { at_step: 6, ranks: vec![1], during_cp: false, machine_fails: false },
+        lwcp::pregel::Kill { at_step: 11, ranks: vec![2], during_cp: false, machine_fails: false },
+    ] };
+    let m2 = run_job(&s, None).unwrap();
+    assert_eq!(m2.forensics.len(), 2);
+    assert!(m2.forensics[0].contains("failure #0 at superstep 6"));
+    assert!(m2.forensics[1].contains("failure #1 at superstep 11"));
+}
+
+#[test]
+fn forensics_survive_with_tracing_off_and_ring_is_bounded() {
+    // The flight recorder is always on: no --trace-out, still a dump.
+    let mut s = spec(FtKind::HwLog, true, 0);
+    s.trace = false;
+    let m = run_job(&s, None).unwrap();
+    assert!(m.trace.is_empty(), "timeline retained despite trace=false");
+    assert_eq!(m.forensics.len(), 1);
+    assert!(m.forensics[0].contains("selected CP["));
+    // The per-worker ring keeps at most RING_CAP events: the dump's
+    // per-event lines are bounded regardless of run length.
+    let event_lines = m.forensics[0].lines().filter(|l| l.starts_with("    [t=")).count();
+    assert!(
+        event_lines <= RING_CAP,
+        "forensics dump holds {event_lines} event lines for one worker (ring cap {RING_CAP})"
+    );
+    assert!(event_lines > 0, "ring was empty at kill time");
+}
+
+#[test]
+fn tracing_is_invisible_to_the_simulation() {
+    // Same job with and without timeline retention: identical digest,
+    // identical final virtual time, identical per-step durations.
+    let mut on = spec(FtKind::LwCp, true, 0);
+    let mut off = on.clone();
+    off.trace = false;
+    on.tag = "on".into();
+    off.tag = "off".into();
+    let a = run_job(&on, None).unwrap();
+    let b = run_job(&off, None).unwrap();
+    assert_eq!(a.result_digest, b.result_digest, "tracing changed the answer");
+    assert_eq!(a.final_time.to_bits(), b.final_time.to_bits());
+    assert_eq!(a.steps.len(), b.steps.len());
+    assert!(!a.trace.is_empty());
+    assert!(b.trace.is_empty());
+}
+
+#[test]
+fn master_lane_events_cover_the_run() {
+    let m = run(FtKind::LwCp, true, 0);
+    let supersteps = m
+        .trace
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::Superstep { .. }))
+        .count();
+    assert_eq!(supersteps, m.steps.len(), "one superstep span per StepRecord");
+    assert!(
+        m.trace.iter().any(|e| matches!(e.kind, EventKind::Rollback { .. })),
+        "killed run must carry a rollback event"
+    );
+    assert!(
+        m.trace.iter().any(|e| matches!(e.kind, EventKind::Kill { .. })),
+        "killed run must carry a kill event"
+    );
+    // Events are stamped with real lane ids at drain time: nothing
+    // may escape with the tracer's placeholder machine on a non-master
+    // worker lane.
+    for e in &m.trace {
+        if e.worker != lwcp::obs::MASTER {
+            assert!(e.machine < 3, "unstamped event {e:?}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//@ zone: obs/chrome.rs
+//@ active:
+
+use std::collections::BTreeSet;
+
+pub fn lanes(events: &[(u32, u32)]) -> usize {
+    let m: BTreeSet<(u32, u32)> = events.iter().copied().collect();
+    m.len()
+}

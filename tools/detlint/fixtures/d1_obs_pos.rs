@@ -1,0 +1,9 @@
+//@ zone: obs/chrome.rs
+//@ active: D1@4, D1@7
+
+use std::collections::HashMap;
+
+pub fn lanes(events: &[(u32, u32)]) -> usize {
+    let m: HashMap<u32, u32> = events.iter().copied().collect();
+    m.len()
+}

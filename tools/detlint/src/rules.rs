@@ -14,7 +14,7 @@ pub const BASELINE_RULES: [&str; 6] = ["D1", "D2", "D3", "D4", "D5", "W1"];
 /// Deterministic zones for D1: every module whose iteration order can
 /// reach vertex state, wire bytes, checkpoint blobs, placement, or the
 /// printed report.
-const D1_ZONES: [&str; 9] = [
+const D1_ZONES: [&str; 10] = [
     "pregel/",
     "ft/",
     "storage/",
@@ -24,6 +24,7 @@ const D1_ZONES: [&str; 9] = [
     "runtime/",
     "coordinator/",
     "metrics/",
+    "obs/",
 ];
 
 /// D2 applies everywhere except the two sanctioned homes.
@@ -48,7 +49,7 @@ pub fn rule_doc(rule: &str) -> Option<&'static str> {
             "D1 — no hash-ordered containers in deterministic zones. \
              HashMap/HashSet iteration order varies per process, so any use \
              inside pregel/, ft/, storage/, ingest/, graph/, comm/, runtime/, \
-             coordinator/ or metrics/ can leak nondeterministic order into \
+             coordinator/, metrics/ or obs/ can leak nondeterministic order into \
              wire batches, checkpoint blobs or the report (DESIGN.md §5 \
              merge-order contract, §6a slot-major streams). Use BTreeMap / \
              BTreeSet or a sorted Vec; waive only when order provably cannot \
